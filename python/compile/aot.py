@@ -1,0 +1,110 @@
+"""AOT compile path: lower every L2 model to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Writes artifacts/<name>.hlo.txt plus artifacts/manifest.json describing the
+fixed input/output shapes the Rust runtime must honor (it pads batches to
+these shapes).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+# Fixed AOT shapes.  Batches in Rust are padded to BATCH; the panel step is
+# a (TILE_M, TILE_K) adjacency block times a (TILE_K, PANEL) value panel.
+BATCH = 4096
+TILE_M = 512
+TILE_K = 512
+PANEL = 128
+
+_scalar = jax.ShapeDtypeStruct((), F32)
+_batch = jax.ShapeDtypeStruct((BATCH,), F32)
+
+MODELS = {
+    "ycsb_batch": (model.ycsb_batch, [_batch, _batch, _batch]),
+    "spmv_panel": (
+        model.spmv_panel,
+        [
+            jax.ShapeDtypeStruct((TILE_M, TILE_K), F32),
+            jax.ShapeDtypeStruct((TILE_K, PANEL), F32),
+            _scalar,
+            _scalar,
+        ],
+    ),
+    "relax_batch": (model.relax_batch, [_batch, _batch, _batch]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in MODELS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *specs)
+        manifest[name] = {
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "output": {
+                "shape": list(out_shape.shape),
+                "dtype": str(out_shape.dtype),
+            },
+            "file": f"{name}.hlo.txt",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # TSV twin for the (dependency-light) Rust runtime loader:
+    #   name \t file \t in0_shape,in1_shape,... \t out_shape
+    # where a shape is dims joined by 'x' ('scalar' for rank 0).
+    def fmt(shape):
+        return "x".join(map(str, shape)) if shape else "scalar"
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for name in sorted(manifest):
+            e = manifest[name]
+            ins = ",".join(fmt(i["shape"]) for i in e["inputs"])
+            f.write(f"{name}\t{e['file']}\t{ins}\t{fmt(e['output']['shape'])}\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} (+.tsv)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the scaffold Makefile's `--out <file>` form.
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    lower_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (build-time only)."""
+
+from .fma import fma, fma_flat
+from .relax import relax, relax_flat
+from .tile_matmul import tile_matmul
+
+__all__ = ["fma", "fma_flat", "relax", "relax_flat", "tile_matmul"]

@@ -1,0 +1,56 @@
+"""Pallas kernel: batched fused multiply-add — the YCSB task lambda.
+
+Each YCSB task in the paper's §4 evaluation "fetches an item from the
+key-value store, performs a multiply-and-add operation, and then optionally
+writes the updated value back".  Phase 3 of TD-Orch batches the co-located
+task lambdas and executes them as one call into this kernel.
+
+TPU layout notes (§Hardware-Adaptation in DESIGN.md): the batch is shaped
+(rows, 128) so each block is a whole (block_rows, 128) register tile; the
+default block is (8, 128) — one float32 VREG tile — and the grid walks row
+blocks, so the HBM->VMEM stream is a single contiguous sweep per operand.
+VMEM footprint: 4 refs * 8*128*4B = 16 KiB, trivially double-bufferable.
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is what the AOT path validates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _fma_kernel(x_ref, m_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] * m_ref[...] + b_ref[...]
+
+
+def fma(x, m, b, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """out[i,j] = x[i,j] * m[i,j] + b[i,j] over (rows, 128) arrays.
+
+    ``rows`` must be a multiple of ``block_rows``.
+    """
+    rows, lanes = x.shape
+    if lanes != LANES:
+        raise ValueError(f"fma expects {LANES} lanes, got {lanes}")
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={block_rows}")
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        _fma_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
+        interpret=True,
+    )(x, m, b)
+
+
+def fma_flat(x, m, b, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Flat-vector wrapper: (n,) arrays with n a multiple of 128*block_rows."""
+    n = x.shape[0]
+    rows = n // LANES
+    r = lambda a: a.reshape(rows, LANES)
+    return fma(r(x), r(m), r(b), block_rows=block_rows).reshape(n)

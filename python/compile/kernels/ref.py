@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal.  pytest asserts kernel(...) == ref(...) under hypothesis-driven
+shape/value sweeps before aot.py is allowed to emit artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def fma_ref(x, m, b):
+    return x * m + b
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def relax_ref(dv, du, w):
+    return jnp.minimum(dv, du + w)
+
+
+def ycsb_batch_ref(vals, mul, add):
+    return vals * mul + add
+
+
+def spmv_panel_ref(a, x, alpha, beta):
+    return alpha * jnp.dot(a, x, preferred_element_type=jnp.float32) + beta
+
+
+def relax_batch_ref(dv, du, w):
+    return jnp.minimum(dv, du + w)

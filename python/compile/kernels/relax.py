@@ -1,0 +1,43 @@
+"""Pallas kernel: batched min-plus relaxation — the SSSP task lambda.
+
+A co-located SSSP batch holds, per task (edge), the source distance du,
+the edge weight w and the current destination distance dv; the lambda is
+dv' = min(dv, du + w).  Same (rows, 128) lane layout as fma.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _relax_kernel(dv_ref, du_ref, w_ref, o_ref):
+    o_ref[...] = jnp.minimum(dv_ref[...], du_ref[...] + w_ref[...])
+
+
+def relax(dv, du, w, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """out = min(dv, du + w) over (rows, 128) float32 arrays."""
+    rows, lanes = dv.shape
+    if lanes != LANES:
+        raise ValueError(f"relax expects {LANES} lanes, got {lanes}")
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={block_rows}")
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), dv.dtype),
+        interpret=True,
+    )(dv, du, w)
+
+
+def relax_flat(dv, du, w, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Flat-vector wrapper: (n,) arrays, n a multiple of 128*block_rows."""
+    n = dv.shape[0]
+    rows = n // LANES
+    r = lambda a: a.reshape(rows, LANES)
+    return relax(r(dv), r(du), r(w), block_rows=block_rows).reshape(n)

@@ -1,0 +1,52 @@
+"""Pallas kernel: MXU-tiled matmul — the dense-mode aggregation hot spot.
+
+TDO-GP's dense mode (and the linear-algebra baseline family the paper
+compares against, Graphite/LA3) reduces each round to a per-machine
+adjacency-block x value-panel product.  The panel width is 128 so a column
+block is one MXU operand tile; multi-source algorithms (batched BC /
+landmark queries) use the full panel, single-vector PR uses column 0.
+
+TPU layout notes: classic (128,128,128) systolic-array tiling.  The grid is
+(m/bm, n/bn, k/bk) with k innermost, accumulating into the output ref —
+BlockSpec expresses the HBM<->VMEM schedule that a CUDA version would have
+written with threadblocks + shared memory.  VMEM per step: 3 * 64 KiB
+tiles = 192 KiB « 16 MiB, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.named_call, name="tile_matmul")
+def tile_matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """x @ y with (bm, bn, bk) MXU tiles; dims must divide evenly."""
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {k} vs {k2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"({m},{k},{n}) not divisible by tiles ({bm},{bk},{bn})")
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

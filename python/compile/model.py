@@ -1,0 +1,37 @@
+"""L2: JAX compute graphs for the batched task lambdas of TD-Orch Phase 3.
+
+Each function here is a build-time JAX model that calls the L1 Pallas
+kernels; aot.py lowers them once to HLO text and the Rust coordinator
+(rust/src/runtime/) executes the artifacts on its hot path.  Python is
+never on the request path.
+
+Entry points (names are the artifact names):
+  ycsb_batch  — the KV-store case study's per-task lambda (paper §4):
+                out = vals * mul + add over a padded batch.
+  spmv_panel  — dense-mode aggregation / linear-algebra baseline step:
+                out = alpha * (A @ X) + beta on a per-machine tile.
+  relax_batch — SSSP relaxation lambda: out = min(dv, du + w).
+"""
+
+import jax.numpy as jnp
+
+from . import kernels
+
+
+def ycsb_batch(vals, mul, add):
+    """Batched YCSB multiply-and-add lambda over flat (n,) f32 arrays."""
+    return kernels.fma_flat(vals, mul, add)
+
+
+def spmv_panel(a, x, alpha, beta):
+    """alpha * (a @ x) + beta: (m,k) adjacency tile times (k,128) panel.
+
+    alpha/beta are f32 scalars; the matmul runs on the MXU-tiled Pallas
+    kernel so XLA fuses the scale/shift into the same module.
+    """
+    return alpha * kernels.tile_matmul(a, x) + beta
+
+
+def relax_batch(dv, du, w):
+    """Batched min-plus SSSP relaxation over flat (n,) f32 arrays."""
+    return kernels.relax_flat(dv, du, w)

@@ -1,0 +1,50 @@
+# pytest: the AOT pipeline emits parseable HLO text + a consistent manifest.
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(out))
+    return out, manifest
+
+
+def test_all_models_emitted(artifacts):
+    out, manifest = artifacts
+    assert set(manifest) == set(aot.MODELS)
+    for name, entry in manifest.items():
+        path = out / entry["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert "ENTRY" in text and "HloModule" in text
+
+
+def test_manifest_matches_specs(artifacts):
+    out, manifest = artifacts
+    for name, (fn, specs) in aot.MODELS.items():
+        entry = manifest[name]
+        assert len(entry["inputs"]) == len(specs)
+        for got, spec in zip(entry["inputs"], specs):
+            assert tuple(got["shape"]) == spec.shape
+            assert got["dtype"] == str(spec.dtype)
+
+
+def test_manifest_json_roundtrip(artifacts):
+    out, manifest = artifacts
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+
+
+def test_hlo_is_tuple_rooted(artifacts):
+    # Lowered with return_tuple=True; the rust side unwraps with to_tuple1.
+    out, manifest = artifacts
+    for entry in manifest.values():
+        text = (out / entry["file"]).read_text()
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert root_lines, entry["file"]
+        assert any("tuple" in l for l in root_lines), entry["file"]

@@ -1,0 +1,128 @@
+# pytest: Pallas kernel vs pure-jnp ref — the CORE correctness signal.
+# hypothesis sweeps shapes (block-multiples) and values; assert_allclose
+# against ref.py before aot.py may emit artifacts.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+finite_f32 = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+def arrays(shape):
+    return hnp.arrays(np.float32, shape, elements=finite_f32)
+
+
+@st.composite
+def fma_operands(draw):
+    rows = draw(st.sampled_from([8, 16, 24, 32]))
+    shape = (rows, 128)
+    return tuple(draw(arrays(shape)) for _ in range(3))
+
+
+@st.composite
+def matmul_operands(draw):
+    m = draw(st.sampled_from([128, 256]))
+    k = draw(st.sampled_from([128, 256]))
+    n = draw(st.sampled_from([128, 256]))
+    x = draw(arrays((m, k)))
+    y = draw(arrays((k, n)))
+    return x, y
+
+
+class TestFma:
+    @settings(**SETTINGS)
+    @given(fma_operands())
+    def test_matches_ref(self, ops):
+        x, m, b = ops
+        got = kernels.fma(x, m, b)
+        np.testing.assert_allclose(got, ref.fma_ref(x, m, b), rtol=1e-4, atol=1e-5)
+
+    def test_flat_wrapper(self):
+        rng = np.random.default_rng(0)
+        x, m, b = (rng.standard_normal(4096).astype(np.float32) for _ in range(3))
+        got = kernels.fma_flat(x, m, b)
+        np.testing.assert_allclose(got, ref.fma_ref(x, m, b), rtol=1e-4, atol=1e-5)
+        assert got.shape == (4096,)
+
+    def test_rejects_bad_lanes(self):
+        bad = np.zeros((8, 64), np.float32)
+        with pytest.raises(ValueError, match="lanes"):
+            kernels.fma(bad, bad, bad)
+
+    def test_rejects_unaligned_rows(self):
+        bad = np.zeros((9, 128), np.float32)
+        with pytest.raises(ValueError, match="block_rows"):
+            kernels.fma(bad, bad, bad)
+
+    @pytest.mark.parametrize("block_rows", [4, 8, 16])
+    def test_block_shape_invariance(self, block_rows):
+        rng = np.random.default_rng(1)
+        x, m, b = (rng.standard_normal((16, 128)).astype(np.float32) for _ in range(3))
+        got = kernels.fma(x, m, b, block_rows=block_rows)
+        np.testing.assert_allclose(got, ref.fma_ref(x, m, b), rtol=1e-4, atol=1e-5)
+
+
+class TestRelax:
+    @settings(**SETTINGS)
+    @given(fma_operands())
+    def test_matches_ref(self, ops):
+        dv, du, w = ops
+        got = kernels.relax(dv, du, w)
+        np.testing.assert_allclose(got, ref.relax_ref(dv, du, w), rtol=1e-6)
+
+    def test_flat_wrapper(self):
+        rng = np.random.default_rng(2)
+        dv, du, w = (rng.standard_normal(4096).astype(np.float32) for _ in range(3))
+        got = kernels.relax_flat(dv, du, w)
+        np.testing.assert_allclose(got, ref.relax_ref(dv, du, w), rtol=1e-6)
+
+    def test_idempotent_on_self(self):
+        # min(dv, dv + 0) == dv — merge-able op sanity (paper Def. 2).
+        dv = np.linspace(-5, 5, 8 * 128, dtype=np.float32).reshape(8, 128)
+        zero = np.zeros_like(dv)
+        np.testing.assert_array_equal(kernels.relax(dv, dv, zero), dv)
+
+
+class TestTileMatmul:
+    @settings(deadline=None, max_examples=8)
+    @given(matmul_operands())
+    def test_matches_ref(self, ops):
+        x, y = ops
+        got = kernels.tile_matmul(x, y)
+        np.testing.assert_allclose(
+            got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-2
+        )
+
+    def test_identity(self):
+        eye = np.eye(256, dtype=np.float32)
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((256, 256)).astype(np.float32)
+        np.testing.assert_allclose(kernels.tile_matmul(eye, x), x, rtol=1e-5)
+
+    def test_k_accumulation(self):
+        # K spans multiple tiles — exercises the accumulate-over-grid path.
+        rng = np.random.default_rng(4)
+        x = rng.standard_normal((128, 512)).astype(np.float32)
+        y = rng.standard_normal((512, 128)).astype(np.float32)
+        got = kernels.tile_matmul(x, y, bk=128)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-2)
+
+    def test_rejects_mismatched_contraction(self):
+        x = np.zeros((128, 128), np.float32)
+        y = np.zeros((256, 128), np.float32)
+        with pytest.raises(ValueError, match="contraction"):
+            kernels.tile_matmul(x, y)
+
+    def test_rejects_unaligned(self):
+        x = np.zeros((100, 128), np.float32)
+        y = np.zeros((128, 128), np.float32)
+        with pytest.raises(ValueError, match="divisible"):
+            kernels.tile_matmul(x, y)

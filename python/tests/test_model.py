@@ -1,0 +1,46 @@
+# pytest: L2 model graphs vs refs at the AOT artifact shapes.
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
+
+
+def test_ycsb_batch(rng):
+    vals, mul, add = (
+        rng.standard_normal(aot.BATCH).astype(np.float32) for _ in range(3)
+    )
+    got = model.ycsb_batch(vals, mul, add)
+    np.testing.assert_allclose(got, ref.ycsb_batch_ref(vals, mul, add), rtol=1e-4, atol=1e-5)
+
+
+def test_spmv_panel(rng):
+    a = rng.standard_normal((aot.TILE_M, aot.TILE_K)).astype(np.float32)
+    x = rng.standard_normal((aot.TILE_K, aot.PANEL)).astype(np.float32)
+    alpha, beta = np.float32(0.85), np.float32(0.15)
+    got = model.spmv_panel(a, x, alpha, beta)
+    np.testing.assert_allclose(
+        got, ref.spmv_panel_ref(a, x, alpha, beta), rtol=1e-4, atol=1e-2
+    )
+
+
+def test_relax_batch(rng):
+    dv, du, w = (
+        rng.standard_normal(aot.BATCH).astype(np.float32) for _ in range(3)
+    )
+    got = model.relax_batch(dv, du, w)
+    np.testing.assert_allclose(got, ref.relax_batch_ref(dv, du, w), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(aot.MODELS))
+def test_models_trace_at_manifest_shapes(name):
+    fn, specs = aot.MODELS[name]
+    out = jax.eval_shape(fn, *specs)
+    assert out.dtype == np.float32
+    assert all(d > 0 for d in out.shape) or out.shape == ()

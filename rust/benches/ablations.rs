@@ -1,0 +1,125 @@
+//! Bench: ablations — Table 3 (TD-Orch on/off), Table 4 (T1/T2/T3),
+//! plus the design-choice ablations DESIGN.md calls out: the Phase-1
+//! direct shortcut, and (F, C) parameter sensitivity.
+//! `cargo bench --bench ablations`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::graph::algorithms::Algorithm;
+use tdorch::graph::engine::{Engine, Flags};
+use tdorch::graph::gen;
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{spread_tasks, Scheduler, Task};
+use tdorch::repro::graphs::run_alg;
+use tdorch::{Cluster, CostModel, DistStore};
+
+struct CounterApp;
+impl tdorch::OrchApp for CounterApp {
+    type Ctx = i64;
+    type Val = i64;
+    type Out = i64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        64
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, c: &i64, _v: &i64) -> Option<i64> {
+        Some(*c)
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+    fn apply(&self, v: &mut i64, o: i64) {
+        *v += o;
+    }
+}
+
+fn zipfish_tasks(n: usize) -> Vec<Task<i64>> {
+    (0..n)
+        .map(|i| {
+            let addr = if i % 5 < 2 {
+                (i % 8) as u64
+            } else {
+                100 + (i as u64).wrapping_mul(0x9E3779B9) % 500_000
+            };
+            Task::inplace(addr, 1)
+        })
+        .collect()
+}
+
+fn kv_sim(sched: &TdOrch, p: usize, tasks: &[Task<i64>]) -> f64 {
+    let mut c = Cluster::new(p, CostModel::paper_cluster());
+    let mut s: DistStore<i64> = DistStore::new(p);
+    sched.run_stage(&mut c, &CounterApp, spread_tasks(tasks.to_vec(), p), &mut s);
+    c.metrics.sim_seconds()
+}
+
+fn main() {
+    let b = Bench::new("ablations");
+    let cost = CostModel::paper_cluster();
+
+    // Table 3: TD-Orch vs no-TD-Orch (ligra-dist) BC.
+    let g = gen::barabasi_albert(10_000, 8, 9);
+    let mut pair = (0.0, 0.0);
+    b.run("table3-BC-P8", 3, || {
+        let mut lig = Engine::baseline(&g, 8, cost, Flags::ligra_dist(), "ligra-dist");
+        let mut tdo = Engine::tdo_gp(&g, 8, cost);
+        pair = (
+            run_alg(&mut lig, Algorithm::Bc).0,
+            run_alg(&mut tdo, Algorithm::Bc).0,
+        );
+        pair.0.to_bits() ^ pair.1.to_bits()
+    });
+    println!("    sim-s: ligra-dist={:.4} tdo-gp={:.4} ({:.1}x)", pair.0, pair.1, pair.0 / pair.1);
+    assert!(pair.0 > 2.0 * pair.1, "table3 shape regressed");
+
+    // Table 4: technique ablations, SSSP P=8.
+    for (label, flags) in [
+        ("-T1", Flags::with_techniques(false, true, true)),
+        ("-T2", Flags::with_techniques(true, false, true)),
+        ("-T3", Flags::with_techniques(true, true, false)),
+    ] {
+        let mut ratio = 0.0;
+        b.run(&format!("table4-SSSP-P8{label}"), 3, || {
+            let mut full = Engine::tdo_gp(&g, 8, cost);
+            let mut abl = Engine::tdo_gp_with(&g, 8, cost, flags, label);
+            let t_full = run_alg(&mut full, Algorithm::Sssp).0;
+            let t_abl = run_alg(&mut abl, Algorithm::Sssp).0;
+            ratio = t_abl / t_full;
+            ratio.to_bits()
+        });
+        println!("    slowdown: {ratio:.2}x");
+        assert!(ratio > 1.0, "{label} should slow TDO-GP down");
+    }
+
+    // DESIGN ablation: the Phase-1 direct shortcut for uncontended tasks.
+    let tasks = zipfish_tasks(160_000);
+    let mut with = 0.0;
+    let mut without = 0.0;
+    b.run("orch-direct-shortcut-on", 3, || {
+        with = kv_sim(&TdOrch::new(), 16, &tasks);
+        with.to_bits()
+    });
+    b.run("orch-direct-shortcut-off", 3, || {
+        without = kv_sim(&TdOrch::without_shortcut(), 16, &tasks);
+        without.to_bits()
+    });
+    println!("    sim-s: with={with:.4} without={without:.4} ({:.2}x win)", without / with);
+    assert!(with < without, "direct shortcut should help mixed workloads");
+
+    // DESIGN ablation: (F, C) sensitivity around the theory-guided defaults.
+    for (f, c) in [(2usize, 2usize), (2, 32), (8, 2), (8, 32)] {
+        let mut sim = 0.0;
+        b.run(&format!("orch-params-F{f}-C{c}"), 3, || {
+            sim = kv_sim(&TdOrch::with_params(f, c), 16, &tasks);
+            sim.to_bits()
+        });
+        println!("    sim-s: {sim:.4}");
+    }
+    println!("ablations done");
+}

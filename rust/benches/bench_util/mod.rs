@@ -1,0 +1,39 @@
+//! Minimal benchmarking harness (criterion is unavailable offline; see
+//! Cargo.toml).  Runs each closure several times, reports median wall
+//! time; benches also print the simulated BSP time where relevant, since
+//! that is the paper-facing metric.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("\n=== bench: {name} ===");
+        Bench { name }
+    }
+
+    /// Time `f` (returning an arbitrary value to defeat DCE) over `iters`
+    /// runs; print median / min wall ms.
+    pub fn run<T>(&self, label: &str, iters: usize, mut f: impl FnMut() -> T) {
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let out = f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            std::hint::black_box(out);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let min = times[0];
+        println!(
+            "{:<44} median {:>9.3} ms   min {:>9.3} ms   ({} iters)",
+            format!("{}/{}", self.name, label),
+            median,
+            min,
+            iters
+        );
+    }
+}

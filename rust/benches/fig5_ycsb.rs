@@ -1,0 +1,40 @@
+//! Bench: Fig 5 (YCSB weak scaling) at reduced scale — regression
+//! tracking for the KV case study.  `cargo bench --bench fig5_ycsb`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::repro::kv::{run_cell, SCHEDULER_NAMES};
+use tdorch::workload::YcsbKind;
+
+fn main() {
+    let b = Bench::new("fig5_ycsb");
+    let per_machine = 5_000;
+
+    for (kind, gamma) in [
+        (YcsbKind::A, 1.5),
+        (YcsbKind::A, 2.5),
+        (YcsbKind::C, 2.0),
+        (YcsbKind::Load, 2.0),
+    ] {
+        for p in [4usize, 16] {
+            let label = format!("{}-g{gamma}-P{p}", kind.label());
+            let mut last = [0.0; 4];
+            b.run(&label, 3, || {
+                last = run_cell(kind, gamma, p, per_machine, 7);
+                last
+            });
+            let mut line = String::from("    sim-s: ");
+            for (name, t) in SCHEDULER_NAMES.iter().zip(last) {
+                line.push_str(&format!("{name}={t:.4} "));
+            }
+            println!("{line}");
+        }
+    }
+
+    // Fig 5 headline shape at bench scale: td-orch beats push and sorting
+    // at every skew level.
+    let cell = run_cell(YcsbKind::A, 2.0, 16, per_machine, 7);
+    assert!(cell[0] < cell[1] && cell[0] < cell[3], "fig5 shape regressed: {cell:?}");
+    println!("shape check OK: td-orch {:.4} < push {:.4}, sort {:.4}", cell[0], cell[1], cell[3]);
+}

@@ -1,0 +1,124 @@
+//! Bench: hot-path microbenchmarks used by the §Perf pass — meta-task
+//! merging, forest mapping, Zipf sampling, cluster exchange, a full
+//! TD-Orch stage (host wall time), and the PJRT `fma` artifact
+//! throughput.  `cargo bench --bench microbench`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::forest::Forest;
+use tdorch::metatask::{MetaTaskSet, SlotStore};
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{spread_tasks, Scheduler, Task};
+use tdorch::rng::Rng;
+use tdorch::workload::Zipf;
+use tdorch::{Cluster, CostModel, DistStore};
+
+struct CounterApp;
+impl tdorch::OrchApp for CounterApp {
+    type Ctx = i64;
+    type Val = i64;
+    type Out = i64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        16
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, c: &i64, _v: &i64) -> Option<i64> {
+        Some(*c)
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+    fn apply(&self, v: &mut i64, o: i64) {
+        *v += o;
+    }
+}
+
+fn main() {
+    let b = Bench::new("microbench");
+
+    // Meta-task set merging (Phase 1 inner loop).
+    b.run("metatask-merge-100k-singletons", 5, || {
+        let mut slots = SlotStore::new();
+        let mut acc: MetaTaskSet<u64> = MetaTaskSet::new();
+        for i in 0..100_000u64 {
+            acc.merge(MetaTaskSet::from_ctxs([i]), 8, &mut slots, 0);
+        }
+        acc.total_count()
+    });
+
+    // Forest VM->PM mapping (every Phase-1 route goes through this).
+    let forest = Forest::new(16, 3);
+    b.run("forest-machine_of-1M", 5, || {
+        let mut acc = 0usize;
+        for i in 0..1_000_000u64 {
+            acc ^= forest.machine_of((i % 16) as usize, 1, i % 64);
+        }
+        acc
+    });
+
+    // Zipf sampling (workload generation).
+    let zipf = Zipf::new(1_000_000, 1.5);
+    b.run("zipf-sample-1M", 5, || {
+        let mut rng = Rng::new(3);
+        let mut acc = 0usize;
+        for _ in 0..1_000_000 {
+            acc ^= zipf.sample(&mut rng);
+        }
+        acc
+    });
+
+    // Cluster exchange throughput (substrate overhead).
+    b.run("cluster-exchange-16x10k", 5, || {
+        let mut c = Cluster::new(16, CostModel::paper_cluster());
+        let out: Vec<Vec<(usize, u64)>> = (0..16)
+            .map(|m| (0..10_000).map(|i| ((m + i) % 16, i as u64)).collect())
+            .collect();
+        let inboxes = c.exchange(out, |_| 4);
+        inboxes.len()
+    });
+
+    // Full TD-Orch stage: HOST wall time per task (the L3 hot path that
+    // the §Perf pass optimizes).
+    let tasks: Vec<Task<i64>> = (0..200_000)
+        .map(|i| {
+            let addr = if i % 4 == 0 {
+                (i % 16) as u64
+            } else {
+                (i as u64).wrapping_mul(0x9E3779B9) % 1_000_000
+            };
+            Task::inplace(addr, 1)
+        })
+        .collect();
+    b.run("tdorch-stage-200k-tasks-P16", 5, || {
+        let mut c = Cluster::new(16, CostModel::paper_cluster());
+        let mut s: DistStore<i64> = DistStore::new(16);
+        let o = TdOrch::new().run_stage(&mut c, &CounterApp, spread_tasks(tasks.clone(), 16), &mut s);
+        o.total_executed
+    });
+
+    // PJRT artifact execution (the L1/L2 hot path) — skipped without
+    // artifacts.
+    match tdorch::runtime::Engine::load_default() {
+        Ok(engine) => {
+            let vals = vec![1.5f32; 4096];
+            let muls = vec![2.0f32; 4096];
+            let adds = vec![0.5f32; 4096];
+            b.run("pjrt-ycsb_batch-4096", 20, || {
+                engine.ycsb_batch(&vals, &muls, &adds).unwrap().len()
+            });
+            let a = vec![0.5f32; 512 * 512];
+            let x = vec![1.0f32; 512 * 128];
+            b.run("pjrt-spmv_panel-512x512x128", 10, || {
+                engine.spmv_panel(&a, &x, 0.85, 0.15).unwrap().len()
+            });
+        }
+        Err(e) => println!("pjrt benches skipped: {e}"),
+    }
+    println!("microbench done");
+}

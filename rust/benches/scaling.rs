@@ -1,0 +1,54 @@
+//! Bench: Fig 8 (strong scaling) + Fig 9 (weak scaling) at reduced scale.
+//! `cargo bench --bench scaling`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::graph::algorithms::Algorithm;
+use tdorch::graph::engine::Engine;
+use tdorch::graph::gen;
+use tdorch::repro::graphs::run_alg;
+use tdorch::CostModel;
+
+fn main() {
+    let b = Bench::new("scaling");
+    let cost = CostModel::paper_cluster();
+
+    // Fig 8: strong scaling, BC on a fixed social graph.
+    let g = gen::barabasi_albert(20_000, 10, 5);
+    let mut series = Vec::new();
+    for p in [1usize, 4, 16] {
+        let mut sim = 0.0;
+        b.run(&format!("fig8-strong-BC-P{p}"), 3, || {
+            let mut e = Engine::tdo_gp(&g, p, cost);
+            sim = run_alg(&mut e, Algorithm::Bc).0;
+            sim.to_bits()
+        });
+        println!("    sim-s: {sim:.4}");
+        series.push(sim);
+    }
+    assert!(
+        series[2] < series[0] / 2.0,
+        "strong scaling regressed: {series:?}"
+    );
+    println!("shape check OK: P=16 is {:.1}x faster than P=1", series[0] / series[2]);
+
+    // Fig 9: weak scaling, PR with fixed edges/machine.
+    let mut weak = Vec::new();
+    for p in [1usize, 4, 16] {
+        let g = gen::barabasi_albert(3_000 * p, 8, 6);
+        let mut sim = 0.0;
+        b.run(&format!("fig9-weak-PR-P{p}"), 3, || {
+            let mut e = Engine::tdo_gp(&g, p, cost);
+            sim = run_alg(&mut e, Algorithm::Pr).0;
+            sim.to_bits()
+        });
+        println!("    sim-s: {sim:.4}");
+        weak.push(sim);
+    }
+    assert!(
+        weak[2] < 3.0 * weak[0],
+        "weak scaling regressed: {weak:?}"
+    );
+    println!("shape check OK: weak-scaling P=16/P=1 ratio = {:.2}", weak[2] / weak[0]);
+}

@@ -1,0 +1,52 @@
+//! Bench: Table 2 (end-to-end graph runtimes) at reduced scale.
+//! `cargo bench --bench table2_endtoend`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::graph::algorithms::Algorithm;
+use tdorch::graph::engine::{Engine, Flags};
+use tdorch::graph::gen;
+use tdorch::repro::graphs::run_alg;
+use tdorch::CostModel;
+
+fn main() {
+    let b = Bench::new("table2_endtoend");
+    let cost = CostModel::paper_cluster();
+
+    // Small stand-ins for the two structural extremes of Table 2.
+    let social = gen::barabasi_albert(8_000, 8, 3);
+    let road = gen::grid2d(96, 3);
+
+    for (gname, g, p) in [("social", &social, 8), ("road", &road, 16)] {
+        for alg in [Algorithm::Bfs, Algorithm::Bc, Algorithm::Pr] {
+            let mut results = Vec::new();
+            b.run(&format!("{gname}-{}", alg.label()), 3, || {
+                results.clear();
+                let mut tdo = Engine::tdo_gp(g, p, cost);
+                let mut gem = Engine::baseline(g, p, cost, Flags::gemini_like(), "gemini-like");
+                let mut la = Engine::baseline(g, p, cost, Flags::la_like(), "la-like");
+                results.push(("tdo", run_alg(&mut tdo, alg).0));
+                results.push(("gem", run_alg(&mut gem, alg).0));
+                results.push(("la", run_alg(&mut la, alg).0));
+                results.len()
+            });
+            let line: Vec<String> = results
+                .iter()
+                .map(|(n, s)| format!("{n}={s:.4}"))
+                .collect();
+            println!("    sim-s: {}", line.join(" "));
+        }
+    }
+
+    // Shape checks at bench scale.
+    let mut tdo = Engine::tdo_gp(&road, 16, cost);
+    let mut la = Engine::baseline(&road, 16, cost, Flags::la_like(), "la-like");
+    let t_tdo = run_alg(&mut tdo, Algorithm::Bfs).0;
+    let t_la = run_alg(&mut la, Algorithm::Bfs).0;
+    assert!(
+        t_la > 2.0 * t_tdo,
+        "road BFS shape regressed: la {t_la:.4} vs tdo {t_tdo:.4}"
+    );
+    println!("shape check OK: road BFS la/tdo = {:.1}x", t_la / t_tdo);
+}

@@ -1,0 +1,127 @@
+//! Direct-pull baseline (§2.3): fetch every requested chunk to the tasks.
+//!
+//! Each machine deduplicates the chunk addresses its local tasks request,
+//! fetches each chunk once from its owner, executes locally, and sends
+//! pre-combined write-backs to the owners.  Works well at low contention;
+//! a hot chunk's owner must ship up to P·B words (and receive up to P
+//! requests) — the `O(DPB/min{D,P})` worst case the paper derives.
+
+use crate::bsp::{Cluster, MachineId};
+use crate::det::{det_map, det_set, DetMap};
+use crate::orchestration::{OrchApp, Scheduler, StageOutcome, Task};
+use crate::store::{Addr, DistStore};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DirectPull;
+
+impl<A: OrchApp> Scheduler<A> for DirectPull {
+    fn name(&self) -> &'static str {
+        "direct-pull"
+    }
+
+    fn run_stage(
+        &self,
+        cluster: &mut Cluster,
+        app: &A,
+        tasks: Vec<Vec<Task<A::Ctx>>>,
+        store: &mut DistStore<A::Val>,
+    ) -> StageOutcome {
+        let p = cluster.p;
+        let chunk_words = app.chunk_words();
+        let out_words = app.out_words();
+        let mut outcome = StageOutcome {
+            executed_per_machine: vec![0; p],
+            total_executed: 0,
+        };
+
+        // Superstep 1: dedup + request.
+        let mut req_out: Vec<Vec<(MachineId, (Addr, MachineId))>> =
+            (0..p).map(|_| Vec::new()).collect();
+        for (m, batch) in tasks.iter().enumerate() {
+            cluster.work(m, batch.len() as u64); // dedup sweep
+            let mut seen = det_set();
+            for t in batch {
+                if seen.insert(t.read_addr) {
+                    req_out[m].push((store.owner(t.read_addr), (t.read_addr, m)));
+                }
+            }
+        }
+        let req_in = cluster.exchange(req_out, |_| 2);
+
+        // Superstep 2: owners ship chunk copies to each requester.
+        let mut val_out: Vec<Vec<(MachineId, (Addr, A::Val))>> =
+            (0..p).map(|_| Vec::new()).collect();
+        for (m, inbox) in req_in.into_iter().enumerate() {
+            cluster.work(m, inbox.len() as u64);
+            for (addr, requester) in inbox {
+                val_out[m].push((requester, (addr, store.read_copy(addr))));
+            }
+        }
+        let val_in = cluster.exchange(val_out, |_| chunk_words + 1);
+
+        // Superstep 3: execute locally (one XLA-able batch per machine),
+        // pre-combine write-backs per target address.
+        let mut wb_out: Vec<Vec<(MachineId, (Addr, A::Out))>> =
+            (0..p).map(|_| Vec::new()).collect();
+        for (m, (inbox, batch)) in val_in.into_iter().zip(tasks.into_iter()).enumerate() {
+            let mut vals: DetMap<Addr, A::Val> = det_map();
+            for (addr, val) in inbox {
+                vals.insert(addr, val);
+            }
+            let items: Vec<(&A::Ctx, &A::Val)> = batch
+                .iter()
+                .map(|t| (&t.ctx, vals.get(&t.read_addr).expect("missing pulled chunk")))
+                .collect();
+            let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
+            app.execute_batch(&items, &mut outs);
+            let n = batch.len() as u64;
+            cluster.work(m, n * app.task_work());
+            cluster.executed(m, n);
+            outcome.executed_per_machine[m] += n;
+
+            let mut pool: DetMap<Addr, A::Out> = det_map();
+            for (t, out) in batch.iter().zip(outs) {
+                let Some(out) = out else { continue };
+                cluster.work(m, 1);
+                match pool.remove(&t.write_addr) {
+                    Some(acc) => {
+                        pool.insert(t.write_addr, app.combine(acc, out));
+                    }
+                    None => {
+                        pool.insert(t.write_addr, out);
+                    }
+                }
+            }
+            for (addr, out) in pool {
+                wb_out[m].push((store.owner(addr), (addr, out)));
+            }
+        }
+        let wb_in = cluster.exchange(wb_out, |_| out_words + 1);
+
+        // Superstep 4: owners merge + apply.
+        for (m, inbox) in wb_in.into_iter().enumerate() {
+            let mut merged: DetMap<Addr, A::Out> = det_map();
+            for (addr, out) in inbox {
+                cluster.work(m, 1);
+                match merged.remove(&addr) {
+                    Some(acc) => {
+                        merged.insert(addr, app.combine(acc, out));
+                    }
+                    None => {
+                        merged.insert(addr, out);
+                    }
+                }
+            }
+            let mut addrs: Vec<Addr> = merged.keys().copied().collect();
+            addrs.sort_unstable();
+            for addr in addrs {
+                let out = merged.remove(&addr).unwrap();
+                app.apply(store.get_or_default(addr), out);
+            }
+        }
+        cluster.barrier();
+
+        outcome.total_executed = outcome.executed_per_machine.iter().sum();
+        outcome
+    }
+}

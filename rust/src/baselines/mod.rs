@@ -1,0 +1,11 @@
+//! The paper's §2.3 baseline scheduling strategies, implemented on the
+//! same BSP substrate and behind the same [`Scheduler`] interface as
+//! TD-Orch so Fig 5's four-way comparison is apples-to-apples.
+
+pub mod direct_pull;
+pub mod direct_push;
+pub mod sorting;
+
+pub use direct_pull::DirectPull;
+pub use direct_push::DirectPush;
+pub use sorting::SortingBased;

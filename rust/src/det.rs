@@ -1,0 +1,99 @@
+//! Deterministic (and fast) hash containers for the hot paths.
+//!
+//! `std::collections::HashMap`'s default `RandomState` seeds per process,
+//! which would make simulated runs non-reproducible (combine order, message
+//! emission order).  All coordinator state therefore uses an FxHash-style
+//! fixed-seed hasher: deterministic across runs *and* measurably faster
+//! than SipHash on the small integer keys that dominate here.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style multiply-xor hasher (fixed seed, not DoS-resistant — fine
+/// for a simulator whose inputs we generate ourselves).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type DetBuildHasher = BuildHasherDefault<FxHasher>;
+pub type DetMap<K, V> = HashMap<K, V, DetBuildHasher>;
+pub type DetSet<K> = HashSet<K, DetBuildHasher>;
+
+pub fn det_map<K, V>() -> DetMap<K, V> {
+    DetMap::default()
+}
+
+pub fn det_set<K>() -> DetSet<K> {
+    DetSet::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_order_is_reproducible() {
+        let build = || {
+            let mut m: DetMap<u64, u64> = det_map();
+            for i in 0..1000 {
+                m.insert(i * 7919, i);
+            }
+            m.into_iter().collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn hashes_differ_across_keys() {
+        use std::hash::{BuildHasher, Hash};
+        let bh = DetBuildHasher::default();
+        let h = |x: u64| {
+            let mut hasher = bh.build_hasher();
+            x.hash(&mut hasher);
+            hasher.finish()
+        };
+        assert_ne!(h(1), h(2));
+        assert_ne!(h(0), h(u64::MAX));
+    }
+}

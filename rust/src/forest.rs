@@ -1,0 +1,185 @@
+//! Communication forest (paper §3.1, Fig 2).
+//!
+//! One balanced F-ary tree per machine.  The tree rooted at machine `r`
+//! funnels information about every task that targets data stored on `r`:
+//! the P leaves are the physical machines, internal nodes are *virtual
+//! transit machines* mapped onto physical machines by a globally-known
+//! hash, and the root (level 0) is `r` itself.  Messages climb one level
+//! per BSP round, merging meta-task sets at every node, which is what
+//! keeps Phase 1 load-balanced even when a single data chunk is hot.
+
+use crate::bsp::MachineId;
+use crate::rng::hash2;
+
+/// The static shape shared by all P trees of the forest.
+#[derive(Clone, Copy, Debug)]
+pub struct Forest {
+    p: usize,
+    fanout: usize,
+    height: u32,
+}
+
+impl Forest {
+    /// Build a forest over `p` machines with the given fanout (≥ 2).
+    pub fn new(p: usize, fanout: usize) -> Self {
+        assert!(p >= 1);
+        let fanout = fanout.max(2);
+        // height = ceil(log_F p): number of rounds Phase 1 needs.
+        let mut height = 0u32;
+        let mut reach = 1usize;
+        while reach < p {
+            reach = reach.saturating_mul(fanout);
+            height += 1;
+        }
+        Forest { p, fanout, height }
+    }
+
+    /// The paper's F = Θ(log P / log log P) default (§3.5), floored at 2.
+    pub fn default_fanout(p: usize) -> usize {
+        if p <= 2 {
+            return 2;
+        }
+        let lp = (p as f64).ln();
+        let llp = lp.ln().max(1.0);
+        (lp / llp).round().max(2.0) as usize
+    }
+
+    pub fn with_default_fanout(p: usize) -> Self {
+        Self::new(p, Self::default_fanout(p))
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Tree height = number of Phase-1 rounds (0 when P == 1).
+    pub fn height(&self) -> u32 {
+        self.height
+    }
+
+    /// Level/index of the leaf owned by machine `m` (leaves live at
+    /// `level == height`, indexed by machine id).
+    #[inline]
+    pub fn leaf(&self, m: MachineId) -> (u32, u64) {
+        (self.height, m as u64)
+    }
+
+    /// Parent coordinates of node `(level, idx)`.
+    #[inline]
+    pub fn parent(&self, level: u32, idx: u64) -> (u32, u64) {
+        debug_assert!(level > 0, "root has no parent");
+        (level - 1, idx / self.fanout as u64)
+    }
+
+    /// Physical machine hosting node `(level, idx)` of the tree rooted at
+    /// `root`.  Level 0 is pinned to `root`; leaves are pinned to their
+    /// machine; transit nodes are hashed (the VM→PM map of Fig 2).
+    #[inline]
+    pub fn machine_of(&self, root: MachineId, level: u32, idx: u64) -> MachineId {
+        if level == 0 {
+            return root;
+        }
+        if level == self.height {
+            return idx as usize;
+        }
+        let key = (level as u64) << 48 | idx;
+        (hash2(root as u64, key) % self.p as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn height_matches_log() {
+        assert_eq!(Forest::new(1, 2).height(), 0);
+        assert_eq!(Forest::new(2, 2).height(), 1);
+        assert_eq!(Forest::new(8, 2).height(), 3);
+        assert_eq!(Forest::new(9, 2).height(), 4);
+        assert_eq!(Forest::new(16, 4).height(), 2);
+    }
+
+    #[test]
+    fn default_fanout_grows_slowly() {
+        assert_eq!(Forest::default_fanout(2), 2);
+        let f16 = Forest::default_fanout(16);
+        let f1024 = Forest::default_fanout(1024);
+        assert!(f16 >= 2 && f1024 >= f16, "{f16} {f1024}");
+        assert!(f1024 <= 8);
+    }
+
+    #[test]
+    fn every_leaf_path_reaches_root() {
+        let f = Forest::new(13, 3);
+        for m in 0..13usize {
+            let (mut level, mut idx) = f.leaf(m);
+            let mut hops = 0;
+            while level > 0 {
+                let (pl, pi) = f.parent(level, idx);
+                level = pl;
+                idx = pi;
+                hops += 1;
+                assert!(hops <= f.height());
+            }
+            assert_eq!((level, idx), (0, 0));
+            assert_eq!(hops, f.height());
+        }
+    }
+
+    #[test]
+    fn root_and_leaves_are_pinned() {
+        let f = Forest::new(8, 2);
+        for r in 0..8 {
+            assert_eq!(f.machine_of(r, 0, 0), r);
+            for m in 0..8u64 {
+                assert_eq!(f.machine_of(r, f.height(), m), m as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn transit_mapping_is_stable_and_in_range() {
+        let f = Forest::new(16, 2);
+        for r in 0..16 {
+            for level in 1..f.height() {
+                for idx in 0..4u64 {
+                    let m1 = f.machine_of(r, level, idx);
+                    let m2 = f.machine_of(r, level, idx);
+                    assert_eq!(m1, m2);
+                    assert!(m1 < 16);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_roots_use_different_transit_machines() {
+        // The forest property: hot traffic for different roots spreads
+        // over different transit machines.
+        let f = Forest::new(16, 2);
+        let ms: Vec<MachineId> = (0..16)
+            .map(|r| f.machine_of(r, 1, 0))
+            .collect();
+        let uniq: std::collections::HashSet<_> = ms.iter().collect();
+        assert!(uniq.len() > 4, "transit nodes badly clustered: {ms:?}");
+    }
+
+    #[test]
+    fn fanout_bounds_children() {
+        // No node at level l-1 can have more than `fanout` children at l.
+        let f = Forest::new(16, 4);
+        let mut child_count = std::collections::HashMap::new();
+        for m in 0..16usize {
+            let (l, i) = f.leaf(m);
+            *child_count.entry(f.parent(l, i)).or_insert(0usize) += 1;
+        }
+        for (_, c) in child_count {
+            assert!(c <= 4);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Betweenness centrality from a single root (Brandes forward/backward,
+//! paper Algorithm 3 / Appendix C) via DISTEDGEMAP.
+
+use crate::graph::engine::GraphEngine;
+use crate::graph::subset::DistVertexSubset;
+use crate::graph::Vid;
+
+struct BcState {
+    /// Number of shortest paths from the root.
+    sigma: Vec<f64>,
+    /// BFS level (-1 = unreached).
+    level: Vec<i64>,
+    /// Dependency accumulator.
+    delta: Vec<f64>,
+    round: i64,
+}
+
+/// Single-root BC scores (unnormalized, root's own score = 0), as used in
+/// the paper's performance tests.
+pub fn bc<E: GraphEngine>(engine: &mut E, root: Vid) -> Vec<f64> {
+    let part = engine.part().clone();
+    let n = engine.n();
+    let mut st = BcState {
+        sigma: vec![0.0; n],
+        level: vec![-1; n],
+        delta: vec![0.0; n],
+        round: 0,
+    };
+    st.sigma[root as usize] = 1.0;
+    st.level[root as usize] = 0;
+
+    // ---- Forward pass: BFS levels + path counts ----
+    let mut frontier = DistVertexSubset::single(&part, root);
+    let mut frontiers = vec![frontier.clone()];
+    while !frontier.is_empty() {
+        st.round += 1;
+        frontier = engine.edge_map(
+            &mut st,
+            &frontier,
+            // f_forward: propagate path counts (Algorithm 3 line 4).
+            &mut |st: &BcState, u, _v, _w| Some(st.sigma[u as usize]),
+            // ⊗: path counts add.
+            &|a, b| a + b,
+            // wb_forward: first level wins; accumulate sigma.
+            &mut |st, v, agg| {
+                if st.level[v as usize] < 0 {
+                    st.level[v as usize] = st.round;
+                    st.sigma[v as usize] = agg;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+        frontiers.push(frontier.clone());
+    }
+
+    // ---- Backward pass: dependency accumulation ----
+    // Process levels deepest-first; symmetric edges mean edge_map from
+    // the level-(r+1) frontier reaches its level-r parents.
+    for r in (0..frontiers.len().saturating_sub(1)).rev() {
+        let deeper = frontiers[r + 1].clone();
+        if deeper.is_empty() {
+            continue;
+        }
+        engine.edge_map(
+            &mut st,
+            &deeper,
+            // f_backward: child v at level r+1 offers its dependency
+            // share to parents one level up.
+            &mut |st: &BcState, v, u, _w| {
+                if st.level[u as usize] == st.level[v as usize] - 1 {
+                    Some((1.0 + st.delta[v as usize]) / st.sigma[v as usize])
+                } else {
+                    None
+                }
+            },
+            // ⊗: shares add.
+            &|a, b| a + b,
+            // wb_backward: delta[u] = sigma[u] * Σ shares.
+            &mut |st, u, agg| {
+                st.delta[u as usize] = st.sigma[u as usize] * agg;
+                false
+            },
+        );
+    }
+
+    st.delta[root as usize] = 0.0;
+    st.delta
+}

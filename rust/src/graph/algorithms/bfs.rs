@@ -1,0 +1,37 @@
+//! Breadth-first search via DISTEDGEMAP (paper Algorithm 2).
+
+use crate::graph::engine::GraphEngine;
+use crate::graph::subset::DistVertexSubset;
+use crate::graph::Vid;
+
+/// Returns the hop distance from `src` per vertex (-1 = unreachable).
+pub fn bfs<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
+    let part = engine.part().clone();
+    let mut dist = vec![-1i64; engine.n()];
+    dist[src as usize] = 0;
+    let mut frontier = DistVertexSubset::single(&part, src);
+    let mut round = 0i64;
+    while !frontier.is_empty() {
+        round += 1;
+        let r = round;
+        frontier = engine.edge_map(
+            &mut dist,
+            &frontier,
+            // f: the source is on the current frontier, so the new
+            // distance is simply this round number (Algorithm 2 line 4).
+            &mut |_, _, _, _| Some(r as f64),
+            // merge: all contributions equal this round; keep one.
+            &|a, _| a,
+            // write_back: first writer wins (Algorithm 2 lines 6-9).
+            &mut |dist, v, val| {
+                if dist[v as usize] < 0 {
+                    dist[v as usize] = val as i64;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    dist
+}

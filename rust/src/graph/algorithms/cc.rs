@@ -1,0 +1,33 @@
+//! Connected components by min-label propagation via DISTEDGEMAP.
+
+use crate::graph::engine::GraphEngine;
+use crate::graph::subset::DistVertexSubset;
+
+/// Returns, per vertex, the minimum vertex id of its component.
+pub fn cc<E: GraphEngine>(engine: &mut E) -> Vec<u32> {
+    let part = engine.part().clone();
+    let n = engine.n();
+    let mut label: Vec<f64> = (0..n).map(|v| v as f64).collect();
+    engine.charge_local((n / engine.part().p().max(1)) as u64); // init sweep
+    let mut frontier = DistVertexSubset::all(&part);
+    while !frontier.is_empty() {
+        frontier = engine.edge_map(
+            &mut label,
+            &frontier,
+            // f: offer our label to the neighbor.
+            &mut |label: &Vec<f64>, u, _v, _w| Some(label[u as usize]),
+            // ⊗: smallest label wins.
+            &|a, b| a.min(b),
+            // ⊙: adopt improvements, stay active while changing.
+            &mut |label, v, val| {
+                if val < label[v as usize] {
+                    label[v as usize] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    label.into_iter().map(|l| l as u32).collect()
+}

@@ -1,0 +1,45 @@
+//! The five paper algorithms (§5, Appendix C) written against
+//! [`GraphEngine::edge_map`] — each a page of user-level code, mirroring
+//! the paper's "BC in fewer than 70 lines" interface-conciseness claim.
+
+mod bc;
+mod bfs;
+mod cc;
+mod pagerank;
+mod sssp;
+
+pub use bc::bc;
+pub use bfs::bfs;
+pub use cc::cc;
+pub use pagerank::pagerank;
+pub use sssp::sssp;
+
+/// Which algorithm — used by the benchmark harness tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Bfs,
+    Sssp,
+    Bc,
+    Cc,
+    Pr,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 5] = [
+        Algorithm::Bfs,
+        Algorithm::Sssp,
+        Algorithm::Bc,
+        Algorithm::Cc,
+        Algorithm::Pr,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Algorithm::Bfs => "BFS",
+            Algorithm::Sssp => "SSSP",
+            Algorithm::Bc => "BC",
+            Algorithm::Cc => "CC",
+            Algorithm::Pr => "PR",
+        }
+    }
+}

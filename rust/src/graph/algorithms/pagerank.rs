@@ -1,0 +1,59 @@
+//! PageRank iteration via DISTEDGEMAP (always dense — every vertex is
+//! active every round, which is exactly where the destination-tree
+//! aggregation and destination-aware broadcast pay off).
+//!
+//! The per-machine dense aggregation is the computation AOT-compiled as
+//! the `spmv_panel` Pallas artifact (alpha·A·x + beta); the simulator
+//! charges it as one work unit per edge.
+
+use crate::graph::engine::GraphEngine;
+use crate::graph::subset::DistVertexSubset;
+
+pub const DAMPING: f64 = 0.85;
+
+struct PrState {
+    rank: Vec<f64>,
+    next: Vec<f64>,
+    out_deg: Vec<u64>,
+}
+
+/// Run `iters` PageRank iterations; returns the final rank vector.
+pub fn pagerank<E: GraphEngine>(engine: &mut E, iters: usize) -> Vec<f64> {
+    let part = engine.part().clone();
+    let n = engine.n();
+    let base = (1.0 - DAMPING) / n as f64;
+    let per_machine = (n / part.p().max(1)) as u64;
+    let mut st = PrState {
+        rank: vec![1.0 / n as f64; n],
+        next: vec![base; n],
+        out_deg: (0..n as u32).map(|u| engine.out_degree(u)).collect(),
+    };
+    engine.charge_local(per_machine); // rank init sweep
+    let all = DistVertexSubset::all(&part);
+    for _ in 0..iters {
+        st.next.fill(base);
+        engine.charge_local(per_machine); // per-round base reset
+        engine.edge_map(
+            &mut st,
+            &all,
+            // f: share of the source's rank (dangling-free contribution).
+            &mut |st: &PrState, u, _v, _w| {
+                let d = st.out_deg[u as usize];
+                if d == 0 {
+                    None
+                } else {
+                    Some(st.rank[u as usize] / d as f64)
+                }
+            },
+            // ⊗: contributions add.
+            &|a, b| a + b,
+            // ⊙: damped update; frontier membership irrelevant (dense).
+            &mut |st, v, agg| {
+                st.next[v as usize] = base + DAMPING * agg;
+                false
+            },
+        );
+        std::mem::swap(&mut st.rank, &mut st.next);
+    }
+    st.rank
+}

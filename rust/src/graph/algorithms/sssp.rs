@@ -1,0 +1,42 @@
+//! Single-source shortest paths (frontier-driven Bellman-Ford) via
+//! DISTEDGEMAP.  The relaxation lambda `min(dv, du + w)` is the same
+//! computation AOT-compiled as the `relax_batch` Pallas artifact; the
+//! simulator charges it as one work unit per edge either way.
+
+use crate::graph::engine::GraphEngine;
+use crate::graph::subset::DistVertexSubset;
+use crate::graph::Vid;
+
+/// Returns the shortest distance from `src` per vertex (f64::INFINITY =
+/// unreachable).  Weights must be non-negative.
+pub fn sssp<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<f64> {
+    let part = engine.part().clone();
+    let mut dist = vec![f64::INFINITY; engine.n()];
+    dist[src as usize] = 0.0;
+    let mut frontier = DistVertexSubset::single(&part, src);
+    // Bellman-Ford terminates after at most n rounds on any graph with
+    // non-negative weights; the frontier usually empties much earlier.
+    let max_rounds = engine.n() as u64 + 1;
+    let mut rounds = 0;
+    while !frontier.is_empty() && rounds < max_rounds {
+        rounds += 1;
+        frontier = engine.edge_map(
+            &mut dist,
+            &frontier,
+            // f: candidate distance through the frontier vertex.
+            &mut |dist: &Vec<f64>, u, _v, w| Some(dist[u as usize] + w as f64),
+            // ⊗: keep the shortest candidate.
+            &|a, b| a.min(b),
+            // ⊙: relax; stay active only on improvement.
+            &mut |dist, v, val| {
+                if val < dist[v as usize] {
+                    dist[v as usize] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    dist
+}

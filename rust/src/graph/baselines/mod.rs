@@ -1,0 +1,28 @@
+//! Prior-system baseline engines (paper §6.1), reimplemented as policy
+//! configurations of the shared engine core so comparisons isolate the
+//! scheduling/layout differences the paper attributes its wins to:
+//!
+//! * [`gemini_like`] — the graph-algorithm family (Gemini): edges pinned
+//!   to their source's owner (mirror-style direct exchange, hubs
+//!   concentrate), per-round Θ(n/P) vertex-array work (the O(n·diam)
+//!   term), no transit trees.
+//! * [`la_like`] — the linear-algebra family (Graphite/LA3): full SpMV
+//!   scan every round regardless of frontier sparsity.
+//! * [`ligra_dist`] — Table 3's prototype: Ligra semantics + direct pull,
+//!   per-edge contribution messages, no TD-Orch ingestion or trees.
+
+use crate::graph::engine::{Engine, Flags};
+use crate::graph::Graph;
+use crate::CostModel;
+
+pub fn gemini_like(g: &Graph, p: usize, cost: CostModel) -> Engine {
+    Engine::baseline(g, p, cost, Flags::gemini_like(), "gemini-like")
+}
+
+pub fn la_like(g: &Graph, p: usize, cost: CostModel) -> Engine {
+    Engine::baseline(g, p, cost, Flags::la_like(), "la-like")
+}
+
+pub fn ligra_dist(g: &Graph, p: usize, cost: CostModel) -> Engine {
+    Engine::baseline(g, p, cost, Flags::ligra_dist(), "ligra-dist")
+}

@@ -1,0 +1,707 @@
+//! The `DistEdgeMap` execution engine (paper §5.1, Fig 6).
+//!
+//! One engine core implements the read→execute→merge→write-back round;
+//! a [`Flags`] block selects between TDO-GP (source/destination trees,
+//! per-machine pre-merge, destination-aware broadcast, sparse-dense
+//! switching) and the baseline families' policies (direct exchange,
+//! per-edge messages, full scans, per-round vertex-array overheads).
+//! This makes §6's comparisons *structural*: every engine shares the
+//! same substrate, metrics, and algorithm code.
+//!
+//! Simulation note: lambdas read vertex values through the algorithm's
+//! own state arrays, while the engine charges the messages a real
+//! deployment would need to deliver those values (down source trees /
+//! broadcast) and to return write-backs (up destination trees / direct).
+//! BSP phase separation (all `f` reads happen before any `write_back`
+//! mutation) keeps the simulated semantics equal to the distributed ones.
+
+use crate::bsp::Cluster;
+use crate::det::{det_map, DetMap};
+use crate::metrics::Metrics;
+
+use super::ingest::{ingest, ingest_at_owner, tree_levels, DistGraph};
+use super::subset::DistVertexSubset;
+use super::{Graph, VertexPart, Vid};
+
+/// Policy flags distinguishing TDO-GP from the baseline families, plus
+/// the T1–T3 ablation knobs (paper §5.2, Table 4).
+#[derive(Clone, Copy, Debug)]
+pub struct Flags {
+    /// Source/destination communication trees (TD-Orch layout).  Off =
+    /// direct fan-out/fan-in (mirror-style).
+    pub use_trees: bool,
+    /// Pre-merge contributions per (machine, destination) before sending
+    /// (part of T1).  Off = one message per edge contribution.
+    pub premerge: bool,
+    /// Dense-mode broadcast only to machines holding the vertex's edges
+    /// (part of T1).  Off = broadcast to all P machines.
+    pub dest_aware: bool,
+    /// Allow the sparse (vertex-centric) mode.  Off = every round is a
+    /// dense scan (the linear-algebra family).
+    pub sparse_mode: bool,
+    /// Charge a full local-edge scan every round regardless of frontier
+    /// (the SpMV cost model of Graphite/LA3).
+    pub full_scan: bool,
+    /// Charge Θ(n/P) per-machine work every round (dense vertex arrays —
+    /// the O(n·diam) term of gemini-like systems; also T2-off).
+    pub round_overhead_n: bool,
+    /// Local-work multiplier x100 (100 = 1.0).  Captures each system's
+    /// local-engine efficiency, calibrated from the paper's single
+    /// -machine Table 6 (TDO-GP 1.0x; Gemini ~1.6x; LA ~1.4x; GBBS-like
+    /// ~1.0x), and the T2/T3 ablation costs (T2-off 2x, T3-off 1.6x).
+    pub work_mult_pct: u64,
+    /// Whether the local runtime is NUMA-oblivious (ParlayLib-based
+    /// TDO-GP and GBBS/Ligra: yes; Gemini/Graphite: no — paper §6.5).
+    /// Oblivious engines pay the cluster topology's compute penalty.
+    pub numa_oblivious: bool,
+}
+
+impl Flags {
+    pub fn tdo_gp() -> Self {
+        Flags {
+            use_trees: true,
+            premerge: true,
+            dest_aware: true,
+            sparse_mode: true,
+            full_scan: false,
+            round_overhead_n: false,
+            work_mult_pct: 100,
+            numa_oblivious: true,
+        }
+    }
+
+    pub fn gemini_like() -> Self {
+        Flags {
+            use_trees: false,
+            premerge: true,
+            dest_aware: true,
+            sparse_mode: true,
+            full_scan: false,
+            round_overhead_n: true,
+            work_mult_pct: 200,
+            numa_oblivious: false,
+        }
+    }
+
+    pub fn la_like() -> Self {
+        Flags {
+            use_trees: false,
+            premerge: true,
+            dest_aware: true,
+            sparse_mode: false,
+            full_scan: true,
+            round_overhead_n: true,
+            work_mult_pct: 150,
+            numa_oblivious: false,
+        }
+    }
+
+    pub fn ligra_dist() -> Self {
+        Flags {
+            use_trees: false,
+            premerge: false,
+            dest_aware: true,
+            sparse_mode: true,
+            full_scan: false,
+            round_overhead_n: false,
+            // Ligra/GBBS local engines trail TDO-GP's lightweight local
+            // EDGEMAP (paper Table 3 P=1: 5.36 vs 4.54; Table 6).
+            work_mult_pct: 120,
+            numa_oblivious: true,
+        }
+    }
+
+    /// Apply the T1/T2/T3 ablation toggles to a TDO-GP engine.
+    /// T1-off removes the tree-based dedup/aggregation and the
+    /// destination-aware broadcast (contributions still pre-merge per
+    /// machine, as any MPI code would, but fan in directly).
+    pub fn with_techniques(t1: bool, t2: bool, t3: bool) -> Self {
+        let mut f = Self::tdo_gp();
+        if !t1 {
+            f.use_trees = false;
+            f.dest_aware = false;
+        }
+        if !t2 {
+            f.work_mult_pct = f.work_mult_pct * 200 / 100;
+            f.round_overhead_n = true;
+        }
+        if !t3 {
+            f.work_mult_pct = f.work_mult_pct * 160 / 100;
+        }
+        f
+    }
+}
+
+/// Fraction divisor for the sparse→dense switch: dense when
+/// Σdeg(U) + |U| > m / DENSE_DIV (Ligra's heuristic, paper §5.1).
+const DENSE_DIV: u64 = 20;
+
+/// Words on the wire for a (vertex, value) pair.
+const VAL_WORDS: u64 = 2;
+/// Words for a contribution message {v, value, tag}.
+const CONTRIB_WORDS: u64 = 3;
+
+/// The abstract engine interface the five graph algorithms run against.
+pub trait GraphEngine {
+    fn label(&self) -> &str;
+    fn part(&self) -> &VertexPart;
+    fn n(&self) -> usize;
+    fn m(&self) -> usize;
+    fn out_degree(&self, u: Vid) -> u64;
+    fn cluster_mut(&mut self) -> &mut Cluster;
+    fn metrics(&self) -> &Metrics;
+
+    /// Charge `units` of work on every machine (algorithm-level local
+    /// sweeps such as PR's base-rank init).
+    fn charge_local(&mut self, units_per_machine: u64);
+
+    /// DISTEDGEMAP (Fig 6): apply `f` to every edge (u, v) with u in the
+    /// frontier, ⊗-merge returned values per destination with `merge`,
+    /// apply `write_back` at each destination's owner, and return the
+    /// subset of destinations whose write_back returned true.
+    fn edge_map<S>(
+        &mut self,
+        state: &mut S,
+        frontier: &DistVertexSubset,
+        f: &mut dyn FnMut(&S, Vid, Vid, f32) -> Option<f64>,
+        merge: &dyn Fn(f64, f64) -> f64,
+        write_back: &mut dyn FnMut(&mut S, Vid, f64) -> bool,
+    ) -> DistVertexSubset;
+}
+
+/// The unified engine (TDO-GP or a baseline, depending on flags +
+/// placement).
+pub struct Engine {
+    pub dg: DistGraph,
+    pub cluster: Cluster,
+    pub flags: Flags,
+    label: String,
+    /// Effective local-work multiplier x100: engine base x NUMA penalty.
+    eff_work_pct: u64,
+}
+
+impl Engine {
+    /// TDO-GP with default techniques.
+    pub fn tdo_gp(g: &Graph, p: usize, cost: crate::CostModel) -> Self {
+        Self::tdo_gp_with(g, p, cost, Flags::tdo_gp(), "tdo-gp")
+    }
+
+    /// TDO-GP with explicit flags (ablations).
+    pub fn tdo_gp_with(
+        g: &Graph,
+        p: usize,
+        cost: crate::CostModel,
+        flags: Flags,
+        label: &str,
+    ) -> Self {
+        let mut cluster = Cluster::new(p, cost);
+        let c = crate::forest::Forest::default_fanout(p).max(4);
+        let dg = ingest(&mut cluster, g, c);
+        let eff_work_pct = Self::effective_pct(&flags, cost);
+        Engine { dg, cluster, flags, label: label.to_string(), eff_work_pct }
+    }
+
+    /// Baseline constructor: owner placement + family flags.
+    pub fn baseline(
+        g: &Graph,
+        p: usize,
+        cost: crate::CostModel,
+        flags: Flags,
+        label: &str,
+    ) -> Self {
+        let mut cluster = Cluster::new(p, cost);
+        let c = crate::forest::Forest::default_fanout(p).max(4);
+        let dg = ingest_at_owner(&mut cluster, g, c);
+        let eff_work_pct = Self::effective_pct(&flags, cost);
+        Engine { dg, cluster, flags, label: label.to_string(), eff_work_pct }
+    }
+
+    fn effective_pct(flags: &Flags, cost: crate::CostModel) -> u64 {
+        let numa_pct = if flags.numa_oblivious {
+            (cost.numa.compute_penalty() * 100.0).round() as u64
+        } else {
+            100
+        };
+        flags.work_mult_pct * numa_pct / 100
+    }
+
+    /// Exclude ingestion from measured metrics (the paper times queries,
+    /// not loading).
+    pub fn reset_metrics(&mut self) {
+        self.cluster.reset_metrics();
+    }
+
+    #[inline]
+    fn scaled(&self, units: u64) -> u64 {
+        units * self.eff_work_pct / 100
+    }
+}
+
+impl GraphEngine for Engine {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn part(&self) -> &VertexPart {
+        &self.dg.part
+    }
+
+    fn n(&self) -> usize {
+        self.dg.n
+    }
+
+    fn m(&self) -> usize {
+        self.dg.m
+    }
+
+    fn out_degree(&self, u: Vid) -> u64 {
+        self.dg.out_deg[u as usize] as u64
+    }
+
+    fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.cluster.metrics
+    }
+
+    fn charge_local(&mut self, units_per_machine: u64) {
+        let u = self.scaled(units_per_machine);
+        for m in 0..self.cluster.p {
+            self.cluster.work(m, u);
+        }
+        self.cluster.barrier();
+    }
+
+    fn edge_map<S>(
+        &mut self,
+        state: &mut S,
+        frontier: &DistVertexSubset,
+        f: &mut dyn FnMut(&S, Vid, Vid, f32) -> Option<f64>,
+        merge: &dyn Fn(f64, f64) -> f64,
+        write_back: &mut dyn FnMut(&mut S, Vid, f64) -> bool,
+    ) -> DistVertexSubset {
+        let p = self.cluster.p;
+        let part = self.dg.part.clone();
+        let next = DistVertexSubset::empty(&part);
+        if frontier.is_empty() {
+            return next;
+        }
+        let active = frontier.iter_all(&part);
+        let sum_deg: u64 = active.iter().map(|u| self.dg.out_deg[*u as usize] as u64).sum();
+        let dense = !self.flags.sparse_mode
+            || (sum_deg + active.len() as u64) > self.dg.m as u64 / DENSE_DIV;
+
+        // ---- Phase 1: deliver source values to edge-block machines ----
+        if dense {
+            // One broadcast superstep.
+            for &u in &active {
+                let owner = part.owner(u);
+                if self.flags.dest_aware {
+                    for &leaf in &self.dg.src_leaves[u as usize] {
+                        self.cluster.account_msg(owner, leaf, VAL_WORDS);
+                    }
+                } else {
+                    for t in 0..p {
+                        self.cluster.account_msg(owner, t, VAL_WORDS);
+                    }
+                }
+            }
+            self.cluster.barrier();
+        } else if self.flags.use_trees {
+            // Top-down source-tree broadcast, level-synchronous.
+            let mut depth_msgs: Vec<Vec<(usize, usize)>> = Vec::new();
+            for &u in &active {
+                let leaves = &self.dg.src_leaves[u as usize];
+                let owner = part.owner(u);
+                let levels = tree_levels(u as u64, leaves, owner, self.dg.c, p);
+                // `levels` is bottom-up; broadcast replays it top-down
+                // with direction reversed.
+                for (d, level) in levels.iter().rev().enumerate() {
+                    if depth_msgs.len() <= d {
+                        depth_msgs.push(Vec::new());
+                    }
+                    for (child, parent) in level {
+                        depth_msgs[d].push((*parent, *child));
+                    }
+                }
+            }
+            for level in depth_msgs {
+                for (from, to) in level {
+                    self.cluster.account_msg(from, to, VAL_WORDS);
+                }
+                self.cluster.barrier();
+            }
+        } else {
+            // Direct fan-out from each owner (mirror-style).
+            for &u in &active {
+                let owner = part.owner(u);
+                for &leaf in &self.dg.src_leaves[u as usize] {
+                    self.cluster.account_msg(owner, leaf, VAL_WORDS);
+                }
+            }
+            self.cluster.barrier();
+        }
+
+        // ---- Phase 2: execute f at block machines, gather contributions
+        let mut work = vec![0u64; p];
+        let mut contribs: Vec<DetMap<Vid, f64>> = (0..p).map(|_| det_map()).collect();
+        let mut raw: Vec<Vec<(Vid, f64)>> = (0..p).map(|_| Vec::new()).collect();
+
+        let emit = |mach: usize,
+                        v: Vid,
+                        cv: f64,
+                        contribs: &mut Vec<DetMap<Vid, f64>>,
+                        raw: &mut Vec<Vec<(Vid, f64)>>| {
+            if self.flags.premerge {
+                // In-place ⊗ with a single hash lookup (hot loop).
+                contribs[mach]
+                    .entry(v)
+                    .and_modify(|acc| *acc = merge(*acc, cv))
+                    .or_insert(cv);
+            } else {
+                raw[mach].push((v, cv));
+            }
+        };
+
+        if dense || self.flags.full_scan {
+            for mach in 0..p {
+                for block in &self.dg.blocks[mach] {
+                    work[mach] += block.targets.len() as u64;
+                    if !frontier.contains(&part, block.src) {
+                        continue;
+                    }
+                    for (v, w) in &block.targets {
+                        if let Some(cv) = f(state, block.src, *v, *w) {
+                            work[mach] += 1;
+                            emit(mach, *v, cv, &mut contribs, &mut raw);
+                        }
+                    }
+                }
+            }
+        } else {
+            for &u in &active {
+                for &mach in &self.dg.src_leaves[u as usize] {
+                    let Some(idxs) = self.dg.block_of[mach].get(&u) else { continue };
+                    for &idx in idxs {
+                        let block = &self.dg.blocks[mach][idx as usize];
+                        for (v, w) in &block.targets {
+                            work[mach] += 1;
+                            if let Some(cv) = f(state, u, *v, *w) {
+                                emit(mach, *v, cv, &mut contribs, &mut raw);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for m in 0..p {
+            let mut units = self.scaled(work[m]);
+            if self.flags.round_overhead_n {
+                units += self.dg.part.count_on(m) as u64;
+            }
+            self.cluster.work(m, units);
+        }
+        self.cluster.barrier();
+
+        // ---- Phase 3: aggregate contributions to destination owners ----
+        // per destination: (merged value, contributing machines).
+        let mut per_v: DetMap<Vid, (f64, Vec<usize>)> = det_map();
+        if self.flags.premerge {
+            for (mach, cmap) in contribs.iter_mut().enumerate() {
+                for (v, val) in cmap.drain() {
+                    per_v
+                        .entry(v)
+                        .and_modify(|(acc, members)| {
+                            *acc = merge(*acc, val);
+                            members.push(mach);
+                        })
+                        .or_insert_with(|| (val, vec![mach]));
+                }
+            }
+            if self.flags.use_trees {
+                // Destination-tree merge, level-synchronous.
+                let mut depth_msgs: Vec<Vec<(usize, usize)>> = Vec::new();
+                for (v, (_, members)) in per_v.iter_mut() {
+                    members.sort_unstable();
+                    let owner = part.owner(*v);
+                    let levels = tree_levels(*v as u64 ^ 0xD5, members, owner, self.dg.c, p);
+                    for (d, level) in levels.iter().enumerate() {
+                        if depth_msgs.len() <= d {
+                            depth_msgs.push(Vec::new());
+                        }
+                        depth_msgs[d].extend(level.iter().copied());
+                    }
+                }
+                for level in depth_msgs {
+                    for (from, to) in level {
+                        self.cluster.account_msg(from, to, CONTRIB_WORDS);
+                    }
+                    self.cluster.barrier();
+                }
+            } else {
+                for (v, (_, members)) in per_v.iter() {
+                    let owner = part.owner(*v);
+                    for &mach in members {
+                        self.cluster.account_msg(mach, owner, CONTRIB_WORDS);
+                    }
+                }
+                self.cluster.barrier();
+            }
+        } else {
+            // Per-edge messages straight to the destination owner — the
+            // "direct pull" prototype: each cross-machine edge costs a
+            // request plus a reply (no aggregation anywhere).
+            for (mach, list) in raw.iter_mut().enumerate() {
+                for (v, val) in list.drain(..) {
+                    let owner = part.owner(v);
+                    self.cluster.account_rpc(mach, owner, CONTRIB_WORDS);
+                    per_v
+                        .entry(v)
+                        .and_modify(|(acc, _)| *acc = merge(*acc, val))
+                        .or_insert_with(|| (val, vec![mach]));
+                }
+            }
+            self.cluster.barrier();
+        }
+
+        // ---- Phase 4: write-backs at destination owners ----
+        let mut next = next;
+        let mut keys: Vec<Vid> = per_v.keys().copied().collect();
+        keys.sort_unstable();
+        let mut wb_work = vec![0u64; p];
+        for v in keys {
+            let (acc, _) = per_v.remove(&v).unwrap();
+            let owner = part.owner(v);
+            wb_work[owner] += 1;
+            if write_back(state, v, acc) {
+                next.insert(&part, v);
+            }
+        }
+        for m in 0..p {
+            self.cluster.work(m, self.scaled(wb_work[m]));
+        }
+        self.cluster.barrier();
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::CostModel;
+
+    /// Plain BFS reference on the raw graph.
+    fn bfs_ref(g: &Graph, src: Vid) -> Vec<i64> {
+        let mut dist = vec![-1i64; g.n];
+        dist[src as usize] = 0;
+        let mut q = std::collections::VecDeque::from([src]);
+        while let Some(u) = q.pop_front() {
+            for (v, _) in g.neighbors(u) {
+                if dist[*v as usize] < 0 {
+                    dist[*v as usize] = dist[u as usize] + 1;
+                    q.push_back(*v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Minimal BFS written against the engine, exercising edge_map.
+    fn bfs_engine<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
+        let part = engine.part().clone();
+        let mut dist = vec![-1i64; engine.n()];
+        dist[src as usize] = 0;
+        let mut frontier = DistVertexSubset::single(&part, src);
+        let mut round = 0i64;
+        while !frontier.is_empty() {
+            round += 1;
+            let r = round;
+            frontier = engine.edge_map(
+                &mut dist,
+                &frontier,
+                &mut |_, _, _, _| Some(r as f64),
+                &|a, b| a.min(b),
+                &mut |dist, v, val| {
+                    if dist[v as usize] < 0 {
+                        dist[v as usize] = val as i64;
+                        true
+                    } else {
+                        false
+                    }
+                },
+            );
+        }
+        dist
+    }
+
+    #[test]
+    fn edge_map_bfs_matches_reference_all_engines() {
+        let g = gen::barabasi_albert(1500, 5, 11);
+        let expected = bfs_ref(&g, 0);
+        let cost = CostModel::paper_cluster();
+        for (label, mut engine) in [
+            ("tdo", Engine::tdo_gp(&g, 8, cost)),
+            ("gem", Engine::baseline(&g, 8, cost, Flags::gemini_like(), "gemini-like")),
+            ("la", Engine::baseline(&g, 8, cost, Flags::la_like(), "la-like")),
+            ("lig", Engine::baseline(&g, 8, cost, Flags::ligra_dist(), "ligra-dist")),
+        ] {
+            let got = bfs_engine(&mut engine, 0);
+            assert_eq!(got, expected, "{label}");
+        }
+    }
+
+    #[test]
+    fn edge_map_respects_frontier() {
+        // Only edges out of the frontier may fire.
+        let g = gen::grid2d(8, 3);
+        let mut engine = Engine::tdo_gp(&g, 4, CostModel::paper_cluster());
+        let part = engine.part().clone();
+        let frontier = DistVertexSubset::single(&part, 0);
+        let mut state = ();
+        let mut fired = Vec::new();
+        engine.edge_map(
+            &mut state,
+            &frontier,
+            &mut |_, u, v, _| {
+                fired.push((u, v));
+                Some(1.0)
+            },
+            &|a, _| a,
+            &mut |_, _, _| false,
+        );
+        let mut expected: Vec<(Vid, Vid)> =
+            g.neighbors(0).iter().map(|(v, _)| (0, *v)).collect();
+        fired.sort_unstable();
+        expected.sort_unstable();
+        assert_eq!(fired, expected);
+    }
+
+    #[test]
+    fn merge_applied_once_per_destination() {
+        // Two frontier vertices pointing at one destination: write_back
+        // must see a single merged value.
+        let g = Graph::from_arcs(
+            3,
+            vec![(0, 2, 1.0), (1, 2, 1.0), (2, 0, 1.0), (2, 1, 1.0)],
+        );
+        let mut engine = Engine::tdo_gp(&g, 2, CostModel::paper_cluster());
+        let part = engine.part().clone();
+        let mut frontier = DistVertexSubset::empty(&part);
+        frontier.insert(&part, 0);
+        frontier.insert(&part, 1);
+        let mut seen: Vec<(Vid, f64)> = Vec::new();
+        engine.edge_map(
+            &mut seen,
+            &frontier,
+            &mut |_, _, _, _| Some(1.0),
+            &|a, b| a + b,
+            &mut |seen, v, val| {
+                seen.push((v, val));
+                false
+            },
+        );
+        assert_eq!(seen, vec![(2, 2.0)]);
+    }
+
+    #[test]
+    fn dense_mode_engages_on_large_frontier() {
+        let g = gen::erdos_renyi(500, 3000, 5);
+        let mut engine = Engine::tdo_gp(&g, 4, CostModel::paper_cluster());
+        let part = engine.part().clone();
+        let all = DistVertexSubset::all(&part);
+        let before = engine.metrics().supersteps;
+        let mut state = ();
+        engine.edge_map(
+            &mut state,
+            &all,
+            &mut |_, _, _, _| Some(1.0),
+            &|a, b| a + b,
+            &mut |_, _, _| false,
+        );
+        // Dense path: 1 broadcast + 1 exec + tree/merge + wb supersteps —
+        // bounded regardless of frontier size.
+        let steps = engine.metrics().supersteps - before;
+        assert!(steps <= 8, "dense round took {steps} supersteps");
+    }
+
+    #[test]
+    fn tdo_balances_hub_work_vs_owner_placement() {
+        // A hub whose degree exceeds m/P cannot be balanced by vertex
+        // partitioning alone: TDO-GP's transit-machine blocks must beat
+        // owner placement on a full-frontier round.
+        let mut arcs = Vec::new();
+        for v in 1..3000u32 {
+            arcs.push((0, v, 1.0));
+            arcs.push((v, 0, 1.0));
+            let w = if v == 2999 { 1 } else { v + 1 };
+            arcs.push((v, w, 1.0));
+            arcs.push((w, v, 1.0));
+        }
+        let g = Graph::from_arcs(3000, arcs);
+        let cost = CostModel::paper_cluster();
+        let run = |mut engine: Engine| {
+            let part = engine.part().clone();
+            let all = DistVertexSubset::all(&part);
+            engine.reset_metrics();
+            let mut state = ();
+            engine.edge_map(
+                &mut state,
+                &all,
+                &mut |_, _, _, _| Some(1.0),
+                &|a, b| a + b,
+                &mut |_, _, _| false,
+            );
+            engine.metrics().work_imbalance()
+        };
+        let tdo = run(Engine::tdo_gp(&g, 8, cost));
+        let gem = run(Engine::baseline(&g, 8, cost, Flags::gemini_like(), "gemini-like"));
+        assert!(
+            tdo < gem,
+            "tdo imbalance {tdo:.2} should beat owner placement {gem:.2}"
+        );
+    }
+
+    #[test]
+    fn ablation_flags_cost_more() {
+        let g = gen::barabasi_albert(2000, 6, 17);
+        let cost = CostModel::paper_cluster();
+        let run = |flags: Flags| {
+            let mut engine = Engine::tdo_gp_with(&g, 8, cost, flags, "x");
+            let part = engine.part().clone();
+            engine.reset_metrics();
+            let mut dist = vec![-1i64; engine.n()];
+            dist[0] = 0;
+            let mut frontier = DistVertexSubset::single(&part, 0);
+            let mut round = 0i64;
+            while !frontier.is_empty() && round < 50 {
+                round += 1;
+                let r = round;
+                frontier = engine.edge_map(
+                    &mut dist,
+                    &frontier,
+                    &mut |_, _, _, _| Some(r as f64),
+                    &|a, b| a.min(b),
+                    &mut |dist, v, val| {
+                        if dist[v as usize] < 0 {
+                            dist[v as usize] = val as i64;
+                            true
+                        } else {
+                            false
+                        }
+                    },
+                );
+            }
+            engine.metrics().sim_seconds()
+        };
+        let full = run(Flags::tdo_gp());
+        let no_t1 = run(Flags::with_techniques(false, true, true));
+        let no_t2 = run(Flags::with_techniques(true, false, true));
+        let no_t3 = run(Flags::with_techniques(true, true, false));
+        assert!(no_t1 > full, "no_t1 {no_t1} !> {full}");
+        assert!(no_t2 > full, "no_t2 {no_t2} !> {full}");
+        assert!(no_t3 > full, "no_t3 {no_t3} !> {full}");
+    }
+}

@@ -1,0 +1,293 @@
+//! Synthetic graph generators — stand-ins for the paper's datasets
+//! (DESIGN.md §2): Erdős–Rényi (unskewed, Fig 9), Barabási–Albert
+//! (power-law, the social-network family, γ≈2.2 per §6.3), RMAT
+//! (web-like skew), 2-D grid (road-network family: high diameter,
+//! bounded degree), and a community-ring hybrid (web-graph family:
+//! skewed *and* high-diameter, like uk-2005 / Hyperlink).
+//!
+//! All generators emit symmetric weighted graphs.
+
+use super::{Graph, Vid};
+use crate::rng::Rng;
+
+fn symmetrize(arcs: &mut Vec<(Vid, Vid, f32)>) {
+    let fwd: Vec<(Vid, Vid, f32)> = arcs.clone();
+    for (u, v, w) in fwd {
+        arcs.push((v, u, w));
+    }
+}
+
+fn rand_weight(rng: &mut Rng) -> f32 {
+    1.0 + rng.next_f32() * 9.0
+}
+
+/// Erdős–Rényi G(n, m): `m_target` undirected edges chosen uniformly.
+pub fn erdos_renyi(n: usize, m_target: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut arcs = Vec::with_capacity(m_target * 2);
+    for _ in 0..m_target {
+        let u = rng.next_below(n as u64) as Vid;
+        let v = rng.next_below(n as u64) as Vid;
+        if u != v {
+            arcs.push((u, v, rand_weight(&mut rng)));
+        }
+    }
+    symmetrize(&mut arcs);
+    Graph::from_arcs(n, arcs)
+}
+
+/// Barabási–Albert preferential attachment with `k` edges per new vertex:
+/// power-law degree distribution (exponent ≈ 3 classically; attachment by
+/// sampling endpoints of existing edges reproduces the heavy tail the
+/// paper's social graphs exhibit).
+pub fn barabasi_albert(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(n > k && k >= 1);
+    let mut rng = Rng::new(seed);
+    let mut arcs: Vec<(Vid, Vid, f32)> = Vec::with_capacity(n * k * 2);
+    // Endpoint pool: sampling uniformly from it = preferential attachment.
+    let mut pool: Vec<Vid> = Vec::with_capacity(n * k * 2);
+    // Seed clique over the first k+1 vertices.
+    for u in 0..=(k as Vid) {
+        for v in 0..u {
+            arcs.push((u, v, rand_weight(&mut rng)));
+            pool.push(u);
+            pool.push(v);
+        }
+    }
+    for u in (k as Vid + 1)..(n as Vid) {
+        for _ in 0..k {
+            let v = pool[rng.next_usize(pool.len())];
+            if v != u {
+                arcs.push((u, v, rand_weight(&mut rng)));
+                pool.push(u);
+                pool.push(v);
+            }
+        }
+    }
+    symmetrize(&mut arcs);
+    Graph::from_arcs(n, arcs)
+}
+
+/// RMAT (Kronecker-style) generator with the classic (0.57, 0.19, 0.19,
+/// 0.05) partition probabilities — web-graph skew.
+pub fn rmat(scale: u32, m_target: usize, seed: u64) -> Graph {
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut arcs = Vec::with_capacity(m_target * 2);
+    for _ in 0..m_target {
+        let (mut u, mut v) = (0u64, 0u64);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (bu, bv) = if r < 0.57 {
+                (0, 0)
+            } else if r < 0.76 {
+                (0, 1)
+            } else if r < 0.95 {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if u != v {
+            arcs.push((u as Vid, v as Vid, rand_weight(&mut rng)));
+        }
+    }
+    symmetrize(&mut arcs);
+    Graph::from_arcs(n, arcs)
+}
+
+/// 2-D grid (4-neighbor torus-free): the road-network stand-in — diameter
+/// Θ(√n), max degree 4.
+pub fn grid2d(side: usize, seed: u64) -> Graph {
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+    let id = |r: usize, c: usize| (r * side + c) as Vid;
+    let mut arcs = Vec::with_capacity(n * 4);
+    for r in 0..side {
+        for c in 0..side {
+            if c + 1 < side {
+                arcs.push((id(r, c), id(r, c + 1), rand_weight(&mut rng)));
+            }
+            if r + 1 < side {
+                arcs.push((id(r, c), id(r + 1, c), rand_weight(&mut rng)));
+            }
+        }
+    }
+    symmetrize(&mut arcs);
+    Graph::from_arcs(n, arcs)
+}
+
+/// Ring of `communities` BA communities bridged by single edges: skewed
+/// degree distribution *and* diameter Θ(communities) — the web-graph
+/// (uk-2005 / Hyperlink) stand-in.
+pub fn community_ring(n: usize, communities: usize, k: usize, seed: u64) -> Graph {
+    assert!(communities >= 1);
+    let per = n / communities;
+    assert!(per > k + 1);
+    let mut rng = Rng::new(seed);
+    let mut arcs: Vec<(Vid, Vid, f32)> = Vec::new();
+    for c in 0..communities {
+        let base = (c * per) as Vid;
+        let local = barabasi_albert(per, k, seed ^ (c as u64 + 1));
+        for u in 0..local.n as Vid {
+            for (v, w) in local.neighbors(u) {
+                arcs.push((base + u, base + v, *w));
+            }
+        }
+        // Bridge to the next community.
+        let next_base = (((c + 1) % communities) * per) as Vid;
+        let a = base + rng.next_below(per as u64) as Vid;
+        let b = next_base + rng.next_below(per as u64) as Vid;
+        arcs.push((a, b, rand_weight(&mut rng)));
+        arcs.push((b, a, rand_weight(&mut rng)));
+    }
+    Graph::from_arcs(communities * per, arcs)
+}
+
+/// Named dataset stand-ins for Table 2 (scaled ~1000x down; see DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    RedditLike,
+    UkLike,
+    TwitterLike,
+    FriendsterLike,
+    HyperlinkLike,
+    RoadLike,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 6] = [
+        Dataset::RedditLike,
+        Dataset::UkLike,
+        Dataset::TwitterLike,
+        Dataset::FriendsterLike,
+        Dataset::HyperlinkLike,
+        Dataset::RoadLike,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Dataset::RedditLike => "reddit-like (BA)",
+            Dataset::UkLike => "uk-like (community ring)",
+            Dataset::TwitterLike => "twitter-like (BA hub-heavy)",
+            Dataset::FriendsterLike => "friendster-like (ER+BA)",
+            Dataset::HyperlinkLike => "hyperlink-like (RMAT)",
+            Dataset::RoadLike => "road-like (grid)",
+        }
+    }
+
+    /// Machines used in Table 2 for this dataset (paper: proportional to
+    /// dataset size).
+    pub fn machines(self) -> usize {
+        match self {
+            Dataset::RedditLike => 4,
+            Dataset::UkLike | Dataset::TwitterLike | Dataset::FriendsterLike => 8,
+            Dataset::HyperlinkLike | Dataset::RoadLike => 16,
+        }
+    }
+
+    pub fn build(self, seed: u64) -> Graph {
+        match self {
+            // Dense social graph, m/n ~ 24 (reddit: 49).
+            Dataset::RedditLike => barabasi_albert(16_000, 12, seed),
+            // Skew + diameter ~ community count (uk-2005: diam 276).
+            Dataset::UkLike => community_ring(64_000, 128, 4, seed),
+            // Hub-heavy social graph (twitter).
+            Dataset::TwitterLike => barabasi_albert(50_000, 10, seed),
+            // Larger, less skewed social graph (friendster).
+            Dataset::FriendsterLike => erdos_renyi(80_000, 500_000, seed),
+            // Web crawl skew (hyperlink12).
+            Dataset::HyperlinkLike => rmat(16, 600_000, seed),
+            // Road network: n ~= m, diam Θ(√n) (road-usa: diam 6139).
+            Dataset::RoadLike => grid2d(384, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_size_and_symmetry() {
+        let g = erdos_renyi(1000, 5000, 1);
+        assert_eq!(g.n, 1000);
+        assert!(g.m() > 8000 && g.m() <= 10_000, "m={}", g.m());
+        // Symmetric: every arc has its reverse.
+        for u in 0..g.n as Vid {
+            for (v, _) in g.neighbors(u) {
+                assert!(g.neighbors(*v).iter().any(|(x, _)| *x == u));
+            }
+        }
+    }
+
+    #[test]
+    fn ba_is_skewed() {
+        let g = barabasi_albert(5000, 5, 2);
+        let avg = g.m() as f64 / g.n as f64;
+        let max = g.max_degree() as f64;
+        assert!(
+            max > 12.0 * avg,
+            "BA should have hubs: max {max} avg {avg:.1}"
+        );
+    }
+
+    #[test]
+    fn grid_has_bounded_degree() {
+        let g = grid2d(30, 3);
+        assert_eq!(g.n, 900);
+        assert!(g.max_degree() <= 4);
+        assert_eq!(g.m(), 2 * (2 * 30 * 29));
+    }
+
+    #[test]
+    fn rmat_size() {
+        let g = rmat(10, 4000, 4);
+        assert_eq!(g.n, 1024);
+        assert!(g.m() > 4000);
+    }
+
+    #[test]
+    fn community_ring_connected_and_skewed() {
+        let g = community_ring(2000, 10, 3, 5);
+        assert!(g.max_degree() > 15);
+        // BFS from 0 reaches everything with positive degree.
+        let mut seen = vec![false; g.n];
+        let mut queue = std::collections::VecDeque::from([0 as Vid]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for (v, _) in g.neighbors(u) {
+                if !seen[*v as usize] {
+                    seen[*v as usize] = true;
+                    count += 1;
+                    queue.push_back(*v);
+                }
+            }
+        }
+        let with_deg = (0..g.n as Vid).filter(|u| g.out_degree(*u) > 0).count();
+        assert!(count >= with_deg, "{count} < {with_deg}");
+    }
+
+    #[test]
+    fn datasets_build() {
+        // Smoke-test two Table 2 stand-ins.
+        let r = Dataset::RedditLike.build(7);
+        assert!(r.n >= 16_000 && r.m() > 300_000);
+        let road = Dataset::RoadLike.build(7);
+        assert_eq!(road.n, 384 * 384);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = barabasi_albert(500, 4, 9);
+        let b = barabasi_albert(500, 4, 9);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(
+            a.edges.iter().map(|(v, _)| *v).collect::<Vec<_>>(),
+            b.edges.iter().map(|(v, _)| *v).collect::<Vec<_>>()
+        );
+    }
+}

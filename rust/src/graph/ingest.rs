@@ -1,0 +1,397 @@
+//! Ingestion-time orchestration (paper §5.1).
+//!
+//! One TD-Orch-style preprocessing pass when the graph is loaded resolves
+//! all future skew: vertices are pinned by a degree-balanced schema, edges
+//! are organized into per-source *edge blocks*, and blocks of hot (high
+//! -degree) vertices are spread over transit machines instead of piling
+//! onto the vertex owner.  The machines holding a vertex's blocks are the
+//! leaves of its *source tree* (value broadcast) and the machines holding
+//! its in-edges are the leaves of its *destination tree* (write-back
+//! aggregation) — the persisted meta-task trees of §5.1.
+
+use crate::bsp::{Cluster, MachineId};
+use crate::det::{det_map, DetMap};
+use crate::rng::{hash2, hash64};
+
+use super::{Graph, VertexPart, Vid};
+
+/// One edge block: a contiguous chunk of a vertex's out-edges parked on
+/// one machine.
+#[derive(Clone, Debug)]
+pub struct EdgeBlock {
+    pub src: Vid,
+    pub targets: Vec<(Vid, f32)>,
+}
+
+/// Ingestion statistics (reported by the harness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestStats {
+    pub hot_vertices: u64,
+    pub blocks: u64,
+    pub moved_edges: u64,
+}
+
+/// The distributed graph after ingestion.
+#[derive(Clone, Debug)]
+pub struct DistGraph {
+    pub n: usize,
+    pub m: usize,
+    pub p: usize,
+    pub part: VertexPart,
+    /// Per-machine edge blocks.
+    pub blocks: Vec<Vec<EdgeBlock>>,
+    /// Per-machine: source vertex -> indices into `blocks[m]`.
+    pub block_of: Vec<DetMap<Vid, Vec<u32>>>,
+    /// Source-tree leaves: machines holding out-edge blocks of u.
+    pub src_leaves: Vec<Vec<MachineId>>,
+    /// Destination-tree leaves: machines holding in-edges of v.
+    pub dst_leaves: Vec<Vec<MachineId>>,
+    pub out_deg: Vec<u32>,
+    /// Tree fanout C for source/destination trees.
+    pub c: usize,
+    pub stats: IngestStats,
+}
+
+/// Aggregation/broadcast tree over `members` rooted at `root`: returns
+/// bottom-up levels of (child_machine, parent_machine) message edges,
+/// C-ary, transit machines mapped by hash — the meta-task tree of §3.3
+/// persisted for graph use.  Empty when members == [root].
+pub fn tree_levels(
+    key: u64,
+    members: &[MachineId],
+    root: MachineId,
+    fanout: usize,
+    p: usize,
+) -> Vec<Vec<(MachineId, MachineId)>> {
+    let fanout = fanout.max(2);
+    let mut levels = Vec::new();
+    let mut cur: Vec<MachineId> = members.to_vec();
+    let mut depth = 0u64;
+    while cur.len() > fanout {
+        let mut next = Vec::with_capacity(cur.len().div_ceil(fanout));
+        let mut edges = Vec::with_capacity(cur.len());
+        for (gidx, group) in cur.chunks(fanout).enumerate() {
+            let parent = (hash2(key, (depth << 32) | gidx as u64) % p as u64) as usize;
+            for &child in group {
+                edges.push((child, parent));
+            }
+            next.push(parent);
+        }
+        levels.push(edges);
+        cur = next;
+        depth += 1;
+    }
+    let last: Vec<(MachineId, MachineId)> =
+        cur.into_iter().filter(|m| *m != root).map(|m| (m, root)).collect();
+    if !last.is_empty() {
+        levels.push(last);
+    }
+    levels
+}
+
+/// Ingest `g` onto `p` machines.  `c` is the tree fanout / hot threshold
+/// parameter (the paper's C).  Communication and work of the
+/// preprocessing pass are charged to `cluster`.
+pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
+    let p = cluster.p;
+    let part = VertexPart::degree_balanced(g, p);
+    let n = g.n;
+    let m = g.m();
+    let mut stats = IngestStats::default();
+
+    // Hot vertices: degree above both C and a per-machine fair share
+    // sliver get their blocks spread over transit machines.
+    let hot_threshold = (c as u64).max((m as u64 / (8 * p as u64)).max(8));
+    let block_cap = hot_threshold as usize;
+
+    let mut blocks: Vec<Vec<EdgeBlock>> = (0..p).map(|_| Vec::new()).collect();
+    let mut block_of: Vec<DetMap<Vid, Vec<u32>>> = (0..p).map(|_| det_map()).collect();
+    let mut src_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
+    let mut dst_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
+    let mut out_deg = vec![0u32; n];
+    // Greedy balance of spread blocks.
+    let mut load: Vec<u64> = vec![0; p];
+
+    let place_block = |u: Vid,
+                           targets: Vec<(Vid, f32)>,
+                           machine: MachineId,
+                           blocks: &mut Vec<Vec<EdgeBlock>>,
+                           block_of: &mut Vec<DetMap<Vid, Vec<u32>>>,
+                           load: &mut Vec<u64>| {
+        load[machine] += targets.len() as u64;
+        let idx = blocks[machine].len() as u32;
+        blocks[machine].push(EdgeBlock { src: u, targets });
+        block_of[machine].entry(u).or_default().push(idx);
+    };
+
+    for u in 0..n as Vid {
+        let deg = g.out_degree(u);
+        out_deg[u as usize] = deg as u32;
+        if deg == 0 {
+            continue;
+        }
+        let owner = part.owner(u);
+        let neigh = g.neighbors(u);
+        if deg <= hot_threshold {
+            // Stage-1 push: the whole block co-locates with its source.
+            place_block(u, neigh.to_vec(), owner, &mut blocks, &mut block_of, &mut load);
+            src_leaves[u as usize].push(owner);
+        } else {
+            // Hot source: blocks park on transit machines (TD-Orch would
+            // have left them on the contention-detection forest; we place
+            // them greedily-balanced with a deterministic hashed start,
+            // which is what the randomized trees achieve).
+            stats.hot_vertices += 1;
+            let mut leaves = Vec::new();
+            for (i, chunk) in neigh.chunks(block_cap).enumerate() {
+                let machine = if i == 0 {
+                    owner // first block stays home for locality
+                } else {
+                    // Least-loaded among a hashed probe pair (power of two
+                    // choices keeps it deterministic AND balanced).
+                    let a = (hash2(u as u64, i as u64) % p as u64) as usize;
+                    let b = (hash2(u as u64, (i as u64) << 20) % p as u64) as usize;
+                    if load[a] <= load[b] {
+                        a
+                    } else {
+                        b
+                    }
+                };
+                stats.moved_edges += if machine == owner { 0 } else { chunk.len() as u64 };
+                place_block(u, chunk.to_vec(), machine, &mut blocks, &mut block_of, &mut load);
+                leaves.push(machine);
+            }
+            leaves.sort_unstable();
+            leaves.dedup();
+            src_leaves[u as usize] = leaves;
+        }
+    }
+    stats.blocks = blocks.iter().map(|b| b.len() as u64).sum();
+
+    // Destination-tree leaves: machines holding at least one in-edge of v.
+    for (mach, machine_blocks) in blocks.iter().enumerate() {
+        for block in machine_blocks {
+            for (v, _) in &block.targets {
+                dst_leaves[*v as usize].push(mach);
+            }
+        }
+    }
+    for leaves in dst_leaves.iter_mut() {
+        leaves.sort_unstable();
+        leaves.dedup();
+    }
+
+    // Charge the preprocessing cost: every edge starts on a random
+    // machine (paper §5.1 stage 1) and moves to its final block host;
+    // stage 2's destination-tree discovery sends one probe per edge.
+    let mut probe_out: Vec<Vec<(MachineId, u32)>> = (0..p).map(|_| Vec::new()).collect();
+    for (mach, machine_blocks) in blocks.iter().enumerate() {
+        cluster.work(mach, load[mach]);
+        for block in machine_blocks {
+            let src_machine = (hash64(block.src as u64) % p as u64) as usize;
+            if src_machine != mach {
+                probe_out[src_machine].push((mach, block.targets.len() as u32));
+            }
+        }
+    }
+    let _ = cluster.exchange(probe_out, |sz| *sz as u64 * 3);
+    let mut probe2: Vec<Vec<(MachineId, u32)>> = (0..p).map(|_| Vec::new()).collect();
+    for (v, leaves) in dst_leaves.iter().enumerate() {
+        let owner = part.owner(v as Vid);
+        for &l in leaves {
+            if l != owner {
+                probe2[l].push((owner, 1));
+            }
+        }
+    }
+    let _ = cluster.exchange(probe2, |_| 1);
+
+    DistGraph {
+        n,
+        m,
+        p,
+        part,
+        blocks,
+        block_of,
+        src_leaves,
+        dst_leaves,
+        out_deg,
+        c,
+        stats,
+    }
+}
+
+/// Baseline placement (gemini/ligra/LA families): every out-edge block
+/// lives on its source's owner — no transit machines, so hub vertices
+/// concentrate work on one machine.
+pub fn ingest_at_owner(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
+    let p = cluster.p;
+    let part = VertexPart::degree_balanced(g, p);
+    let n = g.n;
+    let mut blocks: Vec<Vec<EdgeBlock>> = (0..p).map(|_| Vec::new()).collect();
+    let mut block_of: Vec<DetMap<Vid, Vec<u32>>> = (0..p).map(|_| det_map()).collect();
+    let mut src_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
+    let mut dst_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
+    let mut out_deg = vec![0u32; n];
+    for u in 0..n as Vid {
+        let deg = g.out_degree(u);
+        out_deg[u as usize] = deg as u32;
+        if deg == 0 {
+            continue;
+        }
+        let owner = part.owner(u);
+        let idx = blocks[owner].len() as u32;
+        blocks[owner].push(EdgeBlock { src: u, targets: g.neighbors(u).to_vec() });
+        block_of[owner].entry(u).or_default().push(idx);
+        src_leaves[u as usize].push(owner);
+        cluster.work(owner, deg);
+        for (v, _) in g.neighbors(u) {
+            dst_leaves[*v as usize].push(owner);
+        }
+    }
+    for leaves in dst_leaves.iter_mut() {
+        leaves.sort_unstable();
+        leaves.dedup();
+    }
+    cluster.barrier();
+    DistGraph {
+        n,
+        m: g.m(),
+        p,
+        part,
+        blocks,
+        block_of,
+        src_leaves,
+        dst_leaves,
+        out_deg,
+        c,
+        stats: IngestStats::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::CostModel;
+
+    fn cluster(p: usize) -> Cluster {
+        Cluster::new(p, CostModel::paper_cluster())
+    }
+
+    #[test]
+    fn all_edges_placed_exactly_once() {
+        let g = gen::barabasi_albert(2000, 6, 1);
+        let mut c = cluster(8);
+        let dg = ingest(&mut c, &g, 8);
+        let placed: usize = dg
+            .blocks
+            .iter()
+            .flat_map(|bs| bs.iter().map(|b| b.targets.len()))
+            .sum();
+        assert_eq!(placed, g.m());
+    }
+
+    /// Star graph: vertex 0 adjacent to everything, plus a ring so every
+    /// machine holds background edges — a hub whose degree exceeds any
+    /// machine's fair share m/P.
+    fn star_graph(n: usize) -> crate::graph::Graph {
+        let mut arcs = Vec::new();
+        for v in 1..n as Vid {
+            arcs.push((0, v, 1.0));
+            arcs.push((v, 0, 1.0));
+            let w = if v as usize == n - 1 { 1 } else { v + 1 };
+            arcs.push((v, w, 1.0));
+            arcs.push((w, v, 1.0));
+        }
+        crate::graph::Graph::from_arcs(n, arcs)
+    }
+
+    #[test]
+    fn hot_vertices_spread_over_machines() {
+        let g = star_graph(4000);
+        let mut c = cluster(8);
+        let dg = ingest(&mut c, &g, 8);
+        assert!(dg.stats.hot_vertices > 0);
+        // The hub's blocks span multiple machines.
+        assert!(
+            dg.src_leaves[0].len() > 1,
+            "hub deg {} on {:?}",
+            g.out_degree(0),
+            dg.src_leaves[0]
+        );
+    }
+
+    #[test]
+    fn edge_load_balanced_on_skewed_graph() {
+        let g = gen::barabasi_albert(4000, 8, 3);
+        let mut c = cluster(8);
+        let dg = ingest(&mut c, &g, 8);
+        let loads: Vec<u64> = dg
+            .blocks
+            .iter()
+            .map(|bs| bs.iter().map(|b| b.targets.len() as u64).sum())
+            .collect();
+        let max = *loads.iter().max().unwrap() as f64;
+        let mean = g.m() as f64 / 8.0;
+        assert!(max / mean < 1.6, "edge imbalance {:.2} ({loads:?})", max / mean);
+    }
+
+    #[test]
+    fn owner_placement_concentrates_hubs() {
+        let g = gen::barabasi_albert(4000, 8, 3);
+        let mut c = cluster(8);
+        let dg = ingest_at_owner(&mut c, &g, 8);
+        let hub = (0..g.n as Vid).max_by_key(|u| g.out_degree(*u)).unwrap();
+        assert_eq!(dg.src_leaves[hub as usize].len(), 1);
+        let placed: usize = dg
+            .blocks
+            .iter()
+            .flat_map(|bs| bs.iter().map(|b| b.targets.len()))
+            .sum();
+        assert_eq!(placed, g.m());
+    }
+
+    #[test]
+    fn dst_leaves_cover_in_edges() {
+        let g = gen::grid2d(12, 4);
+        let mut c = cluster(4);
+        let dg = ingest(&mut c, &g, 4);
+        // Every edge's target lists the block's machine as a dst leaf.
+        for (mach, bs) in dg.blocks.iter().enumerate() {
+            for b in bs {
+                for (v, _) in &b.targets {
+                    assert!(dg.dst_leaves[*v as usize].contains(&mach));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_levels_structure() {
+        // 9 members, fanout 3, root 0: one transit level then the root.
+        let members: Vec<usize> = (1..10).collect();
+        let levels = tree_levels(42, &members, 0, 3, 16);
+        assert!(levels.len() >= 2);
+        // Bottom level has one message per member.
+        assert_eq!(levels[0].len(), 9);
+        // All paths terminate at the root.
+        let last = levels.last().unwrap();
+        assert!(last.iter().all(|(_, to)| *to == 0));
+    }
+
+    #[test]
+    fn tree_levels_trivial_cases() {
+        assert!(tree_levels(1, &[5], 5, 4, 8).is_empty());
+        let lv = tree_levels(1, &[3], 5, 4, 8);
+        assert_eq!(lv, vec![vec![(3, 5)]]);
+    }
+
+    #[test]
+    fn tree_levels_bounded_depth() {
+        let members: Vec<usize> = (0..16).collect();
+        let levels = tree_levels(9, &members, 0, 2, 16);
+        // depth ≤ ceil(log2 16) + 1
+        assert!(levels.len() <= 5, "depth {}", levels.len());
+    }
+}

@@ -1,0 +1,198 @@
+//! TDO-GP — distributed graph processing on TD-Orch (paper §5).
+//!
+//! Submodules:
+//! * [`gen`] — synthetic dataset generators standing in for the paper's
+//!   datasets (see DESIGN.md §2 substitution ledger).
+//! * [`ingest`] — ingestion-time orchestration: degree-balanced vertex
+//!   pinning, edge-block placement (transit machines for hot vertices),
+//!   source/destination communication trees.
+//! * [`subset`] — `DistVertexSubset` (sparse hash-set / dense bitmap).
+//! * [`engine`] — the TDO-GP `DistEdgeMap` engine with sparse-dense
+//!   dual-mode execution and the T1/T2/T3 technique toggles.
+//! * [`algorithms`] — BFS, SSSP, BC, CC, PR over the engine trait.
+//! * [`baselines`] — gemini-like, linear-algebra-like, ligra-dist.
+
+pub mod algorithms;
+pub mod baselines;
+pub mod engine;
+pub mod gen;
+pub mod ingest;
+pub mod subset;
+
+use crate::bsp::MachineId;
+
+/// Vertex id.
+pub type Vid = u32;
+
+/// An input graph in CSR form.  All generators emit *symmetric* graphs
+/// (each undirected edge stored as two directed arcs), matching how the
+/// paper's systems ingest their datasets.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// CSR row offsets, length n+1.
+    pub offsets: Vec<u64>,
+    /// CSR adjacency (target, weight).
+    pub edges: Vec<(Vid, f32)>,
+}
+
+impl Graph {
+    /// Build from an arc list (deduplicated, self-loops dropped).
+    pub fn from_arcs(n: usize, mut arcs: Vec<(Vid, Vid, f32)>) -> Self {
+        arcs.retain(|(u, v, _)| u != v && (*u as usize) < n && (*v as usize) < n);
+        arcs.sort_unstable_by_key(|(u, v, _)| ((*u as u64) << 32) | *v as u64);
+        arcs.dedup_by_key(|(u, v, _)| (*u, *v));
+        let mut offsets = vec![0u64; n + 1];
+        for (u, _, _) in &arcs {
+            offsets[*u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let edges = arcs.into_iter().map(|(_, v, w)| (v, w)).collect();
+        Graph { n, offsets, edges }
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, u: Vid) -> u64 {
+        self.offsets[u as usize + 1] - self.offsets[u as usize]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: Vid) -> &[(Vid, f32)] {
+        &self.edges[self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize]
+    }
+
+    /// Max out-degree (skew indicator).
+    pub fn max_degree(&self) -> u64 {
+        (0..self.n as Vid).map(|u| self.out_degree(u)).max().unwrap_or(0)
+    }
+}
+
+/// Degree-balanced contiguous vertex partition (paper D.3: "the total
+/// number of outgoing edges assigned to each machine is approximately
+/// equal").
+#[derive(Clone, Debug)]
+pub struct VertexPart {
+    /// boundaries[i]..boundaries[i+1] = vertices of machine i.
+    pub boundaries: Vec<Vid>,
+}
+
+impl VertexPart {
+    /// Split `g`'s vertices into `p` contiguous ranges of ~equal total
+    /// out-degree (each vertex also counts 1 so isolated vertices spread).
+    pub fn degree_balanced(g: &Graph, p: usize) -> Self {
+        let total: u64 = g.m() as u64 + g.n as u64;
+        let per = total.div_ceil(p as u64).max(1);
+        let mut boundaries = Vec::with_capacity(p + 1);
+        boundaries.push(0);
+        let mut acc = 0u64;
+        for u in 0..g.n as Vid {
+            acc += g.out_degree(u) + 1;
+            if acc >= per && boundaries.len() < p {
+                boundaries.push(u + 1);
+                acc = 0;
+            }
+        }
+        while boundaries.len() < p {
+            boundaries.push(g.n as Vid);
+        }
+        boundaries.push(g.n as Vid);
+        VertexPart { boundaries }
+    }
+
+    pub fn p(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    #[inline]
+    pub fn owner(&self, v: Vid) -> MachineId {
+        // Contiguous ranges: binary search the boundary array.
+        match self.boundaries.binary_search(&v) {
+            Ok(i) => i.min(self.p() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    pub fn range(&self, m: MachineId) -> std::ops::Range<Vid> {
+        self.boundaries[m]..self.boundaries[m + 1]
+    }
+
+    pub fn count_on(&self, m: MachineId) -> usize {
+        (self.boundaries[m + 1] - self.boundaries[m]) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut arcs = Vec::new();
+        for u in 0..n as Vid - 1 {
+            arcs.push((u, u + 1, 1.0));
+            arcs.push((u + 1, u, 1.0));
+        }
+        Graph::from_arcs(n, arcs)
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let g = Graph::from_arcs(4, vec![(0, 1, 1.0), (1, 2, 2.0), (0, 3, 3.0), (0, 1, 9.0)]);
+        assert_eq!(g.m(), 3); // duplicate (0,1) dropped
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.neighbors(1), &[(2, 2.0)]);
+        assert_eq!(g.out_degree(3), 0);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = Graph::from_arcs(3, vec![(0, 0, 1.0), (0, 1, 1.0)]);
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn partition_covers_all_vertices() {
+        let g = path_graph(100);
+        for p in [1, 3, 8, 16] {
+            let part = VertexPart::degree_balanced(&g, p);
+            assert_eq!(part.p(), p);
+            let total: usize = (0..p).map(|m| part.count_on(m)).sum();
+            assert_eq!(total, 100);
+            for v in 0..100u32 {
+                let m = part.owner(v);
+                assert!(part.range(m).contains(&v), "v={v} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balances_degree() {
+        // A graph with one huge-degree vertex still yields ranges whose
+        // edge totals differ by at most ~the hub degree.
+        let mut arcs = Vec::new();
+        for v in 1..1000u32 {
+            arcs.push((0, v, 1.0));
+            arcs.push((v, 0, 1.0));
+        }
+        let g = Graph::from_arcs(1000, arcs);
+        let part = VertexPart::degree_balanced(&g, 4);
+        // Machine 0 gets the hub and little else.
+        assert!(part.count_on(0) < 400);
+    }
+
+    #[test]
+    fn owner_boundaries_exact() {
+        let g = path_graph(10);
+        let part = VertexPart::degree_balanced(&g, 2);
+        let b = part.boundaries[1];
+        if b > 0 && (b as usize) < 10 {
+            assert_eq!(part.owner(b - 1), 0);
+            assert_eq!(part.owner(b), 1);
+        }
+    }
+}

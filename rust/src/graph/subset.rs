@@ -1,0 +1,231 @@
+//! `DistVertexSubset` — the distributed frontier (paper §5, D.2).
+//!
+//! One `VertexSubset` per machine, each independently switching between a
+//! sparse representation (vertex list — the paper upgrades Ligra's array
+//! to a phase-concurrent hash table; here a sorted vec with the same
+//! asymptotics in a sequential simulator) and a dense representation
+//! (bitmap — the paper's concurrent-bitmap improvement, T2).
+
+use super::{VertexPart, Vid};
+
+/// Per-machine representation.
+#[derive(Clone, Debug)]
+enum Rep {
+    Sparse(Vec<Vid>),
+    Dense { bits: Vec<u64>, base: Vid, count: usize },
+}
+
+/// A subset of vertices distributed across machines.
+#[derive(Clone, Debug)]
+pub struct DistVertexSubset {
+    reps: Vec<Rep>,
+    len: usize,
+}
+
+/// Switch a machine's rep to dense above this activation fraction.
+const DENSE_FRAC: f64 = 0.125;
+
+impl DistVertexSubset {
+    pub fn empty(part: &VertexPart) -> Self {
+        DistVertexSubset {
+            reps: (0..part.p()).map(|_| Rep::Sparse(Vec::new())).collect(),
+            len: 0,
+        }
+    }
+
+    pub fn single(part: &VertexPart, v: Vid) -> Self {
+        let mut s = Self::empty(part);
+        s.insert(part, v);
+        s
+    }
+
+    pub fn all(part: &VertexPart) -> Self {
+        let mut s = Self::empty(part);
+        for m in 0..part.p() {
+            let range = part.range(m);
+            let base = range.start;
+            let n_local = (range.end - range.start) as usize;
+            let mut bits = vec![u64::MAX; n_local.div_ceil(64)];
+            // Clear tail bits.
+            if n_local % 64 != 0 {
+                if let Some(last) = bits.last_mut() {
+                    *last = (1u64 << (n_local % 64)) - 1;
+                }
+            }
+            if n_local == 0 {
+                bits.clear();
+            }
+            s.reps[m] = Rep::Dense { bits, base, count: n_local };
+            s.len += n_local;
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert `v` (idempotent).  Machine-local rep upgrades to dense when
+    /// it crosses `DENSE_FRAC` of its range.
+    pub fn insert(&mut self, part: &VertexPart, v: Vid) {
+        let m = part.owner(v);
+        let range = part.range(m);
+        let n_local = (range.end - range.start) as usize;
+        match &mut self.reps[m] {
+            Rep::Sparse(list) => {
+                if list.contains(&v) {
+                    return;
+                }
+                list.push(v);
+                self.len += 1;
+                if n_local > 0 && (list.len() as f64) > DENSE_FRAC * n_local as f64 {
+                    // Upgrade to bitmap.
+                    let mut bits = vec![0u64; n_local.div_ceil(64)];
+                    let mut count = 0;
+                    for &u in list.iter() {
+                        let off = (u - range.start) as usize;
+                        if bits[off / 64] & (1 << (off % 64)) == 0 {
+                            bits[off / 64] |= 1 << (off % 64);
+                            count += 1;
+                        }
+                    }
+                    self.reps[m] = Rep::Dense { bits, base: range.start, count };
+                }
+            }
+            Rep::Dense { bits, base, count } => {
+                let off = (v - *base) as usize;
+                if bits[off / 64] & (1 << (off % 64)) == 0 {
+                    bits[off / 64] |= 1 << (off % 64);
+                    *count += 1;
+                    self.len += 1;
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, part: &VertexPart, v: Vid) -> bool {
+        let m = part.owner(v);
+        match &self.reps[m] {
+            Rep::Sparse(list) => list.contains(&v),
+            Rep::Dense { bits, base, .. } => {
+                let off = (v - *base) as usize;
+                bits[off / 64] & (1 << (off % 64)) != 0
+            }
+        }
+    }
+
+    /// Number of active vertices on machine `m`.
+    pub fn len_on(&self, m: usize) -> usize {
+        match &self.reps[m] {
+            Rep::Sparse(list) => list.len(),
+            Rep::Dense { count, .. } => *count,
+        }
+    }
+
+    /// Iterate active vertices on machine `m` in ascending order.
+    pub fn iter_on(&self, m: usize) -> Vec<Vid> {
+        match &self.reps[m] {
+            Rep::Sparse(list) => {
+                let mut v = list.clone();
+                v.sort_unstable();
+                v
+            }
+            Rep::Dense { bits, base, .. } => {
+                let mut out = Vec::new();
+                for (w, word) in bits.iter().enumerate() {
+                    let mut bitsw = *word;
+                    while bitsw != 0 {
+                        let b = bitsw.trailing_zeros();
+                        out.push(base + (w * 64) as Vid + b as Vid);
+                        bitsw &= bitsw - 1;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// All active vertices across machines (ascending within machine).
+    pub fn iter_all(&self, part: &VertexPart) -> Vec<Vid> {
+        (0..part.p()).flat_map(|m| self.iter_on(m)).collect()
+    }
+
+    /// True if machine m's rep is dense (for accounting/debug).
+    pub fn is_dense_on(&self, m: usize) -> bool {
+        matches!(self.reps[m], Rep::Dense { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, VertexPart};
+
+    fn part(n: usize, p: usize) -> VertexPart {
+        let g = Graph::from_arcs(n, vec![]);
+        VertexPart::degree_balanced(&g, p)
+    }
+
+    #[test]
+    fn insert_idempotent() {
+        let part = part(100, 4);
+        let mut s = DistVertexSubset::empty(&part);
+        s.insert(&part, 5);
+        s.insert(&part, 5);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(&part, 5));
+        assert!(!s.contains(&part, 6));
+    }
+
+    #[test]
+    fn all_has_every_vertex() {
+        let part = part(130, 4);
+        let s = DistVertexSubset::all(&part);
+        assert_eq!(s.len(), 130);
+        for v in 0..130u32 {
+            assert!(s.contains(&part, v), "missing {v}");
+        }
+        assert_eq!(s.iter_all(&part).len(), 130);
+    }
+
+    #[test]
+    fn upgrade_to_dense_preserves_members() {
+        let part = part(256, 2);
+        let mut s = DistVertexSubset::empty(&part);
+        let members: Vec<Vid> = (0..100).map(|i| i * 2).collect();
+        for &v in &members {
+            s.insert(&part, v);
+        }
+        assert_eq!(s.len(), 100);
+        for &v in &members {
+            assert!(s.contains(&part, v));
+        }
+        let mut all = s.iter_all(&part);
+        all.sort_unstable();
+        assert_eq!(all, members);
+    }
+
+    #[test]
+    fn single_and_empty() {
+        let part = part(10, 3);
+        assert!(DistVertexSubset::empty(&part).is_empty());
+        let s = DistVertexSubset::single(&part, 7);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.iter_all(&part), vec![7]);
+    }
+
+    #[test]
+    fn per_machine_counts_sum() {
+        let part = part(1000, 8);
+        let mut s = DistVertexSubset::empty(&part);
+        for v in (0..1000).step_by(3) {
+            s.insert(&part, v);
+        }
+        let total: usize = (0..8).map(|m| s.len_on(m)).sum();
+        assert_eq!(total, s.len());
+    }
+}

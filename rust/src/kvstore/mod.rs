@@ -1,0 +1,323 @@
+//! Distributed key-value store — the paper's Case Study I (§4).
+//!
+//! A concurrent distributed hash table expressed as a one-stage
+//! orchestration: chunks are hash buckets of (key, value) pairs, tasks are
+//! read/update operations, the lambda is the YCSB multiply-and-add, and
+//! write-backs resolve concurrent updates deterministically by sequence
+//! number (Def. 2 class iv merge-able writes).
+//!
+//! Phase-3 execution can be offloaded to the AOT-compiled Pallas `fma`
+//! kernel through [`crate::runtime::Engine`] (see [`KvApp::with_engine`]):
+//! the per-machine co-located batch is packed into (vals, mul, add)
+//! arrays, executed by PJRT, and scattered back — the three-layer hot
+//! path with Python nowhere in sight.
+
+use std::cell::RefCell;
+
+use crate::orchestration::OrchApp;
+use crate::rng::hash64;
+use crate::runtime::Engine;
+use crate::store::{Addr, DistStore};
+
+/// Target number of records per bucket.
+pub const BUCKET_TARGET: u64 = 8;
+/// Words per YCSB record: standard YCSB uses 1 KB values (10 x 100 B
+/// fields) + key ≈ 130 words.  The simulator tracks only the one f32
+/// field the multiply-add touches, but the *wire* cost of moving a
+/// bucket is the full record payload.
+pub const RECORD_WORDS: u64 = 130;
+/// Chunk granularity B in words: a bucket of 8 records.
+pub const BUCKET_WORDS: u64 = BUCKET_TARGET * RECORD_WORDS;
+
+/// One hash bucket: a small vector of (key, value) pairs.
+pub type Bucket = Vec<(u64, f32)>;
+
+/// The operation kind of one KV task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KvKind {
+    /// Fetch + multiply-add, discard result (YCSB read).
+    Read,
+    /// Fetch + multiply-add, write back (YCSB update; also insert).
+    Update { mul: f32, add: f32 },
+}
+
+/// Task context: the operation closure (σ = 4 words: key, kind+mul, add,
+/// seq).
+#[derive(Clone, Copy, Debug)]
+pub struct KvOp {
+    pub key: u64,
+    pub kind: KvKind,
+    /// Global sequence number: ties between concurrent writers to the
+    /// same key resolve to the *largest* seq — a deterministic decision
+    /// process per Def. 2(iv).
+    pub seq: u64,
+}
+
+impl KvOp {
+    pub fn read(key: u64, seq: u64) -> Self {
+        KvOp { key, kind: KvKind::Read, seq }
+    }
+
+    pub fn update(key: u64, seq: u64, mul: f32, add: f32) -> Self {
+        KvOp { key, kind: KvKind::Update { mul, add }, seq }
+    }
+
+    pub fn is_write(&self) -> bool {
+        matches!(self.kind, KvKind::Update { .. })
+    }
+
+    /// The bucket (chunk address) this key lives in.
+    pub fn bucket(&self, buckets: u64) -> Addr {
+        hash64(self.key) % buckets
+    }
+}
+
+/// Write-back: one winning (key → value) per bucket update, plus losers
+/// folded away by ⊗.  Multiple distinct keys in the same bucket are kept.
+#[derive(Clone, Debug, Default)]
+pub struct KvWriteSet {
+    /// (key, value, seq) — at most one entry per key after ⊗.
+    pub writes: Vec<(u64, f32, u64)>,
+}
+
+/// The KV application: implements the Fig 1 closure triple.
+pub struct KvApp<'e> {
+    pub buckets: u64,
+    engine: Option<&'e Engine>,
+    /// Count of lambda invocations served by the XLA artifact.
+    xla_served: RefCell<u64>,
+}
+
+impl<'e> KvApp<'e> {
+    pub fn new(buckets: u64) -> Self {
+        KvApp { buckets, engine: None, xla_served: RefCell::new(0) }
+    }
+
+    /// Execute Phase-3 lambdas on the AOT-compiled Pallas kernel.
+    pub fn with_engine(buckets: u64, engine: &'e Engine) -> Self {
+        KvApp { buckets, engine: Some(engine), xla_served: RefCell::new(0) }
+    }
+
+    pub fn xla_served(&self) -> u64 {
+        *self.xla_served.borrow()
+    }
+
+    fn lookup(bucket: &Bucket, key: u64) -> f32 {
+        bucket
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    fn out_for(op: &KvOp, new_val: f32) -> Option<KvWriteSet> {
+        match op.kind {
+            KvKind::Read => None,
+            KvKind::Update { .. } => Some(KvWriteSet {
+                writes: vec![(op.key, new_val, op.seq)],
+            }),
+        }
+    }
+}
+
+impl OrchApp for KvApp<'_> {
+    type Ctx = KvOp;
+    type Val = Bucket;
+    type Out = KvWriteSet;
+
+    fn sigma(&self) -> u64 {
+        4
+    }
+
+    fn chunk_words(&self) -> u64 {
+        BUCKET_WORDS
+    }
+
+    fn out_words(&self) -> u64 {
+        // A write-back carries the updated record.
+        RECORD_WORDS + 2
+    }
+
+    fn execute(&self, op: &KvOp, bucket: &Bucket) -> Option<KvWriteSet> {
+        let v = Self::lookup(bucket, op.key);
+        let (mul, add) = match op.kind {
+            KvKind::Read => (1.0f32, 0.0f32), // fetch + mul-add, discarded
+            KvKind::Update { mul, add } => (mul, add),
+        };
+        Self::out_for(op, v * mul + add)
+    }
+
+    /// ⊗: per key, the largest sequence number wins (deterministic
+    /// resolution of concurrent writes).
+    fn combine(&self, mut a: KvWriteSet, b: KvWriteSet) -> KvWriteSet {
+        for (k, v, seq) in b.writes {
+            match a.writes.iter_mut().find(|(k2, _, _)| *k2 == k) {
+                Some(slot) => {
+                    if seq > slot.2 {
+                        *slot = (k, v, seq);
+                    }
+                }
+                None => a.writes.push((k, v, seq)),
+            }
+        }
+        a
+    }
+
+    /// ⊙: install winning values in the bucket (insert-or-overwrite).
+    fn apply(&self, bucket: &mut Bucket, out: KvWriteSet) {
+        for (k, v, _) in out.writes {
+            match bucket.iter_mut().find(|(k2, _)| *k2 == k) {
+                Some(slot) => slot.1 = v,
+                None => bucket.push((k, v)),
+            }
+        }
+    }
+
+    /// Phase-3 batch: pack lambdas into (vals, mul, add) arrays and run
+    /// the AOT Pallas `fma` artifact when an engine is attached.
+    fn execute_batch(
+        &self,
+        items: &[(&KvOp, &Bucket)],
+        sink: &mut Vec<Option<KvWriteSet>>,
+    ) {
+        let Some(engine) = self.engine else {
+            sink.extend(items.iter().map(|(op, b)| self.execute(op, b)));
+            return;
+        };
+        let mut vals = Vec::with_capacity(items.len());
+        let mut muls = Vec::with_capacity(items.len());
+        let mut adds = Vec::with_capacity(items.len());
+        for (op, bucket) in items {
+            vals.push(Self::lookup(bucket, op.key));
+            let (m, a) = match op.kind {
+                KvKind::Read => (1.0, 0.0),
+                KvKind::Update { mul, add } => (mul, add),
+            };
+            muls.push(m);
+            adds.push(a);
+        }
+        match engine.ycsb_batch(&vals, &muls, &adds) {
+            Ok(outs) => {
+                *self.xla_served.borrow_mut() += items.len() as u64;
+                for ((op, _), new_val) in items.iter().zip(outs) {
+                    sink.push(Self::out_for(op, new_val));
+                }
+            }
+            Err(e) => {
+                // Engine failure is a bug in artifact generation — make it
+                // loud in debug, degrade gracefully in release.
+                debug_assert!(false, "XLA batch failed: {e}");
+                sink.extend(items.iter().map(|(op, b)| self.execute(op, b)));
+            }
+        }
+    }
+}
+
+/// Pre-load a store with `n_keys` sequential keys (value = key as f32),
+/// as the paper's experiments do before timed batches.
+pub fn preload(store: &mut DistStore<Bucket>, buckets: u64, n_keys: u64) {
+    for key in 0..n_keys {
+        let addr = hash64(key) % buckets;
+        store.get_or_default(addr).push((key, key as f32));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestration::{sequential_reference, spread_tasks, Scheduler, Task};
+    use crate::orchestration::tdorch::TdOrch;
+    use crate::{Cluster, CostModel};
+
+    #[test]
+    fn read_produces_no_writeback() {
+        let app = KvApp::new(64);
+        let bucket: Bucket = vec![(5, 2.0)];
+        assert!(app.execute(&KvOp::read(5, 1), &bucket).is_none());
+    }
+
+    #[test]
+    fn update_multiplies_and_adds() {
+        let app = KvApp::new(64);
+        let bucket: Bucket = vec![(5, 2.0)];
+        let out = app.execute(&KvOp::update(5, 1, 3.0, 1.0), &bucket).unwrap();
+        assert_eq!(out.writes, vec![(5, 7.0, 1)]);
+    }
+
+    #[test]
+    fn missing_key_reads_zero() {
+        let app = KvApp::new(64);
+        let out = app.execute(&KvOp::update(9, 1, 3.0, 4.0), &vec![]).unwrap();
+        assert_eq!(out.writes, vec![(9, 4.0, 1)]); // 0*3+4
+    }
+
+    #[test]
+    fn combine_picks_highest_seq() {
+        let app = KvApp::new(64);
+        let a = KvWriteSet { writes: vec![(1, 10.0, 5)] };
+        let b = KvWriteSet { writes: vec![(1, 20.0, 9), (2, 1.0, 3)] };
+        let m = app.combine(a, b);
+        assert!(m.writes.contains(&(1, 20.0, 9)));
+        assert!(m.writes.contains(&(2, 1.0, 3)));
+        // Commutativity: the other order gives the same set.
+        let a = KvWriteSet { writes: vec![(1, 10.0, 5)] };
+        let b = KvWriteSet { writes: vec![(1, 20.0, 9), (2, 1.0, 3)] };
+        let m2 = app.combine(b, a);
+        let norm = |mut w: Vec<(u64, f32, u64)>| {
+            w.sort_by_key(|(k, _, _)| *k);
+            w
+        };
+        assert_eq!(norm(m.writes), norm(m2.writes));
+    }
+
+    #[test]
+    fn apply_inserts_and_overwrites() {
+        let app = KvApp::new(64);
+        let mut bucket: Bucket = vec![(1, 1.0)];
+        app.apply(
+            &mut bucket,
+            KvWriteSet { writes: vec![(1, 5.0, 2), (7, 9.0, 3)] },
+        );
+        assert_eq!(bucket, vec![(1, 5.0), (7, 9.0)]);
+    }
+
+    #[test]
+    fn kv_via_tdorch_matches_reference() {
+        let app = KvApp::new(128);
+        let p = 8;
+        let mut ops = Vec::new();
+        for i in 0..2000u64 {
+            let key = i % 300;
+            let op = if i % 3 == 0 {
+                KvOp::read(key, i)
+            } else {
+                KvOp::update(key, i, 1.5, 0.5)
+            };
+            ops.push(Task::inplace(op.bucket(128), op));
+        }
+        let spread = spread_tasks(ops, p);
+
+        let mut expected: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut expected, 128, 300);
+        sequential_reference(&app, &spread, &mut expected);
+
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut store, 128, 300);
+        let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+        TdOrch::new().run_stage(&mut cluster, &app, spread, &mut store);
+
+        let norm = |s: &DistStore<Bucket>| {
+            let mut all: Vec<(u64, Vec<(u64, u32)>)> = s
+                .snapshot()
+                .into_iter()
+                .map(|(a, mut b)| {
+                    b.sort_by_key(|(k, _)| *k);
+                    (a, b.into_iter().map(|(k, v)| (k, v.to_bits())).collect())
+                })
+                .collect();
+            all.sort();
+            all
+        };
+        assert_eq!(norm(&store), norm(&expected));
+    }
+}

@@ -1,0 +1,37 @@
+//! # TD-Orch / TDO-GP
+//!
+//! A from-scratch reproduction of *"TD-Orch: Scalable Load-Balancing for
+//! Distributed Systems with Applications to Graph Processing"* (CS.DC
+//! 2025): the task-data orchestration abstraction (Fig 1), the TD-Orch
+//! push-pull scheduler (§3), the three baseline schedulers it is evaluated
+//! against (§2.3), the distributed KV-store case study (§4), and the
+//! TDO-GP distributed graph-processing system (§5–6) — all running on an
+//! executable BSP cluster model (§2.2) with full per-machine communication
+//! and computation accounting.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): coordinator, schedulers, graph engine, metrics.
+//! * L2/L1 (python/, build-time): JAX models + Pallas kernels, AOT-lowered
+//!   to `artifacts/*.hlo.txt`.
+//! * [`runtime`]: loads the artifacts via PJRT and executes them from the
+//!   Phase-3 hot path — Python is never on the request path.
+
+pub mod baselines;
+pub mod kvstore;
+pub mod bsp;
+pub mod det;
+pub mod forest;
+pub mod graph;
+pub mod metatask;
+pub mod metrics;
+pub mod orchestration;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod store;
+pub mod workload;
+
+pub use bsp::{Cluster, CostModel, MachineId, NumaTopo};
+pub use metrics::{Breakdown, Metrics, Report};
+pub use orchestration::{OrchApp, Scheduler, StageOutcome, Task};
+pub use store::{Addr, DistStore};

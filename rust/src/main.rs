@@ -1,0 +1,189 @@
+//! `repro` — the TD-Orch / TDO-GP reproduction CLI (L3 leader entrypoint).
+//!
+//! Each subcommand regenerates one table or figure from the paper's
+//! evaluation on the simulated BSP cluster (see DESIGN.md §4):
+//!
+//! ```text
+//! repro fig5    [--per-machine N] [--seed S]   YCSB weak scaling (§4)
+//! repro table2  [--seed S]                     graph end-to-end (§6.2)
+//! repro fig8    [--seed S]                     strong scaling (§6.3)
+//! repro fig9    [--edges N] [--seed S]         weak scaling (§6.3)
+//! repro fig10   [--seed S]                     breakdown (§6.4)
+//! repro table3  [--seed S]                     TD-Orch ablation (§6.4)
+//! repro table4  [--seed S]                     technique ablation (§6.4)
+//! repro table5  [--seed S]                     single-NUMA PR (§6.5)
+//! repro table6  [--seed S]                     big NUMA server (§6.5)
+//! repro all     [--seed S]                     everything above
+//! repro smoke                                  tiny end-to-end sanity run
+//! ```
+//!
+//! (CLI is hand-rolled: the offline build has no clap — see Cargo.toml.)
+
+use tdorch::repro;
+
+struct Args {
+    cmd: String,
+    seed: u64,
+    per_machine: usize,
+    edges: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        cmd: String::new(),
+        seed: 42,
+        per_machine: 20_000,
+        edges: 50_000,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--seed" => {
+                i += 1;
+                args.seed = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                    eprintln!("--seed needs a u64");
+                    std::process::exit(2);
+                });
+            }
+            "--per-machine" => {
+                i += 1;
+                args.per_machine = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                    eprintln!("--per-machine needs a usize");
+                    std::process::exit(2);
+                });
+            }
+            "--edges" => {
+                i += 1;
+                args.edges = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+                    eprintln!("--edges needs a usize");
+                    std::process::exit(2);
+                });
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("unknown flag {flag}");
+                std::process::exit(2);
+            }
+            cmd => {
+                if args.cmd.is_empty() {
+                    args.cmd = cmd.to_string();
+                } else {
+                    eprintln!("multiple commands given: {} and {cmd}", args.cmd);
+                    std::process::exit(2);
+                }
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+fn smoke() {
+    // A miniature of everything: one orchestration stage on the KV store
+    // (XLA-backed if artifacts are present) plus one graph algorithm.
+    use tdorch::graph::algorithms::bfs;
+    use tdorch::graph::engine::Engine as GraphEngineImpl;
+    use tdorch::graph::engine::GraphEngine as _;
+    use tdorch::graph::gen;
+    use tdorch::kvstore::{preload, Bucket, KvApp};
+    use tdorch::orchestration::tdorch::TdOrch;
+    use tdorch::orchestration::{spread_tasks, Scheduler, Task};
+    use tdorch::workload::{YcsbKind, YcsbWorkload};
+    use tdorch::{Cluster, CostModel, DistStore};
+
+    println!("== smoke: KV store over TD-Orch ==");
+    let buckets = 1 << 12;
+    let engine = tdorch::runtime::Engine::load_default().ok();
+    let app = match &engine {
+        Some(e) => {
+            println!("artifacts loaded: {:?}", e.artifact_names());
+            KvApp::with_engine(buckets, e)
+        }
+        None => {
+            println!("artifacts not found — native lambda path");
+            KvApp::new(buckets)
+        }
+    };
+    let workload = YcsbWorkload::new(YcsbKind::A, 100_000, 1.5, buckets);
+    let mut rng = tdorch::rng::Rng::new(7);
+    let tasks: Vec<Task<tdorch::kvstore::KvOp>> = workload.generate(&mut rng, 20_000, 0);
+    let p = 8;
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<Bucket> = DistStore::new(p);
+    preload(&mut store, buckets, 10_000);
+    let outcome = TdOrch::new().run_stage(&mut cluster, &app, spread_tasks(tasks, p), &mut store);
+    println!(
+        "executed {} tasks (xla-served: {}), sim {:.4}s, exec imbalance {:.2}",
+        outcome.total_executed,
+        app.xla_served(),
+        cluster.metrics.sim_seconds(),
+        tdorch::metrics::Metrics::imbalance(&outcome.executed_per_machine),
+    );
+
+    println!("\n== smoke: TDO-GP BFS ==");
+    let g = gen::barabasi_albert(2_000, 6, 7);
+    let mut ge = GraphEngineImpl::tdo_gp(&g, 8, CostModel::paper_cluster());
+    ge.reset_metrics();
+    let dist = bfs(&mut ge, 0);
+    let reached = dist.iter().filter(|d| **d >= 0).count();
+    println!(
+        "BFS reached {reached}/{} vertices in sim {:.4}s over {} supersteps",
+        g.n,
+        ge.metrics().sim_seconds(),
+        ge.metrics().supersteps,
+    );
+    println!("\nsmoke OK");
+}
+
+fn main() {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "fig5" => {
+            repro::kv::fig5(args.per_machine, args.seed);
+        }
+        "table2" => {
+            repro::graphs::table2(args.seed);
+        }
+        "fig8" => {
+            repro::graphs::fig8(args.seed);
+        }
+        "fig9" => {
+            repro::graphs::fig9(args.edges, args.seed);
+        }
+        "fig10" => {
+            repro::graphs::fig10(args.seed);
+        }
+        "table3" => {
+            repro::graphs::table3(args.seed);
+        }
+        "table4" => {
+            repro::graphs::table4(args.seed);
+        }
+        "table5" => {
+            repro::graphs::table5(args.seed);
+        }
+        "table6" => {
+            repro::graphs::table6(args.seed);
+        }
+        "all" => {
+            repro::kv::fig5(args.per_machine, args.seed);
+            repro::graphs::table2(args.seed);
+            repro::graphs::fig8(args.seed);
+            repro::graphs::fig9(args.edges, args.seed);
+            repro::graphs::fig10(args.seed);
+            repro::graphs::table3(args.seed);
+            repro::graphs::table4(args.seed);
+            repro::graphs::table5(args.seed);
+            repro::graphs::table6(args.seed);
+        }
+        "smoke" => smoke(),
+        "" => {
+            eprintln!("usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|all|smoke> [--seed S] [--per-machine N] [--edges N]");
+            std::process::exit(2);
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Meta-task structures (paper §3.2, Figs 3–4).
+//!
+//! Messages climbing the communication forest carry *meta-task sets*:
+//! per-level collections where level 0 holds full task contexts and level
+//! i ≥ 1 holds pointers to arrays of level-(i−1) meta-tasks parked on some
+//! machine.  Merging two sets cascades overflow: whenever a level exceeds
+//! C entries, all entries at that level are stored locally in a *slot* and
+//! replaced by a single pointer meta-task one level up.  This bounds every
+//! in-flight message at C·log_C n words while preserving both the
+//! reference count and the location of every parked context — exactly the
+//! information Phase 2's distributed push-pull needs.
+
+use crate::bsp::MachineId;
+
+/// Wire size (words) of a pointer meta-task: {level+count, holder, slot}.
+pub const PTR_WORDS: u64 = 3;
+
+/// One meta-task (Fig 3).
+#[derive(Clone, Debug)]
+pub enum MetaTask<T> {
+    /// L0 — a full task context in flight (or parked in a slot).
+    Ctx(T),
+    /// L ≥ 1 — pointer to a slot of level-(level−1) meta-tasks on `holder`.
+    Ptr {
+        level: u8,
+        count: u64,
+        holder: MachineId,
+        slot: u32,
+    },
+}
+
+impl<T> MetaTask<T> {
+    #[inline]
+    pub fn level(&self) -> u8 {
+        match self {
+            MetaTask::Ctx(_) => 0,
+            MetaTask::Ptr { level, .. } => *level,
+        }
+    }
+
+    /// Number of underlying tasks this meta-task represents.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        match self {
+            MetaTask::Ctx(_) => 1,
+            MetaTask::Ptr { count, .. } => *count,
+        }
+    }
+
+    /// Wire size in words, with contexts costing σ.
+    #[inline]
+    pub fn words(&self, sigma: u64) -> u64 {
+        match self {
+            MetaTask::Ctx(_) => sigma,
+            MetaTask::Ptr { .. } => PTR_WORDS,
+        }
+    }
+}
+
+/// Machine-local storage for parked meta-task arrays.  `slots[i]` is the
+/// array some pointer meta-task `{holder: me, slot: i}` refers to.
+#[derive(Clone, Debug, Default)]
+pub struct SlotStore<T> {
+    pub slots: Vec<Vec<MetaTask<T>>>,
+}
+
+impl<T> SlotStore<T> {
+    pub fn new() -> Self {
+        SlotStore { slots: Vec::new() }
+    }
+
+    pub fn alloc(&mut self, content: Vec<MetaTask<T>>) -> u32 {
+        self.slots.push(content);
+        (self.slots.len() - 1) as u32
+    }
+
+    /// Take the content of a slot (each slot is consumed exactly once by
+    /// the pull phase).
+    pub fn take(&mut self, slot: u32) -> Vec<MetaTask<T>> {
+        std::mem::take(&mut self.slots[slot as usize])
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+    }
+}
+
+/// A meta-task set: ≤ C meta-tasks per level after normalization.
+#[derive(Clone, Debug)]
+pub struct MetaTaskSet<T> {
+    /// `levels[l]` = meta-tasks at level l.
+    pub levels: Vec<Vec<MetaTask<T>>>,
+}
+
+impl<T> Default for MetaTaskSet<T> {
+    fn default() -> Self {
+        MetaTaskSet { levels: Vec::new() }
+    }
+}
+
+impl<T> MetaTaskSet<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_ctxs(ctxs: impl IntoIterator<Item = T>) -> Self {
+        let mut s = Self::new();
+        s.levels.push(ctxs.into_iter().map(MetaTask::Ctx).collect());
+        s
+    }
+
+    /// Total reference count represented by the set.
+    pub fn total_count(&self) -> u64 {
+        self.levels
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|m| m.count())
+            .sum()
+    }
+
+    /// Number of meta-task entries (not underlying tasks).
+    pub fn entry_count(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn max_level(&self) -> u8 {
+        (self.levels.len().saturating_sub(1)) as u8
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.iter().all(|l| l.is_empty())
+    }
+
+    /// Wire size in words.
+    pub fn words(&self, sigma: u64) -> u64 {
+        self.levels
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|m| m.words(sigma))
+            .sum::<u64>()
+            + 1 // the addr key it travels with
+    }
+
+    /// True iff the set holds only L0 contexts (the uncontended push case).
+    pub fn is_all_ctx(&self) -> bool {
+        self.levels.len() <= 1
+    }
+
+    /// Merge `other` into `self` (Fig 4), cascading overflow into local
+    /// slots on machine `me`.  Returns the number of set *entries* touched
+    /// (for work accounting — parking a whole level in a slot is a pointer
+    /// move, so it costs O(1), not O(contexts); both set sizes are bounded
+    /// by C·log_C n).
+    pub fn merge(&mut self, other: MetaTaskSet<T>, c: usize, slots: &mut SlotStore<T>, me: MachineId) -> u64 {
+        let mut touched = 0u64;
+        for (l, lvl) in other.levels.into_iter().enumerate() {
+            if self.levels.len() <= l {
+                self.levels.resize_with(l + 1, Vec::new);
+            }
+            touched += 1 + lvl.len().min(c) as u64;
+            self.levels[l].extend(lvl);
+        }
+        touched += self.normalize(c, slots, me);
+        touched
+    }
+
+    /// Cascade overflow bottom-up until every level has ≤ C entries.
+    /// Returns O(1) work per overflowed level (slot parking is a move).
+    pub fn normalize(&mut self, c: usize, slots: &mut SlotStore<T>, me: MachineId) -> u64 {
+        let c = c.max(1);
+        let mut touched = 0u64;
+        let mut l = 0usize;
+        while l < self.levels.len() {
+            if self.levels[l].len() > c {
+                let popped = std::mem::take(&mut self.levels[l]);
+                let count: u64 = popped.iter().map(|m| m.count()).sum();
+                touched += 2; // pointer-move the level into a slot + new Ptr
+                let slot = slots.alloc(popped);
+                if self.levels.len() <= l + 1 {
+                    self.levels.resize_with(l + 2, Vec::new);
+                }
+                self.levels[l + 1].push(MetaTask::Ptr {
+                    level: (l + 1) as u8,
+                    count,
+                    holder: me,
+                    slot,
+                });
+            }
+            l += 1;
+        }
+        touched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctxs(n: usize) -> MetaTaskSet<u32> {
+        MetaTaskSet::from_ctxs(0..n as u32)
+    }
+
+    #[test]
+    fn small_sets_stay_flat() {
+        let mut slots = SlotStore::new();
+        let mut a = ctxs(2);
+        a.merge(ctxs(1), 3, &mut slots, 0);
+        assert!(a.is_all_ctx());
+        assert_eq!(a.total_count(), 3);
+        assert!(slots.slots.is_empty());
+    }
+
+    #[test]
+    fn overflow_creates_pointer_and_slot() {
+        let mut slots = SlotStore::new();
+        let mut a = ctxs(3);
+        a.merge(ctxs(3), 3, &mut slots, 7);
+        // 6 L0 > C=3: all popped into one slot, one L1 pointer remains.
+        assert_eq!(a.levels[0].len(), 0);
+        assert_eq!(a.levels[1].len(), 1);
+        assert_eq!(a.total_count(), 6);
+        match &a.levels[1][0] {
+            MetaTask::Ptr { level, count, holder, slot } => {
+                assert_eq!((*level, *count, *holder), (1, 6, 7));
+                assert_eq!(slots.slots[*slot as usize].len(), 6);
+            }
+            _ => panic!("expected pointer"),
+        }
+    }
+
+    #[test]
+    fn cascade_to_higher_levels() {
+        // Repeated merges must cascade: with C=2, merging many singletons
+        // produces a log-depth pointer hierarchy, never >C per level.
+        let c = 2;
+        let mut slots = SlotStore::new();
+        let mut acc = MetaTaskSet::new();
+        for i in 0..64u32 {
+            acc.merge(MetaTaskSet::from_ctxs([i]), c, &mut slots, 0);
+        }
+        assert_eq!(acc.total_count(), 64);
+        for lvl in &acc.levels {
+            assert!(lvl.len() <= c);
+        }
+        assert!(acc.max_level() >= 3);
+    }
+
+    #[test]
+    fn size_bound_c_log_n() {
+        // entry_count ≤ C * (log_C n + 1) after any merge sequence.
+        for c in [2usize, 3, 8] {
+            let mut slots = SlotStore::new();
+            let mut acc = MetaTaskSet::new();
+            let n = 500u32;
+            for i in 0..n {
+                acc.merge(MetaTaskSet::from_ctxs([i]), c, &mut slots, 0);
+            }
+            let bound = c as f64 * ((n as f64).ln() / (c as f64).ln() + 1.0);
+            assert!(
+                (acc.entry_count() as f64) <= bound,
+                "c={c}: {} > {bound}",
+                acc.entry_count()
+            );
+        }
+    }
+
+    #[test]
+    fn counts_preserved_across_merges() {
+        let mut slots = SlotStore::new();
+        let mut a = ctxs(5);
+        let mut b = ctxs(9);
+        b.normalize(4, &mut slots, 1);
+        a.normalize(4, &mut slots, 0);
+        a.merge(b, 4, &mut slots, 0);
+        assert_eq!(a.total_count(), 14);
+    }
+
+    #[test]
+    fn words_accounting() {
+        let sigma = 4;
+        let mut slots = SlotStore::new();
+        let mut a = ctxs(2); // 2 ctx = 8 words + 1 addr
+        assert_eq!(a.words(sigma), 9);
+        a.merge(ctxs(3), 2, &mut slots, 0); // overflow -> 1 ptr
+        assert_eq!(a.words(sigma), PTR_WORDS + 1);
+    }
+
+    #[test]
+    fn slot_take_consumes() {
+        let mut slots = SlotStore::new();
+        let s = slots.alloc(vec![MetaTask::Ctx(1u32)]);
+        assert_eq!(slots.take(s).len(), 1);
+        assert!(slots.take(s).is_empty());
+    }
+}

@@ -1,0 +1,172 @@
+//! Run metrics: the quantities the paper's evaluation reports.
+//!
+//! Every superstep contributes to three time series — communication,
+//! computation, overhead — which is exactly the breakdown of Fig 10.  We
+//! additionally track cumulative per-machine loads so load-balance claims
+//! (Def. 1) are testable, and wall-clock time of the simulation itself for
+//! the §Perf pass.
+
+/// Time breakdown in simulated seconds (the BSP cost of the run).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub communication: f64,
+    pub computation: f64,
+    pub overhead: f64,
+}
+
+impl Breakdown {
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.communication + self.computation + self.overhead
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.communication += other.communication;
+        self.computation += other.computation;
+        self.overhead += other.overhead;
+    }
+}
+
+/// Cumulative metrics for one simulated run.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub p: usize,
+    pub supersteps: u64,
+    pub time: Breakdown,
+    /// Total words sent over the whole run (aggregate I in Def. 1).
+    pub total_words: u64,
+    /// Total messages over the whole run.
+    pub total_msgs: u64,
+    /// Cumulative words sent, per machine.
+    pub sent_by_machine: Vec<u64>,
+    /// Cumulative words received, per machine.
+    pub recv_by_machine: Vec<u64>,
+    /// Cumulative local work units, per machine (W in Def. 1).
+    pub work_by_machine: Vec<u64>,
+    /// Tasks executed, per machine (Theorem 1(ii)).
+    pub executed_by_machine: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn new(p: usize) -> Self {
+        Metrics {
+            p,
+            supersteps: 0,
+            time: Breakdown::default(),
+            total_words: 0,
+            total_msgs: 0,
+            sent_by_machine: vec![0; p],
+            recv_by_machine: vec![0; p],
+            work_by_machine: vec![0; p],
+            executed_by_machine: vec![0; p],
+        }
+    }
+
+    /// Simulated runtime in seconds.
+    pub fn sim_seconds(&self) -> f64 {
+        self.time.total()
+    }
+
+    /// max/mean ratio of per-machine quantities — 1.0 is perfect balance.
+    pub fn imbalance(xs: &[u64]) -> f64 {
+        let max = xs.iter().copied().max().unwrap_or(0) as f64;
+        let sum: u64 = xs.iter().sum();
+        if sum == 0 {
+            return 1.0;
+        }
+        let mean = sum as f64 / xs.len() as f64;
+        max / mean
+    }
+
+    pub fn work_imbalance(&self) -> f64 {
+        Self::imbalance(&self.work_by_machine)
+    }
+
+    pub fn comm_imbalance(&self) -> f64 {
+        let combined: Vec<u64> = self
+            .sent_by_machine
+            .iter()
+            .zip(&self.recv_by_machine)
+            .map(|(s, r)| s + r)
+            .collect();
+        Self::imbalance(&combined)
+    }
+
+    pub fn exec_imbalance(&self) -> f64 {
+        Self::imbalance(&self.executed_by_machine)
+    }
+}
+
+/// Summary of one benchmark run, printable as a paper-style table row.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub label: String,
+    pub sim_seconds: f64,
+    pub breakdown: Breakdown,
+    pub wall_ms: f64,
+    pub supersteps: u64,
+    pub total_words: u64,
+    pub work_imbalance: f64,
+    pub comm_imbalance: f64,
+}
+
+impl Report {
+    pub fn from_metrics(label: impl Into<String>, m: &Metrics, wall_ms: f64) -> Self {
+        Report {
+            label: label.into(),
+            sim_seconds: m.sim_seconds(),
+            breakdown: m.time,
+            wall_ms,
+            supersteps: m.supersteps,
+            total_words: m.total_words,
+            work_imbalance: m.work_imbalance(),
+            comm_imbalance: m.comm_imbalance(),
+        }
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<28} sim={:>9.4}s  (comm {:>8.4} comp {:>8.4} ovhd {:>8.4})  steps={:<5} words={:<10} imb(work)={:.2} imb(comm)={:.2}  wall={:.0}ms",
+            self.label,
+            self.sim_seconds,
+            self.breakdown.communication,
+            self.breakdown.computation,
+            self.breakdown.overhead,
+            self.supersteps,
+            self.total_words,
+            self.work_imbalance,
+            self.comm_imbalance,
+            self.wall_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_of_uniform_is_one() {
+        assert!((Metrics::imbalance(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_of_hotspot() {
+        // One machine does everything: max/mean = P.
+        assert!((Metrics::imbalance(&[8, 0, 0, 0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_of_empty_is_one() {
+        assert_eq!(Metrics::imbalance(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn breakdown_total() {
+        let b = Breakdown { communication: 1.0, computation: 2.0, overhead: 0.5 };
+        assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Task-data orchestration — the paper's Fig 1 interface.
+//!
+//! A batch of *lambda tasks*, each reading one data chunk and writing one
+//! (possibly different) chunk, is executed in a single BSP orchestration
+//! stage: read → execute → write-back.  Applications implement [`OrchApp`]
+//! (the closure triple: lambda `f` = `execute`, write-back merge `⊗` =
+//! `combine`, write-back apply `⊙` = `apply` — Def. 2's merge-able
+//! operations) and hand batches of [`Task`]s to a [`Scheduler`].
+//!
+//! Four interchangeable schedulers ship with the crate:
+//! [`tdorch::TdOrch`] (the paper's contribution) and the three §2.3
+//! baselines in [`crate::baselines`].
+
+pub mod tdorch;
+
+use crate::bsp::Cluster;
+use crate::store::{Addr, DistStore};
+
+/// One lambda task: context plus input/output pointers (Fig 1 with
+/// |InputPointers| = |OutputPointers| = 1; multi-pointer tasks are split
+/// into one task per pointer by the caller, one stage per dependency).
+#[derive(Clone, Debug)]
+pub struct Task<C> {
+    /// Address of the chunk the lambda reads.
+    pub read_addr: Addr,
+    /// Address the returned value is written back to (may equal
+    /// `read_addr`, as in the KV store, or differ, as in graph edges).
+    pub write_addr: Addr,
+    /// Per-task local metadata (the closure captures).
+    pub ctx: C,
+}
+
+impl<C> Task<C> {
+    pub fn new(read_addr: Addr, write_addr: Addr, ctx: C) -> Self {
+        Task { read_addr, write_addr, ctx }
+    }
+
+    /// Task whose write target is its read target (KV-store style).
+    pub fn inplace(addr: Addr, ctx: C) -> Self {
+        Task { read_addr: addr, write_addr: addr, ctx }
+    }
+}
+
+/// Application hooks for one orchestration stage (paper Fig 1 + Def. 2).
+pub trait OrchApp {
+    /// Task context type (the closure).
+    type Ctx: Clone;
+    /// Data chunk type; `Default` is the not-yet-present chunk.
+    type Val: Clone + Default;
+    /// Write-back value type.
+    type Out: Clone;
+
+    /// Context size σ in words.
+    fn sigma(&self) -> u64;
+    /// Chunk size B in words.
+    fn chunk_words(&self) -> u64;
+    /// Write-back value size in words.
+    fn out_words(&self) -> u64;
+    /// Work units charged per executed task (default 1).
+    fn task_work(&self) -> u64 {
+        1
+    }
+
+    /// The lambda `f`: consume the read value, produce the write-back.
+    /// `None` means the task writes nothing.
+    fn execute(&self, ctx: &Self::Ctx, val: &Self::Val) -> Option<Self::Out>;
+
+    /// `⊗` — merge two write-backs headed for the same chunk.  Must be
+    /// associative and commutative (Def. 2).
+    fn combine(&self, a: Self::Out, b: Self::Out) -> Self::Out;
+
+    /// `⊙` — apply a (merged) write-back to the chunk.
+    fn apply(&self, val: &mut Self::Val, out: Self::Out);
+
+    /// Batched execution hook: schedulers funnel every co-located
+    /// (task, value) pair on a machine through one call so applications
+    /// can offload to the AOT-compiled XLA artifact (see
+    /// [`crate::kvstore`]).  The default loops over [`OrchApp::execute`].
+    fn execute_batch(
+        &self,
+        items: &[(&Self::Ctx, &Self::Val)],
+        sink: &mut Vec<Option<Self::Out>>,
+    ) {
+        sink.extend(items.iter().map(|(c, v)| self.execute(c, v)));
+    }
+}
+
+/// Outcome of one orchestration stage (metrics live on the [`Cluster`]).
+#[derive(Clone, Debug, Default)]
+pub struct StageOutcome {
+    /// Tasks executed per machine — Theorem 1(ii)'s load-balance object.
+    pub executed_per_machine: Vec<u64>,
+    /// Total tasks executed (sanity: must equal the number submitted).
+    pub total_executed: u64,
+}
+
+/// An orchestration scheduler: the paper's TD-Orch or one of the §2.3
+/// baselines.  `tasks[m]` is the batch initially resident on machine `m`.
+pub trait Scheduler<A: OrchApp> {
+    fn name(&self) -> &'static str;
+
+    fn run_stage(
+        &self,
+        cluster: &mut Cluster,
+        app: &A,
+        tasks: Vec<Vec<Task<A::Ctx>>>,
+        store: &mut DistStore<A::Val>,
+    ) -> StageOutcome;
+}
+
+/// Sequential oracle: apply all tasks to the store in a single thread with
+/// the same combine-then-apply semantics.  Schedulers are verified against
+/// this in tests (any scheduler must produce an identical store when ⊗ is
+/// associative+commutative).
+pub fn sequential_reference<A: OrchApp>(
+    app: &A,
+    tasks: &[Vec<Task<A::Ctx>>],
+    store: &mut DistStore<A::Val>,
+) {
+    use std::collections::HashMap;
+    let mut pending: HashMap<Addr, A::Out> = HashMap::new();
+    for batch in tasks {
+        for t in batch {
+            let val = store.read_copy(t.read_addr);
+            if let Some(out) = app.execute(&t.ctx, &val) {
+                match pending.remove(&t.write_addr) {
+                    Some(acc) => {
+                        pending.insert(t.write_addr, app.combine(acc, out));
+                    }
+                    None => {
+                        pending.insert(t.write_addr, out);
+                    }
+                }
+            }
+        }
+    }
+    let mut addrs: Vec<Addr> = pending.keys().copied().collect();
+    addrs.sort_unstable();
+    for addr in addrs {
+        let out = pending.remove(&addr).unwrap();
+        app.apply(store.get_or_default(addr), out);
+    }
+}
+
+/// Evenly spread `n` tasks over `p` machines (the paper's initialization:
+/// each machine starts with Θ(n/P) tasks).
+pub fn spread_tasks<C>(tasks: Vec<Task<C>>, p: usize) -> Vec<Vec<Task<C>>> {
+    let mut per: Vec<Vec<Task<C>>> = (0..p).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        per[i % p].push(t);
+    }
+    per
+}
+
+/// Count tasks across machines.
+pub fn task_count<C>(tasks: &[Vec<Task<C>>]) -> u64 {
+    tasks.iter().map(|b| b.len() as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy app: chunk = i64 counter, ctx = increment, out = sum.
+    struct CounterApp;
+    impl OrchApp for CounterApp {
+        type Ctx = i64;
+        type Val = i64;
+        type Out = i64;
+        fn sigma(&self) -> u64 {
+            1
+        }
+        fn chunk_words(&self) -> u64 {
+            1
+        }
+        fn out_words(&self) -> u64 {
+            1
+        }
+        fn execute(&self, ctx: &i64, _val: &i64) -> Option<i64> {
+            Some(*ctx)
+        }
+        fn combine(&self, a: i64, b: i64) -> i64 {
+            a + b
+        }
+        fn apply(&self, val: &mut i64, out: i64) {
+            *val += out;
+        }
+    }
+
+    #[test]
+    fn sequential_reference_combines_and_applies() {
+        let app = CounterApp;
+        let mut store: DistStore<i64> = DistStore::new(4);
+        let tasks = vec![vec![
+            Task::inplace(10, 1),
+            Task::inplace(10, 2),
+            Task::inplace(20, 5),
+        ]];
+        sequential_reference(&app, &tasks, &mut store);
+        assert_eq!(*store.get(10).unwrap(), 3);
+        assert_eq!(*store.get(20).unwrap(), 5);
+    }
+
+    #[test]
+    fn spread_is_even() {
+        let tasks: Vec<Task<i64>> = (0..10).map(|i| Task::inplace(i, i as i64)).collect();
+        let spread = spread_tasks(tasks, 4);
+        let sizes: Vec<usize> = spread.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(task_count(&spread), 10);
+    }
+
+    #[test]
+    fn cross_addr_write() {
+        // read one addr, write another.
+        let app = CounterApp;
+        let mut store: DistStore<i64> = DistStore::new(2);
+        store.insert(1, 100);
+        let tasks = vec![vec![Task::new(1, 2, 7)]];
+        sequential_reference(&app, &tasks, &mut store);
+        assert_eq!(*store.get(2).unwrap(), 7);
+        assert_eq!(*store.get(1).unwrap(), 100);
+    }
+}

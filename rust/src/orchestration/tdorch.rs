@@ -1,0 +1,495 @@
+//! TD-Orch: the paper's four-phase push-pull orchestration engine (§3).
+//!
+//! Phase 1 — *contention detection*: every task's context climbs the
+//! communication forest toward the machine owning its read chunk, merging
+//! into meta-task sets at each transit node (so no machine ever receives
+//! more than F bounded-size messages per node per round, even for a chunk
+//! requested by all n tasks).
+//!
+//! Phase 2 — *co-location (distributed push-pull)*: at the root, a chunk
+//! whose reference count is ≤ C already holds all requesting contexts (the
+//! *push* completed during Phase 1 — no extra hops).  A contended chunk
+//! instead *pulls*: its value is broadcast down the meta-task tree, level
+//! by level, to every machine where contexts were parked.
+//!
+//! Phase 3 — *execution*: each machine executes its co-located (context,
+//! value) pairs; the per-machine batch is funneled through
+//! [`OrchApp::execute_batch`] so applications can dispatch to the
+//! AOT-compiled XLA artifact.
+//!
+//! Phase 4 — *write-backs*: results aimed at the pulled chunk merge (⊗)
+//! up the reverse meta-task tree; results aimed at other chunks are
+//! pre-combined per machine and sent to their owners, which apply (⊙).
+
+use crate::bsp::{Cluster, MachineId};
+use crate::det::{det_map, DetMap};
+use crate::forest::Forest;
+use crate::metatask::{MetaTask, MetaTaskSet, SlotStore};
+use crate::store::{Addr, DistStore};
+
+use super::{OrchApp, Scheduler, StageOutcome, Task};
+
+/// Wire overhead (words) of a pull-down message beyond the chunk value:
+/// {addr, slot, parent machine, parent node}.
+const PULL_HDR_WORDS: u64 = 4;
+/// Wire overhead of an ack climbing the reverse tree: {node, has_value}.
+const ACK_HDR_WORDS: u64 = 2;
+/// Wire overhead of a direct write-back: {addr}.
+const WB_HDR_WORDS: u64 = 1;
+
+/// The TD-Orch scheduler.  `fanout`/`c` default to the paper's
+/// theory-guided choices: F = Θ(log P / log log P), C = Θ(B/σ).
+#[derive(Clone, Copy, Debug)]
+pub struct TdOrch {
+    pub fanout: Option<usize>,
+    pub c: Option<usize>,
+    /// Paper §3 key takeaway (a): a machine whose *local* reference count
+    /// for a chunk is ≤ C sends those contexts straight to the owner (one
+    /// hop) instead of climbing the forest; only locally-contended groups
+    /// (a strong signal of global contention) take the aggregating tree
+    /// path.  Disable to measure the ablation.
+    pub direct_shortcut: bool,
+}
+
+impl Default for TdOrch {
+    fn default() -> Self {
+        TdOrch { fanout: None, c: None, direct_shortcut: true }
+    }
+}
+
+impl TdOrch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_params(fanout: usize, c: usize) -> Self {
+        TdOrch { fanout: Some(fanout), c: Some(c), direct_shortcut: true }
+    }
+
+    pub fn without_shortcut() -> Self {
+        TdOrch { direct_shortcut: false, ..Self::default() }
+    }
+
+    fn effective_c<A: OrchApp>(&self, app: &A) -> usize {
+        self.c.unwrap_or_else(|| {
+            let ratio = app.chunk_words() / app.sigma().max(1);
+            (ratio as usize).clamp(2, 64)
+        })
+    }
+}
+
+/// A node of a pull tree (one per expanded slot, plus one per root).
+struct PullNode<O> {
+    addr: Addr,
+    parent: Option<(MachineId, u32)>,
+    expected: u32,
+    received: u32,
+    acc: Option<O>,
+    sent: bool,
+}
+
+/// Value copy descending the meta-task tree.
+struct PullMsg<V> {
+    addr: Addr,
+    val: V,
+    slot: u32,
+    parent: (MachineId, u32),
+}
+
+/// Merged write-back climbing the reverse tree.
+struct AckMsg<O> {
+    node: u32,
+    acc: Option<O>,
+}
+
+impl<A: OrchApp> Scheduler<A> for TdOrch {
+    fn name(&self) -> &'static str {
+        "td-orch"
+    }
+
+    fn run_stage(
+        &self,
+        cluster: &mut Cluster,
+        app: &A,
+        tasks: Vec<Vec<Task<A::Ctx>>>,
+        store: &mut DistStore<A::Val>,
+    ) -> StageOutcome {
+        let p = cluster.p;
+        let forest = Forest::new(p, self.fanout.unwrap_or_else(|| Forest::default_fanout(p)));
+        let c = self.effective_c(app);
+        let sigma = app.sigma();
+        let chunk_words = app.chunk_words();
+        let out_words = app.out_words();
+
+        let mut outcome = StageOutcome {
+            executed_per_machine: vec![0; p],
+            total_executed: 0,
+        };
+
+        // Per-machine parked-context storage (transit machines).
+        let mut slots: Vec<SlotStore<Task<A::Ctx>>> = (0..p).map(|_| SlotStore::new()).collect();
+
+        // ---------------- Phase 1: contention detection ----------------
+        // holdings[m]: (addr, node_idx) -> meta-task set climbing the
+        // tree, currently hosted on machine m.  root_sets[m]: fully
+        // arrived sets at the owner (level 0).
+        let mut holdings: Vec<DetMap<(Addr, u64), MetaTaskSet<Task<A::Ctx>>>> =
+            (0..p).map(|_| det_map()).collect();
+        let mut root_sets: Vec<DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>> =
+            (0..p).map(|_| det_map()).collect();
+        // Direct-shortcut sends, folded into the first exchange round.
+        let mut direct_out: Vec<Vec<(MachineId, (Addr, MetaTaskSet<Task<A::Ctx>>))>> =
+            (0..p).map(|_| Vec::new()).collect();
+
+        for (m, batch) in tasks.into_iter().enumerate() {
+            cluster.work(m, batch.len() as u64); // local grouping sweep
+            // Pre-sized map: grouping was rehash-bound before (Perf pass:
+            // RawTable::reserve_rehash was ~11% of stage wall time).
+            let mut groups: DetMap<Addr, Vec<Task<A::Ctx>>> =
+                DetMap::with_capacity_and_hasher(batch.len(), Default::default());
+            for t in batch {
+                groups.entry(t.read_addr).or_default().push(t);
+            }
+            let (_, leaf_idx) = forest.leaf(m);
+            for (addr, ctxs) in groups {
+                let root = store.owner(addr);
+                if self.direct_shortcut && ctxs.len() <= c {
+                    // Low local contention: push contexts straight to the
+                    // owner — "no hops on a communication tree".
+                    direct_out[m].push((root, (addr, MetaTaskSet::from_ctxs(ctxs))));
+                } else {
+                    let mut set = MetaTaskSet::from_ctxs(ctxs);
+                    let touched = set.normalize(c, &mut slots[m], m);
+                    cluster.work(m, touched);
+                    holdings[m].insert((addr, leaf_idx), set);
+                }
+            }
+        }
+        cluster.barrier();
+
+        // Helper to merge a set arriving at the owner (level 0).
+        let merge_at_root =
+            |cluster: &mut Cluster,
+             root_sets: &mut Vec<DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>>,
+             slots: &mut Vec<SlotStore<Task<A::Ctx>>>,
+             m: MachineId,
+             addr: Addr,
+             set: MetaTaskSet<Task<A::Ctx>>| {
+                match root_sets[m].entry(addr) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        let touched = e.get_mut().merge(set, c, &mut slots[m], m);
+                        cluster.work(m, touched);
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let mut set = set;
+                        let touched = set.normalize(c, &mut slots[m], m);
+                        cluster.work(m, touched);
+                        e.insert(set);
+                    }
+                }
+            };
+
+        // Deliver the direct-shortcut contexts (one superstep).
+        if direct_out.iter().any(|o| !o.is_empty()) {
+            let inboxes = cluster.exchange(direct_out, |(_, set)| set.words(sigma));
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                for (addr, set) in inbox {
+                    merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
+                }
+            }
+        }
+
+        // Climb the forest: entries at level l move to their parent node
+        // at level l-1; equal (addr, parent_idx) sets merge on arrival.
+        for level in (1..=forest.height()).rev() {
+            let mut outboxes: Vec<Vec<(MachineId, (Addr, u64, MetaTaskSet<Task<A::Ctx>>))>> =
+                (0..p).map(|_| Vec::new()).collect();
+            for (m, holding) in holdings.iter_mut().enumerate() {
+                for ((addr, idx), set) in holding.drain() {
+                    let root = store.owner(addr);
+                    let (pl, pidx) = forest.parent(level, idx);
+                    let dest = forest.machine_of(root, pl, pidx);
+                    outboxes[m].push((dest, (addr, pidx, set)));
+                }
+            }
+            let inboxes = cluster.exchange(outboxes, |(_, _, set)| set.words(sigma));
+            let at_root = level == 1;
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                for (addr, pidx, set) in inbox {
+                    if at_root {
+                        merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
+                        continue;
+                    }
+                    match holdings[m].entry((addr, pidx)) {
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            let touched = e.get_mut().merge(set, c, &mut slots[m], m);
+                            cluster.work(m, touched);
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            let mut set = set;
+                            let touched = set.normalize(c, &mut slots[m], m);
+                            cluster.work(m, touched);
+                            e.insert(set);
+                        }
+                    }
+                }
+            }
+        }
+        // P == 1 (height 0): tree entries never moved; they are already at
+        // their owner.
+        if forest.height() == 0 {
+            for m in 0..p {
+                let holding = std::mem::take(&mut holdings[m]);
+                for ((addr, _), set) in holding {
+                    merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
+                }
+            }
+        }
+
+        // ------------- Phase 2+3: co-location and execution -------------
+        // Pull-tree bookkeeping (one node per expanded slot / root).
+        let mut nodes: Vec<Vec<PullNode<A::Out>>> = (0..p).map(|_| Vec::new()).collect();
+        // Direct write-back pool: (machine) -> write_addr -> merged out.
+        // Option-wrapped values allow in-place ⊗ with one hash lookup.
+        let mut wb: Vec<DetMap<Addr, Option<A::Out>>> = (0..p).map(|_| det_map()).collect();
+        // Pull messages produced this round, to be exchanged.
+        let mut pull_out: Vec<Vec<(MachineId, PullMsg<A::Val>)>> =
+            (0..p).map(|_| Vec::new()).collect();
+
+        // Root processing: for every final meta-task set, execute local
+        // contexts; spawn pull trees for pointer entries.
+        for m in 0..p {
+            let holding = std::mem::take(&mut root_sets[m]);
+            // (val, tasks, tree_node): batched after collection.
+            let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> = Vec::new();
+            for (addr, set) in holding {
+                debug_assert_eq!(store.owner(addr), m, "final set not at owner");
+                let val = store.read_copy(addr);
+                let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
+                let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
+                for lvl in set.levels {
+                    for mt in lvl {
+                        match mt {
+                            MetaTask::Ctx(t) => ctxs.push(t),
+                            MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
+                        }
+                    }
+                }
+                let tree_node = if ptrs.is_empty() {
+                    None // pure push case: executes here, applies here
+                } else {
+                    let id = nodes[m].len() as u32;
+                    nodes[m].push(PullNode {
+                        addr,
+                        parent: None,
+                        expected: ptrs.len() as u32,
+                        received: 0,
+                        acc: None,
+                        sent: false,
+                    });
+                    for (holder, slot) in ptrs {
+                        pull_out[m].push((
+                            holder,
+                            PullMsg { addr, val: val.clone(), slot, parent: (m, id) },
+                        ));
+                    }
+                    Some(id)
+                };
+                if !ctxs.is_empty() {
+                    exec_groups.push((val, ctxs, tree_node));
+                }
+            }
+            execute_groups(cluster, app, m, exec_groups, &mut nodes, &mut wb, &mut outcome);
+        }
+        cluster.barrier();
+
+        // Pull rounds: broadcast values down the meta-task trees.
+        loop {
+            let any = pull_out.iter().any(|o| !o.is_empty());
+            if !any {
+                break;
+            }
+            let outboxes = std::mem::replace(
+                &mut pull_out,
+                (0..p).map(|_| Vec::new()).collect(),
+            );
+            let inboxes =
+                cluster.exchange(outboxes, |_msg| chunk_words + PULL_HDR_WORDS);
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> = Vec::new();
+                for PullMsg { addr, val, slot, parent } in inbox {
+                    // Slot expansion is a single pass that the execution
+                    // batch below already pays for per context; charge
+                    // only the pointer handling here.
+                    let content = slots[m].take(slot);
+                    cluster.work(m, 1);
+                    let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
+                    let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
+                    for mt in content {
+                        match mt {
+                            MetaTask::Ctx(t) => ctxs.push(t),
+                            MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
+                        }
+                    }
+                    let id = nodes[m].len() as u32;
+                    nodes[m].push(PullNode {
+                        addr,
+                        parent: Some(parent),
+                        expected: ptrs.len() as u32,
+                        received: 0,
+                        acc: None,
+                        sent: false,
+                    });
+                    for (holder, pslot) in ptrs {
+                        pull_out[m].push((
+                            holder,
+                            PullMsg { addr, val: val.clone(), slot: pslot, parent: (m, id) },
+                        ));
+                    }
+                    if !ctxs.is_empty() {
+                        exec_groups.push((val, ctxs, Some(id)));
+                    }
+                }
+                execute_groups(cluster, app, m, exec_groups, &mut nodes, &mut wb, &mut outcome);
+            }
+        }
+
+        // ------------- Phase 4a: reverse-tree write-back merge -----------
+        loop {
+            let mut ack_out: Vec<Vec<(MachineId, AckMsg<A::Out>)>> =
+                (0..p).map(|_| Vec::new()).collect();
+            let mut sent_any = false;
+            for m in 0..p {
+                for node in nodes[m].iter_mut() {
+                    if !node.sent && node.received == node.expected {
+                        node.sent = true;
+                        sent_any = true;
+                        match node.parent {
+                            Some((pm, pid)) => {
+                                ack_out[m].push((pm, AckMsg { node: pid, acc: node.acc.take() }));
+                            }
+                            None => {
+                                // Root: apply the fully merged write-back.
+                                if let Some(out) = node.acc.take() {
+                                    app.apply(store.get_or_default(node.addr), out);
+                                    cluster.work(m, 1);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if !sent_any {
+                break;
+            }
+            let inboxes = cluster.exchange(ack_out, |_| out_words + ACK_HDR_WORDS);
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                for AckMsg { node, acc } in inbox {
+                    let n = &mut nodes[m][node as usize];
+                    n.received += 1;
+                    if let Some(v) = acc {
+                        n.acc = Some(match n.acc.take() {
+                            Some(a) => app.combine(a, v),
+                            None => v,
+                        });
+                        cluster.work(m, 1);
+                    }
+                }
+            }
+        }
+
+        // ------------- Phase 4b: direct write-backs ---------------------
+        let mut wb_out: Vec<Vec<(MachineId, (Addr, A::Out))>> =
+            (0..p).map(|_| Vec::new()).collect();
+        for (m, pool) in wb.iter_mut().enumerate() {
+            for (addr, out) in pool.drain() {
+                wb_out[m].push((store.owner(addr), (addr, out.expect("wb slot"))));
+            }
+        }
+        let inboxes = cluster.exchange(wb_out, |_| out_words + WB_HDR_WORDS);
+        for (m, inbox) in inboxes.into_iter().enumerate() {
+            let mut merged: DetMap<Addr, Option<A::Out>> = det_map();
+            for (addr, out) in inbox {
+                cluster.work(m, 1);
+                let slot = merged.entry(addr).or_insert(None);
+                *slot = Some(match slot.take() {
+                    Some(acc) => app.combine(acc, out),
+                    None => out,
+                });
+            }
+            // Drain once + sort (one hash op per address instead of two).
+            let mut pairs: Vec<(Addr, A::Out)> = merged
+                .drain()
+                .map(|(a, o)| (a, o.expect("merged slot")))
+                .collect();
+            pairs.sort_unstable_by_key(|(a, _)| *a);
+            for (addr, out) in pairs {
+                app.apply(store.get_or_default(addr), out);
+            }
+        }
+
+        outcome.total_executed = outcome.executed_per_machine.iter().sum();
+        outcome
+    }
+}
+
+/// Phase-3 helper: batch-execute groups of co-located (value, tasks) on
+/// machine `m`, then route each write-back — into the group's pull-tree
+/// node (reverse-tree path) when it targets the pulled chunk, else into
+/// the direct write-back pool.
+#[allow(clippy::too_many_arguments)]
+fn execute_groups<A: OrchApp>(
+    cluster: &mut Cluster,
+    app: &A,
+    m: MachineId,
+    groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)>,
+    nodes: &mut [Vec<PullNode<A::Out>>],
+    wb: &mut [DetMap<Addr, Option<A::Out>>],
+    outcome: &mut StageOutcome,
+) {
+    if groups.is_empty() {
+        return;
+    }
+    // One flat batch per machine: this is the XLA dispatch point.
+    let items: Vec<(&A::Ctx, &A::Val)> = groups
+        .iter()
+        .flat_map(|(val, tasks, _)| tasks.iter().map(move |t| (&t.ctx, val)))
+        .collect();
+    let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
+    app.execute_batch(&items, &mut outs);
+    debug_assert_eq!(outs.len(), items.len());
+    let n_tasks = items.len() as u64;
+    cluster.work(m, n_tasks * app.task_work());
+    cluster.executed(m, n_tasks);
+    outcome.executed_per_machine[m] += n_tasks;
+
+    let mut it = outs.into_iter();
+    for (_, tasks, tree_node) in groups {
+        for t in tasks {
+            let Some(out) = it.next().expect("execute_batch arity") else {
+                continue;
+            };
+            let group_addr = tree_node.map(|id| nodes[m][id as usize].addr);
+            match tree_node {
+                Some(id) if group_addr == Some(t.write_addr) => {
+                    let node = &mut nodes[m][id as usize];
+                    node.acc = Some(match node.acc.take() {
+                        Some(a) => app.combine(a, out),
+                        None => out,
+                    });
+                    cluster.work(m, 1);
+                }
+                _ => {
+                    // Pure push at the owner (write==read) lands here too:
+                    // owner(write_addr) == m makes the send free.
+                    let slot = wb[m].entry(t.write_addr).or_insert(None);
+                    *slot = Some(match slot.take() {
+                        Some(acc) => app.combine(acc, out),
+                        None => out,
+                    });
+                    cluster.work(m, 1);
+                }
+            }
+        }
+    }
+}

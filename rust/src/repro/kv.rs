@@ -1,0 +1,159 @@
+//! Fig 5 reproduction: YCSB weak scaling over the four schedulers
+//! (paper §4), plus the §4 headline geomean speedups.
+
+use crate::baselines::{DirectPull, DirectPush, SortingBased};
+use crate::kvstore::{preload, Bucket, KvApp};
+use crate::metrics::Metrics;
+use crate::orchestration::tdorch::TdOrch;
+use crate::orchestration::{Scheduler, Task};
+use crate::rng::Rng;
+use crate::workload::{YcsbKind, YcsbWorkload};
+use crate::{Cluster, CostModel, DistStore};
+
+use super::{fmt_s, geomean, TablePrinter};
+
+pub const SCHEDULER_NAMES: [&str; 4] = ["td-orch", "direct-push", "direct-pull", "sorting-mpc"];
+
+/// One Fig 5 cell: run `kind` at Zipf `gamma` on `p` machines with
+/// `per_machine` tasks each; returns sim-seconds for the 4 schedulers.
+pub fn run_cell(
+    kind: YcsbKind,
+    gamma: f64,
+    p: usize,
+    per_machine: usize,
+    seed: u64,
+) -> [f64; 4] {
+    let buckets = 1u64 << 16;
+    let key_space = 1_000_000u64;
+    let n_preload = 20_000u64;
+    let n = per_machine * p;
+
+    let workload = YcsbWorkload::new(kind, key_space, gamma, buckets);
+    let mut rng = Rng::new(seed);
+    // Generate per-machine batches (tasks start evenly spread, §2.2).
+    let mut tasks: Vec<Vec<Task<crate::kvstore::KvOp>>> = (0..p).map(|_| Vec::new()).collect();
+    for (m, batch) in tasks.iter_mut().enumerate() {
+        *batch = workload.generate(&mut rng, per_machine, (m * per_machine) as u64);
+    }
+    debug_assert_eq!(tasks.iter().map(|b| b.len()).sum::<usize>(), n);
+
+    let app = KvApp::new(buckets);
+    let mut out = [0.0f64; 4];
+    let run = |sched: &dyn Scheduler<KvApp>, slot: &mut f64| {
+        let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut store, buckets, n_preload);
+        sched.run_stage(&mut cluster, &app, tasks.clone(), &mut store);
+        *slot = cluster.metrics.sim_seconds();
+    };
+    run(&TdOrch::new(), &mut out[0]);
+    run(&DirectPush, &mut out[1]);
+    run(&DirectPull, &mut out[2]);
+    run(&SortingBased, &mut out[3]);
+    out
+}
+
+/// Full Fig 5: workloads A/C/LOAD (B "exhibits similar trends and is
+/// omitted", §4) x γ ∈ {1.5, 2.0, 2.5} x P ∈ {2,4,8,16}.
+/// `per_machine` is scaled from the paper's 2M (DESIGN.md §2).
+pub fn fig5(per_machine: usize, seed: u64) -> Vec<(String, [f64; 4])> {
+    let mut results = Vec::new();
+    println!("\n## Fig 5 — YCSB weak scaling (sim-seconds, {per_machine} tasks/machine)\n");
+    for kind in [YcsbKind::A, YcsbKind::C, YcsbKind::Load] {
+        for gamma in [1.5, 2.0, 2.5] {
+            println!("### {} γ={gamma}", kind.label());
+            let t = TablePrinter::new(
+                &["P", "td-orch", "direct-push", "direct-pull", "sorting-mpc"],
+                &[4, 10, 11, 11, 11],
+            );
+            for p in [2usize, 4, 8, 16] {
+                let cell = run_cell(kind, gamma, p, per_machine, seed);
+                t.row(&[
+                    p.to_string(),
+                    fmt_s(cell[0]),
+                    fmt_s(cell[1]),
+                    fmt_s(cell[2]),
+                    fmt_s(cell[3]),
+                ]);
+                results.push((format!("{}/γ{gamma}/P{p}", kind.label()), cell));
+            }
+            println!();
+        }
+    }
+    summary(&results);
+    results
+}
+
+/// §4 headline: geomean speedup of TD-Orch over each baseline on the
+/// multi-machine cells.
+pub fn summary(results: &[(String, [f64; 4])]) {
+    let mut speedups = [Vec::new(), Vec::new(), Vec::new()];
+    for (_, cell) in results {
+        for b in 0..3 {
+            speedups[b].push(cell[b + 1] / cell[0]);
+        }
+    }
+    println!(
+        "geomean speedup of td-orch: {:.2}x vs direct-push, {:.2}x vs direct-pull, {:.2}x vs sorting  (paper: 2.09x push, 2.83x pull, 1.42x sorting)",
+        geomean(&speedups[0]),
+        geomean(&speedups[1]),
+        geomean(&speedups[2]),
+    );
+}
+
+/// Load-balance demo used by the hotspot example: per-machine executed
+/// tasks for all four schedulers under an adversarial single-key batch.
+pub fn hotspot_loads(p: usize, n: usize) -> Vec<(&'static str, Vec<u64>, f64)> {
+    let buckets = 1u64 << 16;
+    let app = KvApp::new(buckets);
+    let make_tasks = || -> Vec<Vec<Task<crate::kvstore::KvOp>>> {
+        let mut per: Vec<Vec<Task<crate::kvstore::KvOp>>> = (0..p).map(|_| Vec::new()).collect();
+        for i in 0..n {
+            let op = crate::kvstore::KvOp::update(42, i as u64, 1.0, 1.0);
+            per[i % p].push(Task::inplace(op.bucket(buckets), op));
+        }
+        per
+    };
+    let mut out = Vec::new();
+    let mut run = |name: &'static str, sched: &dyn Scheduler<KvApp>| {
+        let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        let outcome = sched.run_stage(&mut cluster, &app, make_tasks(), &mut store);
+        out.push((
+            name,
+            outcome.executed_per_machine.clone(),
+            Metrics::imbalance(&outcome.executed_per_machine),
+        ));
+    };
+    run("td-orch", &TdOrch::new());
+    run("direct-push", &DirectPush);
+    run("direct-pull", &DirectPull);
+    run("sorting-mpc", &SortingBased);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_cell_shapes() {
+        // One cell at small scale: td-orch must beat push & pull at high
+        // skew, and all four produce positive times.
+        let cell = run_cell(YcsbKind::A, 2.0, 8, 5_000, 1);
+        for t in cell {
+            assert!(t > 0.0);
+        }
+        assert!(cell[0] < cell[1], "td {} !< push {}", cell[0], cell[1]);
+        assert!(cell[0] < cell[3], "td {} !< sort {}", cell[0], cell[3]);
+    }
+
+    #[test]
+    fn hotspot_loads_shapes() {
+        let loads = hotspot_loads(8, 8_000);
+        let td = &loads[0];
+        let push = &loads[1];
+        assert!(td.2 < 3.0, "td imbalance {}", td.2);
+        assert!(push.2 > 6.0, "push imbalance {}", push.2);
+    }
+}

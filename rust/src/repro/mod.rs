@@ -1,0 +1,79 @@
+//! Reproduction harness: one entry point per table/figure of the paper's
+//! evaluation (see DESIGN.md §4 for the experiment index).  Each function
+//! prints the same rows/series the paper reports, from runs on the BSP
+//! substrate, and returns the raw numbers for benches/tests.
+
+pub mod graphs;
+pub mod kv;
+
+/// Geometric mean of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Markdown-ish table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        let widths: Vec<usize> = headers
+            .iter()
+            .zip(widths)
+            .map(|(h, w)| (*w).max(h.len()))
+            .collect();
+        let mut line = String::from("|");
+        for (h, w) in headers.iter().zip(&widths) {
+            line.push_str(&format!(" {h:<w$} |"));
+        }
+        println!("{line}");
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        println!("{sep}");
+        TablePrinter { widths }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format simulated seconds like the paper (3 significant-ish digits).
+pub fn fmt_s(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[4.0, 1.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[8.0]) - 8.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_s(123.4), "123");
+        assert_eq!(fmt_s(1.234), "1.23");
+        assert_eq!(fmt_s(0.01234), "0.0123");
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT artifact engine — the Rust↔XLA bridge.
+//!
+//! Loads the HLO-text artifacts emitted once by `python/compile/aot.py`
+//! (`make artifacts`), compiles them on the PJRT CPU client, and exposes
+//! typed batch-execution entry points used from Phase 3 of the
+//! orchestrator and from the graph engines.  Python is never on this
+//! path: after `make artifacts` the binary is self-contained.
+//!
+//! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape of one artifact input/output (row-major dims; empty = scalar).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactShape(pub Vec<usize>);
+
+impl ArtifactShape {
+    pub fn elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        if s == "scalar" {
+            return Ok(ArtifactShape(vec![]));
+        }
+        let dims = s
+            .split('x')
+            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactShape(dims))
+    }
+}
+
+/// One manifest entry: artifact name, file, input shapes, output shape.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ArtifactShape>,
+    pub output: ArtifactShape,
+}
+
+/// Parse `manifest.tsv` (emitted alongside the HLO text by aot.py).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            bail!("manifest line {} malformed: {line:?}", lineno + 1);
+        }
+        entries.push(ManifestEntry {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            inputs: cols[2]
+                .split(',')
+                .map(ArtifactShape::parse)
+                .collect::<Result<Vec<_>>>()?,
+            output: ArtifactShape::parse(cols[3])?,
+        });
+    }
+    Ok(entries)
+}
+
+/// A compiled artifact plus its manifest metadata.
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ManifestEntry,
+}
+
+/// The PJRT engine: one CPU client, one compiled executable per artifact.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        for entry in entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            artifacts.insert(entry.name.clone(), LoadedArtifact { exe, entry });
+        }
+        Ok(Engine { client, artifacts, dir })
+    }
+
+    /// Load from the conventional location (`$TDORCH_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Engine> {
+        let dir = std::env::var("TDORCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn artifact(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded (have {:?})", self.artifact_names()))
+    }
+
+    /// Execute artifact `name` on f32 inputs (shapes per the manifest) and
+    /// return the flattened f32 output.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let art = self.artifact(name)?;
+        if inputs.len() != art.entry.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                art.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&art.entry.inputs) {
+            if data.len() != shape.elements() {
+                bail!(
+                    "{name}: input length {} != manifest shape {:?}",
+                    data.len(),
+                    shape.0
+                );
+            }
+            let lit = if shape.0.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else if shape.0.len() == 1 {
+                xla::Literal::vec1(data)
+            } else {
+                let dims: Vec<i64> = shape.0.iter().map(|d| *d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// Batched YCSB lambda: out[i] = vals[i] * mul[i] + add[i].
+    /// Arbitrary lengths; padded to the artifact batch internally.
+    pub fn ycsb_batch(&self, vals: &[f32], mul: &[f32], add: &[f32]) -> Result<Vec<f32>> {
+        self.elementwise3("ycsb_batch", vals, mul, add)
+    }
+
+    /// Batched SSSP relaxation: out[i] = min(dv[i], du[i] + w[i]).
+    pub fn relax_batch(&self, dv: &[f32], du: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        self.elementwise3("relax_batch", dv, du, w)
+    }
+
+    fn elementwise3(&self, name: &str, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != b.len() || a.len() != c.len() {
+            bail!("{name}: input length mismatch");
+        }
+        let art = self.artifact(name)?;
+        let batch = art.entry.inputs[0].elements();
+        let mut out = Vec::with_capacity(a.len());
+        let mut pa = vec![0f32; batch];
+        let mut pb = vec![0f32; batch];
+        let mut pc = vec![0f32; batch];
+        for start in (0..a.len()).step_by(batch) {
+            let end = (start + batch).min(a.len());
+            let n = end - start;
+            pa[..n].copy_from_slice(&a[start..end]);
+            pb[..n].copy_from_slice(&b[start..end]);
+            pc[..n].copy_from_slice(&c[start..end]);
+            pa[n..].fill(0.0);
+            pb[n..].fill(0.0);
+            pc[n..].fill(0.0);
+            let res = self.run_f32(name, &[&pa, &pb, &pc])?;
+            out.extend_from_slice(&res[..n]);
+        }
+        Ok(out)
+    }
+
+    /// Dense panel step: alpha * (A @ X) + beta over the manifest tile
+    /// shapes ((m,k) @ (k,panel)).
+    pub fn spmv_panel(&self, a: &[f32], x: &[f32], alpha: f32, beta: f32) -> Result<Vec<f32>> {
+        self.run_f32("spmv_panel", &[a, x, &[alpha], &[beta]])
+    }
+
+    /// Manifest shapes for artifact `name` (inputs, output).
+    pub fn shapes(&self, name: &str) -> Result<(Vec<ArtifactShape>, ArtifactShape)> {
+        let art = self.artifact(name)?;
+        Ok((art.entry.inputs.clone(), art.entry.output.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "ycsb_batch\tycsb_batch.hlo.txt\t4096,4096,4096\t4096\n\
+                    spmv_panel\tspmv_panel.hlo.txt\t512x512,512x128,scalar,scalar\t512x128\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].inputs.len(), 3);
+        assert_eq!(entries[0].inputs[0], ArtifactShape(vec![4096]));
+        assert_eq!(entries[1].inputs[2], ArtifactShape(vec![]));
+        assert_eq!(entries[1].inputs[0].elements(), 512 * 512);
+        assert_eq!(entries[1].output, ArtifactShape(vec![512, 128]));
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("only\ttwo\tcols\n").is_err());
+        assert!(parse_manifest("a\tb\t4xx\t4\n").is_err());
+    }
+
+    #[test]
+    fn shape_parse() {
+        assert_eq!(ArtifactShape::parse("scalar").unwrap().0, Vec::<usize>::new());
+        assert_eq!(ArtifactShape::parse("8x128").unwrap().0, vec![8, 128]);
+        assert_eq!(ArtifactShape::parse("scalar").unwrap().elements(), 1);
+    }
+}

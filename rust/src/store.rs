@@ -1,0 +1,159 @@
+//! Distributed chunked data store (paper §2.2 "Data Storage").
+//!
+//! Data are partitioned into chunks of granularity B words; each chunk
+//! address is placed on a machine chosen by a stable hash — the randomized
+//! placement the paper relies on for adversary-resistant storage balance.
+
+use std::collections::HashMap;
+
+use crate::bsp::MachineId;
+use crate::rng::hash64;
+
+/// Address of a data chunk.
+pub type Addr = u64;
+
+/// Owner machine of a chunk address under random placement.
+#[inline]
+pub fn owner_of(addr: Addr, p: usize) -> MachineId {
+    (hash64(addr) % p as u64) as usize
+}
+
+/// A P-way partitioned key→chunk store.  All accesses in the simulator go
+/// through machine-local maps; *remote* access must be done with messages
+/// (the store intentionally has no cross-machine API).
+#[derive(Clone, Debug)]
+pub struct DistStore<V> {
+    p: usize,
+    maps: Vec<HashMap<Addr, V>>,
+}
+
+impl<V: Clone + Default> DistStore<V> {
+    pub fn new(p: usize) -> Self {
+        DistStore {
+            p,
+            maps: (0..p).map(|_| HashMap::new()).collect(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn owner(&self, addr: Addr) -> MachineId {
+        owner_of(addr, self.p)
+    }
+
+    /// Insert/overwrite a chunk (placed on its owner machine).
+    pub fn insert(&mut self, addr: Addr, v: V) {
+        let m = self.owner(addr);
+        self.maps[m].insert(addr, v);
+    }
+
+    /// Read a chunk from its owner machine (local view).
+    pub fn get(&self, addr: Addr) -> Option<&V> {
+        self.maps[self.owner(addr)].get(&addr)
+    }
+
+    /// Read a chunk, materializing the default if absent (e.g. an empty
+    /// hash-table bucket).
+    pub fn get_or_default(&mut self, addr: Addr) -> &mut V {
+        let m = self.owner(addr);
+        self.maps[m].entry(addr).or_default()
+    }
+
+    pub fn get_mut(&mut self, addr: Addr) -> Option<&mut V> {
+        let m = self.owner(addr);
+        self.maps[m].get_mut(&addr)
+    }
+
+    /// Clone the chunk value or default — what a pull sends over the wire.
+    pub fn read_copy(&self, addr: Addr) -> V {
+        self.get(addr).cloned().unwrap_or_default()
+    }
+
+    /// Number of chunks stored on machine `m`.
+    pub fn len_on(&self, m: MachineId) -> usize {
+        self.maps[m].len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.maps.iter().map(|m| m.len()).sum()
+    }
+
+    /// Iterate all (addr, value) pairs (test/verification use only).
+    pub fn iter(&self) -> impl Iterator<Item = (&Addr, &V)> {
+        self.maps.iter().flat_map(|m| m.iter())
+    }
+
+    /// Deterministic snapshot for equality checks in tests.
+    pub fn snapshot(&self) -> Vec<(Addr, V)> {
+        let mut all: Vec<(Addr, V)> = self
+            .iter()
+            .map(|(a, v)| (*a, v.clone()))
+            .collect();
+        all.sort_by_key(|(a, _)| *a);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_stable_and_spread() {
+        let p = 8;
+        let store: DistStore<u64> = DistStore::new(p);
+        for addr in 0..100 {
+            assert_eq!(store.owner(addr), owner_of(addr, p));
+        }
+        // Random placement should hit every machine for 10k addrs.
+        let mut hit = vec![false; p];
+        for addr in 0..10_000u64 {
+            hit[owner_of(addr, p)] = true;
+        }
+        assert!(hit.iter().all(|h| *h));
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut s: DistStore<String> = DistStore::new(4);
+        s.insert(42, "hi".into());
+        assert_eq!(s.get(42).unwrap(), "hi");
+        assert_eq!(s.get(43), None);
+        assert_eq!(s.read_copy(43), String::default());
+    }
+
+    #[test]
+    fn get_or_default_materializes() {
+        let mut s: DistStore<Vec<u32>> = DistStore::new(2);
+        s.get_or_default(7).push(1);
+        s.get_or_default(7).push(2);
+        assert_eq!(s.get(7).unwrap(), &vec![1, 2]);
+        assert_eq!(s.total_len(), 1);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let mut s: DistStore<u8> = DistStore::new(3);
+        for a in [5u64, 1, 9, 3] {
+            s.insert(a, a as u8);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap, vec![(1, 1), (3, 3), (5, 5), (9, 9)]);
+    }
+
+    #[test]
+    fn placement_balance_statistical() {
+        // 100k random addrs over 16 machines: max/mean under 1.15.
+        let p = 16;
+        let mut counts = vec![0u64; p];
+        for addr in 0..100_000u64 {
+            counts[owner_of(addr * 2654435761 + 11, p)] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = 100_000.0 / p as f64;
+        assert!(max / mean < 1.15, "imbalance {}", max / mean);
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload generators for the paper's evaluations: YCSB mixes over
+//! Zipf-distributed keys (§4) and adversarial single-key batches.
+
+pub mod ycsb;
+pub mod zipf;
+
+pub use ycsb::{YcsbKind, YcsbWorkload};
+pub use zipf::Zipf;

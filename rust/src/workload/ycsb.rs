@@ -1,0 +1,133 @@
+//! YCSB workload generation (paper §4).
+//!
+//! Workloads A (50% reads / 50% writes), B (95/5), C (read-only) and LOAD
+//! (write-only), with keys drawn Zipf(γ).  Each task "fetches an item from
+//! the key-value store, performs a multiply-and-add operation, and then
+//! optionally writes the updated value back".
+
+use crate::kvstore::KvOp;
+use crate::orchestration::Task;
+use crate::rng::{hash64, Rng};
+use crate::workload::zipf::Zipf;
+
+/// The four paper workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YcsbKind {
+    A,
+    B,
+    C,
+    Load,
+}
+
+impl YcsbKind {
+    pub fn write_fraction(self) -> f64 {
+        match self {
+            YcsbKind::A => 0.5,
+            YcsbKind::B => 0.05,
+            YcsbKind::C => 0.0,
+            YcsbKind::Load => 1.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            YcsbKind::A => "YCSB-A",
+            YcsbKind::B => "YCSB-B",
+            YcsbKind::C => "YCSB-C",
+            YcsbKind::Load => "LOAD",
+        }
+    }
+
+    pub const ALL: [YcsbKind; 4] = [YcsbKind::A, YcsbKind::B, YcsbKind::C, YcsbKind::Load];
+}
+
+/// Generator for one YCSB configuration.
+#[derive(Clone, Debug)]
+pub struct YcsbWorkload {
+    pub kind: YcsbKind,
+    pub key_space: u64,
+    pub gamma: f64,
+    pub buckets: u64,
+    zipf: Zipf,
+}
+
+impl YcsbWorkload {
+    pub fn new(kind: YcsbKind, key_space: u64, gamma: f64, buckets: u64) -> Self {
+        YcsbWorkload {
+            kind,
+            key_space,
+            gamma,
+            buckets,
+            zipf: Zipf::new(key_space as usize, gamma),
+        }
+    }
+
+    /// Zipf rank -> key: ranks are scattered over the key space so hot
+    /// keys land on independent buckets/machines.
+    fn key_of_rank(&self, rank: usize) -> u64 {
+        hash64(rank as u64) % self.key_space
+    }
+
+    /// Generate `n` tasks (ops), sequence-numbered from `seq0` so
+    /// concurrent writes resolve deterministically (Def. 2 class iv).
+    pub fn generate(&self, rng: &mut Rng, n: usize, seq0: u64) -> Vec<Task<KvOp>> {
+        (0..n)
+            .map(|i| {
+                let key = self.key_of_rank(self.zipf.sample(rng));
+                let is_write = rng.next_f64() < self.kind.write_fraction();
+                let op = if is_write {
+                    KvOp::update(key, seq0 + i as u64, 1.0 + rng.next_f32() * 0.5, rng.next_f32())
+                } else {
+                    KvOp::read(key, seq0 + i as u64)
+                };
+                Task::inplace(op.bucket(self.buckets), op)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_fractions() {
+        assert_eq!(YcsbKind::C.write_fraction(), 0.0);
+        assert_eq!(YcsbKind::Load.write_fraction(), 1.0);
+        assert!((YcsbKind::A.write_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generate_respects_mix() {
+        let w = YcsbWorkload::new(YcsbKind::B, 10_000, 1.5, 1024);
+        let mut rng = Rng::new(5);
+        let tasks = w.generate(&mut rng, 4000, 0);
+        let writes = tasks.iter().filter(|t| t.ctx.is_write()).count();
+        let frac = writes as f64 / 4000.0;
+        assert!((0.02..0.09).contains(&frac), "write frac {frac}");
+    }
+
+    #[test]
+    fn tasks_target_their_buckets() {
+        let w = YcsbWorkload::new(YcsbKind::A, 1000, 2.0, 64);
+        let mut rng = Rng::new(9);
+        for t in w.generate(&mut rng, 500, 0) {
+            assert_eq!(t.read_addr, t.ctx.bucket(64));
+            assert_eq!(t.read_addr, t.write_addr);
+            assert!(t.read_addr < 64);
+        }
+    }
+
+    #[test]
+    fn zipf_skew_shows_in_buckets() {
+        let w = YcsbWorkload::new(YcsbKind::C, 100_000, 2.5, 4096);
+        let mut rng = Rng::new(11);
+        let tasks = w.generate(&mut rng, 10_000, 0);
+        let mut counts = std::collections::HashMap::new();
+        for t in tasks {
+            *counts.entry(t.read_addr).or_insert(0usize) += 1;
+        }
+        let max = counts.values().copied().max().unwrap();
+        assert!(max > 2_000, "hottest bucket only {max} hits at γ=2.5");
+    }
+}

@@ -1,0 +1,87 @@
+//! Zipf-distributed key sampling (paper §4: "data access patterns
+//! following a Zipf distribution, a common setting in database
+//! benchmarks").  P(rank k) ∝ 1/k^γ over ranks 1..=n; sampled by binary
+//! search over the precomputed CDF, with ranks mapped to a shuffled key
+//! space so hot keys are spread over machines like real hashed keys.
+
+use crate::rng::Rng;
+
+/// Precomputed Zipf(γ) sampler over `n` ranks.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, gamma: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(gamma);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Sample a rank in `0..n` (rank 0 is the hottest).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|c| *c < u).min(self.cdf.len() - 1)
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Expected probability of the hottest rank.
+    pub fn p_hot(&self) -> f64 {
+        self.cdf[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_in_range() {
+        let z = Zipf::new(100, 1.5);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn higher_gamma_is_more_skewed() {
+        let n = 1000;
+        let count_hot = |gamma: f64| {
+            let z = Zipf::new(n, gamma);
+            let mut rng = Rng::new(7);
+            (0..20_000).filter(|_| z.sample(&mut rng) == 0).count()
+        };
+        let h15 = count_hot(1.5);
+        let h25 = count_hot(2.5);
+        assert!(h25 > h15, "γ=2.5 hot {h25} !> γ=1.5 hot {h15}");
+        // γ=2.5 over 1000 keys: rank-0 mass ≈ 1/ζ(2.5) ≈ 0.75.
+        assert!(h25 as f64 / 20_000.0 > 0.5);
+    }
+
+    #[test]
+    fn rank_probabilities_monotone() {
+        let z = Zipf::new(50, 2.0);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[1]);
+        assert!(counts[1] > counts[5]);
+        assert!(counts[5] > counts[49]);
+    }
+}

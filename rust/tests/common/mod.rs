@@ -1,0 +1,106 @@
+//! Shared fixtures for integration tests: toy orchestration apps and a
+//! small randomized property-test driver (proptest is unavailable offline;
+//! this reproduces the idiom — many seeded random cases, first failing
+//! case reported with its seed).
+
+use tdorch::orchestration::{OrchApp, Task};
+use tdorch::rng::Rng;
+
+/// Additive counters: chunk = i64, ctx = increment. ⊗ = +, ⊙ = +=.
+/// The canonical set-associative merge-able op (Def. 2 class ii).
+pub struct CounterApp;
+
+impl OrchApp for CounterApp {
+    type Ctx = i64;
+    type Val = i64;
+    type Out = i64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        8
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, ctx: &i64, val: &i64) -> Option<i64> {
+        // Reads the chunk (parity) so results depend on co-location
+        // actually delivering the right value.
+        Some(*ctx + (*val & 1) * 0)
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+    fn apply(&self, val: &mut i64, out: i64) {
+        *val += out;
+    }
+}
+
+/// Max-writer: chunk = u64, ctx = candidate, out = max. Idempotent
+/// (Def. 2 class i) and exercises cross-address writes: each task reads
+/// one chunk and writes `ctx % write_space`.
+pub struct MaxApp;
+
+impl OrchApp for MaxApp {
+    type Ctx = u64;
+    type Val = u64;
+    type Out = u64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        4
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, ctx: &u64, val: &u64) -> Option<u64> {
+        // Value-dependent output: wrong co-location changes the answer.
+        Some(ctx.wrapping_add(*val))
+    }
+    fn combine(&self, a: u64, b: u64) -> u64 {
+        a.max(b)
+    }
+    fn apply(&self, val: &mut u64, out: u64) {
+        *val = (*val).max(out);
+    }
+}
+
+/// Generate a random workload: `n` tasks over `addr_space` read addresses
+/// with Zipf-ish skew (`skew` in [0,1]: 0 = uniform, 1 = all tasks hit
+/// address 0), writing either in-place or to a random address.
+pub fn random_tasks(
+    rng: &mut Rng,
+    n: usize,
+    addr_space: u64,
+    skew: f64,
+    cross_writes: bool,
+) -> Vec<Task<i64>> {
+    (0..n)
+        .map(|i| {
+            let addr = if rng.next_f64() < skew {
+                rng.next_below(4)
+            } else {
+                rng.next_below(addr_space)
+            };
+            let write = if cross_writes && rng.next_f64() < 0.5 {
+                rng.next_below(addr_space)
+            } else {
+                addr
+            };
+            Task::new(addr, write, (i % 13) as i64 + 1)
+        })
+        .collect()
+}
+
+/// Tiny property-test driver: run `f` over `cases` seeds; panic with the
+/// failing seed for reproduction.
+pub fn for_seeds(cases: u64, f: impl Fn(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

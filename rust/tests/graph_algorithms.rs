@@ -1,0 +1,273 @@
+//! Correctness of the five TDO-GP algorithms against single-threaded
+//! reference implementations, across machine counts and all four engine
+//! families (every engine must compute identical answers — they differ
+//! only in cost structure).
+
+mod common;
+
+use tdorch::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
+use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
+use tdorch::graph::engine::{Engine, GraphEngine};
+use tdorch::graph::{gen, Graph, Vid};
+use tdorch::CostModel;
+
+// ---------- references ----------
+
+fn bfs_ref(g: &Graph, src: Vid) -> Vec<i64> {
+    let mut dist = vec![-1i64; g.n];
+    dist[src as usize] = 0;
+    let mut q = std::collections::VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for (v, _) in g.neighbors(u) {
+            if dist[*v as usize] < 0 {
+                dist[*v as usize] = dist[u as usize] + 1;
+                q.push_back(*v);
+            }
+        }
+    }
+    dist
+}
+
+fn sssp_ref(g: &Graph, src: Vid) -> Vec<f64> {
+    // Dijkstra with a binary heap.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut dist = vec![f64::INFINITY; g.n];
+    dist[src as usize] = 0.0;
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0u64, src)));
+    while let Some(Reverse((d_bits, u))) = heap.pop() {
+        let d = f64::from_bits(d_bits);
+        if d > dist[u as usize] {
+            continue;
+        }
+        for (v, w) in g.neighbors(u) {
+            let nd = d + *w as f64;
+            if nd < dist[*v as usize] {
+                dist[*v as usize] = nd;
+                heap.push(Reverse((nd.to_bits(), *v)));
+            }
+        }
+    }
+    dist
+}
+
+fn cc_ref(g: &Graph) -> Vec<u32> {
+    let mut label: Vec<u32> = (0..g.n as u32).collect();
+    // Union-find.
+    fn find(label: &mut Vec<u32>, v: u32) -> u32 {
+        let mut r = v;
+        while label[r as usize] != r {
+            r = label[r as usize];
+        }
+        let mut cur = v;
+        while label[cur as usize] != r {
+            let next = label[cur as usize];
+            label[cur as usize] = r;
+            cur = next;
+        }
+        r
+    }
+    for u in 0..g.n as u32 {
+        for (v, _) in g.neighbors(u) {
+            let (ru, rv) = (find(&mut label, u), find(&mut label, *v));
+            if ru != rv {
+                let m = ru.min(rv);
+                label[ru as usize] = m;
+                label[rv as usize] = m;
+            }
+        }
+    }
+    (0..g.n as u32).map(|v| find(&mut label, v)).collect()
+}
+
+fn pagerank_ref(g: &Graph, iters: usize) -> Vec<f64> {
+    let n = g.n;
+    let base = 0.15 / n as f64;
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut next = vec![base; n];
+        for u in 0..n as u32 {
+            let d = g.out_degree(u);
+            if d == 0 {
+                continue;
+            }
+            let share = 0.85 * rank[u as usize] / d as f64;
+            for (v, _) in g.neighbors(u) {
+                next[*v as usize] += share;
+            }
+        }
+        rank = next;
+    }
+    rank
+}
+
+fn bc_ref(g: &Graph, root: Vid) -> Vec<f64> {
+    // Brandes, single source.
+    let n = g.n;
+    let mut sigma = vec![0f64; n];
+    let mut dist = vec![-1i64; n];
+    let mut order = Vec::new();
+    sigma[root as usize] = 1.0;
+    dist[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        order.push(u);
+        for (v, _) in g.neighbors(u) {
+            let v = *v;
+            if dist[v as usize] < 0 {
+                dist[v as usize] = dist[u as usize] + 1;
+                q.push_back(v);
+            }
+            if dist[v as usize] == dist[u as usize] + 1 {
+                sigma[v as usize] += sigma[u as usize];
+            }
+        }
+    }
+    let mut delta = vec![0f64; n];
+    for &u in order.iter().rev() {
+        for (v, _) in g.neighbors(u) {
+            let v = *v;
+            if dist[v as usize] == dist[u as usize] + 1 {
+                delta[u as usize] +=
+                    sigma[u as usize] / sigma[v as usize] * (1.0 + delta[v as usize]);
+            }
+        }
+    }
+    delta[root as usize] = 0.0;
+    delta
+}
+
+// ---------- harness ----------
+
+fn engines(g: &Graph, p: usize) -> Vec<Engine> {
+    let cost = CostModel::paper_cluster();
+    vec![
+        Engine::tdo_gp(g, p, cost),
+        gemini_like(g, p, cost),
+        la_like(g, p, cost),
+        ligra_dist(g, p, cost),
+    ]
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-7 + 1e-6 * a.abs().max(b.abs())
+}
+
+#[test]
+fn bfs_all_engines_all_p() {
+    let g = gen::community_ring(1200, 6, 3, 21);
+    let expected = bfs_ref(&g, 0);
+    for p in [1, 4, 8] {
+        for mut e in engines(&g, p) {
+            let got = bfs(&mut e, 0);
+            assert_eq!(got, expected, "{} p={p}", e.label());
+        }
+    }
+}
+
+#[test]
+fn sssp_matches_dijkstra() {
+    let g = gen::erdos_renyi(600, 3000, 22);
+    let expected = sssp_ref(&g, 5);
+    for mut e in engines(&g, 4) {
+        let got = sssp(&mut e, 5);
+        for v in 0..g.n {
+            assert!(
+                close(got[v], expected[v]) || (got[v].is_infinite() && expected[v].is_infinite()),
+                "{} v={v}: {} vs {}",
+                e.label(),
+                got[v],
+                expected[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn cc_matches_union_find() {
+    // A graph with several components: ER below the connectivity
+    // threshold plus isolated vertices.
+    let g = gen::erdos_renyi(800, 500, 23);
+    let expected = cc_ref(&g);
+    for mut e in engines(&g, 8) {
+        let got = cc(&mut e);
+        assert_eq!(got, expected, "{}", e.label());
+    }
+}
+
+#[test]
+fn pagerank_matches_reference() {
+    let g = gen::barabasi_albert(800, 5, 24);
+    let expected = pagerank_ref(&g, 8);
+    for mut e in engines(&g, 4) {
+        let got = pagerank(&mut e, 8);
+        for v in 0..g.n {
+            assert!(
+                close(got[v], expected[v]),
+                "{} v={v}: {} vs {}",
+                e.label(),
+                got[v],
+                expected[v]
+            );
+        }
+        // Ranks are a distribution (up to dangling leakage).
+        let sum: f64 = got.iter().sum();
+        assert!(sum > 0.5 && sum <= 1.0 + 1e-6, "rank sum {sum}");
+    }
+}
+
+#[test]
+fn bc_matches_brandes() {
+    let g = gen::barabasi_albert(500, 4, 25);
+    let expected = bc_ref(&g, 3);
+    for mut e in engines(&g, 4) {
+        let got = bc(&mut e, 3);
+        for v in 0..g.n {
+            assert!(
+                close(got[v], expected[v]),
+                "{} v={v}: {} vs {}",
+                e.label(),
+                got[v],
+                expected[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn bfs_on_grid_high_diameter() {
+    let g = gen::grid2d(24, 26);
+    let expected = bfs_ref(&g, 0);
+    let mut e = Engine::tdo_gp(&g, 16, CostModel::paper_cluster());
+    assert_eq!(bfs(&mut e, 0), expected);
+    // Grid diameter from the corner = 2*(side-1) rounds.
+    assert_eq!(*expected.iter().max().unwrap(), 46);
+}
+
+#[test]
+fn disconnected_source_terminates() {
+    let mut arcs = vec![(1u32, 2u32, 1.0f32), (2, 1, 1.0)];
+    arcs.push((3, 4, 1.0));
+    arcs.push((4, 3, 1.0));
+    let g = Graph::from_arcs(5, arcs);
+    let mut e = Engine::tdo_gp(&g, 2, CostModel::paper_cluster());
+    let d = bfs(&mut e, 0); // vertex 0 is isolated
+    assert_eq!(d[0], 0);
+    assert!(d[1..].iter().all(|x| *x == -1));
+}
+
+#[test]
+fn tdo_gp_deterministic_across_runs() {
+    let g = gen::barabasi_albert(600, 4, 27);
+    let run = || {
+        let mut e = Engine::tdo_gp(&g, 8, CostModel::paper_cluster());
+        let r = pagerank(&mut e, 5);
+        (r, e.metrics().total_words, e.metrics().supersteps)
+    };
+    let (r1, w1, s1) = run();
+    let (r2, w2, s2) = run();
+    assert_eq!(w1, w2);
+    assert_eq!(s1, s2);
+    assert_eq!(r1, r2);
+}

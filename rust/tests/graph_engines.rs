@@ -1,0 +1,151 @@
+//! Performance-*shape* tests: the qualitative relationships the paper's
+//! evaluation section reports must hold in the simulator (who wins,
+//! and roughly how the gaps scale) — Table 2, Table 3, Fig 8/9 shapes.
+
+mod common;
+
+use tdorch::graph::algorithms::{bc, bfs, pagerank, sssp};
+use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
+use tdorch::graph::engine::{Engine, GraphEngine};
+use tdorch::graph::gen;
+use tdorch::CostModel;
+
+fn sim_time(e: &mut Engine, run: impl FnOnce(&mut Engine)) -> f64 {
+    e.reset_metrics(); // time queries, not ingestion (as the paper does)
+    run(e);
+    e.metrics().sim_seconds()
+}
+
+#[test]
+fn high_diameter_graph_blows_up_baselines() {
+    // Table 2 Road-USA shape: per-round Θ(n/P) (gemini) or Θ(m/P) (LA)
+    // overheads x thousands of rounds vs TDO-GP's work-efficient
+    // frontier: the gap must be large (paper: 15x-100x).
+    let g = gen::grid2d(340, 31); // n=115k, BFS from the corner takes ~678 rounds
+    let p = 8;
+    let cost = CostModel::paper_cluster();
+    let t_tdo = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
+        bfs(e, 0);
+    });
+    let t_gem = sim_time(&mut gemini_like(&g, p, cost), |e| {
+        bfs(e, 0);
+    });
+    let t_la = sim_time(&mut la_like(&g, p, cost), |e| {
+        bfs(e, 0);
+    });
+    assert!(
+        t_gem / t_tdo > 2.0,
+        "gemini {t_gem:.4}s should be >>x tdo {t_tdo:.4}s"
+    );
+    assert!(
+        t_la / t_tdo > 4.0,
+        "la {t_la:.4}s should be >>x tdo {t_tdo:.4}s"
+    );
+}
+
+#[test]
+fn skewed_graph_favors_tdo_gp() {
+    // Table 2 social-graph shape: TDO-GP ahead of both families.
+    let g = gen::barabasi_albert(60_000, 10, 32);
+    let p = 8;
+    let cost = CostModel::paper_cluster();
+    let t_tdo = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
+        sssp(e, 0);
+    });
+    let t_gem = sim_time(&mut gemini_like(&g, p, cost), |e| {
+        sssp(e, 0);
+    });
+    let t_la = sim_time(&mut la_like(&g, p, cost), |e| {
+        sssp(e, 0);
+    });
+    assert!(t_tdo < t_gem, "tdo {t_tdo:.4} !< gemini {t_gem:.4}");
+    assert!(t_tdo < t_la, "tdo {t_tdo:.4} !< la {t_la:.4}");
+}
+
+#[test]
+fn ligra_dist_degrades_with_machines() {
+    // Table 3 shape: without TD-Orch, adding machines makes BC *worse*
+    // (per-edge contribution messages explode), while TDO-GP improves
+    // or stays flat.
+    let g = gen::barabasi_albert(20_000, 8, 33);
+    let cost = CostModel::paper_cluster();
+    let bc_time = |mut e: Engine| {
+        sim_time(&mut e, |e| {
+            bc(e, 0);
+        })
+    };
+    let lig_1 = bc_time(ligra_dist(&g, 1, cost));
+    let lig_8 = bc_time(ligra_dist(&g, 8, cost));
+    let tdo_8 = bc_time(Engine::tdo_gp(&g, 8, cost));
+    assert!(
+        lig_8 > 2.0 * lig_1,
+        "ligra-dist should degrade with machines: P=1 {lig_1:.4} P=8 {lig_8:.4}"
+    );
+    assert!(
+        lig_8 / tdo_8 > 5.0,
+        "TD-Orch must be the difference-maker: ligra {lig_8:.4} vs tdo {tdo_8:.4}"
+    );
+}
+
+#[test]
+fn tdo_gp_weak_scaling_near_flat() {
+    // Fig 9 shape: fixed edges/machine, runtime ~flat for TDO-GP.
+    let cost = CostModel::paper_cluster();
+    let mut times = Vec::new();
+    for p in [1usize, 2, 4, 8] {
+        let g = gen::barabasi_albert(8_000 * p, 8, 34);
+        let t = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
+            pagerank(e, 5);
+        });
+        times.push(t);
+    }
+    let ratio = times.last().unwrap() / times.first().unwrap();
+    assert!(ratio < 3.0, "weak scaling blowup {ratio:.2}: {times:?}");
+}
+
+#[test]
+fn tdo_gp_strong_scaling_improves() {
+    // Fig 8 shape: more machines => faster (near-linear at this scale).
+    let g = gen::barabasi_albert(50_000, 12, 35);
+    let cost = CostModel::paper_cluster();
+    let t1 = sim_time(&mut Engine::tdo_gp(&g, 1, cost), |e| {
+        bc(e, 0);
+    });
+    let t8 = sim_time(&mut Engine::tdo_gp(&g, 8, cost), |e| {
+        bc(e, 0);
+    });
+    assert!(
+        t8 < t1 / 2.0,
+        "strong scaling: P=8 {t8:.4}s should be well under P=1 {t1:.4}s"
+    );
+}
+
+#[test]
+fn breakdown_reports_all_three_components() {
+    // Fig 10 shape: multi-machine runs show nonzero communication,
+    // computation AND overhead.
+    let g = gen::barabasi_albert(3000, 8, 36);
+    let mut e = Engine::tdo_gp(&g, 8, CostModel::paper_cluster());
+    e.reset_metrics();
+    pagerank(&mut e, 5);
+    let b = e.metrics().time;
+    assert!(b.communication > 0.0);
+    assert!(b.computation > 0.0);
+    assert!(b.overhead > 0.0);
+}
+
+#[test]
+fn numa_cost_models_order_pagerank() {
+    // Table 5/6 shape: the square-topology NUMA penalty slows local
+    // compute; the big all-to-all server is fastest per unit work.
+    let g = gen::barabasi_albert(3000, 8, 37);
+    let run = |cost: CostModel| {
+        let mut e = Engine::tdo_gp(&g, 1, cost);
+        sim_time(&mut e, |e| {
+            pagerank(e, 5);
+        })
+    };
+    let square = run(CostModel::paper_cluster());
+    let big = run(CostModel::big_numa_server());
+    assert!(big < square, "big server {big:.4} !< paper cluster {square:.4}");
+}

@@ -1,0 +1,163 @@
+//! Integration: the full KV case study (§4) — YCSB workloads through all
+//! four schedulers produce identical stores; repeated batches (multi-stage
+//! serving) stay consistent; Fig 5 cell shapes hold.
+
+mod common;
+
+use tdorch::baselines::{DirectPull, DirectPush, SortingBased};
+use tdorch::kvstore::{preload, Bucket, KvApp, KvOp};
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{sequential_reference, Scheduler, Task};
+use tdorch::rng::Rng;
+use tdorch::workload::{YcsbKind, YcsbWorkload};
+use tdorch::{Cluster, CostModel, DistStore};
+
+const BUCKETS: u64 = 1 << 10;
+
+fn norm(store: &DistStore<Bucket>) -> Vec<(u64, Vec<(u64, u32)>)> {
+    store
+        .snapshot()
+        .into_iter()
+        .map(|(a, mut b)| {
+            b.sort_by_key(|(k, _)| *k);
+            (a, b.into_iter().map(|(k, v)| (k, v.to_bits())).collect())
+        })
+        .collect()
+}
+
+fn make_batches(kind: YcsbKind, p: usize, per: usize, batches: usize) -> Vec<Vec<Vec<Task<KvOp>>>> {
+    let w = YcsbWorkload::new(kind, 50_000, 1.8, BUCKETS);
+    let mut rng = Rng::new(13);
+    let mut seq = 0u64;
+    (0..batches)
+        .map(|_| {
+            (0..p)
+                .map(|_| {
+                    let b = w.generate(&mut rng, per, seq);
+                    seq += per as u64;
+                    b
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn run_batches<S: Scheduler<KvApp<'static>>>(
+    sched: &S,
+    p: usize,
+    batches: &[Vec<Vec<Task<KvOp>>>],
+) -> Vec<(u64, Vec<(u64, u32)>)> {
+    let app = KvApp::new(BUCKETS);
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<Bucket> = DistStore::new(p);
+    preload(&mut store, BUCKETS, 5_000);
+    for batch in batches {
+        sched.run_stage(&mut cluster, &app, batch.clone(), &mut store);
+    }
+    norm(&store)
+}
+
+#[test]
+fn all_schedulers_agree_on_every_workload() {
+    let p = 8;
+    for kind in YcsbKind::ALL {
+        let batches = make_batches(kind, p, 1_500, 2);
+
+        // Sequential oracle over the same batch sequence.
+        let app = KvApp::new(BUCKETS);
+        let mut expected: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut expected, BUCKETS, 5_000);
+        for batch in &batches {
+            sequential_reference(&app, batch, &mut expected);
+        }
+        let expected = norm(&expected);
+
+        assert_eq!(run_batches(&TdOrch::new(), p, &batches), expected, "{kind:?} tdorch");
+        assert_eq!(run_batches(&DirectPull, p, &batches), expected, "{kind:?} pull");
+        assert_eq!(run_batches(&DirectPush, p, &batches), expected, "{kind:?} push");
+        assert_eq!(run_batches(&SortingBased, p, &batches), expected, "{kind:?} sort");
+    }
+}
+
+#[test]
+fn multi_batch_serving_accumulates() {
+    // Values written by batch k must be visible to batch k+1 (the store
+    // is stateful across orchestration stages).
+    let p = 4;
+    let app = KvApp::new(BUCKETS);
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<Bucket> = DistStore::new(p);
+
+    let key = 77u64;
+    let write = |seq: u64, mul: f32, add: f32| {
+        let op = KvOp::update(key, seq, mul, add);
+        vec![vec![Task::inplace(op.bucket(BUCKETS), op)], vec![], vec![], vec![]]
+    };
+    // v = 0*2+3 = 3, then v = 3*10+1 = 31.
+    TdOrch::new().run_stage(&mut cluster, &app, write(1, 2.0, 3.0), &mut store);
+    TdOrch::new().run_stage(&mut cluster, &app, write(2, 10.0, 1.0), &mut store);
+    let op = KvOp::read(key, 3);
+    let bucket = store.get(op.bucket(BUCKETS)).unwrap();
+    let v = bucket.iter().find(|(k, _)| *k == key).unwrap().1;
+    assert_eq!(v, 31.0);
+}
+
+#[test]
+fn concurrent_writes_resolve_by_sequence() {
+    // Many writers to one key in one batch: the highest seq must win on
+    // every scheduler (Def. 2(iv) determinism).
+    let p = 8;
+    let mk = || -> Vec<Vec<Task<KvOp>>> {
+        (0..p)
+            .map(|m| {
+                (0..50)
+                    .map(|i| {
+                        let seq = (m * 50 + i) as u64;
+                        let op = KvOp::update(5, seq, 0.0, seq as f32);
+                        Task::inplace(op.bucket(BUCKETS), op)
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let winner = (p * 50 - 1) as f32;
+    for result in [
+        run_batches(&TdOrch::new(), p, &[mk()]),
+        run_batches(&DirectPush, p, &[mk()]),
+        run_batches(&SortingBased, p, &[mk()]),
+    ] {
+        let op = KvOp::read(5, 0);
+        let bucket = result.iter().find(|(a, _)| *a == op.bucket(BUCKETS)).unwrap();
+        let v = bucket.1.iter().find(|(k, _)| *k == 5).unwrap().1;
+        assert_eq!(f32::from_bits(v), winner);
+    }
+}
+
+#[test]
+fn fig5_cell_shape_holds_in_ci() {
+    use tdorch::repro::kv::run_cell;
+    let cell = run_cell(YcsbKind::A, 2.0, 8, 4_000, 3);
+    assert!(cell[0] < cell[1], "td {} !< push {}", cell[0], cell[1]);
+    assert!(cell[0] < cell[2], "td {} !< pull {}", cell[0], cell[2]);
+    assert!(cell[0] < cell[3], "td {} !< sort {}", cell[0], cell[3]);
+}
+
+#[test]
+fn xla_engine_serving_if_artifacts_present() {
+    // Full stack including PJRT, multi-batch.
+    let Ok(engine) = tdorch::runtime::Engine::load("artifacts") else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let p = 4;
+    let batches = make_batches(YcsbKind::A, p, 2_000, 2);
+    let app = KvApp::with_engine(BUCKETS, &engine);
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<Bucket> = DistStore::new(p);
+    preload(&mut store, BUCKETS, 5_000);
+    for batch in &batches {
+        cluster.barrier();
+        TdOrch::new().run_stage(&mut cluster, &app, batch.clone(), &mut store);
+    }
+    assert_eq!(app.xla_served(), (2 * p * 2_000) as u64);
+}

@@ -1,0 +1,175 @@
+//! Load-balance properties (paper Def. 1 / Theorem 1).
+//!
+//! Under an adversarial workload where *every* task requests the same
+//! chunk, TD-Orch must keep per-machine execution and communication
+//! balanced (the contexts park on transit machines and the value is
+//! pulled down the meta-task tree), while direct-push degenerates to one
+//! machine executing everything.
+
+mod common;
+
+use common::CounterApp;
+use tdorch::baselines::{DirectPull, DirectPush, SortingBased};
+use tdorch::metrics::Metrics;
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{spread_tasks, Scheduler, Task};
+use tdorch::{Cluster, CostModel, DistStore};
+
+fn run<S: Scheduler<CounterApp>>(
+    sched: &S,
+    p: usize,
+    tasks: Vec<Task<i64>>,
+) -> (Metrics, Vec<u64>) {
+    let app = CounterApp;
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<i64> = DistStore::new(p);
+    let outcome = sched.run_stage(&mut cluster, &app, spread_tasks(tasks, p), &mut store);
+    (cluster.metrics, outcome.executed_per_machine)
+}
+
+fn single_key_tasks(n: usize) -> Vec<Task<i64>> {
+    (0..n).map(|i| Task::inplace(99, (i % 7) as i64)).collect()
+}
+
+#[test]
+fn tdorch_balances_execution_under_adversarial_skew() {
+    let p = 16;
+    let n = 16_000;
+    let (_, executed) = run(&TdOrch::new(), p, single_key_tasks(n));
+    let imb = Metrics::imbalance(&executed);
+    assert!(
+        imb < 3.0,
+        "TD-Orch execution imbalance {imb:.2} (per-machine: {executed:?})"
+    );
+    // Every machine executes a meaningful share (Theorem 1(ii)).
+    let min = *executed.iter().min().unwrap();
+    assert!(min as f64 > 0.2 * (n as f64 / p as f64), "min share {min}");
+}
+
+#[test]
+fn direct_push_collapses_under_adversarial_skew() {
+    let p = 16;
+    let n = 16_000;
+    let (_, executed) = run(&DirectPush, p, single_key_tasks(n));
+    let imb = Metrics::imbalance(&executed);
+    assert!(
+        imb > 10.0,
+        "direct-push should collapse to one machine, imbalance {imb:.2}"
+    );
+}
+
+#[test]
+fn tdorch_communication_balanced_under_skew() {
+    let p = 16;
+    let (metrics, _) = run(&TdOrch::new(), p, single_key_tasks(16_000));
+    let imb = metrics.comm_imbalance();
+    assert!(imb < 4.0, "TD-Orch comm imbalance {imb:.2}");
+}
+
+#[test]
+fn direct_pull_owner_comm_hotspot() {
+    // Under single-key load the owner ships P chunk copies while others
+    // ship none of comparable size: pull's comm imbalance must exceed
+    // TD-Orch's.
+    let p = 16;
+    let (pull_m, _) = run(&DirectPull, p, single_key_tasks(16_000));
+    let (td_m, _) = run(&TdOrch::new(), p, single_key_tasks(16_000));
+    assert!(
+        pull_m.comm_imbalance() > td_m.comm_imbalance(),
+        "pull {:.2} vs td {:.2}",
+        pull_m.comm_imbalance(),
+        td_m.comm_imbalance()
+    );
+}
+
+#[test]
+fn tdorch_beats_push_and_pull_on_mixed_contention() {
+    // The Fig 5 shape: a Zipf-like mix — a mostly-uncontended tail (where
+    // pushing σ-word contexts beats pulling B-word chunks, B > σ) plus a
+    // few hot keys (where push collapses onto the owners).  TD-Orch's
+    // push-pull should beat both directions on simulated time.
+    let p = 16;
+    let n = 320_000; // ~paper scale ratio: barrier cost amortized
+    let tasks: Vec<Task<i64>> = (0..n)
+        .map(|i| {
+            let addr = if i % 10 < 3 {
+                (i % 4) as u64 // 30% on 4 hot keys
+            } else {
+                100 + (i as u64).wrapping_mul(0x9E3779B9) % 1_000_000
+            };
+            Task::inplace(addr, (i % 7) as i64)
+        })
+        .collect();
+    let (td, _) = run(&TdOrch::new(), p, tasks.clone());
+    let (push, _) = run(&DirectPush, p, tasks.clone());
+    let (pull, _) = run(&DirectPull, p, tasks);
+    assert!(
+        td.sim_seconds() < push.sim_seconds(),
+        "td {:.6} !< push {:.6}",
+        td.sim_seconds(),
+        push.sim_seconds()
+    );
+    assert!(
+        td.sim_seconds() < pull.sim_seconds(),
+        "td {:.6} !< pull {:.6}",
+        td.sim_seconds(),
+        pull.sim_seconds()
+    );
+}
+
+#[test]
+fn sorting_is_balanced_but_talks_more() {
+    // §3.6: sorting achieves balance but crosses the network ≥3 times.
+    let p = 16;
+    let n = 16_000;
+    let uniform: Vec<Task<i64>> = (0..n)
+        .map(|i| Task::inplace((i as u64 * 2654435761) % 4096, 1))
+        .collect();
+    let (sort_m, sort_exec) = run(&SortingBased, p, uniform.clone());
+    let (td_m, _) = run(&TdOrch::new(), p, uniform);
+    assert!(
+        Metrics::imbalance(&sort_exec) < 2.0,
+        "sorting exec imbalance {:.2}",
+        Metrics::imbalance(&sort_exec)
+    );
+    assert!(
+        sort_m.total_words > td_m.total_words,
+        "sorting words {} should exceed td-orch {}",
+        sort_m.total_words,
+        td_m.total_words
+    );
+}
+
+#[test]
+fn uniform_low_contention_all_balanced() {
+    // With no contention every scheduler should balance execution.
+    let p = 8;
+    let n = 8_000;
+    let uniform: Vec<Task<i64>> = (0..n)
+        .map(|i| Task::inplace((i as u64).wrapping_mul(0x9E3779B9) % 100_000, 1))
+        .collect();
+    for imb in [
+        Metrics::imbalance(&run(&TdOrch::new(), p, uniform.clone()).1),
+        Metrics::imbalance(&run(&DirectPull, p, uniform.clone()).1),
+        Metrics::imbalance(&run(&DirectPush, p, uniform.clone()).1),
+        Metrics::imbalance(&run(&SortingBased, p, uniform.clone()).1),
+    ] {
+        assert!(imb < 1.5, "imbalance {imb:.2}");
+    }
+}
+
+#[test]
+fn tdorch_weak_scaling_flat() {
+    // Theorem 1(i): with n/P fixed, per-stage simulated time grows only
+    // polylogarithmically in P. Allow a generous 4x envelope from P=2 to
+    // P=16 under heavy skew.
+    let per_machine = 2_000;
+    let mut times = Vec::new();
+    for p in [2usize, 4, 8, 16] {
+        let tasks = single_key_tasks(per_machine * p);
+        let (m, _) = run(&TdOrch::new(), p, tasks);
+        times.push(m.sim_seconds());
+    }
+    let ratio = times.last().unwrap() / times.first().unwrap();
+    assert!(ratio < 4.0, "weak-scaling blowup {ratio:.2}: {times:?}");
+}

@@ -1,0 +1,141 @@
+//! End-to-end integration over the PJRT runtime: load the AOT artifacts
+//! produced by `make artifacts`, execute them from Rust, and verify the
+//! numerics — the full L1 (Pallas) → L2 (JAX) → HLO text → L3 (Rust/PJRT)
+//! chain.  Skipped (with a loud message) if artifacts are missing.
+
+use tdorch::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_all_manifest_artifacts() {
+    let Some(engine) = engine() else { return };
+    let names = engine.artifact_names();
+    for expected in ["relax_batch", "spmv_panel", "ycsb_batch"] {
+        assert!(names.contains(&expected), "missing {expected}: {names:?}");
+    }
+}
+
+#[test]
+fn ycsb_batch_numerics() {
+    let Some(engine) = engine() else { return };
+    let n = 1000; // deliberately not a multiple of the artifact batch
+    let vals: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+    let mul: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+    let add: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+    let out = engine.ycsb_batch(&vals, &mul, &add).unwrap();
+    assert_eq!(out.len(), n);
+    for i in 0..n {
+        let want = vals[i] * mul[i] + add[i];
+        assert!(
+            (out[i] - want).abs() <= want.abs() * 1e-5 + 1e-5,
+            "i={i}: {} vs {want}",
+            out[i]
+        );
+    }
+}
+
+#[test]
+fn ycsb_batch_larger_than_one_artifact_batch() {
+    let Some(engine) = engine() else { return };
+    let n = 4096 * 2 + 123;
+    let vals = vec![2.0f32; n];
+    let mul = vec![3.0f32; n];
+    let add = vec![1.0f32; n];
+    let out = engine.ycsb_batch(&vals, &mul, &add).unwrap();
+    assert_eq!(out.len(), n);
+    assert!(out.iter().all(|v| (*v - 7.0).abs() < 1e-6));
+}
+
+#[test]
+fn relax_batch_numerics() {
+    let Some(engine) = engine() else { return };
+    let dv = vec![5.0f32, 1.0, 10.0, 0.5];
+    let du = vec![1.0f32, 2.0, 3.0, 4.0];
+    let w = vec![1.0f32, 1.0, 1.0, 1.0];
+    let out = engine.relax_batch(&dv, &du, &w).unwrap();
+    assert_eq!(out, vec![2.0, 1.0, 4.0, 0.5]);
+}
+
+#[test]
+fn spmv_panel_numerics() {
+    let Some(engine) = engine() else { return };
+    let (inputs, output) = engine.shapes("spmv_panel").unwrap();
+    let (m, k) = (inputs[0].0[0], inputs[0].0[1]);
+    let panel = inputs[1].0[1];
+    assert_eq!(output.0, vec![m, panel]);
+
+    // A = 2*I (k = m), X = panel of ones: out = alpha*2 + beta everywhere.
+    assert_eq!(m, k);
+    let mut a = vec![0f32; m * k];
+    for i in 0..m {
+        a[i * k + i] = 2.0;
+    }
+    let x = vec![1f32; k * panel];
+    let (alpha, beta) = (0.85f32, 0.15f32);
+    let out = engine.spmv_panel(&a, &x, alpha, beta).unwrap();
+    assert_eq!(out.len(), m * panel);
+    for v in &out {
+        assert!((*v - (alpha * 2.0 + beta)).abs() < 1e-5, "{v}");
+    }
+}
+
+#[test]
+fn kv_app_xla_path_matches_native() {
+    // The KV store's Phase-3 lambda served by the Pallas artifact must
+    // produce the same store as the native path.
+    use tdorch::kvstore::{preload, Bucket, KvApp, KvOp};
+    use tdorch::orchestration::tdorch::TdOrch;
+    use tdorch::orchestration::{spread_tasks, Scheduler, Task};
+    use tdorch::{Cluster, CostModel, DistStore};
+
+    let Some(engine) = engine() else { return };
+    let buckets = 64;
+    let p = 4;
+    let ops: Vec<Task<KvOp>> = (0..3000u64)
+        .map(|i| {
+            let op = if i % 4 == 0 {
+                KvOp::read(i % 100, i)
+            } else {
+                KvOp::update(i % 100, i, 1.25, 2.0)
+            };
+            Task::inplace(op.bucket(buckets), op)
+        })
+        .collect();
+    let spread = spread_tasks(ops, p);
+
+    let run = |app: &KvApp| {
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut store, buckets, 100);
+        let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+        TdOrch::new().run_stage(&mut cluster, app, spread.clone(), &mut store);
+        let mut snap = store.snapshot();
+        for (_, b) in &mut snap {
+            b.sort_by_key(|(k, _)| *k);
+        }
+        snap
+    };
+
+    let native = run(&KvApp::new(buckets));
+    let xla_app = KvApp::with_engine(buckets, &engine);
+    let xla = run(&xla_app);
+    assert!(xla_app.xla_served() >= 3000, "XLA served {}", xla_app.xla_served());
+
+    assert_eq!(native.len(), xla.len());
+    for ((a_addr, a_bucket), (b_addr, b_bucket)) in native.iter().zip(&xla) {
+        assert_eq!(a_addr, b_addr);
+        assert_eq!(a_bucket.len(), b_bucket.len());
+        for ((ka, va), (kb, vb)) in a_bucket.iter().zip(b_bucket) {
+            assert_eq!(ka, kb);
+            assert!((va - vb).abs() <= va.abs() * 1e-4 + 1e-4, "{va} vs {vb}");
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Property: every scheduler (TD-Orch and all three §2.3 baselines)
+//! produces a store identical to the sequential oracle, for arbitrary
+//! workloads — uniform, skewed, adversarial single-key, cross-address
+//! writes — across machine counts and TD-Orch (F, C) parameter choices.
+
+mod common;
+
+use common::{for_seeds, random_tasks, CounterApp, MaxApp};
+use tdorch::baselines::{DirectPull, DirectPush, SortingBased};
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{sequential_reference, spread_tasks, Scheduler, Task};
+use tdorch::rng::Rng;
+use tdorch::{Cluster, CostModel, DistStore};
+
+fn check_counter<S: Scheduler<CounterApp>>(
+    sched: &S,
+    p: usize,
+    tasks: Vec<Task<i64>>,
+    label: &str,
+) {
+    let app = CounterApp;
+    let spread = spread_tasks(tasks, p);
+
+    let mut expected: DistStore<i64> = DistStore::new(p);
+    sequential_reference(&app, &spread, &mut expected);
+
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut store: DistStore<i64> = DistStore::new(p);
+    let outcome = sched.run_stage(&mut cluster, &app, spread.clone(), &mut store);
+
+    assert_eq!(
+        store.snapshot(),
+        expected.snapshot(),
+        "{label}: store mismatch (p={p})"
+    );
+    let n: u64 = spread.iter().map(|b| b.len() as u64).sum();
+    assert_eq!(outcome.total_executed, n, "{label}: executed {}",
+        outcome.total_executed);
+}
+
+fn all_schedulers_match(p: usize, tasks: Vec<Task<i64>>) {
+    check_counter(&TdOrch::new(), p, tasks.clone(), "td-orch");
+    check_counter(&DirectPull, p, tasks.clone(), "direct-pull");
+    check_counter(&DirectPush, p, tasks.clone(), "direct-push");
+    check_counter(&SortingBased, p, tasks, "sorting");
+}
+
+#[test]
+fn uniform_workload_all_schedulers() {
+    for_seeds(5, |seed| {
+        let mut rng = Rng::new(seed);
+        let tasks = random_tasks(&mut rng, 500, 200, 0.0, false);
+        for p in [1, 2, 4, 8] {
+            all_schedulers_match(p, tasks.clone());
+        }
+    });
+}
+
+#[test]
+fn skewed_workload_all_schedulers() {
+    for_seeds(5, |seed| {
+        let mut rng = Rng::new(100 + seed);
+        let tasks = random_tasks(&mut rng, 600, 150, 0.7, false);
+        for p in [2, 7, 16] {
+            all_schedulers_match(p, tasks.clone());
+        }
+    });
+}
+
+#[test]
+fn adversarial_single_key() {
+    // All n tasks hit one chunk — the worst case of §2.3.
+    for p in [1, 2, 8, 16] {
+        let tasks: Vec<Task<i64>> = (0..400).map(|i| Task::inplace(7, i % 5 + 1)).collect();
+        all_schedulers_match(p, tasks);
+    }
+}
+
+#[test]
+fn cross_address_writes() {
+    for_seeds(5, |seed| {
+        let mut rng = Rng::new(200 + seed);
+        let tasks = random_tasks(&mut rng, 500, 100, 0.4, true);
+        for p in [2, 8] {
+            all_schedulers_match(p, tasks.clone());
+        }
+    });
+}
+
+#[test]
+fn tdorch_parameter_sweep() {
+    // TD-Orch must be correct for any (F, C), not just the defaults.
+    for_seeds(3, |seed| {
+        let mut rng = Rng::new(300 + seed);
+        let tasks = random_tasks(&mut rng, 400, 80, 0.6, true);
+        for p in [4, 16] {
+            for fanout in [2, 3, 8] {
+                for c in [2, 4, 32] {
+                    check_counter(
+                        &TdOrch::with_params(fanout, c),
+                        p,
+                        tasks.clone(),
+                        &format!("td-orch F={fanout} C={c}"),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn max_app_idempotent_merge() {
+    let app = MaxApp;
+    for p in [1, 4, 9] {
+        let tasks: Vec<Task<u64>> = (0..300)
+            .map(|i| Task::new(i % 50, (i * 7) % 50, i * 31 % 1000))
+            .collect();
+        let spread = spread_tasks(tasks, p);
+        let mut expected: DistStore<u64> = DistStore::new(p);
+        sequential_reference(&app, &spread, &mut expected);
+
+        for (name, result) in [
+            ("tdorch", {
+                let mut c = Cluster::new(p, CostModel::paper_cluster());
+                let mut s: DistStore<u64> = DistStore::new(p);
+                TdOrch::new().run_stage(&mut c, &app, spread.clone(), &mut s);
+                s.snapshot()
+            }),
+            ("pull", {
+                let mut c = Cluster::new(p, CostModel::paper_cluster());
+                let mut s: DistStore<u64> = DistStore::new(p);
+                DirectPull.run_stage(&mut c, &app, spread.clone(), &mut s);
+                s.snapshot()
+            }),
+            ("push", {
+                let mut c = Cluster::new(p, CostModel::paper_cluster());
+                let mut s: DistStore<u64> = DistStore::new(p);
+                DirectPush.run_stage(&mut c, &app, spread.clone(), &mut s);
+                s.snapshot()
+            }),
+            ("sort", {
+                let mut c = Cluster::new(p, CostModel::paper_cluster());
+                let mut s: DistStore<u64> = DistStore::new(p);
+                SortingBased.run_stage(&mut c, &app, spread.clone(), &mut s);
+                s.snapshot()
+            }),
+        ] {
+            assert_eq!(result, expected.snapshot(), "{name} p={p}");
+        }
+    }
+}
+
+#[test]
+fn empty_and_tiny_batches() {
+    all_schedulers_match(4, vec![]);
+    all_schedulers_match(4, vec![Task::inplace(1, 5)]);
+    all_schedulers_match(1, vec![Task::inplace(1, 5), Task::new(1, 2, 3)]);
+}
+
+#[test]
+fn determinism_same_seed_same_metrics() {
+    let mut rng = Rng::new(42);
+    let tasks = random_tasks(&mut rng, 800, 120, 0.5, true);
+    let run = || {
+        let app = CounterApp;
+        let mut c = Cluster::new(8, CostModel::paper_cluster());
+        let mut s: DistStore<i64> = DistStore::new(8);
+        TdOrch::new().run_stage(&mut c, &app, spread_tasks(tasks.clone(), 8), &mut s);
+        (
+            s.snapshot(),
+            c.metrics.total_words,
+            c.metrics.supersteps,
+            c.metrics.sent_by_machine.clone(),
+        )
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,74 @@
+//! Bench: real wall-clock of the threaded shared-nothing substrate —
+//! TD-Orch vs direct-push vs direct-pull on a Zipf(1.0)-hotspot YCSB
+//! batch, on ≥ 4 real OS worker threads.  Every run is validated against
+//! `sequential_reference` before its time is reported.
+//! `cargo bench --bench exec_wallclock`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::baselines::{DirectPull, DirectPush};
+use tdorch::exec::ThreadedCluster;
+use tdorch::kvstore::{normalized_snapshot, preload, Bucket, KvApp};
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::Scheduler;
+use tdorch::repro::exec::{hotspot_workload, BUCKETS, N_PRELOAD};
+use tdorch::DistStore;
+
+const GAMMA: f64 = 1.0;
+const PER_MACHINE: usize = 20_000;
+
+fn main() {
+    let b = Bench::new("exec_wallclock");
+    let app = KvApp::new(BUCKETS);
+
+    for p in [4usize, 8] {
+        // Exactly the workload + oracle `repro exec` runs and validates.
+        let (tasks, expected) = hotspot_workload(p, PER_MACHINE, GAMMA, 7);
+
+        let td = TdOrch::new();
+        let scheds: [(&str, &dyn Scheduler<KvApp, ThreadedCluster>); 3] = [
+            ("td-orch", &td),
+            ("direct-push", &DirectPush),
+            ("direct-pull", &DirectPull),
+        ];
+        const ITERS: usize = 3;
+        let mut max_busy = [0.0f64; 3];
+        for (i, (name, sched)) in scheds.into_iter().enumerate() {
+            // Preload and task cloning stay OUTSIDE the timed closure so
+            // the reported wall time is the scheduler stage alone; store
+            // validation runs after timing, on every iteration's output.
+            let mut prepared: Vec<_> = (0..ITERS)
+                .map(|_| {
+                    let mut store: DistStore<Bucket> = DistStore::new(p);
+                    preload(&mut store, BUCKETS, N_PRELOAD);
+                    (ThreadedCluster::new(p), store, tasks.clone())
+                })
+                .collect();
+            let mut finished: Vec<DistStore<Bucket>> = Vec::with_capacity(ITERS);
+            let mut last_max = 0.0f64;
+            b.run(&format!("{name}-P{p}x{PER_MACHINE}"), ITERS, || {
+                let (mut cluster, mut store, batch) =
+                    prepared.pop().expect("one prepared run per iter");
+                let outcome = sched.run_stage(&mut cluster, &app, batch, &mut store);
+                last_max = cluster.max_busy_ms();
+                finished.push(store);
+                outcome.total_executed
+            });
+            for store in &finished {
+                assert_eq!(
+                    normalized_snapshot(store),
+                    expected,
+                    "{name}: threaded store != sequential_reference"
+                );
+            }
+            println!("    max-loaded machine busy: {last_max:.2} ms");
+            max_busy[i] = last_max;
+        }
+        println!(
+            "    P={p}: td-orch max-machine speedup: {:.2}x vs direct-push, {:.2}x vs direct-pull",
+            max_busy[1] / max_busy[0],
+            max_busy[2] / max_busy[0],
+        );
+    }
+}

@@ -2,117 +2,118 @@
 //! its requested chunk (RPC style).  A hot chunk's owner receives — and
 //! must *execute* — up to n task contexts, the `O(nDσ/min{D,P})`
 //! worst-case communication and work imbalance the paper derives.
+//!
+//! Written as [`Substrate`] supersteps, so it runs identically on the BSP
+//! simulator and on the threaded backend.
 
-use crate::bsp::{Cluster, MachineId};
 use crate::det::{det_map, DetMap};
+use crate::exec::{no_messages, nothing_words, Nothing, Substrate};
 use crate::orchestration::{OrchApp, Scheduler, StageOutcome, Task};
-use crate::store::{Addr, DistStore};
+use crate::store::{owner_of, Addr, DistStore};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DirectPush;
 
-impl<A: OrchApp> Scheduler<A> for DirectPush {
+impl<A, S> Scheduler<A, S> for DirectPush
+where
+    A: OrchApp + Sync,
+    A::Ctx: Send,
+    A::Val: Send,
+    A::Out: Send,
+    S: Substrate,
+{
     fn name(&self) -> &'static str {
         "direct-push"
     }
 
     fn run_stage(
         &self,
-        cluster: &mut Cluster,
+        sub: &mut S,
         app: &A,
         tasks: Vec<Vec<Task<A::Ctx>>>,
         store: &mut DistStore<A::Val>,
     ) -> StageOutcome {
-        let p = cluster.p;
+        let p = sub.machines();
+        let (submitted, mut st) = crate::orchestration::start_stage::<A>(p, tasks, store);
         let sigma = app.sigma();
         let out_words = app.out_words();
-        let mut outcome = StageOutcome {
-            executed_per_machine: vec![0; p],
-            total_executed: 0,
-        };
 
         // Superstep 1: ship every task context to the chunk owner.
-        let mut push_out: Vec<Vec<(MachineId, Task<A::Ctx>)>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, batch) in tasks.into_iter().enumerate() {
-            cluster.work(m, batch.len() as u64);
-            for t in batch {
-                push_out[m].push((store.owner(t.read_addr), t));
-            }
-        }
-        let push_in = cluster.exchange(push_out, |_| sigma + 1);
+        let pushed: Vec<Vec<Task<A::Ctx>>> = sub.superstep(
+            &mut st,
+            no_messages(p),
+            |_m, s, _in, acct| {
+                let batch = std::mem::take(&mut s.batch);
+                acct.work(batch.len() as u64);
+                batch
+                    .into_iter()
+                    .map(|t| (owner_of(t.read_addr, p), t))
+                    .collect()
+            },
+            |_t: &Task<A::Ctx>| sigma + 1,
+        );
 
         // Superstep 2: owners execute everything they received (this is
         // where the load imbalance materializes), then write back.
-        let mut wb_out: Vec<Vec<(MachineId, (Addr, A::Out))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, batch) in push_in.into_iter().enumerate() {
-            // Group tasks by chunk so each value is fetched locally once.
-            let mut by_addr: DetMap<Addr, Vec<Task<A::Ctx>>> = det_map();
-            for t in batch {
-                by_addr.entry(t.read_addr).or_default().push(t);
-            }
-            let groups: Vec<(A::Val, Vec<Task<A::Ctx>>)> = by_addr
-                .into_iter()
-                .map(|(addr, ts)| (store.read_copy(addr), ts))
-                .collect();
-            let items: Vec<(&A::Ctx, &A::Val)> = groups
-                .iter()
-                .flat_map(|(val, ts)| ts.iter().map(move |t| (&t.ctx, val)))
-                .collect();
-            let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
-            app.execute_batch(&items, &mut outs);
-            let n = items.len() as u64;
-            cluster.work(m, n * app.task_work());
-            cluster.executed(m, n);
-            outcome.executed_per_machine[m] += n;
+        let wb_in: Vec<Vec<(Addr, A::Out)>> = sub.superstep(
+            &mut st,
+            pushed,
+            |_m, s, inbox, acct| {
+                // Group tasks by chunk so each value is fetched once.
+                let mut by_addr: DetMap<Addr, Vec<Task<A::Ctx>>> = det_map();
+                for t in inbox {
+                    by_addr.entry(t.read_addr).or_default().push(t);
+                }
+                let groups: Vec<(A::Val, Vec<Task<A::Ctx>>)> = by_addr
+                    .into_iter()
+                    .map(|(addr, ts)| {
+                        (s.shard.get(&addr).cloned().unwrap_or_default(), ts)
+                    })
+                    .collect();
+                let items: Vec<(&A::Ctx, &A::Val)> = groups
+                    .iter()
+                    .flat_map(|(val, ts)| ts.iter().map(move |t| (&t.ctx, val)))
+                    .collect();
+                let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
+                app.execute_batch(&items, &mut outs);
+                debug_assert_eq!(outs.len(), items.len());
+                let n = items.len() as u64;
+                acct.work(n * app.task_work());
+                acct.executed(n);
+                s.executed += n;
 
-            let mut pool: DetMap<Addr, A::Out> = det_map();
-            let mut it = outs.into_iter();
-            for (_, ts) in &groups {
-                for t in ts {
-                    let Some(out) = it.next().expect("arity") else { continue };
-                    cluster.work(m, 1);
-                    match pool.remove(&t.write_addr) {
-                        Some(acc) => {
-                            pool.insert(t.write_addr, app.combine(acc, out));
-                        }
-                        None => {
-                            pool.insert(t.write_addr, out);
-                        }
+                let mut pool: DetMap<Addr, Option<A::Out>> = det_map();
+                let mut it = outs.into_iter();
+                for (_, ts) in &groups {
+                    for t in ts {
+                        let Some(out) = it.next().expect("arity") else { continue };
+                        acct.work(1);
+                        crate::orchestration::combine_into(app, &mut pool, t.write_addr, out);
                     }
                 }
-            }
-            for (addr, out) in pool {
-                wb_out[m].push((store.owner(addr), (addr, out)));
-            }
-        }
-        let wb_in = cluster.exchange(wb_out, |_| out_words + 1);
+                pool.into_iter()
+                    .map(|(addr, out)| (owner_of(addr, p), (addr, out.expect("pool slot"))))
+                    .collect()
+            },
+            |_msg: &(Addr, A::Out)| out_words + 1,
+        );
 
-        // Superstep 3: merge + apply write-backs.
-        for (m, inbox) in wb_in.into_iter().enumerate() {
-            let mut merged: DetMap<Addr, A::Out> = det_map();
-            for (addr, out) in inbox {
-                cluster.work(m, 1);
-                match merged.remove(&addr) {
-                    Some(acc) => {
-                        merged.insert(addr, app.combine(acc, out));
-                    }
-                    None => {
-                        merged.insert(addr, out);
-                    }
-                }
-            }
-            let mut addrs: Vec<Addr> = merged.keys().copied().collect();
-            addrs.sort_unstable();
-            for addr in addrs {
-                let out = merged.remove(&addr).unwrap();
-                app.apply(store.get_or_default(addr), out);
-            }
-        }
-        cluster.barrier();
+        // Superstep 3: merge + apply write-backs at the owners.
+        let _done: Vec<Vec<Nothing>> = sub.superstep(
+            &mut st,
+            wb_in,
+            |_m, s, inbox, acct| {
+                crate::orchestration::merge_and_apply(app, inbox, &mut s.shard, acct);
+                Vec::new()
+            },
+            nothing_words,
+        );
 
-        outcome.total_executed = outcome.executed_per_machine.iter().sum();
-        outcome
+        crate::orchestration::finish_stage(
+            store,
+            st.into_iter().map(|s| (s.executed, s.shard)).collect(),
+            submitted,
+            "direct-push",
+        )
     }
 }

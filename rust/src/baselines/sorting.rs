@@ -8,11 +8,17 @@
 //! balance is optimal whp, but the tasks cross the network ≥ 3 times
 //! (sort, reverse-sort, plus samples/values) — the constant factor that
 //! makes it slower than TD-Orch in practice (paper: 1.42× geomean).
+//!
+//! Written as [`Substrate`] supersteps, so it runs identically on the BSP
+//! simulator and on the threaded backend.
 
-use crate::bsp::{Cluster, MachineId};
+use std::collections::HashMap;
+
+use crate::bsp::MachineId;
 use crate::det::{det_map, DetMap};
+use crate::exec::{no_messages, nothing_words, Nothing, Substrate};
 use crate::orchestration::{OrchApp, Scheduler, StageOutcome, Task};
-use crate::store::{Addr, DistStore};
+use crate::store::{owner_of, Addr, DistStore};
 
 /// Samples collected per machine for splitter selection.
 const SAMPLES_PER_MACHINE: usize = 32;
@@ -20,182 +26,221 @@ const SAMPLES_PER_MACHINE: usize = 32;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SortingBased;
 
-impl<A: OrchApp> Scheduler<A> for SortingBased {
+/// Machine-private stage state.
+struct MState<A: OrchApp> {
+    /// (uid, origin machine, task) — the uid tie-break is what keeps
+    /// sample sort load-balanced under duplicate keys (all-equal
+    /// addresses still spread over machines), as in KaDiS.
+    batch: Vec<(u64, MachineId, Task<A::Ctx>)>,
+    shard: HashMap<Addr, A::Val>,
+    /// Tasks assigned to this machine by the sample-sort partition.
+    sorted: Vec<(MachineId, Task<A::Ctx>)>,
+    /// Pass-5 payload: tasks returning to their origin machines.
+    returns: Vec<(MachineId, Task<A::Ctx>)>,
+    executed: u64,
+}
+
+impl<A, S> Scheduler<A, S> for SortingBased
+where
+    A: OrchApp + Sync,
+    A::Ctx: Send,
+    A::Val: Send,
+    A::Out: Send,
+    S: Substrate,
+{
     fn name(&self) -> &'static str {
         "sorting-mpc"
     }
 
     fn run_stage(
         &self,
-        cluster: &mut Cluster,
+        sub: &mut S,
         app: &A,
         tasks: Vec<Vec<Task<A::Ctx>>>,
         store: &mut DistStore<A::Val>,
     ) -> StageOutcome {
-        let p = cluster.p;
+        let (p, submitted) =
+            crate::orchestration::stage_contract(sub.machines(), &tasks, store);
         let sigma = app.sigma();
         let chunk_words = app.chunk_words();
         let out_words = app.out_words();
-        let mut outcome = StageOutcome {
-            executed_per_machine: vec![0; p],
-            total_executed: 0,
-        };
 
-        // ---- Pass 1a: local sort + sample for splitters ----------------
-        // Sort/partition key is (addr, uid): the uid tie-break is what
-        // keeps sample sort load-balanced under duplicate keys (all-equal
-        // addresses still spread over machines) — as in KaDiS.
-        let mut tasks: Vec<Vec<(u64, MachineId, Task<A::Ctx>)>> = tasks
+        let shards = store.take_maps();
+        let mut st: Vec<MState<A>> = tasks
             .into_iter()
             .enumerate()
-            .map(|(m, batch)| {
-                batch
+            .zip(shards)
+            .map(|((m, batch), shard)| MState {
+                batch: batch
                     .into_iter()
                     .enumerate()
                     .map(|(i, t)| ((i * p + m) as u64, m, t))
-                    .collect()
+                    .collect(),
+                shard,
+                sorted: Vec::new(),
+                returns: Vec::new(),
+                executed: 0,
             })
             .collect();
-        let mut sample_out: Vec<Vec<(MachineId, (Addr, u64))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, batch) in tasks.iter_mut().enumerate() {
-            batch.sort_by_key(|(uid, _, t)| (t.read_addr, *uid));
-            // n/P log(n/P) local sort charged as a linear sweep x log factor
-            let n = batch.len() as u64;
-            cluster.work(m, n.max(1) * (64 - n.leading_zeros() as u64).max(1) / 8);
-            let stride = (batch.len() / SAMPLES_PER_MACHINE).max(1);
-            for (uid, _, t) in batch.iter().step_by(stride).take(SAMPLES_PER_MACHINE) {
-                sample_out[m].push((0, (t.read_addr, *uid)));
-            }
-        }
-        let samples_in = cluster.exchange(sample_out, |_| 2);
+
+        // ---- Pass 1a: local sort + sample for splitters ----------------
+        let samples_in: Vec<Vec<(Addr, u64)>> = sub.superstep(
+            &mut st,
+            no_messages(p),
+            |_m, s, _in, acct| {
+                s.batch.sort_by_key(|(uid, _, t)| (t.read_addr, *uid));
+                // n/P log(n/P) local sort charged as a linear sweep x log.
+                let n = s.batch.len() as u64;
+                acct.work(n.max(1) * (64 - n.leading_zeros() as u64).max(1) / 8);
+                let stride = (s.batch.len() / SAMPLES_PER_MACHINE).max(1);
+                s.batch
+                    .iter()
+                    .step_by(stride)
+                    .take(SAMPLES_PER_MACHINE)
+                    .map(|(uid, _, t)| (0, (t.read_addr, *uid)))
+                    .collect()
+            },
+            |_msg: &(Addr, u64)| 2,
+        );
 
         // ---- Pass 1b: machine 0 picks splitters, broadcasts -------------
-        let mut samples: Vec<(Addr, u64)> = samples_in.into_iter().flatten().collect();
-        samples.sort_unstable();
-        cluster.work(0, samples.len() as u64);
-        let splitters: Vec<(Addr, u64)> = if samples.is_empty() {
-            vec![(0, 0); p.saturating_sub(1)]
-        } else {
-            (1..p).map(|i| samples[i * samples.len() / p]).collect()
-        };
-        let mut bcast_out: Vec<Vec<(MachineId, Vec<(Addr, u64)>)>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for m in 0..p {
-            bcast_out[0].push((m, splitters.clone()));
-        }
-        let bcast_in = cluster.exchange(bcast_out, |s| 2 * s.len() as u64);
-        let splitters = bcast_in
-            .into_iter()
-            .map(|mut v| v.pop().unwrap_or_default())
-            .collect::<Vec<_>>();
+        let bcast_in: Vec<Vec<Vec<(Addr, u64)>>> = sub.superstep(
+            &mut st,
+            samples_in,
+            |m, _s, inbox, acct| {
+                if m != 0 {
+                    debug_assert!(inbox.is_empty());
+                    return Vec::new();
+                }
+                let mut samples: Vec<(Addr, u64)> = inbox;
+                samples.sort_unstable();
+                acct.work(samples.len() as u64);
+                let splitters: Vec<(Addr, u64)> = if samples.is_empty() {
+                    vec![(0, 0); p.saturating_sub(1)]
+                } else {
+                    (1..p).map(|i| samples[i * samples.len() / p]).collect()
+                };
+                (0..p).map(|to| (to, splitters.clone())).collect()
+            },
+            |msg: &Vec<(Addr, u64)>| 2 * msg.len() as u64,
+        );
 
         // ---- Pass 2: all-to-all partition by splitter -------------------
-        let mut part_out: Vec<Vec<(MachineId, (MachineId, Task<A::Ctx>))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, batch) in tasks.into_iter().enumerate() {
-            for (uid, origin, t) in batch {
-                let dst = splitters[m].partition_point(|s| *s <= (t.read_addr, uid));
-                part_out[m].push((dst, (origin, t)));
-            }
-        }
-        let part_in = cluster.exchange(part_out, |_| sigma + 2);
+        let part_in: Vec<Vec<(MachineId, Task<A::Ctx>)>> = sub.superstep(
+            &mut st,
+            bcast_in,
+            |_m, s, mut inbox, _acct| {
+                let splitters = inbox.pop().unwrap_or_default();
+                let batch = std::mem::take(&mut s.batch);
+                batch
+                    .into_iter()
+                    .map(|(uid, origin, t)| {
+                        let dst = splitters.partition_point(|sp| *sp <= (t.read_addr, uid));
+                        (dst, (origin, t))
+                    })
+                    .collect()
+            },
+            |_msg: &(MachineId, Task<A::Ctx>)| sigma + 2,
+        );
 
         // ---- Pass 3: request values for the contiguous addr runs --------
-        let mut sorted: Vec<Vec<(MachineId, Task<A::Ctx>)>> = part_in;
-        let mut req_out: Vec<Vec<(MachineId, (Addr, MachineId))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, batch) in sorted.iter_mut().enumerate() {
-            batch.sort_by_key(|(_, t)| t.read_addr);
-            cluster.work(m, batch.len() as u64);
-            let mut last: Option<Addr> = None;
-            for (_, t) in batch.iter() {
-                if last != Some(t.read_addr) {
-                    last = Some(t.read_addr);
-                    req_out[m].push((store.owner(t.read_addr), (t.read_addr, m)));
+        let req_in: Vec<Vec<(Addr, MachineId)>> = sub.superstep(
+            &mut st,
+            part_in,
+            |m, s, inbox, acct| {
+                s.sorted = inbox;
+                s.sorted.sort_by_key(|(_, t)| t.read_addr);
+                acct.work(s.sorted.len() as u64);
+                let mut out = Vec::new();
+                let mut last: Option<Addr> = None;
+                for (_, t) in s.sorted.iter() {
+                    if last != Some(t.read_addr) {
+                        last = Some(t.read_addr);
+                        out.push((owner_of(t.read_addr, p), (t.read_addr, m)));
+                    }
                 }
-            }
-        }
-        let req_in = cluster.exchange(req_out, |_| 2);
-        let mut val_out: Vec<Vec<(MachineId, (Addr, A::Val))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, inbox) in req_in.into_iter().enumerate() {
-            cluster.work(m, inbox.len() as u64);
-            for (addr, requester) in inbox {
-                val_out[m].push((requester, (addr, store.read_copy(addr))));
-            }
-        }
-        let val_in = cluster.exchange(val_out, |_| chunk_words + 1);
+                out
+            },
+            |_msg: &(Addr, MachineId)| 2,
+        );
+        let val_in: Vec<Vec<(Addr, A::Val)>> = sub.superstep(
+            &mut st,
+            req_in,
+            |_m, s, inbox, acct| {
+                acct.work(inbox.len() as u64);
+                inbox
+                    .into_iter()
+                    .map(|(addr, requester)| {
+                        (requester, (addr, s.shard.get(&addr).cloned().unwrap_or_default()))
+                    })
+                    .collect()
+            },
+            |_msg: &(Addr, A::Val)| chunk_words + 1,
+        );
 
         // ---- Pass 4: execute (balanced: ~n/P tasks each) ----------------
-        let mut wb_out: Vec<Vec<(MachineId, (Addr, A::Out))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        let mut return_out: Vec<Vec<(MachineId, Task<A::Ctx>)>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, (inbox, batch)) in val_in.into_iter().zip(sorted.into_iter()).enumerate() {
-            let mut vals: DetMap<Addr, A::Val> = det_map();
-            for (addr, val) in inbox {
-                vals.insert(addr, val);
-            }
-            let items: Vec<(&A::Ctx, &A::Val)> = batch
-                .iter()
-                .map(|(_, t)| (&t.ctx, vals.get(&t.read_addr).expect("missing value")))
-                .collect();
-            let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
-            app.execute_batch(&items, &mut outs);
-            let n = batch.len() as u64;
-            cluster.work(m, n * app.task_work());
-            cluster.executed(m, n);
-            outcome.executed_per_machine[m] += n;
+        let wb_in: Vec<Vec<(Addr, A::Out)>> = sub.superstep(
+            &mut st,
+            val_in,
+            |_m, s, inbox, acct| {
+                let mut vals: DetMap<Addr, A::Val> = det_map();
+                for (addr, val) in inbox {
+                    vals.insert(addr, val);
+                }
+                let batch = std::mem::take(&mut s.sorted);
+                let items: Vec<(&A::Ctx, &A::Val)> = batch
+                    .iter()
+                    .map(|(_, t)| (&t.ctx, vals.get(&t.read_addr).expect("missing value")))
+                    .collect();
+                let mut outs: Vec<Option<A::Out>> = Vec::with_capacity(items.len());
+                app.execute_batch(&items, &mut outs);
+                debug_assert_eq!(outs.len(), items.len());
+                let n = batch.len() as u64;
+                acct.work(n * app.task_work());
+                acct.executed(n);
+                s.executed += n;
 
-            let mut pool: DetMap<Addr, A::Out> = det_map();
-            for ((origin, t), out) in batch.into_iter().zip(outs) {
-                if let Some(out) = out {
-                    cluster.work(m, 1);
-                    match pool.remove(&t.write_addr) {
-                        Some(acc) => {
-                            pool.insert(t.write_addr, app.combine(acc, out));
-                        }
-                        None => {
-                            pool.insert(t.write_addr, out);
-                        }
+                let mut pool: DetMap<Addr, Option<A::Out>> = det_map();
+                for ((origin, t), out) in batch.into_iter().zip(outs) {
+                    if let Some(out) = out {
+                        acct.work(1);
+                        crate::orchestration::combine_into(app, &mut pool, t.write_addr, out);
                     }
+                    // Pass 5 payload: tasks return to their origin
+                    // machines (the reverse sort restoring input order).
+                    s.returns.push((origin, t));
                 }
-                // Pass 5 payload: tasks return to their origin machines
-                // (the reverse sort restoring input order).
-                return_out[m].push((origin, t));
-            }
-            for (addr, out) in pool {
-                wb_out[m].push((store.owner(addr), (addr, out)));
-            }
-        }
-        let wb_in = cluster.exchange(wb_out, |_| out_words + 1);
-        for (m, inbox) in wb_in.into_iter().enumerate() {
-            let mut merged: DetMap<Addr, A::Out> = det_map();
-            for (addr, out) in inbox {
-                cluster.work(m, 1);
-                match merged.remove(&addr) {
-                    Some(acc) => {
-                        merged.insert(addr, app.combine(acc, out));
-                    }
-                    None => {
-                        merged.insert(addr, out);
-                    }
-                }
-            }
-            let mut addrs: Vec<Addr> = merged.keys().copied().collect();
-            addrs.sort_unstable();
-            for addr in addrs {
-                let out = merged.remove(&addr).unwrap();
-                app.apply(store.get_or_default(addr), out);
-            }
-        }
-        cluster.barrier();
+                pool.into_iter()
+                    .map(|(addr, out)| (owner_of(addr, p), (addr, out.expect("pool slot"))))
+                    .collect()
+            },
+            |_msg: &(Addr, A::Out)| out_words + 1,
+        );
+
+        // Merge + apply write-backs; launch the reverse sort.
+        let ret_in: Vec<Vec<Task<A::Ctx>>> = sub.superstep(
+            &mut st,
+            wb_in,
+            |_m, s, inbox, acct| {
+                crate::orchestration::merge_and_apply(app, inbox, &mut s.shard, acct);
+                std::mem::take(&mut s.returns)
+            },
+            |_msg: &Task<A::Ctx>| sigma + 1,
+        );
 
         // ---- Pass 5: reverse sort (tasks travel home) --------------------
-        let _ = cluster.exchange(return_out, |_| sigma + 1);
+        let _done: Vec<Vec<Nothing>> = sub.superstep(
+            &mut st,
+            ret_in,
+            |_m, _s, _inbox, _acct| Vec::new(),
+            nothing_words,
+        );
 
-        outcome.total_executed = outcome.executed_per_machine.iter().sum();
-        outcome
+        crate::orchestration::finish_stage(
+            store,
+            st.into_iter().map(|s| (s.executed, s.shard)).collect(),
+            submitted,
+            "sorting-mpc",
+        )
     }
 }

@@ -1,0 +1,213 @@
+//! Orchestration apps wired end-to-end through the execution substrates.
+//!
+//! * [`CounterApp`] — the canonical additive toy app (Def. 2 class ii),
+//!   shared by tests and benches.
+//! * [`SsspApp`] + [`sssp_stages`] — single-source shortest paths as a
+//!   sequence of orchestration stages: each frontier round is one stage
+//!   whose tasks are the frontier's out-edges, the lambda is the same
+//!   `min(dv, du + w)` relaxation the Pallas `relax_batch` artifact
+//!   computes, ⊗ is `min` (associative, commutative, idempotent — Def. 2
+//!   class i), and ⊙ relaxes the destination's chunk.  The driver derives
+//!   the next frontier by diffing candidate distances across the stage,
+//!   so the whole algorithm runs unchanged on the simulator or on the
+//!   threaded backend — and must produce exactly the distances that
+//!   [`crate::graph::algorithms::sssp`] computes on the simulated
+//!   TDO-GP engine.
+
+use crate::det::det_set;
+use crate::graph::{Graph, Vid};
+use crate::orchestration::{spread_tasks, OrchApp, Scheduler, Task};
+use crate::store::{Addr, DistStore};
+
+use super::Substrate;
+
+/// Additive counters: chunk = i64, ctx = increment, ⊗ = +, ⊙ = +=.
+pub struct CounterApp;
+
+impl OrchApp for CounterApp {
+    type Ctx = i64;
+    type Val = i64;
+    type Out = i64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        8
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, ctx: &i64, _val: &i64) -> Option<i64> {
+        Some(*ctx)
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+    fn apply(&self, val: &mut i64, out: i64) {
+        *val += out;
+    }
+}
+
+/// A tentative distance chunk.  `Default` is "unreached" (+inf), which is
+/// what makes the store's absent-chunk semantics correct for SSSP.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dist(pub f64);
+
+impl Default for Dist {
+    fn default() -> Self {
+        Dist(f64::INFINITY)
+    }
+}
+
+/// SSSP relaxation as an orchestration app.  A task reads the distance
+/// chunk of edge source `u` (`read_addr = u`), carries the edge weight as
+/// its context, and writes a candidate distance to the chunk of edge
+/// target `v` (`write_addr = v`).
+pub struct SsspApp;
+
+impl OrchApp for SsspApp {
+    /// Edge weight.
+    type Ctx = f32;
+    type Val = Dist;
+    /// Candidate distance for the target vertex.
+    type Out = f64;
+
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        2
+    }
+    fn out_words(&self) -> u64 {
+        2
+    }
+
+    fn execute(&self, w: &f32, du: &Dist) -> Option<f64> {
+        if du.0.is_finite() {
+            Some(du.0 + *w as f64)
+        } else {
+            None // relaxing from an unreached vertex proposes nothing
+        }
+    }
+
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+
+    fn apply(&self, dv: &mut Dist, out: f64) {
+        if out < dv.0 {
+            dv.0 = out;
+        }
+    }
+}
+
+/// Frontier-driven SSSP over orchestration stages (see module docs).
+/// Returns per-vertex distances (`f64::INFINITY` = unreachable).
+pub fn sssp_stages<S: Substrate>(
+    sub: &mut S,
+    sched: &dyn Scheduler<SsspApp, S>,
+    g: &Graph,
+    src: Vid,
+) -> Vec<f64> {
+    let p = sub.machines();
+    let app = SsspApp;
+    let mut store: DistStore<Dist> = DistStore::new(p);
+    store.insert(src as Addr, Dist(0.0));
+    let mut frontier: Vec<Vid> = vec![src];
+    // Bellman-Ford settles within n rounds on non-negative weights; the
+    // frontier normally empties long before that.
+    let mut rounds = 0usize;
+    while !frontier.is_empty() && rounds <= g.n {
+        rounds += 1;
+        let mut tasks: Vec<Task<f32>> = Vec::new();
+        let mut candidates: Vec<Vid> = Vec::new();
+        let mut seen = det_set();
+        for &u in &frontier {
+            for &(v, w) in g.neighbors(u) {
+                tasks.push(Task::new(u as Addr, v as Addr, w));
+                if seen.insert(v) {
+                    candidates.push(v);
+                }
+            }
+        }
+        if tasks.is_empty() {
+            break;
+        }
+        let before: Vec<f64> = candidates
+            .iter()
+            .map(|&v| store.read_copy(v as Addr).0)
+            .collect();
+        sched.run_stage(sub, &app, spread_tasks(tasks, p), &mut store);
+        frontier = candidates
+            .iter()
+            .zip(&before)
+            .filter(|&(&v, &b)| store.read_copy(v as Addr).0 < b)
+            .map(|(&v, _)| v)
+            .collect();
+    }
+    (0..g.n as Vid)
+        .map(|v| store.read_copy(v as Addr).0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::{Cluster, CostModel};
+    use crate::orchestration::tdorch::TdOrch;
+
+    /// Textbook Dijkstra on the raw graph.
+    fn dijkstra_ref(g: &Graph, src: Vid) -> Vec<f64> {
+        let mut dist = vec![f64::INFINITY; g.n];
+        dist[src as usize] = 0.0;
+        let mut done = vec![false; g.n];
+        loop {
+            let mut u = None;
+            let mut best = f64::INFINITY;
+            for v in 0..g.n {
+                if !done[v] && dist[v] < best {
+                    best = dist[v];
+                    u = Some(v as Vid);
+                }
+            }
+            let Some(u) = u else { break };
+            done[u as usize] = true;
+            for &(v, w) in g.neighbors(u) {
+                let cand = dist[u as usize] + w as f64;
+                if cand < dist[v as usize] {
+                    dist[v as usize] = cand;
+                }
+            }
+        }
+        dist
+    }
+
+    #[test]
+    fn sssp_stages_matches_dijkstra_on_simulator() {
+        let g = crate::graph::gen::barabasi_albert(400, 4, 3);
+        let expected = dijkstra_ref(&g, 0);
+        let mut cluster = Cluster::new(4, CostModel::paper_cluster());
+        let got = sssp_stages(&mut cluster, &TdOrch::new(), &g, 0);
+        assert_eq!(got.len(), expected.len());
+        for (v, (a, b)) in got.iter().zip(&expected).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-9 || (a.is_infinite() && b.is_infinite()),
+                "vertex {v}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn unreached_vertices_stay_infinite() {
+        // Two disconnected edges: 0-1 and 2-3.
+        let g = Graph::from_arcs(
+            4,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (2, 3, 1.0), (3, 2, 1.0)],
+        );
+        let mut cluster = Cluster::new(2, CostModel::paper_cluster());
+        let d = sssp_stages(&mut cluster, &TdOrch::new(), &g, 0);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[1], 1.0);
+        assert!(d[2].is_infinite() && d[3].is_infinite());
+    }
+}

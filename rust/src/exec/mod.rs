@@ -1,0 +1,220 @@
+//! `exec` — execution substrates for orchestration stages.
+//!
+//! The paper's schedulers are distributed algorithms over P shared-nothing
+//! machines exchanging messages in barrier-separated supersteps.  This
+//! module abstracts that machine model behind the [`Substrate`] trait so
+//! one scheduler implementation (TD-Orch's four phases, or any of the
+//! §2.3 baselines) runs unchanged on either backend:
+//!
+//! * [`crate::bsp::Cluster`] — the single-threaded *simulator*: runs every
+//!   machine's superstep closure sequentially and charges the BSP
+//!   h-relation cost model.  All paper figures/tables come from this
+//!   backend; its numbers are deterministic and hardware-independent.
+//! * [`ThreadedCluster`] — the *real* backend: one OS worker thread per
+//!   logical machine, each owning its shard of the
+//!   [`crate::store::DistStore`], exchanging payloads over channels and
+//!   synchronizing on a reusable barrier.  Its metrics are measured
+//!   wall-clock and real bytes moved.
+//!
+//! The unit of execution is one **superstep**: every machine consumes its
+//! inbox from the previous superstep, computes on its private state, and
+//! emits `(destination, payload)` pairs; the substrate routes the payloads
+//! and closes the step with a barrier.  Inboxes are delivered in
+//! (sender, emission-index) order on *both* backends, so a scheduler run
+//! is bit-for-bit identical on the simulator and on real threads — which
+//! is what lets `tests/exec_equivalence.rs` cross-validate the two against
+//! [`crate::orchestration::sequential_reference`].
+
+pub mod apps;
+pub mod threaded;
+
+pub use threaded::ThreadedCluster;
+
+use crate::bsp::{Cluster, MachineId};
+
+/// Per-machine, per-superstep accounting handle passed to the superstep
+/// closure.  Work/executed counts feed the substrate's [`crate::Metrics`]
+/// mirror; on the threaded backend they coexist with measured wall-clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MachineAcct {
+    pub work_units: u64,
+    pub executed_tasks: u64,
+}
+
+impl MachineAcct {
+    /// Charge `units` of local work to this machine in this superstep.
+    #[inline]
+    pub fn work(&mut self, units: u64) {
+        self.work_units += units;
+    }
+
+    /// Record that this machine executed `n` tasks (Theorem 1(ii) metric).
+    #[inline]
+    pub fn executed(&mut self, n: u64) {
+        self.executed_tasks += n;
+    }
+}
+
+/// Uninhabited payload type for supersteps that start a stage (no inbox)
+/// or end one (no outbox).
+#[derive(Clone, Copy, Debug)]
+pub enum Nothing {}
+
+/// Empty inboxes for the first superstep of a stage.
+pub fn no_messages(p: usize) -> Vec<Vec<Nothing>> {
+    (0..p).map(|_| Vec::new()).collect()
+}
+
+/// Wire-size function for [`Nothing`] outboxes (never called — the type is
+/// uninhabited — but the substrate API needs one).
+pub fn nothing_words(_: &Nothing) -> u64 {
+    0
+}
+
+/// A shared-nothing execution substrate: P logical machines running
+/// barrier-separated supersteps.  See the module docs for the two
+/// implementations and the determinism contract.
+pub trait Substrate {
+    /// Number of logical machines P.
+    fn machines(&self) -> usize;
+
+    /// Run one superstep.
+    ///
+    /// `state[m]` is machine `m`'s private state (on the threaded backend
+    /// it is handed to machine `m`'s worker thread — shards of the
+    /// `DistStore` travel through here).  `inboxes[m]` are the payloads
+    /// delivered to `m` by the previous superstep.  `f(m, state, inbox,
+    /// acct)` computes machine `m`'s contribution and returns its outbox
+    /// as `(destination, payload)` pairs; `words` gives each payload's
+    /// wire size for communication accounting.  Returns next inboxes,
+    /// delivered in deterministic (sender, emission-index) order.
+    fn superstep<St, Tin, Tout, F, W>(
+        &mut self,
+        state: &mut [St],
+        inboxes: Vec<Vec<Tin>>,
+        f: F,
+        words: W,
+    ) -> Vec<Vec<Tout>>
+    where
+        St: Send,
+        Tin: Send,
+        Tout: Send,
+        F: Fn(MachineId, &mut St, Vec<Tin>, &mut MachineAcct) -> Vec<(MachineId, Tout)> + Sync,
+        W: Fn(&Tout) -> u64 + Sync;
+}
+
+/// The simulator backend: machines run sequentially on the caller thread;
+/// the superstep is charged with the BSP cost model at the closing
+/// barrier, exactly like the pre-existing `Cluster::exchange` path.
+impl Substrate for Cluster {
+    fn machines(&self) -> usize {
+        self.p
+    }
+
+    fn superstep<St, Tin, Tout, F, W>(
+        &mut self,
+        state: &mut [St],
+        inboxes: Vec<Vec<Tin>>,
+        f: F,
+        words: W,
+    ) -> Vec<Vec<Tout>>
+    where
+        St: Send,
+        Tin: Send,
+        Tout: Send,
+        F: Fn(MachineId, &mut St, Vec<Tin>, &mut MachineAcct) -> Vec<(MachineId, Tout)> + Sync,
+        W: Fn(&Tout) -> u64 + Sync,
+    {
+        let p = self.p;
+        assert_eq!(state.len(), p, "state must have one entry per machine");
+        assert_eq!(inboxes.len(), p, "inboxes must have one entry per machine");
+        let mut next: Vec<Vec<Tout>> = (0..p).map(|_| Vec::new()).collect();
+        for (m, (st, inbox)) in state.iter_mut().zip(inboxes).enumerate() {
+            let mut acct = MachineAcct::default();
+            let outbox = f(m, st, inbox, &mut acct);
+            if acct.work_units > 0 {
+                self.work(m, acct.work_units);
+            }
+            if acct.executed_tasks > 0 {
+                self.executed(m, acct.executed_tasks);
+            }
+            for (to, payload) in outbox {
+                debug_assert!(to < p, "destination {to} out of range");
+                self.account_msg(m, to, words(&payload));
+                next[to].push(payload);
+            }
+        }
+        self.barrier();
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::CostModel;
+
+    fn unit_cost() -> CostModel {
+        CostModel {
+            g: 1.0,
+            l: 0.0,
+            work_unit: 1.0,
+            per_msg: 0.0,
+            numa: crate::bsp::NumaTopo::Single,
+        }
+    }
+
+    #[test]
+    fn cluster_superstep_routes_and_accounts() {
+        let mut c = Cluster::new(3, unit_cost());
+        let mut state = vec![0u64; 3];
+        // Each machine sends its id+10 to machine (m+1) % 3 and charges
+        // 2 units of work.
+        let inboxes = c.superstep(
+            &mut state,
+            no_messages(3),
+            |m, st, _in, acct| {
+                *st += 1;
+                acct.work(2);
+                vec![((m + 1) % 3, (m + 10) as u32)]
+            },
+            |_| 4,
+        );
+        assert_eq!(inboxes[0], vec![12]);
+        assert_eq!(inboxes[1], vec![10]);
+        assert_eq!(inboxes[2], vec![11]);
+        assert_eq!(state, vec![1, 1, 1]);
+        assert_eq!(c.metrics.total_words, 12);
+        assert_eq!(c.metrics.work_by_machine, vec![2, 2, 2]);
+        assert_eq!(c.metrics.supersteps, 1);
+    }
+
+    #[test]
+    fn cluster_superstep_delivery_order_is_sender_then_emission() {
+        let mut c = Cluster::new(4, unit_cost());
+        let mut state = vec![(); 4];
+        let inboxes = c.superstep(
+            &mut state,
+            no_messages(4),
+            |m, _st, _in, _acct| vec![(0, (m, 0usize)), (0, (m, 1usize))],
+            |_| 1,
+        );
+        let expect: Vec<(usize, usize)> =
+            (0..4).flat_map(|s| [(s, 0), (s, 1)]).collect();
+        assert_eq!(inboxes[0], expect);
+    }
+
+    #[test]
+    fn empty_superstep_charges_nothing() {
+        let mut c = Cluster::new(2, unit_cost());
+        let mut state = vec![(); 2];
+        let _: Vec<Vec<Nothing>> = c.superstep(
+            &mut state,
+            no_messages(2),
+            |_m, _st, _in, _acct| Vec::new(),
+            nothing_words,
+        );
+        assert_eq!(c.metrics.supersteps, 0);
+        assert_eq!(c.metrics.sim_seconds(), 0.0);
+    }
+}

@@ -12,7 +12,7 @@
 //! arrays, executed by PJRT, and scattered back — the three-layer hot
 //! path with Python nowhere in sight.
 
-use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::orchestration::OrchApp;
 use crate::rng::hash64;
@@ -81,25 +81,29 @@ pub struct KvWriteSet {
 }
 
 /// The KV application: implements the Fig 1 closure triple.
+///
+/// `Sync` by construction (atomic counter, shared engine reference): the
+/// threaded execution substrate calls [`OrchApp::execute_batch`] from P
+/// worker threads concurrently.
 pub struct KvApp<'e> {
     pub buckets: u64,
     engine: Option<&'e Engine>,
     /// Count of lambda invocations served by the XLA artifact.
-    xla_served: RefCell<u64>,
+    xla_served: AtomicU64,
 }
 
 impl<'e> KvApp<'e> {
     pub fn new(buckets: u64) -> Self {
-        KvApp { buckets, engine: None, xla_served: RefCell::new(0) }
+        KvApp { buckets, engine: None, xla_served: AtomicU64::new(0) }
     }
 
     /// Execute Phase-3 lambdas on the AOT-compiled Pallas kernel.
     pub fn with_engine(buckets: u64, engine: &'e Engine) -> Self {
-        KvApp { buckets, engine: Some(engine), xla_served: RefCell::new(0) }
+        KvApp { buckets, engine: Some(engine), xla_served: AtomicU64::new(0) }
     }
 
     pub fn xla_served(&self) -> u64 {
-        *self.xla_served.borrow()
+        self.xla_served.load(Ordering::Relaxed)
     }
 
     fn lookup(bucket: &Bucket, key: u64) -> f32 {
@@ -198,7 +202,7 @@ impl OrchApp for KvApp<'_> {
         }
         match engine.ycsb_batch(&vals, &muls, &adds) {
             Ok(outs) => {
-                *self.xla_served.borrow_mut() += items.len() as u64;
+                self.xla_served.fetch_add(items.len() as u64, Ordering::Relaxed);
                 for ((op, _), new_val) in items.iter().zip(outs) {
                     sink.push(Self::out_for(op, new_val));
                 }
@@ -220,6 +224,21 @@ pub fn preload(store: &mut DistStore<Bucket>, buckets: u64, n_keys: u64) {
         let addr = hash64(key) % buckets;
         store.get_or_default(addr).push((key, key as f32));
     }
+}
+
+/// Canonical normalization for comparing bucket stores across schedulers
+/// and substrates: bucket vectors are insertion-ordered (different
+/// schedulers insert new keys in different orders), so sort each bucket
+/// by key and compare f32 values bit-exactly.
+pub fn normalized_snapshot(store: &DistStore<Bucket>) -> Vec<(Addr, Vec<(u64, u32)>)> {
+    store
+        .snapshot()
+        .into_iter()
+        .map(|(a, mut b)| {
+            b.sort_by_key(|(k, _)| *k);
+            (a, b.into_iter().map(|(k, v)| (k, v.to_bits())).collect())
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -9,17 +9,25 @@
 //! executable BSP cluster model (§2.2) with full per-machine communication
 //! and computation accounting.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md and rust/README.md):
 //! * L3 (this crate): coordinator, schedulers, graph engine, metrics.
 //! * L2/L1 (python/, build-time): JAX models + Pallas kernels, AOT-lowered
 //!   to `artifacts/*.hlo.txt`.
 //! * [`runtime`]: loads the artifacts via PJRT and executes them from the
 //!   Phase-3 hot path — Python is never on the request path.
+//!
+//! Execution substrates ([`exec`]): every scheduler is written against
+//! the [`exec::Substrate`] superstep API and runs unchanged on either the
+//! BSP cost-model *simulator* ([`Cluster`]) or the *real* shared-nothing
+//! threaded backend ([`exec::ThreadedCluster`]) — one OS worker thread
+//! per logical machine, channels, a reusable barrier, and measured
+//! per-machine wall-clock.
 
 pub mod baselines;
 pub mod kvstore;
 pub mod bsp;
 pub mod det;
+pub mod exec;
 pub mod forest;
 pub mod graph;
 pub mod metatask;
@@ -32,6 +40,7 @@ pub mod store;
 pub mod workload;
 
 pub use bsp::{Cluster, CostModel, MachineId, NumaTopo};
+pub use exec::{Substrate, ThreadedCluster};
 pub use metrics::{Breakdown, Metrics, Report};
 pub use orchestration::{OrchApp, Scheduler, StageOutcome, Task};
 pub use store::{Addr, DistStore};

@@ -1,7 +1,8 @@
 //! `repro` — the TD-Orch / TDO-GP reproduction CLI (L3 leader entrypoint).
 //!
 //! Each subcommand regenerates one table or figure from the paper's
-//! evaluation on the simulated BSP cluster (see DESIGN.md §4):
+//! evaluation on the simulated BSP cluster, or drives the real threaded
+//! substrate (see DESIGN.md §4 and rust/README.md):
 //!
 //! ```text
 //! repro fig5    [--per-machine N] [--seed S]   YCSB weak scaling (§4)
@@ -13,9 +14,17 @@
 //! repro table4  [--seed S]                     technique ablation (§6.4)
 //! repro table5  [--seed S]                     single-NUMA PR (§6.5)
 //! repro table6  [--seed S]                     big NUMA server (§6.5)
-//! repro all     [--seed S]                     everything above
+//! repro exec    [--threads P | --machines P] [--per-machine N]
+//!               [--gamma G] [--seed S]         REAL threaded substrate
+//! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
+//!
+//! `repro exec` runs TD-Orch and the direct-push/direct-pull baselines on
+//! real OS worker threads (one per logical machine — the shared-nothing
+//! model ties the two counts together, so `--threads` and `--machines`
+//! are synonyms), validates every run against the sequential oracle, and
+//! prints measured per-machine wall-clock.
 //!
 //! (CLI is hand-rolled: the offline build has no clap — see Cargo.toml.)
 
@@ -26,6 +35,22 @@ struct Args {
     seed: u64,
     per_machine: usize,
     edges: usize,
+    gamma: f64,
+    threads: Option<usize>,
+    machines: Option<usize>,
+}
+
+/// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
+/// Exits with a usage error when the value is missing or malformed.
+fn parse_flag<T: std::str::FromStr>(argv: &[String], i: &mut usize, name: &str) -> T {
+    *i += 1;
+    match argv.get(*i).and_then(|s| s.parse::<T>().ok()) {
+        Some(v) => v,
+        None => {
+            eprintln!("{name} needs a {} value", std::any::type_name::<T>());
+            std::process::exit(2);
+        }
+    }
 }
 
 fn parse_args() -> Args {
@@ -34,32 +59,20 @@ fn parse_args() -> Args {
         seed: 42,
         per_machine: 20_000,
         edges: 50_000,
+        gamma: 1.0,
+        threads: None,
+        machines: None,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
-            "--seed" => {
-                i += 1;
-                args.seed = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
-                    eprintln!("--seed needs a u64");
-                    std::process::exit(2);
-                });
-            }
-            "--per-machine" => {
-                i += 1;
-                args.per_machine = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
-                    eprintln!("--per-machine needs a usize");
-                    std::process::exit(2);
-                });
-            }
-            "--edges" => {
-                i += 1;
-                args.edges = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
-                    eprintln!("--edges needs a usize");
-                    std::process::exit(2);
-                });
-            }
+            "--seed" => args.seed = parse_flag(&argv, &mut i, "--seed"),
+            "--per-machine" => args.per_machine = parse_flag(&argv, &mut i, "--per-machine"),
+            "--edges" => args.edges = parse_flag(&argv, &mut i, "--edges"),
+            "--gamma" => args.gamma = parse_flag(&argv, &mut i, "--gamma"),
+            "--threads" => args.threads = Some(parse_flag(&argv, &mut i, "--threads")),
+            "--machines" => args.machines = Some(parse_flag(&argv, &mut i, "--machines")),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -165,6 +178,30 @@ fn main() {
         "table6" => {
             repro::graphs::table6(args.seed);
         }
+        "exec" => {
+            let p = match (args.threads, args.machines) {
+                (Some(t), Some(m)) if t != m => {
+                    eprintln!(
+                        "--threads {t} and --machines {m} disagree: the shared-nothing \
+                         substrate runs exactly one worker thread per logical machine"
+                    );
+                    std::process::exit(2);
+                }
+                (t, m) => t.or(m).unwrap_or(8),
+            };
+            if p < 1 {
+                eprintln!("--threads/--machines must be >= 1");
+                std::process::exit(2);
+            }
+            if args.per_machine < 1 {
+                eprintln!("--per-machine must be >= 1");
+                std::process::exit(2);
+            }
+            let summary = repro::exec::run_exec(p, args.per_machine, args.gamma, args.seed);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
         "all" => {
             repro::kv::fig5(args.per_machine, args.seed);
             repro::graphs::table2(args.seed);
@@ -178,7 +215,10 @@ fn main() {
         }
         "smoke" => smoke(),
         "" => {
-            eprintln!("usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|all|smoke> [--seed S] [--per-machine N] [--edges N]");
+            eprintln!(
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|all|smoke> \
+                 [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P]"
+            );
             std::process::exit(2);
         }
         other => {

@@ -13,7 +13,11 @@
 
 pub mod tdorch;
 
+use std::collections::HashMap;
+
 use crate::bsp::Cluster;
+use crate::det::{det_map, DetMap};
+use crate::exec::{MachineAcct, Substrate};
 use crate::store::{Addr, DistStore};
 
 /// One lambda task: context plus input/output pointers (Fig 1 with
@@ -96,12 +100,17 @@ pub struct StageOutcome {
 
 /// An orchestration scheduler: the paper's TD-Orch or one of the §2.3
 /// baselines.  `tasks[m]` is the batch initially resident on machine `m`.
-pub trait Scheduler<A: OrchApp> {
+///
+/// Schedulers are written against the [`Substrate`] superstep API, so one
+/// implementation runs unchanged on the BSP simulator (`S =`
+/// [`Cluster`], the default — all existing call sites) or on the real
+/// threaded backend (`S =` [`crate::exec::ThreadedCluster`]).
+pub trait Scheduler<A: OrchApp, S: Substrate = Cluster> {
     fn name(&self) -> &'static str;
 
     fn run_stage(
         &self,
-        cluster: &mut Cluster,
+        sub: &mut S,
         app: &A,
         tasks: Vec<Vec<Task<A::Ctx>>>,
         store: &mut DistStore<A::Val>,
@@ -140,6 +149,110 @@ pub fn sequential_reference<A: OrchApp>(
         let out = pending.remove(&addr).unwrap();
         app.apply(store.get_or_default(addr), out);
     }
+}
+
+/// Per-machine stage scaffold shared by the simple (non-tree)
+/// schedulers: the machine's initial task batch, its store shard, and
+/// its executed-task count.
+pub(crate) struct ShardState<A: OrchApp> {
+    pub batch: Vec<Task<A::Ctx>>,
+    pub shard: HashMap<Addr, A::Val>,
+    pub executed: u64,
+}
+
+/// Stage-contract checks shared by every scheduler: the task batches and
+/// the store partitioning must both match the substrate's P.  Returns
+/// (P, submitted task count).
+pub(crate) fn stage_contract<C, V: Clone + Default>(
+    p: usize,
+    tasks: &[Vec<Task<C>>],
+    store: &DistStore<V>,
+) -> (usize, u64) {
+    assert_eq!(tasks.len(), p, "tasks must be pre-spread over P machines");
+    assert_eq!(store.p(), p, "store partitioning must match the substrate");
+    (p, task_count(tasks))
+}
+
+/// Stage prologue for [`ShardState`]-based schedulers: check the
+/// contract and hand each machine its shard plus its batch.
+pub(crate) fn start_stage<A: OrchApp>(
+    p: usize,
+    tasks: Vec<Vec<Task<A::Ctx>>>,
+    store: &mut DistStore<A::Val>,
+) -> (u64, Vec<ShardState<A>>) {
+    let (_, submitted) = stage_contract(p, &tasks, store);
+    let st = tasks
+        .into_iter()
+        .zip(store.take_maps())
+        .map(|(batch, shard)| ShardState { batch, shard, executed: 0 })
+        .collect();
+    (submitted, st)
+}
+
+/// ⊗-accumulate `out` into `pool[addr]` with a single hash lookup (the
+/// Option slot allows in-place combine).  The shared accumulation idiom
+/// of every scheduler's write-back pool.
+pub(crate) fn combine_into<A: OrchApp>(
+    app: &A,
+    pool: &mut DetMap<Addr, Option<A::Out>>,
+    addr: Addr,
+    out: A::Out,
+) {
+    let slot = pool.entry(addr).or_insert(None);
+    *slot = Some(match slot.take() {
+        Some(acc) => app.combine(acc, out),
+        None => out,
+    });
+}
+
+/// Owner-side write-back epilogue shared by every scheduler: ⊗-merge an
+/// inbox of (addr, out) pairs (in arrival order, one hash op per item)
+/// and ⊙-apply the merged results to the local shard in deterministic
+/// address order — exactly one apply per chunk, as in
+/// [`sequential_reference`].
+pub(crate) fn merge_and_apply<A: OrchApp>(
+    app: &A,
+    inbox: Vec<(Addr, A::Out)>,
+    shard: &mut HashMap<Addr, A::Val>,
+    acct: &mut MachineAcct,
+) {
+    let mut merged: DetMap<Addr, Option<A::Out>> = det_map();
+    for (addr, out) in inbox {
+        acct.work(1);
+        combine_into(app, &mut merged, addr, out);
+    }
+    let mut pairs: Vec<(Addr, A::Out)> = merged
+        .drain()
+        .map(|(a, o)| (a, o.expect("merged slot")))
+        .collect();
+    pairs.sort_unstable_by_key(|(a, _)| *a);
+    for (addr, out) in pairs {
+        app.apply(shard.entry(addr).or_default(), out);
+    }
+}
+
+/// Stage epilogue shared by every scheduler: reassemble the store from
+/// the per-machine (executed count, shard) pairs and enforce the
+/// submitted == executed invariant.
+pub(crate) fn finish_stage<V: Clone + Default>(
+    store: &mut DistStore<V>,
+    parts: Vec<(u64, HashMap<Addr, V>)>,
+    submitted: u64,
+    scheduler: &str,
+) -> StageOutcome {
+    let mut executed_per_machine = Vec::with_capacity(parts.len());
+    let mut maps = Vec::with_capacity(parts.len());
+    for (executed, shard) in parts {
+        executed_per_machine.push(executed);
+        maps.push(shard);
+    }
+    store.put_maps(maps);
+    let total_executed: u64 = executed_per_machine.iter().sum();
+    debug_assert_eq!(
+        total_executed, submitted,
+        "{scheduler} executed {total_executed} of {submitted} submitted tasks"
+    );
+    StageOutcome { executed_per_machine, total_executed }
 }
 
 /// Evenly spread `n` tasks over `p` machines (the paper's initialization:

@@ -19,13 +19,26 @@
 //!
 //! Phase 4 — *write-backs*: results aimed at the pulled chunk merge (⊗)
 //! up the reverse meta-task tree; results aimed at other chunks are
-//! pre-combined per machine and sent to their owners, which apply (⊙).
+//! pre-combined per machine and sent to their owners.  At each owner the
+//! tree-merged result and the direct write-backs for a chunk ⊗-combine
+//! into one value that is applied (⊙) exactly once.
+//!
+//! The whole stage is expressed as [`Substrate::superstep`] rounds over
+//! per-machine state ([`MState`]): each machine's store shard, slot
+//! store, climbing meta-task sets, pull-tree nodes and write-back pool
+//! are private to that machine, so the same code runs sequentially on the
+//! BSP simulator and in parallel (one worker thread per machine) on
+//! [`crate::exec::ThreadedCluster`] — shared-nothing either way.
 
-use crate::bsp::{Cluster, MachineId};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::bsp::MachineId;
 use crate::det::{det_map, DetMap};
+use crate::exec::{no_messages, nothing_words, MachineAcct, Nothing, Substrate};
 use crate::forest::Forest;
 use crate::metatask::{MetaTask, MetaTaskSet, SlotStore};
-use crate::store::{Addr, DistStore};
+use crate::store::{owner_of, Addr, DistStore};
 
 use super::{OrchApp, Scheduler, StageOutcome, Task};
 
@@ -102,350 +115,61 @@ struct AckMsg<O> {
     acc: Option<O>,
 }
 
-impl<A: OrchApp> Scheduler<A> for TdOrch {
-    fn name(&self) -> &'static str {
-        "td-orch"
-    }
+/// Machine-private stage state: everything one logical machine owns while
+/// a TD-Orch stage runs, including its shard of the distributed store.
+struct MState<A: OrchApp> {
+    /// This machine's initial task batch (consumed by Phase 1).
+    batch: Vec<Task<A::Ctx>>,
+    /// This machine's shard of the `DistStore`.
+    shard: HashMap<Addr, A::Val>,
+    /// Parked meta-task arrays (transit-machine storage).
+    slots: SlotStore<Task<A::Ctx>>,
+    /// Meta-task sets climbing the forest, keyed by (addr, node index).
+    holding: DetMap<(Addr, u64), MetaTaskSet<Task<A::Ctx>>>,
+    /// Fully-arrived sets at the owner (level 0).
+    roots: DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>,
+    /// Pull-tree bookkeeping (one node per expanded slot / root).
+    nodes: Vec<PullNode<A::Out>>,
+    /// Direct write-back pool: write_addr -> merged out.  Option-wrapped
+    /// values allow in-place ⊗ with one hash lookup.
+    wb: DetMap<Addr, Option<A::Out>>,
+    /// Tasks this machine executed (Theorem 1(ii) load-balance object).
+    executed: u64,
+}
 
-    fn run_stage(
-        &self,
-        cluster: &mut Cluster,
-        app: &A,
-        tasks: Vec<Vec<Task<A::Ctx>>>,
-        store: &mut DistStore<A::Val>,
-    ) -> StageOutcome {
-        let p = cluster.p;
-        let forest = Forest::new(p, self.fanout.unwrap_or_else(|| Forest::default_fanout(p)));
-        let c = self.effective_c(app);
-        let sigma = app.sigma();
-        let chunk_words = app.chunk_words();
-        let out_words = app.out_words();
-
-        let mut outcome = StageOutcome {
-            executed_per_machine: vec![0; p],
-            total_executed: 0,
-        };
-
-        // Per-machine parked-context storage (transit machines).
-        let mut slots: Vec<SlotStore<Task<A::Ctx>>> = (0..p).map(|_| SlotStore::new()).collect();
-
-        // ---------------- Phase 1: contention detection ----------------
-        // holdings[m]: (addr, node_idx) -> meta-task set climbing the
-        // tree, currently hosted on machine m.  root_sets[m]: fully
-        // arrived sets at the owner (level 0).
-        let mut holdings: Vec<DetMap<(Addr, u64), MetaTaskSet<Task<A::Ctx>>>> =
-            (0..p).map(|_| det_map()).collect();
-        let mut root_sets: Vec<DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>> =
-            (0..p).map(|_| det_map()).collect();
-        // Direct-shortcut sends, folded into the first exchange round.
-        let mut direct_out: Vec<Vec<(MachineId, (Addr, MetaTaskSet<Task<A::Ctx>>))>> =
-            (0..p).map(|_| Vec::new()).collect();
-
-        for (m, batch) in tasks.into_iter().enumerate() {
-            cluster.work(m, batch.len() as u64); // local grouping sweep
-            // Pre-sized map: grouping was rehash-bound before (Perf pass:
-            // RawTable::reserve_rehash was ~11% of stage wall time).
-            let mut groups: DetMap<Addr, Vec<Task<A::Ctx>>> =
-                DetMap::with_capacity_and_hasher(batch.len(), Default::default());
-            for t in batch {
-                groups.entry(t.read_addr).or_default().push(t);
-            }
-            let (_, leaf_idx) = forest.leaf(m);
-            for (addr, ctxs) in groups {
-                let root = store.owner(addr);
-                if self.direct_shortcut && ctxs.len() <= c {
-                    // Low local contention: push contexts straight to the
-                    // owner — "no hops on a communication tree".
-                    direct_out[m].push((root, (addr, MetaTaskSet::from_ctxs(ctxs))));
-                } else {
-                    let mut set = MetaTaskSet::from_ctxs(ctxs);
-                    let touched = set.normalize(c, &mut slots[m], m);
-                    cluster.work(m, touched);
-                    holdings[m].insert((addr, leaf_idx), set);
-                }
-            }
+/// Merge a set arriving at its owner (level 0) into the root sets.
+fn merge_at_root<A: OrchApp>(
+    roots: &mut DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>,
+    slots: &mut SlotStore<Task<A::Ctx>>,
+    m: MachineId,
+    addr: Addr,
+    set: MetaTaskSet<Task<A::Ctx>>,
+    c: usize,
+    acct: &mut MachineAcct,
+) {
+    match roots.entry(addr) {
+        Entry::Occupied(mut e) => {
+            let touched = e.get_mut().merge(set, c, slots, m);
+            acct.work(touched);
         }
-        cluster.barrier();
-
-        // Helper to merge a set arriving at the owner (level 0).
-        let merge_at_root =
-            |cluster: &mut Cluster,
-             root_sets: &mut Vec<DetMap<Addr, MetaTaskSet<Task<A::Ctx>>>>,
-             slots: &mut Vec<SlotStore<Task<A::Ctx>>>,
-             m: MachineId,
-             addr: Addr,
-             set: MetaTaskSet<Task<A::Ctx>>| {
-                match root_sets[m].entry(addr) {
-                    std::collections::hash_map::Entry::Occupied(mut e) => {
-                        let touched = e.get_mut().merge(set, c, &mut slots[m], m);
-                        cluster.work(m, touched);
-                    }
-                    std::collections::hash_map::Entry::Vacant(e) => {
-                        let mut set = set;
-                        let touched = set.normalize(c, &mut slots[m], m);
-                        cluster.work(m, touched);
-                        e.insert(set);
-                    }
-                }
-            };
-
-        // Deliver the direct-shortcut contexts (one superstep).
-        if direct_out.iter().any(|o| !o.is_empty()) {
-            let inboxes = cluster.exchange(direct_out, |(_, set)| set.words(sigma));
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                for (addr, set) in inbox {
-                    merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
-                }
-            }
+        Entry::Vacant(e) => {
+            let mut set = set;
+            let touched = set.normalize(c, slots, m);
+            acct.work(touched);
+            e.insert(set);
         }
-
-        // Climb the forest: entries at level l move to their parent node
-        // at level l-1; equal (addr, parent_idx) sets merge on arrival.
-        for level in (1..=forest.height()).rev() {
-            let mut outboxes: Vec<Vec<(MachineId, (Addr, u64, MetaTaskSet<Task<A::Ctx>>))>> =
-                (0..p).map(|_| Vec::new()).collect();
-            for (m, holding) in holdings.iter_mut().enumerate() {
-                for ((addr, idx), set) in holding.drain() {
-                    let root = store.owner(addr);
-                    let (pl, pidx) = forest.parent(level, idx);
-                    let dest = forest.machine_of(root, pl, pidx);
-                    outboxes[m].push((dest, (addr, pidx, set)));
-                }
-            }
-            let inboxes = cluster.exchange(outboxes, |(_, _, set)| set.words(sigma));
-            let at_root = level == 1;
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                for (addr, pidx, set) in inbox {
-                    if at_root {
-                        merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
-                        continue;
-                    }
-                    match holdings[m].entry((addr, pidx)) {
-                        std::collections::hash_map::Entry::Occupied(mut e) => {
-                            let touched = e.get_mut().merge(set, c, &mut slots[m], m);
-                            cluster.work(m, touched);
-                        }
-                        std::collections::hash_map::Entry::Vacant(e) => {
-                            let mut set = set;
-                            let touched = set.normalize(c, &mut slots[m], m);
-                            cluster.work(m, touched);
-                            e.insert(set);
-                        }
-                    }
-                }
-            }
-        }
-        // P == 1 (height 0): tree entries never moved; they are already at
-        // their owner.
-        if forest.height() == 0 {
-            for m in 0..p {
-                let holding = std::mem::take(&mut holdings[m]);
-                for ((addr, _), set) in holding {
-                    merge_at_root(cluster, &mut root_sets, &mut slots, m, addr, set);
-                }
-            }
-        }
-
-        // ------------- Phase 2+3: co-location and execution -------------
-        // Pull-tree bookkeeping (one node per expanded slot / root).
-        let mut nodes: Vec<Vec<PullNode<A::Out>>> = (0..p).map(|_| Vec::new()).collect();
-        // Direct write-back pool: (machine) -> write_addr -> merged out.
-        // Option-wrapped values allow in-place ⊗ with one hash lookup.
-        let mut wb: Vec<DetMap<Addr, Option<A::Out>>> = (0..p).map(|_| det_map()).collect();
-        // Pull messages produced this round, to be exchanged.
-        let mut pull_out: Vec<Vec<(MachineId, PullMsg<A::Val>)>> =
-            (0..p).map(|_| Vec::new()).collect();
-
-        // Root processing: for every final meta-task set, execute local
-        // contexts; spawn pull trees for pointer entries.
-        for m in 0..p {
-            let holding = std::mem::take(&mut root_sets[m]);
-            // (val, tasks, tree_node): batched after collection.
-            let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> = Vec::new();
-            for (addr, set) in holding {
-                debug_assert_eq!(store.owner(addr), m, "final set not at owner");
-                let val = store.read_copy(addr);
-                let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
-                let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
-                for lvl in set.levels {
-                    for mt in lvl {
-                        match mt {
-                            MetaTask::Ctx(t) => ctxs.push(t),
-                            MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
-                        }
-                    }
-                }
-                let tree_node = if ptrs.is_empty() {
-                    None // pure push case: executes here, applies here
-                } else {
-                    let id = nodes[m].len() as u32;
-                    nodes[m].push(PullNode {
-                        addr,
-                        parent: None,
-                        expected: ptrs.len() as u32,
-                        received: 0,
-                        acc: None,
-                        sent: false,
-                    });
-                    for (holder, slot) in ptrs {
-                        pull_out[m].push((
-                            holder,
-                            PullMsg { addr, val: val.clone(), slot, parent: (m, id) },
-                        ));
-                    }
-                    Some(id)
-                };
-                if !ctxs.is_empty() {
-                    exec_groups.push((val, ctxs, tree_node));
-                }
-            }
-            execute_groups(cluster, app, m, exec_groups, &mut nodes, &mut wb, &mut outcome);
-        }
-        cluster.barrier();
-
-        // Pull rounds: broadcast values down the meta-task trees.
-        loop {
-            let any = pull_out.iter().any(|o| !o.is_empty());
-            if !any {
-                break;
-            }
-            let outboxes = std::mem::replace(
-                &mut pull_out,
-                (0..p).map(|_| Vec::new()).collect(),
-            );
-            let inboxes =
-                cluster.exchange(outboxes, |_msg| chunk_words + PULL_HDR_WORDS);
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> = Vec::new();
-                for PullMsg { addr, val, slot, parent } in inbox {
-                    // Slot expansion is a single pass that the execution
-                    // batch below already pays for per context; charge
-                    // only the pointer handling here.
-                    let content = slots[m].take(slot);
-                    cluster.work(m, 1);
-                    let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
-                    let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
-                    for mt in content {
-                        match mt {
-                            MetaTask::Ctx(t) => ctxs.push(t),
-                            MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
-                        }
-                    }
-                    let id = nodes[m].len() as u32;
-                    nodes[m].push(PullNode {
-                        addr,
-                        parent: Some(parent),
-                        expected: ptrs.len() as u32,
-                        received: 0,
-                        acc: None,
-                        sent: false,
-                    });
-                    for (holder, pslot) in ptrs {
-                        pull_out[m].push((
-                            holder,
-                            PullMsg { addr, val: val.clone(), slot: pslot, parent: (m, id) },
-                        ));
-                    }
-                    if !ctxs.is_empty() {
-                        exec_groups.push((val, ctxs, Some(id)));
-                    }
-                }
-                execute_groups(cluster, app, m, exec_groups, &mut nodes, &mut wb, &mut outcome);
-            }
-        }
-
-        // ------------- Phase 4a: reverse-tree write-back merge -----------
-        loop {
-            let mut ack_out: Vec<Vec<(MachineId, AckMsg<A::Out>)>> =
-                (0..p).map(|_| Vec::new()).collect();
-            let mut sent_any = false;
-            for m in 0..p {
-                for node in nodes[m].iter_mut() {
-                    if !node.sent && node.received == node.expected {
-                        node.sent = true;
-                        sent_any = true;
-                        match node.parent {
-                            Some((pm, pid)) => {
-                                ack_out[m].push((pm, AckMsg { node: pid, acc: node.acc.take() }));
-                            }
-                            None => {
-                                // Root: apply the fully merged write-back.
-                                if let Some(out) = node.acc.take() {
-                                    app.apply(store.get_or_default(node.addr), out);
-                                    cluster.work(m, 1);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            if !sent_any {
-                break;
-            }
-            let inboxes = cluster.exchange(ack_out, |_| out_words + ACK_HDR_WORDS);
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                for AckMsg { node, acc } in inbox {
-                    let n = &mut nodes[m][node as usize];
-                    n.received += 1;
-                    if let Some(v) = acc {
-                        n.acc = Some(match n.acc.take() {
-                            Some(a) => app.combine(a, v),
-                            None => v,
-                        });
-                        cluster.work(m, 1);
-                    }
-                }
-            }
-        }
-
-        // ------------- Phase 4b: direct write-backs ---------------------
-        let mut wb_out: Vec<Vec<(MachineId, (Addr, A::Out))>> =
-            (0..p).map(|_| Vec::new()).collect();
-        for (m, pool) in wb.iter_mut().enumerate() {
-            for (addr, out) in pool.drain() {
-                wb_out[m].push((store.owner(addr), (addr, out.expect("wb slot"))));
-            }
-        }
-        let inboxes = cluster.exchange(wb_out, |_| out_words + WB_HDR_WORDS);
-        for (m, inbox) in inboxes.into_iter().enumerate() {
-            let mut merged: DetMap<Addr, Option<A::Out>> = det_map();
-            for (addr, out) in inbox {
-                cluster.work(m, 1);
-                let slot = merged.entry(addr).or_insert(None);
-                *slot = Some(match slot.take() {
-                    Some(acc) => app.combine(acc, out),
-                    None => out,
-                });
-            }
-            // Drain once + sort (one hash op per address instead of two).
-            let mut pairs: Vec<(Addr, A::Out)> = merged
-                .drain()
-                .map(|(a, o)| (a, o.expect("merged slot")))
-                .collect();
-            pairs.sort_unstable_by_key(|(a, _)| *a);
-            for (addr, out) in pairs {
-                app.apply(store.get_or_default(addr), out);
-            }
-        }
-
-        outcome.total_executed = outcome.executed_per_machine.iter().sum();
-        outcome
     }
 }
 
 /// Phase-3 helper: batch-execute groups of co-located (value, tasks) on
-/// machine `m`, then route each write-back — into the group's pull-tree
+/// one machine, then route each write-back — into the group's pull-tree
 /// node (reverse-tree path) when it targets the pulled chunk, else into
 /// the direct write-back pool.
-#[allow(clippy::too_many_arguments)]
 fn execute_groups<A: OrchApp>(
-    cluster: &mut Cluster,
     app: &A,
-    m: MachineId,
     groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)>,
-    nodes: &mut [Vec<PullNode<A::Out>>],
-    wb: &mut [DetMap<Addr, Option<A::Out>>],
-    outcome: &mut StageOutcome,
+    s: &mut MState<A>,
+    acct: &mut MachineAcct,
 ) {
     if groups.is_empty() {
         return;
@@ -459,9 +183,9 @@ fn execute_groups<A: OrchApp>(
     app.execute_batch(&items, &mut outs);
     debug_assert_eq!(outs.len(), items.len());
     let n_tasks = items.len() as u64;
-    cluster.work(m, n_tasks * app.task_work());
-    cluster.executed(m, n_tasks);
-    outcome.executed_per_machine[m] += n_tasks;
+    acct.work(n_tasks * app.task_work());
+    acct.executed(n_tasks);
+    s.executed += n_tasks;
 
     let mut it = outs.into_iter();
     for (_, tasks, tree_node) in groups {
@@ -469,27 +193,369 @@ fn execute_groups<A: OrchApp>(
             let Some(out) = it.next().expect("execute_batch arity") else {
                 continue;
             };
-            let group_addr = tree_node.map(|id| nodes[m][id as usize].addr);
+            let group_addr = tree_node.map(|id| s.nodes[id as usize].addr);
             match tree_node {
                 Some(id) if group_addr == Some(t.write_addr) => {
-                    let node = &mut nodes[m][id as usize];
+                    let node = &mut s.nodes[id as usize];
                     node.acc = Some(match node.acc.take() {
                         Some(a) => app.combine(a, out),
                         None => out,
                     });
-                    cluster.work(m, 1);
+                    acct.work(1);
                 }
                 _ => {
                     // Pure push at the owner (write==read) lands here too:
                     // owner(write_addr) == m makes the send free.
-                    let slot = wb[m].entry(t.write_addr).or_insert(None);
-                    *slot = Some(match slot.take() {
-                        Some(acc) => app.combine(acc, out),
-                        None => out,
-                    });
-                    cluster.work(m, 1);
+                    super::combine_into(app, &mut s.wb, t.write_addr, out);
+                    acct.work(1);
                 }
             }
         }
+    }
+}
+
+/// Phase-4a helper: emit acks for every pull-tree node whose children all
+/// reported.  A root node folds its fully merged write-back into the
+/// direct write-back pool instead of applying it immediately: the Phase-4b
+/// epilogue then ⊗-combines it with any direct write-backs targeting the
+/// same chunk and applies exactly ONCE — matching `sequential_reference`
+/// even for apps whose ⊙ is not distributive over ⊗ (e.g. overwrite
+/// semantics).  The pool entry travels to `owner_of(addr)` in 4b, which
+/// is this machine, so the detour is a free self-send.
+fn emit_ready_acks<A: OrchApp>(
+    s: &mut MState<A>,
+    app: &A,
+    acct: &mut MachineAcct,
+) -> Vec<(MachineId, AckMsg<A::Out>)> {
+    let mut out = Vec::new();
+    // Split-borrow the node list away from the write-back pool.
+    let MState { nodes, wb, .. } = s;
+    for node in nodes.iter_mut() {
+        if !node.sent && node.received == node.expected {
+            node.sent = true;
+            match node.parent {
+                Some((pm, pid)) => {
+                    out.push((pm, AckMsg { node: pid, acc: node.acc.take() }));
+                }
+                None => {
+                    if let Some(o) = node.acc.take() {
+                        super::combine_into(app, wb, node.addr, o);
+                        acct.work(1);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl<A, S> Scheduler<A, S> for TdOrch
+where
+    A: OrchApp + Sync,
+    A::Ctx: Send,
+    A::Val: Send,
+    A::Out: Send,
+    S: Substrate,
+{
+    fn name(&self) -> &'static str {
+        "td-orch"
+    }
+
+    fn run_stage(
+        &self,
+        sub: &mut S,
+        app: &A,
+        tasks: Vec<Vec<Task<A::Ctx>>>,
+        store: &mut DistStore<A::Val>,
+    ) -> StageOutcome {
+        let (p, submitted) = super::stage_contract(sub.machines(), &tasks, store);
+        let forest = Forest::new(p, self.fanout.unwrap_or_else(|| Forest::default_fanout(p)));
+        let height = forest.height();
+        let c = self.effective_c(app);
+        let sigma = app.sigma();
+        let chunk_words = app.chunk_words();
+        let out_words = app.out_words();
+
+        // Hand each machine its private stage state, including its shard.
+        let shards = store.take_maps();
+        let mut st: Vec<MState<A>> = tasks
+            .into_iter()
+            .zip(shards)
+            .map(|(batch, shard)| MState {
+                batch,
+                shard,
+                slots: SlotStore::new(),
+                holding: det_map(),
+                roots: det_map(),
+                nodes: Vec::new(),
+                wb: det_map(),
+                executed: 0,
+            })
+            .collect();
+
+        // ---------------- Phase 1: contention detection ----------------
+        // 1a: group the local batch by requested chunk.  Groups with ≤ C
+        // contexts push straight to the owner (the shortcut); contended
+        // groups enter the forest at this machine's leaf.
+        let direct_in: Vec<Vec<(Addr, MetaTaskSet<Task<A::Ctx>>)>> = sub.superstep(
+            &mut st,
+            no_messages(p),
+            |m, s, _in, acct| {
+                let batch = std::mem::take(&mut s.batch);
+                acct.work(batch.len() as u64); // local grouping sweep
+                // Pre-sized map: grouping was rehash-bound before (Perf
+                // pass: RawTable::reserve_rehash was ~11% of stage time).
+                let mut groups: DetMap<Addr, Vec<Task<A::Ctx>>> =
+                    DetMap::with_capacity_and_hasher(batch.len(), Default::default());
+                for t in batch {
+                    groups.entry(t.read_addr).or_default().push(t);
+                }
+                let (_, leaf_idx) = forest.leaf(m);
+                let mut out = Vec::new();
+                for (addr, ctxs) in groups {
+                    let root = owner_of(addr, p);
+                    if self.direct_shortcut && ctxs.len() <= c {
+                        // Low local contention: push contexts straight to
+                        // the owner — "no hops on a communication tree".
+                        out.push((root, (addr, MetaTaskSet::from_ctxs(ctxs))));
+                    } else {
+                        let mut set = MetaTaskSet::from_ctxs(ctxs);
+                        let touched = set.normalize(c, &mut s.slots, m);
+                        acct.work(touched);
+                        s.holding.insert((addr, leaf_idx), set);
+                    }
+                }
+                out
+            },
+            |msg: &(Addr, MetaTaskSet<Task<A::Ctx>>)| msg.1.words(sigma),
+        );
+
+        // 1b: merge shortcut arrivals at their owners and start the climb
+        // (leaf level H → H-1).  With H == 0 (P == 1) the tree entries
+        // never move — they are already at their owner.
+        let mut climbing: Vec<Vec<(Addr, u64, MetaTaskSet<Task<A::Ctx>>)>> = sub.superstep(
+            &mut st,
+            direct_in,
+            |m, s, inbox, acct| {
+                for (addr, set) in inbox {
+                    merge_at_root::<A>(&mut s.roots, &mut s.slots, m, addr, set, c, acct);
+                }
+                let mut out = Vec::new();
+                if height == 0 {
+                    let holding = std::mem::take(&mut s.holding);
+                    for ((addr, _), set) in holding {
+                        merge_at_root::<A>(&mut s.roots, &mut s.slots, m, addr, set, c, acct);
+                    }
+                } else {
+                    for ((addr, idx), set) in s.holding.drain() {
+                        let root = owner_of(addr, p);
+                        let (pl, pidx) = forest.parent(height, idx);
+                        out.push((forest.machine_of(root, pl, pidx), (addr, pidx, set)));
+                    }
+                }
+                out
+            },
+            |msg: &(Addr, u64, MetaTaskSet<Task<A::Ctx>>)| msg.2.words(sigma),
+        );
+
+        // 1c: climb the forest one level per superstep; equal
+        // (addr, node) sets merge on arrival, then move to their parent.
+        for level in (1..height).rev() {
+            climbing = sub.superstep(
+                &mut st,
+                climbing,
+                |m, s, inbox, acct| {
+                    for (addr, pidx, set) in inbox {
+                        match s.holding.entry((addr, pidx)) {
+                            Entry::Occupied(mut e) => {
+                                let touched = e.get_mut().merge(set, c, &mut s.slots, m);
+                                acct.work(touched);
+                            }
+                            Entry::Vacant(e) => {
+                                let mut set = set;
+                                let touched = set.normalize(c, &mut s.slots, m);
+                                acct.work(touched);
+                                e.insert(set);
+                            }
+                        }
+                    }
+                    let mut out = Vec::new();
+                    for ((addr, idx), set) in s.holding.drain() {
+                        let root = owner_of(addr, p);
+                        let (pl, pidx) = forest.parent(level, idx);
+                        out.push((forest.machine_of(root, pl, pidx), (addr, pidx, set)));
+                    }
+                    out
+                },
+                |msg: &(Addr, u64, MetaTaskSet<Task<A::Ctx>>)| msg.2.words(sigma),
+            );
+        }
+
+        // ------------- Phase 2+3: co-location and execution -------------
+        // Root processing: merge the final (level 1 → 0) arrivals, then
+        // for every finalized meta-task set execute local contexts and
+        // spawn pull trees for pointer entries.
+        let mut pulls: Vec<Vec<PullMsg<A::Val>>> = sub.superstep(
+            &mut st,
+            climbing,
+            |m, s, inbox, acct| {
+                for (addr, _pidx, set) in inbox {
+                    merge_at_root::<A>(&mut s.roots, &mut s.slots, m, addr, set, c, acct);
+                }
+                let roots = std::mem::take(&mut s.roots);
+                // (val, tasks, tree_node): batched after collection.
+                let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> = Vec::new();
+                let mut out: Vec<(MachineId, PullMsg<A::Val>)> = Vec::new();
+                for (addr, set) in roots {
+                    debug_assert_eq!(owner_of(addr, p), m, "final set not at owner");
+                    let val: A::Val = s.shard.get(&addr).cloned().unwrap_or_default();
+                    let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
+                    let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
+                    for lvl in set.levels {
+                        for mt in lvl {
+                            match mt {
+                                MetaTask::Ctx(t) => ctxs.push(t),
+                                MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
+                            }
+                        }
+                    }
+                    let tree_node = if ptrs.is_empty() {
+                        None // pure push case: executes here, applies here
+                    } else {
+                        let id = s.nodes.len() as u32;
+                        s.nodes.push(PullNode {
+                            addr,
+                            parent: None,
+                            expected: ptrs.len() as u32,
+                            received: 0,
+                            acc: None,
+                            sent: false,
+                        });
+                        for (holder, slot) in ptrs {
+                            out.push((
+                                holder,
+                                PullMsg { addr, val: val.clone(), slot, parent: (m, id) },
+                            ));
+                        }
+                        Some(id)
+                    };
+                    if !ctxs.is_empty() {
+                        exec_groups.push((val, ctxs, tree_node));
+                    }
+                }
+                execute_groups(app, exec_groups, s, acct);
+                out
+            },
+            |_msg: &PullMsg<A::Val>| chunk_words + PULL_HDR_WORDS,
+        );
+
+        // Pull rounds: broadcast values down the meta-task trees, one
+        // tree level per superstep, executing parked contexts on arrival.
+        while pulls.iter().any(|v| !v.is_empty()) {
+            pulls = sub.superstep(
+                &mut st,
+                pulls,
+                |m, s, inbox, acct| {
+                    let mut exec_groups: Vec<(A::Val, Vec<Task<A::Ctx>>, Option<u32>)> =
+                        Vec::new();
+                    let mut out: Vec<(MachineId, PullMsg<A::Val>)> = Vec::new();
+                    for PullMsg { addr, val, slot, parent } in inbox {
+                        // Slot expansion is a single pass that the
+                        // execution batch below already pays for per
+                        // context; charge only the pointer handling here.
+                        let content = s.slots.take(slot);
+                        acct.work(1);
+                        let mut ctxs: Vec<Task<A::Ctx>> = Vec::new();
+                        let mut ptrs: Vec<(MachineId, u32)> = Vec::new();
+                        for mt in content {
+                            match mt {
+                                MetaTask::Ctx(t) => ctxs.push(t),
+                                MetaTask::Ptr { holder, slot, .. } => ptrs.push((holder, slot)),
+                            }
+                        }
+                        let id = s.nodes.len() as u32;
+                        s.nodes.push(PullNode {
+                            addr,
+                            parent: Some(parent),
+                            expected: ptrs.len() as u32,
+                            received: 0,
+                            acc: None,
+                            sent: false,
+                        });
+                        for (holder, pslot) in ptrs {
+                            out.push((
+                                holder,
+                                PullMsg { addr, val: val.clone(), slot: pslot, parent: (m, id) },
+                            ));
+                        }
+                        if !ctxs.is_empty() {
+                            exec_groups.push((val, ctxs, Some(id)));
+                        }
+                    }
+                    execute_groups(app, exec_groups, s, acct);
+                    out
+                },
+                |_msg: &PullMsg<A::Val>| chunk_words + PULL_HDR_WORDS,
+            );
+        }
+
+        // ------------- Phase 4a: reverse-tree write-back merge -----------
+        let mut acks: Vec<Vec<AckMsg<A::Out>>> = sub.superstep(
+            &mut st,
+            no_messages(p),
+            |_m, s, _in, acct| emit_ready_acks(s, app, acct),
+            |_msg: &AckMsg<A::Out>| out_words + ACK_HDR_WORDS,
+        );
+        while acks.iter().any(|v| !v.is_empty()) {
+            acks = sub.superstep(
+                &mut st,
+                acks,
+                |_m, s, inbox, acct| {
+                    for AckMsg { node, acc } in inbox {
+                        let n = &mut s.nodes[node as usize];
+                        n.received += 1;
+                        if let Some(v) = acc {
+                            n.acc = Some(match n.acc.take() {
+                                Some(a) => app.combine(a, v),
+                                None => v,
+                            });
+                            acct.work(1);
+                        }
+                    }
+                    emit_ready_acks(s, app, acct)
+                },
+                |_msg: &AckMsg<A::Out>| out_words + ACK_HDR_WORDS,
+            );
+        }
+
+        // ------------- Phase 4b: direct write-backs ---------------------
+        let wb_in: Vec<Vec<(Addr, A::Out)>> = sub.superstep(
+            &mut st,
+            no_messages(p),
+            |_m, s, _in, _acct| {
+                let mut out = Vec::with_capacity(s.wb.len());
+                for (addr, slot) in s.wb.drain() {
+                    out.push((owner_of(addr, p), (addr, slot.expect("wb slot"))));
+                }
+                out
+            },
+            |_msg: &(Addr, A::Out)| out_words + WB_HDR_WORDS,
+        );
+        let _done: Vec<Vec<Nothing>> = sub.superstep(
+            &mut st,
+            wb_in,
+            |_m, s, inbox, acct| {
+                super::merge_and_apply(app, inbox, &mut s.shard, acct);
+                Vec::new()
+            },
+            nothing_words,
+        );
+
+        super::finish_stage(
+            store,
+            st.into_iter().map(|s| (s.executed, s.shard)).collect(),
+            submitted,
+            "td-orch",
+        )
     }
 }

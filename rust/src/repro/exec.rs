@@ -1,0 +1,219 @@
+//! `repro exec` — the real threaded substrate, end to end.
+//!
+//! Runs TD-Orch and the direct-push / direct-pull baselines on
+//! [`ThreadedCluster`] (one OS worker thread per logical machine) over a
+//! Zipf-hotspot YCSB batch, validates every threaded store against the
+//! sequential oracle, and reports *measured* per-machine wall-clock — the
+//! quantity the BSP simulator's max-terms model, observed for real.  A
+//! second leg cross-checks SSSP-as-orchestration-stages on the threaded
+//! backend against the simulated TDO-GP graph engine.
+
+use std::collections::HashMap;
+
+use crate::baselines::{DirectPull, DirectPush};
+use crate::exec::apps::sssp_stages;
+use crate::exec::ThreadedCluster;
+use crate::graph::algorithms::sssp as engine_sssp;
+use crate::graph::engine::Engine as SimGraphEngine;
+use crate::graph::gen;
+use crate::kvstore::{normalized_snapshot, preload, Bucket, KvApp, KvOp};
+use crate::metrics::Metrics;
+use crate::orchestration::tdorch::TdOrch;
+use crate::orchestration::{sequential_reference, Scheduler, Task};
+use crate::rng::Rng;
+use crate::workload::{YcsbKind, YcsbWorkload};
+use crate::{CostModel, DistStore};
+
+use super::TablePrinter;
+
+/// Workload shape: few buckets + deep preload makes each bucket heavy on
+/// the wire, which is exactly where direct-pull's O(D·P·B) chunk motion
+/// hurts and TD-Orch's σ-word context pushes win.  Public so
+/// `benches/exec_wallclock.rs` measures the exact workload `repro exec`
+/// reports.
+pub const BUCKETS: u64 = 1 << 12;
+const KEY_SPACE: u64 = 200_000;
+pub const N_PRELOAD: u64 = 16 * BUCKETS;
+
+/// Build the canonical Zipf-hotspot YCSB-A batch plus the
+/// sequential-oracle snapshot every run is validated against (shared by
+/// `repro exec` and the wall-clock bench).
+#[allow(clippy::type_complexity)]
+pub fn hotspot_workload(
+    p: usize,
+    per_machine: usize,
+    gamma: f64,
+    seed: u64,
+) -> (Vec<Vec<Task<KvOp>>>, Vec<(u64, Vec<(u64, u32)>)>) {
+    let workload = YcsbWorkload::new(YcsbKind::A, KEY_SPACE, gamma, BUCKETS);
+    let mut rng = Rng::new(seed);
+    let mut tasks: Vec<Vec<Task<KvOp>>> = (0..p).map(|_| Vec::new()).collect();
+    for (m, batch) in tasks.iter_mut().enumerate() {
+        *batch = workload.generate(&mut rng, per_machine, (m * per_machine) as u64);
+    }
+    let app = KvApp::new(BUCKETS);
+    let mut oracle: DistStore<Bucket> = DistStore::new(p);
+    preload(&mut oracle, BUCKETS, N_PRELOAD);
+    sequential_reference(&app, &tasks, &mut oracle);
+    let expected = normalized_snapshot(&oracle);
+    (tasks, expected)
+}
+
+/// Result of one `repro exec` invocation (consumed by tests/benches).
+pub struct ExecSummary {
+    /// (scheduler name, per-machine busy ms, max busy ms, executed/machine)
+    pub rows: Vec<(&'static str, Vec<f64>, f64, Vec<u64>)>,
+    /// Store state matched `sequential_reference` for every scheduler.
+    pub all_valid: bool,
+}
+
+/// Run one scheduler on the threaded backend; return metrics + validity.
+#[allow(clippy::type_complexity)]
+fn run_one(
+    sched: &dyn Scheduler<KvApp<'static>, ThreadedCluster>,
+    name: &'static str,
+    p: usize,
+    tasks: &[Vec<Task<KvOp>>],
+    expected: &[(u64, Vec<(u64, u32)>)],
+) -> (&'static str, Vec<f64>, f64, Vec<u64>, bool) {
+    let app = KvApp::new(BUCKETS);
+    let mut cluster = ThreadedCluster::new(p);
+    let mut store: DistStore<Bucket> = DistStore::new(p);
+    preload(&mut store, BUCKETS, N_PRELOAD);
+    let outcome = sched.run_stage(&mut cluster, &app, tasks.to_vec(), &mut store);
+    let valid = normalized_snapshot(&store).as_slice() == expected;
+    (
+        name,
+        cluster.busy_ms_by_machine(),
+        cluster.max_busy_ms(),
+        outcome.executed_per_machine,
+        valid,
+    )
+}
+
+/// The `repro exec` entry point: P worker threads, `per_machine` YCSB-A
+/// ops each at Zipf(γ).  Returns the summary for programmatic use.
+pub fn run_exec(p: usize, per_machine: usize, gamma: f64, seed: u64) -> ExecSummary {
+    assert!(p >= 1, "need at least one machine");
+    assert!(per_machine >= 1, "need at least one op per machine");
+    println!(
+        "\n## repro exec — threaded shared-nothing substrate: {p} worker threads, \
+         {per_machine} YCSB-A ops/machine, Zipf γ={gamma}, seed {seed}\n"
+    );
+
+    // Workload + the sequential oracle every threaded run is validated
+    // against.
+    let (tasks, expected) = hotspot_workload(p, per_machine, gamma, seed);
+
+    // Hottest bucket, to show where the Zipf head lands.
+    let mut hits: HashMap<u64, usize> = HashMap::new();
+    for batch in &tasks {
+        for t in batch {
+            *hits.entry(t.read_addr).or_insert(0) += 1;
+        }
+    }
+    // Tie-break on the lowest address so the line is run-to-run stable
+    // (std HashMap iteration order is per-process random).
+    let (hot_addr, hot_hits) = hits
+        .iter()
+        .max_by_key(|(a, n)| (**n, std::cmp::Reverse(**a)))
+        .map(|(a, n)| (*a, *n))
+        .unwrap_or((0, 0));
+    println!(
+        "hottest bucket: addr {hot_addr} with {hot_hits} of {} ops ({:.1}%)\n",
+        p * per_machine,
+        100.0 * hot_hits as f64 / (p * per_machine) as f64
+    );
+
+    let td = TdOrch::new();
+    let scheds: [(&'static str, &dyn Scheduler<KvApp<'static>, ThreadedCluster>); 3] = [
+        ("td-orch", &td),
+        ("direct-push", &DirectPush),
+        ("direct-pull", &DirectPull),
+    ];
+
+    let mut rows = Vec::new();
+    let mut all_valid = true;
+    for (name, sched) in scheds {
+        let (name, busy, max_busy, executed, valid) =
+            run_one(sched, name, p, &tasks, &expected);
+        println!(
+            "{name:<12} store == sequential_reference: {}",
+            if valid { "PASS" } else { "FAIL" }
+        );
+        all_valid &= valid;
+        rows.push((name, busy, max_busy, executed));
+    }
+
+    println!("\nper-machine busy wall-clock (ms), one OS thread per machine:");
+    let t = TablePrinter::new(
+        &["machine", "td-orch", "direct-push", "direct-pull"],
+        &[7, 10, 11, 11],
+    );
+    for m in 0..p {
+        t.row(&[
+            m.to_string(),
+            format!("{:.2}", rows[0].1[m]),
+            format!("{:.2}", rows[1].1[m]),
+            format!("{:.2}", rows[2].1[m]),
+        ]);
+    }
+
+    println!("\nmax-loaded machine (busy ms) and execution balance:");
+    for (name, _, max_busy, executed) in &rows {
+        println!(
+            "  {name:<12} max {max_busy:>8.2} ms   exec imbalance(max/mean) {:.2}",
+            Metrics::imbalance(executed)
+        );
+    }
+    // Informational perf comparison — PASS/FAIL and the exit code are
+    // reserved for correctness (store == oracle, SSSP agreement).
+    let td_max = rows[0].2;
+    let perf = |theirs: f64| {
+        if td_max < theirs {
+            "td-orch faster"
+        } else {
+            "td-orch slower — perf target missed, or a noisy host"
+        }
+    };
+    let push_max = rows[1].2;
+    let pull_max = rows[2].2;
+    println!(
+        "\ntd-orch max-loaded machine vs direct-push: {:.2}x  [{}]",
+        push_max / td_max,
+        perf(push_max)
+    );
+    println!(
+        "td-orch max-loaded machine vs direct-pull: {:.2}x  [{}]",
+        pull_max / td_max,
+        perf(pull_max)
+    );
+
+    // ---- SSSP leg: graph algorithm through the threaded substrate ----
+    println!("\n## SSSP via orchestration stages on the threaded substrate");
+    let g = gen::barabasi_albert(4_000, 6, seed);
+    let mut tc = ThreadedCluster::new(p);
+    let dist_threaded = sssp_stages(&mut tc, &td, &g, 0);
+    let mut engine = SimGraphEngine::tdo_gp(&g, p, CostModel::paper_cluster());
+    let dist_engine = engine_sssp(&mut engine, 0);
+    let agree = dist_threaded
+        .iter()
+        .zip(&dist_engine)
+        .all(|(a, b)| a == b || (a.is_infinite() && b.is_infinite()));
+    let reached = dist_threaded.iter().filter(|d| d.is_finite()).count();
+    println!(
+        "BA graph n={} m={}: reached {reached} vertices over {} supersteps; \
+         distances == simulated TDO-GP engine: {}",
+        g.n,
+        g.m(),
+        tc.metrics.supersteps,
+        if agree { "PASS" } else { "FAIL" }
+    );
+    all_valid &= agree;
+
+    println!(
+        "\nexec {}",
+        if all_valid { "OK" } else { "FAILED (see FAIL lines above)" }
+    );
+    ExecSummary { rows, all_valid }
+}

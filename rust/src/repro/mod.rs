@@ -3,6 +3,7 @@
 //! prints the same rows/series the paper reports, from runs on the BSP
 //! substrate, and returns the raw numbers for benches/tests.
 
+pub mod exec;
 pub mod graphs;
 pub mod kv;
 

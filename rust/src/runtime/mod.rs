@@ -9,11 +9,40 @@
 //! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Feature gating
+//!
+//! The real engine needs the `xla` crate, which the offline build image
+//! cannot fetch (no registry).  It therefore compiles only with
+//! `--features xla` after vendoring the dependency (see Cargo.toml).  The
+//! default build ships a stub [`Engine`] with the same API whose `load`
+//! always fails, so every consumer (KV store, smoke test, benches)
+//! degrades to the native lambda path exactly as if artifacts were
+//! missing.  Manifest parsing is feature-independent and stays tested.
 
-use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+/// Error type for the artifact runtime (the crate is dependency-free, so
+/// no `anyhow` here).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Shape of one artifact input/output (row-major dims; empty = scalar).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -30,7 +59,10 @@ impl ArtifactShape {
         }
         let dims = s
             .split('x')
-            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|e| RuntimeError::new(format!("bad dim {d}: {e}")))
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(ArtifactShape(dims))
     }
@@ -54,7 +86,10 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
         }
         let cols: Vec<&str> = line.split('\t').collect();
         if cols.len() != 4 {
-            bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            return Err(RuntimeError::new(format!(
+                "manifest line {} malformed: {line:?}",
+                lineno + 1
+            )));
         }
         entries.push(ManifestEntry {
             name: cols[0].to_string(),
@@ -69,48 +104,146 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
     Ok(entries)
 }
 
+/// The conventional artifact directory (`$TDORCH_ARTIFACTS` or
+/// `./artifacts`).
+fn default_dir() -> String {
+    std::env::var("TDORCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+// ---------------------------------------------------------------------
+// Stub engine (default build): same API, `load` always fails.
+// ---------------------------------------------------------------------
+
+/// Artifact engine stub — the crate was built without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+pub struct Engine {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    fn unavailable(what: &str) -> RuntimeError {
+        RuntimeError::new(format!(
+            "{what}: tdorch was built without the `xla` feature — PJRT artifact \
+             execution is unavailable; vendor the xla crate and rebuild with \
+             `--features xla` (see Cargo.toml)"
+        ))
+    }
+
+    /// Always fails in the stub build (see module docs).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let _ = dir.as_ref();
+        Err(Self::unavailable("Engine::load"))
+    }
+
+    /// Load from the conventional location (`$TDORCH_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Engine> {
+        Self::load(default_dir())
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute artifact `name` on f32 inputs (unavailable in the stub).
+    pub fn run_f32(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        Err(Self::unavailable(name))
+    }
+
+    /// Batched YCSB lambda: out[i] = vals[i] * mul[i] + add[i].
+    pub fn ycsb_batch(&self, _vals: &[f32], _mul: &[f32], _add: &[f32]) -> Result<Vec<f32>> {
+        Err(Self::unavailable("ycsb_batch"))
+    }
+
+    /// Batched SSSP relaxation: out[i] = min(dv[i], du[i] + w[i]).
+    pub fn relax_batch(&self, _dv: &[f32], _du: &[f32], _w: &[f32]) -> Result<Vec<f32>> {
+        Err(Self::unavailable("relax_batch"))
+    }
+
+    /// Dense panel step: alpha * (A @ X) + beta.
+    pub fn spmv_panel(&self, _a: &[f32], _x: &[f32], _alpha: f32, _beta: f32) -> Result<Vec<f32>> {
+        Err(Self::unavailable("spmv_panel"))
+    }
+
+    /// Manifest shapes for artifact `name` (unavailable in the stub).
+    pub fn shapes(&self, name: &str) -> Result<(Vec<ArtifactShape>, ArtifactShape)> {
+        Err(Self::unavailable(name))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real engine (`--features xla`, requires a vendored xla crate).
+// ---------------------------------------------------------------------
+
 /// A compiled artifact plus its manifest metadata.
+#[cfg(feature = "xla")]
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
     entry: ManifestEntry,
 }
 
 /// The PJRT engine: one CPU client, one compiled executable per artifact.
+#[cfg(feature = "xla")]
 pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
-    artifacts: HashMap<String, LoadedArtifact>,
+    artifacts: std::collections::HashMap<String, LoadedArtifact>,
     dir: PathBuf,
+    /// Serializes every PJRT call (see the `Sync` note below).
+    exec_lock: std::sync::Mutex<()>,
 }
 
+// The threaded substrate shares one `&Engine` across its P workers, so
+// Engine must be Send + Sync even though the xla-rs wrappers are raw
+// C++-handle types with no such guarantee of their own.  Soundness
+// argument: after `load` returns, `client`/`artifacts` are never mutated,
+// and every call that enters PJRT (`run_f32`, hence all batch entry
+// points) first takes `exec_lock`, so the underlying C++ objects are
+// accessed by at most one thread at a time.  Literals built per call are
+// thread-local.  If xla-rs ever documents thread-safe execution, the
+// lock can be dropped.
+#[cfg(feature = "xla")]
+unsafe impl Send for Engine {}
+#[cfg(feature = "xla")]
+unsafe impl Sync for Engine {}
+
+#[cfg(feature = "xla")]
 impl Engine {
     /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError::new(format!(
+                "reading {manifest_path:?} — run `make artifacts` first: {e}"
+            ))
+        })?;
         let entries = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut artifacts = HashMap::new();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError::new(format!("PJRT cpu client: {e:?}")))?;
+        let mut artifacts = std::collections::HashMap::new();
         for entry in entries {
             let path = dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+                .map_err(|e| RuntimeError::new(format!("parsing {path:?}: {e:?}")))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+                .map_err(|e| RuntimeError::new(format!("compiling {}: {e:?}", entry.name)))?;
             artifacts.insert(entry.name.clone(), LoadedArtifact { exe, entry });
         }
-        Ok(Engine { client, artifacts, dir })
+        Ok(Engine { client, artifacts, dir, exec_lock: std::sync::Mutex::new(()) })
     }
 
     /// Load from the conventional location (`$TDORCH_ARTIFACTS` or
     /// `./artifacts`).
     pub fn load_default() -> Result<Engine> {
-        let dir = std::env::var("TDORCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-        Self::load(dir)
+        Self::load(default_dir())
     }
 
     pub fn artifact_names(&self) -> Vec<&str> {
@@ -124,30 +257,35 @@ impl Engine {
     }
 
     fn artifact(&self, name: &str) -> Result<&LoadedArtifact> {
-        self.artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not loaded (have {:?})", self.artifact_names()))
+        self.artifacts.get(name).ok_or_else(|| {
+            RuntimeError::new(format!(
+                "artifact {name} not loaded (have {:?})",
+                self.artifact_names()
+            ))
+        })
     }
 
     /// Execute artifact `name` on f32 inputs (shapes per the manifest) and
-    /// return the flattened f32 output.
+    /// return the flattened f32 output.  PJRT entry is serialized (see
+    /// the `Sync` note on [`Engine`]).
     pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let _pjrt = self.exec_lock.lock().expect("pjrt lock poisoned");
         let art = self.artifact(name)?;
         if inputs.len() != art.entry.inputs.len() {
-            bail!(
+            return Err(RuntimeError::new(format!(
                 "{name}: expected {} inputs, got {}",
                 art.entry.inputs.len(),
                 inputs.len()
-            );
+            )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs.iter().zip(&art.entry.inputs) {
             if data.len() != shape.elements() {
-                bail!(
+                return Err(RuntimeError::new(format!(
                     "{name}: input length {} != manifest shape {:?}",
                     data.len(),
                     shape.0
-                );
+                )));
             }
             let lit = if shape.0.is_empty() {
                 xla::Literal::scalar(data[0])
@@ -157,21 +295,22 @@ impl Engine {
                 let dims: Vec<i64> = shape.0.iter().map(|d| *d as i64).collect();
                 xla::Literal::vec1(data)
                     .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?
+                    .map_err(|e| RuntimeError::new(format!("reshape {name}: {e:?}")))?
             };
             literals.push(lit);
         }
         let result = art
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .map_err(|e| RuntimeError::new(format!("execute {name}: {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+            .map_err(|e| RuntimeError::new(format!("sync {name}: {e:?}")))?;
         // aot.py lowers with return_tuple=True.
         let out = result
             .to_tuple1()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+            .map_err(|e| RuntimeError::new(format!("untuple {name}: {e:?}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| RuntimeError::new(format!("to_vec {name}: {e:?}")))
     }
 
     /// Batched YCSB lambda: out[i] = vals[i] * mul[i] + add[i].
@@ -187,7 +326,7 @@ impl Engine {
 
     fn elementwise3(&self, name: &str, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
         if a.len() != b.len() || a.len() != c.len() {
-            bail!("{name}: input length mismatch");
+            return Err(RuntimeError::new(format!("{name}: input length mismatch")));
         }
         let art = self.artifact(name)?;
         let batch = art.entry.inputs[0].elements();
@@ -251,5 +390,13 @@ mod tests {
         assert_eq!(ArtifactShape::parse("scalar").unwrap().0, Vec::<usize>::new());
         assert_eq!(ArtifactShape::parse("8x128").unwrap().0, vec![8, 128]);
         assert_eq!(ArtifactShape::parse("scalar").unwrap().elements(), 1);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_fails_loudly() {
+        let err = Engine::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+        assert!(Engine::load_default().is_err());
     }
 }

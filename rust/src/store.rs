@@ -86,6 +86,24 @@ impl<V: Clone + Default> DistStore<V> {
         self.maps.iter().flat_map(|m| m.iter())
     }
 
+    /// Detach the per-machine shard maps so a shared-nothing execution
+    /// backend can hand each worker thread *ownership* of its shard (see
+    /// [`crate::exec`]).  The store is left with fresh empty shards; pair
+    /// every call with [`DistStore::put_maps`].
+    pub fn take_maps(&mut self) -> Vec<HashMap<Addr, V>> {
+        std::mem::replace(
+            &mut self.maps,
+            (0..self.p).map(|_| HashMap::new()).collect(),
+        )
+    }
+
+    /// Re-attach shards detached by [`DistStore::take_maps`], in machine
+    /// order.
+    pub fn put_maps(&mut self, maps: Vec<HashMap<Addr, V>>) {
+        assert_eq!(maps.len(), self.p, "shard count must match P");
+        self.maps = maps;
+    }
+
     /// Deterministic snapshot for equality checks in tests.
     pub fn snapshot(&self) -> Vec<(Addr, V)> {
         let mut all: Vec<(Addr, V)> = self
@@ -132,6 +150,20 @@ mod tests {
         s.get_or_default(7).push(2);
         assert_eq!(s.get(7).unwrap(), &vec![1, 2]);
         assert_eq!(s.total_len(), 1);
+    }
+
+    #[test]
+    fn take_put_maps_roundtrip() {
+        let mut s: DistStore<u8> = DistStore::new(4);
+        for a in 0..64u64 {
+            s.insert(a, a as u8);
+        }
+        let snap = s.snapshot();
+        let maps = s.take_maps();
+        assert_eq!(maps.len(), 4);
+        assert_eq!(s.total_len(), 0); // detached
+        s.put_maps(maps);
+        assert_eq!(s.snapshot(), snap);
     }
 
     #[test]

@@ -7,34 +7,10 @@ use tdorch::orchestration::{OrchApp, Task};
 use tdorch::rng::Rng;
 
 /// Additive counters: chunk = i64, ctx = increment. ⊗ = +, ⊙ = +=.
-/// The canonical set-associative merge-able op (Def. 2 class ii).
-pub struct CounterApp;
-
-impl OrchApp for CounterApp {
-    type Ctx = i64;
-    type Val = i64;
-    type Out = i64;
-    fn sigma(&self) -> u64 {
-        2
-    }
-    fn chunk_words(&self) -> u64 {
-        8
-    }
-    fn out_words(&self) -> u64 {
-        1
-    }
-    fn execute(&self, ctx: &i64, val: &i64) -> Option<i64> {
-        // Reads the chunk (parity) so results depend on co-location
-        // actually delivering the right value.
-        Some(*ctx + (*val & 1) * 0)
-    }
-    fn combine(&self, a: i64, b: i64) -> i64 {
-        a + b
-    }
-    fn apply(&self, val: &mut i64, out: i64) {
-        *val += out;
-    }
-}
+/// The canonical set-associative merge-able op (Def. 2 class ii) — one
+/// definition, shared with the library's exec substrate fixtures.
+/// ([`MaxApp`] below provides the value-*dependent* coverage.)
+pub use tdorch::exec::apps::CounterApp;
 
 /// Max-writer: chunk = u64, ctx = candidate, out = max. Idempotent
 /// (Def. 2 class i) and exercises cross-address writes: each task reads

@@ -1,0 +1,247 @@
+//! Property-style cross-validation of the execution substrates: for
+//! CounterApp, YCSB, and SSSP, across seeds {1, 42, 7} and P ∈ {1, 2, 8},
+//! the *threaded* backend (real worker threads + channels), the BSP
+//! *simulator*, and the *sequential oracle* must all produce identical
+//! store state — and every scheduler must execute exactly the submitted
+//! task count (the `StageOutcome::total_executed` invariant).
+
+mod common;
+
+use common::{random_tasks, CounterApp};
+use tdorch::baselines::{DirectPull, DirectPush, SortingBased};
+use tdorch::exec::apps::sssp_stages;
+use tdorch::exec::ThreadedCluster;
+use tdorch::kvstore::{preload, Bucket, KvApp, KvOp};
+use tdorch::orchestration::tdorch::TdOrch;
+use tdorch::orchestration::{sequential_reference, spread_tasks, Scheduler, Task};
+use tdorch::rng::Rng;
+use tdorch::workload::{YcsbKind, YcsbWorkload};
+use tdorch::{Cluster, CostModel, DistStore};
+
+const SEEDS: [u64; 3] = [1, 42, 7];
+const PS: [usize; 3] = [1, 2, 8];
+
+/// Run one scheduler on both substrates; assert both stores match the
+/// oracle (under the app's normalization, e.g. bucket-order-insensitive
+/// for YCSB) and both outcomes executed all submitted tasks.
+fn check_both<A, K>(
+    label: &str,
+    app: &A,
+    sim_sched: &dyn Scheduler<A>,
+    thr_sched: &dyn Scheduler<A, ThreadedCluster>,
+    tasks: &[Vec<Task<A::Ctx>>],
+    seed_store: &DistStore<A::Val>,
+    expected: &K,
+    norm: impl Fn(&DistStore<A::Val>) -> K,
+) where
+    A: tdorch::OrchApp,
+    K: PartialEq + std::fmt::Debug,
+{
+    let p = tasks.len();
+    let n: u64 = tasks.iter().map(|b| b.len() as u64).sum();
+
+    let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+    let mut sim_store = seed_store.clone();
+    let sim = sim_sched.run_stage(&mut cluster, app, tasks.to_vec(), &mut sim_store);
+    assert_eq!(
+        &norm(&sim_store),
+        expected,
+        "{label}: simulator != sequential_reference (p={p})"
+    );
+    assert_eq!(sim.total_executed, n, "{label}: simulator executed count");
+
+    let mut tc = ThreadedCluster::new(p);
+    let mut thr_store = seed_store.clone();
+    let thr = thr_sched.run_stage(&mut tc, app, tasks.to_vec(), &mut thr_store);
+    assert_eq!(
+        &norm(&thr_store),
+        expected,
+        "{label}: threaded != sequential_reference (p={p})"
+    );
+    assert_eq!(thr.total_executed, n, "{label}: threaded executed count");
+
+    // The two substrates must agree on the load-balance object too: the
+    // superstep delivery order is identical, so executed_per_machine is
+    // bit-identical, not merely equivalent.
+    assert_eq!(
+        sim.executed_per_machine, thr.executed_per_machine,
+        "{label}: per-machine execution diverged (p={p})"
+    );
+}
+
+#[test]
+fn counter_all_schedulers_all_substrates() {
+    for seed in SEEDS {
+        for p in PS {
+            let mut rng = Rng::new(seed);
+            let tasks = random_tasks(&mut rng, 600, 150, 0.6, true);
+            let spread = spread_tasks(tasks, p);
+            let app = CounterApp;
+            let seed_store: DistStore<i64> = DistStore::new(p);
+            let mut oracle = seed_store.clone();
+            sequential_reference(&app, &spread, &mut oracle);
+            let expected = oracle.snapshot();
+            let norm = |s: &DistStore<i64>| s.snapshot();
+
+            let td = TdOrch::new();
+            check_both("counter/td", &app, &td, &td, &spread, &seed_store, &expected, norm);
+            check_both(
+                "counter/push", &app, &DirectPush, &DirectPush, &spread, &seed_store, &expected,
+                norm,
+            );
+            check_both(
+                "counter/pull", &app, &DirectPull, &DirectPull, &spread, &seed_store, &expected,
+                norm,
+            );
+            check_both(
+                "counter/sort", &app, &SortingBased, &SortingBased, &spread, &seed_store,
+                &expected, norm,
+            );
+        }
+    }
+}
+
+#[test]
+fn ycsb_all_schedulers_all_substrates() {
+    let buckets = 512u64;
+    for seed in SEEDS {
+        for p in PS {
+            let workload = YcsbWorkload::new(YcsbKind::A, 20_000, 1.3, buckets);
+            let mut rng = Rng::new(seed);
+            let mut tasks: Vec<Vec<Task<KvOp>>> = (0..p).map(|_| Vec::new()).collect();
+            for (m, batch) in tasks.iter_mut().enumerate() {
+                *batch = workload.generate(&mut rng, 700, (m * 700) as u64);
+            }
+            let app = KvApp::new(buckets);
+            let mut seed_store: DistStore<Bucket> = DistStore::new(p);
+            preload(&mut seed_store, buckets, 3_000);
+            let mut oracle = seed_store.clone();
+            sequential_reference(&app, &tasks, &mut oracle);
+            // Bucket vectors are insertion-ordered, so compare through
+            // the canonical key-sorted bit-exact normalization.
+            let norm = tdorch::kvstore::normalized_snapshot;
+            let expected = norm(&oracle);
+
+            let td = TdOrch::new();
+            check_both("ycsb/td", &app, &td, &td, &tasks, &seed_store, &expected, norm);
+            check_both(
+                "ycsb/push", &app, &DirectPush, &DirectPush, &tasks, &seed_store, &expected,
+                norm,
+            );
+            check_both(
+                "ycsb/pull", &app, &DirectPull, &DirectPull, &tasks, &seed_store, &expected,
+                norm,
+            );
+            check_both(
+                "ycsb/sort", &app, &SortingBased, &SortingBased, &tasks, &seed_store, &expected,
+                norm,
+            );
+        }
+    }
+}
+
+#[test]
+fn sssp_threaded_matches_simulator() {
+    use tdorch::graph::gen;
+    for seed in SEEDS {
+        let g = gen::barabasi_albert(800, 5, seed);
+        for p in PS {
+            let td = TdOrch::new();
+            let mut sim = Cluster::new(p, CostModel::paper_cluster());
+            let dist_sim = sssp_stages(&mut sim, &td, &g, 0);
+            let mut thr = ThreadedCluster::new(p);
+            let dist_thr = sssp_stages(&mut thr, &td, &g, 0);
+            assert_eq!(
+                dist_sim, dist_thr,
+                "sssp distances diverged (seed={seed}, p={p})"
+            );
+            // Threaded SSSP also goes through direct-pull: same answer.
+            let mut thr2 = ThreadedCluster::new(p);
+            let dist_pull = sssp_stages(&mut thr2, &DirectPull, &g, 0);
+            assert_eq!(
+                dist_sim, dist_pull,
+                "sssp td-orch vs direct-pull diverged (seed={seed}, p={p})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sssp_threaded_matches_graph_engine() {
+    use tdorch::graph::algorithms::sssp as engine_sssp;
+    use tdorch::graph::engine::Engine as SimGraphEngine;
+    use tdorch::graph::gen;
+
+    let g = gen::barabasi_albert(1_000, 5, 42);
+    let mut engine = SimGraphEngine::tdo_gp(&g, 8, CostModel::paper_cluster());
+    let expected = engine_sssp(&mut engine, 0);
+    let mut tc = ThreadedCluster::new(8);
+    let got = sssp_stages(&mut tc, &TdOrch::new(), &g, 0);
+    assert_eq!(got.len(), expected.len());
+    for (v, (a, b)) in got.iter().zip(&expected).enumerate() {
+        assert!(
+            a == b || (a.is_infinite() && b.is_infinite()),
+            "vertex {v}: threaded {a} vs engine {b}"
+        );
+    }
+}
+
+#[test]
+fn total_executed_counts_reads_too() {
+    // Regression for the StageOutcome invariant: read-only ops produce no
+    // write-back but still count as executed, on every scheduler and
+    // both substrates.
+    let buckets = 128u64;
+    let p = 4;
+    let tasks: Vec<Task<KvOp>> = (0..500u64)
+        .map(|i| {
+            let op = KvOp::read(i % 50, i);
+            Task::inplace(op.bucket(buckets), op)
+        })
+        .collect();
+    let spread = spread_tasks(tasks, p);
+    let app = KvApp::new(buckets);
+
+    let td = TdOrch::new();
+    let sim_scheds: [&dyn Scheduler<KvApp>; 4] =
+        [&td, &DirectPush, &DirectPull, &SortingBased];
+    for sched in sim_scheds {
+        let mut cluster = Cluster::new(p, CostModel::paper_cluster());
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut store, buckets, 100);
+        let outcome = sched.run_stage(&mut cluster, &app, spread.clone(), &mut store);
+        assert_eq!(outcome.total_executed, 500, "{} (simulator)", sched.name());
+        assert_eq!(
+            outcome.executed_per_machine.iter().sum::<u64>(),
+            outcome.total_executed
+        );
+    }
+    let thr_scheds: [&dyn Scheduler<KvApp, ThreadedCluster>; 4] =
+        [&td, &DirectPush, &DirectPull, &SortingBased];
+    for sched in thr_scheds {
+        let mut tc = ThreadedCluster::new(p);
+        let mut store: DistStore<Bucket> = DistStore::new(p);
+        preload(&mut store, buckets, 100);
+        let outcome = sched.run_stage(&mut tc, &app, spread.clone(), &mut store);
+        assert_eq!(outcome.total_executed, 500, "{} (threaded)", sched.name());
+    }
+}
+
+#[test]
+fn threaded_metrics_mirror_populated() {
+    // The threaded backend must fill the same ledger the simulator keeps:
+    // per-machine executed counts, words moved, supersteps, wall-clock.
+    let p = 4;
+    let mut rng = Rng::new(9);
+    let tasks = random_tasks(&mut rng, 2_000, 64, 0.5, false);
+    let app = CounterApp;
+    let mut tc = ThreadedCluster::new(p);
+    let mut store: DistStore<i64> = DistStore::new(p);
+    let outcome =
+        TdOrch::new().run_stage(&mut tc, &app, spread_tasks(tasks, p), &mut store);
+    assert_eq!(tc.metrics.executed_by_machine, outcome.executed_per_machine);
+    assert!(tc.metrics.supersteps > 0);
+    assert!(tc.metrics.total_words > 0, "no bytes moved over channels?");
+    assert!(tc.max_busy_ms() > 0.0);
+    assert_eq!(tc.busy_ms_by_machine().len(), p);
+}

@@ -1,0 +1,107 @@
+//! Bench: real wall-clock of the SPMD `DistEdgeMap` engine — PageRank
+//! and SSSP on the persistent threaded worker pool vs the same engine on
+//! the single-threaded BSP simulator.  Engine construction (ingestion,
+//! tree precomputation, pool spawn) happens OUTSIDE the timed closures —
+//! the paper times queries, not loading.  Every threaded run is
+//! validated bit-for-bit against the simulator result before its time is
+//! reported, and the pool-thread counter is printed to demonstrate the
+//! persistent-pool contract (at most P threads per run, however many
+//! supersteps the algorithms take).
+//! `cargo bench --bench graph_wallclock`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::algorithms::{pagerank_spmd, sssp_spmd, PrShard, SsspShard};
+use tdorch::graph::gen;
+use tdorch::graph::spmd::SpmdEngine;
+use tdorch::repro::graphs::bits_equal;
+use tdorch::{Cluster, CostModel};
+
+const PR_ITERS: usize = 10;
+const ITERS: usize = 3;
+
+fn main() {
+    let b = Bench::new("graph_wallclock");
+    let g = gen::barabasi_albert(30_000, 8, 7);
+    let cost = CostModel::paper_cluster();
+    println!("BA graph n={} m={}", g.n, g.m());
+
+    for p in [4usize, 8] {
+        // Reference bits from the simulator backend of the same engine.
+        let pr_sim = {
+            let mut e = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, PrShard::new);
+            pagerank_spmd(&mut e, PR_ITERS)
+        };
+        let ss_sim = {
+            let mut e = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, SsspShard::new);
+            sssp_spmd(&mut e, 0)
+        };
+
+        // ---- PageRank ----
+        let mut sim_engines: Vec<SpmdEngine<Cluster, PrShard>> = (0..ITERS)
+            .map(|_| SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, PrShard::new))
+            .collect();
+        b.run(&format!("pagerank-sim-P{p}"), ITERS, || {
+            let mut e = sim_engines.pop().expect("one prepared engine per iter");
+            pagerank_spmd(&mut e, PR_ITERS).len()
+        });
+
+        let mut thr_engines: Vec<SpmdEngine<ThreadedCluster, PrShard>> = (0..ITERS)
+            .map(|_| SpmdEngine::tdo_gp(ThreadedCluster::new(p), &g, cost, PrShard::new))
+            .collect();
+        let mut last_busy = 0.0f64;
+        let mut last_threads = 0usize;
+        let mut last_epochs = 0u64;
+        let mut finished: Vec<(Vec<f64>, SpmdEngine<ThreadedCluster, PrShard>)> = Vec::new();
+        b.run(&format!("pagerank-threaded-P{p}"), ITERS, || {
+            let mut e = thr_engines.pop().expect("one prepared engine per iter");
+            let rank = pagerank_spmd(&mut e, PR_ITERS);
+            let n = rank.len();
+            finished.push((rank, e));
+            n
+        });
+        for (rank, e) in &finished {
+            assert!(bits_equal(rank, &pr_sim), "threaded PR diverged from simulator");
+            last_busy = e.sub().max_busy_ms();
+            last_threads = e.sub().pool_threads();
+            last_epochs = e.sub().epochs();
+        }
+        println!(
+            "    PR: max-loaded machine busy {last_busy:.2} ms; pool spawned \
+             {last_threads} threads for {last_epochs} superstep epochs"
+        );
+
+        // ---- SSSP ----
+        let mut sim_engines: Vec<SpmdEngine<Cluster, SsspShard>> = (0..ITERS)
+            .map(|_| SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, SsspShard::new))
+            .collect();
+        b.run(&format!("sssp-sim-P{p}"), ITERS, || {
+            let mut e = sim_engines.pop().expect("one prepared engine per iter");
+            sssp_spmd(&mut e, 0).len()
+        });
+
+        let mut thr_engines: Vec<SpmdEngine<ThreadedCluster, SsspShard>> = (0..ITERS)
+            .map(|_| SpmdEngine::tdo_gp(ThreadedCluster::new(p), &g, cost, SsspShard::new))
+            .collect();
+        let mut finished: Vec<(Vec<f64>, SpmdEngine<ThreadedCluster, SsspShard>)> = Vec::new();
+        b.run(&format!("sssp-threaded-P{p}"), ITERS, || {
+            let mut e = thr_engines.pop().expect("one prepared engine per iter");
+            let d = sssp_spmd(&mut e, 0);
+            let n = d.len();
+            finished.push((d, e));
+            n
+        });
+        for (d, e) in &finished {
+            assert!(bits_equal(d, &ss_sim), "threaded SSSP diverged from simulator");
+            last_busy = e.sub().max_busy_ms();
+            last_threads = e.sub().pool_threads();
+            last_epochs = e.sub().epochs();
+        }
+        println!(
+            "    SSSP: max-loaded machine busy {last_busy:.2} ms; pool spawned \
+             {last_threads} threads for {last_epochs} superstep epochs"
+        );
+    }
+}

@@ -10,11 +10,13 @@
 //!   machine's superstep closure sequentially and charges the BSP
 //!   h-relation cost model.  All paper figures/tables come from this
 //!   backend; its numbers are deterministic and hardware-independent.
-//! * [`ThreadedCluster`] — the *real* backend: one OS worker thread per
-//!   logical machine, each owning its shard of the
-//!   [`crate::store::DistStore`], exchanging payloads over channels and
-//!   synchronizing on a reusable barrier.  Its metrics are measured
-//!   wall-clock and real bytes moved.
+//! * [`ThreadedCluster`] — the *real* backend: a **persistent pool** of
+//!   one OS worker thread per logical machine (spawned once per cluster,
+//!   parked between supersteps), each owning its shard of the
+//!   [`crate::store::DistStore`] — or its graph shard, for
+//!   [`crate::graph::spmd::SpmdEngine`] — exchanging payloads over
+//!   channels and synchronizing on reusable barriers.  Its metrics are
+//!   measured wall-clock and real bytes moved.
 //!
 //! The unit of execution is one **superstep**: every machine consumes its
 //! inbox from the previous superstep, computes on its private state, and

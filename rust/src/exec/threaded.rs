@@ -1,19 +1,51 @@
-//! The real shared-nothing threaded backend.
+//! The real shared-nothing threaded backend, on a **persistent worker
+//! pool**.
 //!
-//! One OS worker thread per logical machine.  Each superstep:
+//! One OS worker thread per logical machine, spawned exactly once when the
+//! [`ThreadedCluster`] is constructed and parked between supersteps — not
+//! re-spawned per superstep as in the first version of this module.  That
+//! matters for multi-round graph algorithms: PageRank, BFS, SSSP, CC and
+//! BC run tens of supersteps per query, and a spawn-per-superstep model
+//! pays the ~10 µs thread-creation cost on every one of them *and* loses
+//! any chance of cache/NUMA affinity between rounds.
 //!
-//! 1. all P workers rendezvous on a reusable [`std::sync::Barrier`]
+//! ## Pool lifecycle
+//!
+//! * `try_new(p)` spawns the P workers up front.  Each worker owns one end
+//!   of a private job channel and blocks on `recv()` until the driver
+//!   publishes work.  If thread `k` fails to spawn, the already-spawned
+//!   `k-1` workers are still parked on their channels (they have never
+//!   touched a barrier), so the constructor hangs up those channels, joins
+//!   the threads, and returns the spawn error — a partially-spawned
+//!   cluster can never silently compute on fewer machines.  `new(p)`
+//!   panics with context instead of returning the error.
+//! * Each [`Substrate::superstep`] call is one **epoch**: the driver
+//!   builds per-machine task cells on its stack, publishes a single
+//!   lifetime-erased job pointer to every worker, and finally waits on the
+//!   `(P+1)`-party `epoch_done` barrier.  Workers run the job (the whole
+//!   compute → send → barrier → drain sequence below), store their report
+//!   into their cell, and meet the driver at `epoch_done`.  The barrier is
+//!   what makes the single `unsafe` lifetime erasure sound: no worker can
+//!   touch the job closure or the cells after `epoch_done`, and the driver
+//!   does not touch them before it.
+//! * Dropping the cluster hangs up the job channels; workers observe the
+//!   disconnect and exit, and `Drop` joins them.
+//!
+//! ## One superstep (inside the job)
+//!
+//! 1. all P workers rendezvous on the reusable P-party `comm_barrier`
 //!    (the superstep start line — keeps the per-machine wall-clock
 //!    windows comparable);
 //! 2. each worker runs the superstep closure on *its own* state — the
-//!    scheduler threads each machine's `DistStore` shard, slot store,
-//!    pull-tree nodes etc. through here, so no two threads ever touch the
-//!    same data (shared-nothing by construction, enforced by `&mut`);
+//!    scheduler threads each machine's `DistStore` shard, graph shard,
+//!    slot store, pull-tree nodes etc. through here, so no two threads
+//!    ever touch the same data (shared-nothing by construction, enforced
+//!    by `&mut`);
 //! 3. each worker pushes its outbox payloads into per-destination
 //!    channels (the per-pair edges of the paper's Fig 2 machine model)
 //!    and drops its senders — mpsc sends never block, so the payloads
 //!    are fully buffered before anyone starts reading;
-//! 4. all workers rendezvous on the barrier again (the communication
+//! 4. all workers rendezvous on `comm_barrier` again (the communication
 //!    barrier), then drain their receivers — which never block, because
 //!    every sender hung up before the barrier.  Time spent *waiting* at
 //!    either barrier is deliberately excluded from the per-machine busy
@@ -25,12 +57,11 @@
 //!    restoring exactly the delivery order the simulator uses, so a
 //!    threaded run is bit-identical to a simulated one.
 //!
-//! Workers are spawned per superstep with [`std::thread::scope`]: scoped
-//! spawning is what lets worker closures borrow the scheduler's
-//! stack-local state without `unsafe` lifetime erasure.  The ~10 µs spawn
-//! cost per worker is amortized over the Θ(n/P) work of a superstep; a
-//! persistent pool (which would need boxed closures with erased
-//! lifetimes, or crossbeam) is future work once profiles demand it.
+//! A panic inside a superstep closure is caught on the worker, the P-party
+//! communication barrier is released for the peers (see
+//! [`BarrierOnUnwind`]), the worker still reaches `epoch_done`, and the
+//! driver re-raises the payload — so a poisoned superstep neither
+//! deadlocks the pool nor hides the panic.
 //!
 //! Metrics: the [`Metrics`] mirror is filled with the same ledger the
 //! simulator keeps (per-machine work units, words sent/received, executed
@@ -39,9 +70,17 @@
 //! window and `communication` the slowest machine's send+drain window.
 //! Per-machine cumulative wall-clock is kept separately in
 //! [`ThreadedCluster::compute_ns`] / [`ThreadedCluster::comm_ns`].
+//! The ledger counters (work, words, messages, supersteps, delivery
+//! order) are deterministic — identical across runs and across any
+//! oversubscription of workers to cores; only the nanosecond clocks vary
+//! with the host.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Barrier;
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::bsp::MachineId;
@@ -61,11 +100,11 @@ struct WorkerReport<T> {
 }
 
 /// Releases the communication barrier if a worker unwinds before
-/// reaching it, so a panic in one superstep closure propagates as a
-/// panic (via the scope join) instead of deadlocking the other P-1
-/// workers.  By drop order, the panicking worker's sender clones
-/// (closure captures) drop right after this guard fires, so the released
-/// peers' drains still terminate.
+/// reaching it, so a panic in one superstep closure propagates (via the
+/// epoch protocol) instead of deadlocking the other P-1 workers.  By drop
+/// order, the panicking worker's sender clones (closure captures) drop
+/// right after this guard fires, so the released peers' drains still
+/// terminate.
 struct BarrierOnUnwind<'a> {
     barrier: &'a Barrier,
     armed: bool,
@@ -79,7 +118,39 @@ impl Drop for BarrierOnUnwind<'_> {
     }
 }
 
-/// A real cluster of P worker threads (see module docs).
+/// A lifetime-erased job pointer: the address of the driver's stack-local
+/// superstep closure.  Soundness contract (see module docs): the driver
+/// keeps the closure alive until every worker has passed `epoch_done`,
+/// and workers never dereference the pointer after passing it.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (callable from any thread by shared ref)
+// and the epoch protocol bounds its lifetime as described above.
+unsafe impl Send for Job {}
+
+fn worker_loop(
+    m: MachineId,
+    rx: mpsc::Receiver<Job>,
+    epoch_done: Arc<Barrier>,
+    panics: Arc<Vec<Mutex<Option<Box<dyn Any + Send>>>>>,
+    epochs: Arc<Vec<AtomicU64>>,
+) {
+    // A disconnected channel is the shutdown signal (pool dropped, or the
+    // constructor tearing down a partially-spawned pool).
+    while let Ok(job) = rx.recv() {
+        // SAFETY: see `Job` — the driver guarantees the closure outlives
+        // this dereference (it blocks on `epoch_done` below).
+        let f = unsafe { &*job.0 };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(m))) {
+            *panics[m].lock().unwrap() = Some(payload);
+        }
+        epochs[m].fetch_add(1, Ordering::Relaxed);
+        epoch_done.wait();
+    }
+}
+
+/// A real cluster of P persistent worker threads (see module docs).
 pub struct ThreadedCluster {
     p: usize,
     /// Same ledger as the simulator's; `time` holds measured seconds.
@@ -88,20 +159,122 @@ pub struct ThreadedCluster {
     pub compute_ns: Vec<u64>,
     /// Cumulative per-machine wall-clock spent sending + draining.
     pub comm_ns: Vec<u64>,
-    /// Reusable superstep start barrier (all P workers rendezvous here).
-    barrier: Barrier,
+    /// Reusable P-party barrier: superstep start line + communication
+    /// barrier (workers only; the driver is not a party).
+    comm_barrier: Arc<Barrier>,
+    /// (P+1)-party epoch barrier: the P workers plus the driver meet here
+    /// at the end of every superstep.
+    epoch_done: Arc<Barrier>,
+    /// One job channel per worker; dropping them shuts the pool down.
+    job_txs: Vec<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Per-worker slot for a caught superstep panic payload.
+    panics: Arc<Vec<Mutex<Option<Box<dyn Any + Send>>>>>,
+    /// Per-worker count of executed epochs (pool-lifecycle regression
+    /// tests assert exactly one per superstep).
+    worker_epochs: Arc<Vec<AtomicU64>>,
+    /// Driver-side count of completed epochs.
+    epochs: u64,
 }
 
 impl ThreadedCluster {
+    /// Spawn the pool, panicking with context on failure (tests and
+    /// callers that must not proceed on a partial cluster can use
+    /// [`ThreadedCluster::try_new`] to handle the error instead).
     pub fn new(p: usize) -> Self {
+        Self::try_new(p).unwrap_or_else(|e| {
+            panic!("ThreadedCluster: could not spawn the {p}-worker pool: {e}")
+        })
+    }
+
+    /// Spawn the P-worker pool, returning the spawn error (with every
+    /// already-spawned worker cleanly joined) if the OS refuses a thread.
+    pub fn try_new(p: usize) -> std::io::Result<Self> {
+        Self::try_new_with_stack(p, None)
+    }
+
+    /// Like [`ThreadedCluster::try_new`], with an explicit worker stack
+    /// size.  Mainly a test seam: an impossible stack size (larger than
+    /// the address space) makes the first spawn fail deterministically,
+    /// exercising the partial-spawn teardown path without exhausting real
+    /// process limits.
+    pub fn try_new_with_stack(p: usize, stack_bytes: Option<usize>) -> std::io::Result<Self> {
         assert!(p >= 1, "cluster needs at least one machine");
-        ThreadedCluster {
+        let comm_barrier = Arc::new(Barrier::new(p));
+        let epoch_done = Arc::new(Barrier::new(p + 1));
+        let panics: Arc<Vec<Mutex<Option<Box<dyn Any + Send>>>>> =
+            Arc::new((0..p).map(|_| Mutex::new(None)).collect());
+        let worker_epochs: Arc<Vec<AtomicU64>> =
+            Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
+        let mut job_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for m in 0..p {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let mut builder = std::thread::Builder::new().name(format!("tdorch-worker-{m}"));
+            if let Some(bytes) = stack_bytes {
+                builder = builder.stack_size(bytes);
+            }
+            let epoch_done_w = Arc::clone(&epoch_done);
+            let panics_w = Arc::clone(&panics);
+            let epochs_w = Arc::clone(&worker_epochs);
+            match builder.spawn(move || worker_loop(m, rx, epoch_done_w, panics_w, epochs_w)) {
+                Ok(h) => {
+                    job_txs.push(tx);
+                    handles.push(h);
+                }
+                Err(e) => {
+                    // The m already-spawned workers are parked on their
+                    // job channels and have never touched a barrier:
+                    // hanging up the channels makes them exit, so the
+                    // caller gets an error, never a smaller cluster.
+                    drop(tx);
+                    drop(job_txs);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!("spawned only {m} of {p} worker threads: {e}"),
+                    ));
+                }
+            }
+        }
+        Ok(ThreadedCluster {
             p,
             metrics: Metrics::new(p),
             compute_ns: vec![0; p],
             comm_ns: vec![0; p],
-            barrier: Barrier::new(p),
-        }
+            comm_barrier,
+            epoch_done,
+            job_txs,
+            handles,
+            panics,
+            worker_epochs,
+            epochs: 0,
+        })
+    }
+
+    /// Number of OS threads this cluster has ever spawned — exactly P for
+    /// the pool's whole lifetime, however many supersteps run (the
+    /// acceptance counter for the persistent-pool contract).
+    pub fn pool_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Completed barrier epochs (== supersteps driven through the pool,
+    /// including ledger-empty ones).
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Per-worker executed-epoch counts; every entry equals
+    /// [`ThreadedCluster::epochs`] when no superstep lost or duplicated a
+    /// worker (the pool-regression invariant).
+    pub fn worker_epochs(&self) -> Vec<u64> {
+        self.worker_epochs
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Total busy wall-clock of machine `m` so far, in nanoseconds.
@@ -120,11 +293,42 @@ impl ThreadedCluster {
         (0..self.p).map(|m| self.busy_ns(m) as f64 / 1e6).collect()
     }
 
+    /// Reset the ledger (the pool and its epoch counters stay).
     pub fn reset_metrics(&mut self) {
         self.metrics = Metrics::new(self.p);
         self.compute_ns.fill(0);
         self.comm_ns.fill(0);
     }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        // Hang up the job channels; parked workers see the disconnect and
+        // exit their loop.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            // A worker that panicked *outside* a job (impossible today)
+            // must not turn Drop into a double panic.
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-machine cell for one epoch: input taken by the worker at job
+/// start, report stored at job end.  The `Mutex` exists only to make the
+/// shared cell vector `Sync` — each cell is touched by exactly one
+/// worker, then by the driver after `epoch_done`, so the lock is never
+/// contended.
+struct Cell<'a, St, Tin, Tout> {
+    input: Option<CellIn<'a, St, Tin, Tout>>,
+    report: Option<WorkerReport<Tout>>,
+}
+
+struct CellIn<'a, St, Tin, Tout> {
+    st: &'a mut St,
+    inbox: Vec<Tin>,
+    txs: Vec<mpsc::Sender<(u32, u32, Tout)>>,
+    rx: mpsc::Receiver<(u32, u32, Tout)>,
 }
 
 impl Substrate for ThreadedCluster {
@@ -151,7 +355,9 @@ impl Substrate for ThreadedCluster {
         assert_eq!(inboxes.len(), p, "inboxes must have one entry per machine");
 
         // One channel per destination machine; every worker holds a clone
-        // of every sender, giving P*P logical point-to-point edges.
+        // of every sender, giving P*P logical point-to-point edges.  The
+        // channels are per-epoch because the payload type is; the worker
+        // threads are not — that is the persistent-pool contract.
         let mut txs = Vec::with_capacity(p);
         let mut rxs = Vec::with_capacity(p);
         for _ in 0..p {
@@ -163,97 +369,133 @@ impl Substrate for ThreadedCluster {
             (0..p).map(|_| txs.clone()).collect();
         drop(txs); // workers' clones are now the only senders
 
+        let cells: Vec<Mutex<Cell<'_, St, Tin, Tout>>> = state
+            .iter_mut()
+            .zip(inboxes)
+            .zip(worker_txs.into_iter().zip(rxs))
+            .map(|((st, inbox), (txs, rx))| {
+                Mutex::new(Cell {
+                    input: Some(CellIn { st, inbox, txs, rx }),
+                    report: None,
+                })
+            })
+            .collect();
+
         let f = &f;
         let words = &words;
-        let barrier = &self.barrier;
+        let comm_barrier: &Barrier = &self.comm_barrier;
+        let cells_ref = &cells;
 
-        let reports: Vec<WorkerReport<Tout>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(p);
-            let workers = state
-                .iter_mut()
-                .zip(inboxes)
-                .zip(worker_txs.into_iter().zip(rxs))
-                .enumerate();
-            for (m, ((st, inbox), (txs, rx))) in workers {
-                let spawned = std::thread::Builder::new()
-                    .name(format!("tdorch-worker-{m}"))
-                    .spawn_scoped(scope, move || {
-                    barrier.wait(); // superstep start line
-                    let mut comm_guard = BarrierOnUnwind { barrier, armed: true };
-                    let t0 = Instant::now();
-                    let mut acct = MachineAcct::default();
-                    let outbox = f(m, st, inbox, &mut acct);
-                    let compute_ns = t0.elapsed().as_nanos() as u64;
+        // The per-epoch job: machine m's full superstep.  Runs on worker
+        // thread m; borrows this stack frame (cells, f, words) — sound
+        // because the driver blocks on `epoch_done` below before touching
+        // or dropping any of it.
+        let job = move |m: usize| {
+            let mut cell = cells_ref[m].lock().unwrap();
+            let CellIn { st, inbox, txs, rx } =
+                cell.input.take().expect("epoch cell already consumed");
+            comm_barrier.wait(); // superstep start line
+            let mut comm_guard = BarrierOnUnwind { barrier: comm_barrier, armed: true };
+            let t0 = Instant::now();
+            let mut acct = MachineAcct::default();
+            let outbox = f(m, st, inbox, &mut acct);
+            let compute_ns = t0.elapsed().as_nanos() as u64;
 
-                    let t1 = Instant::now();
-                    let mut sent_words = 0u64;
-                    let mut sent_msgs = 0u64;
-                    for (i, (to, payload)) in outbox.into_iter().enumerate() {
-                        debug_assert!(to < p, "destination {to} out of range");
-                        if to != m {
-                            // Self-sends are free, as in the simulator.
-                            sent_words += words(&payload);
-                            sent_msgs += 1;
-                        }
-                        txs[to]
-                            .send((m as u32, i as u32, payload))
-                            .expect("peer receiver dropped mid-superstep");
-                    }
-                    drop(txs);
-                    let send_ns = t1.elapsed().as_nanos() as u64;
-                    // Communication barrier: once every worker passes this
-                    // line, every sender clone has been dropped, so the
-                    // drain below never blocks.  The wait itself is idle
-                    // time and stays OFF the busy clocks — an early
-                    // finisher must not absorb the slowest machine's
-                    // window, or load imbalance would vanish from the
-                    // per-machine busy table.
-                    comm_guard.armed = false;
-                    barrier.wait();
-                    let t2 = Instant::now();
-                    let mut inbox: Vec<(u32, u32, Tout)> = rx.iter().collect();
-                    inbox.sort_unstable_by_key(|&(sender, idx, _)| (sender, idx));
-                    let mut recv_words = 0u64;
-                    for (sender, _, payload) in &inbox {
-                        if *sender as usize != m {
-                            recv_words += words(payload);
-                        }
-                    }
-                    let comm_ns = send_ns + t2.elapsed().as_nanos() as u64;
-                    WorkerReport {
-                        acct,
-                        inbox: inbox.into_iter().map(|(_, _, payload)| payload).collect(),
-                        sent_words,
-                        recv_words,
-                        sent_msgs,
-                        compute_ns,
-                        comm_ns,
-                    }
-                });
-                match spawned {
-                    Ok(h) => handles.push(h),
-                    Err(e) => {
-                        // Earlier workers are already parked at the start
-                        // barrier and can never be released (std Barrier
-                        // has no poisoning), so unwinding here would trade
-                        // a clear error for a permanent hang: fail fast.
-                        eprintln!("fatal: could not spawn worker thread {m} of {p}: {e}");
-                        std::process::abort();
-                    }
+            let t1 = Instant::now();
+            let mut sent_words = 0u64;
+            let mut sent_msgs = 0u64;
+            for (i, (to, payload)) in outbox.into_iter().enumerate() {
+                debug_assert!(to < p, "destination {to} out of range");
+                if to != m {
+                    // Self-sends are free, as in the simulator.
+                    sent_words += words(&payload);
+                    sent_msgs += 1;
+                }
+                txs[to]
+                    .send((m as u32, i as u32, payload))
+                    .expect("peer receiver dropped mid-superstep");
+            }
+            drop(txs);
+            let send_ns = t1.elapsed().as_nanos() as u64;
+            // Communication barrier: once every worker passes this line,
+            // every sender clone has been dropped, so the drain below
+            // never blocks.  The wait itself is idle time and stays OFF
+            // the busy clocks — an early finisher must not absorb the
+            // slowest machine's window, or load imbalance would vanish
+            // from the per-machine busy table.
+            comm_guard.armed = false;
+            comm_barrier.wait();
+            let t2 = Instant::now();
+            let mut inbox: Vec<(u32, u32, Tout)> = rx.iter().collect();
+            inbox.sort_unstable_by_key(|&(sender, idx, _)| (sender, idx));
+            let mut recv_words = 0u64;
+            for (sender, _, payload) in &inbox {
+                if *sender as usize != m {
+                    recv_words += words(payload);
                 }
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("worker thread panicked"))
-                .collect()
+            let comm_ns = send_ns + t2.elapsed().as_nanos() as u64;
+            cell.report = Some(WorkerReport {
+                acct,
+                inbox: inbox.into_iter().map(|(_, _, payload)| payload).collect(),
+                sent_words,
+                recv_words,
+                sent_msgs,
+                compute_ns,
+                comm_ns,
+            });
+        };
+
+        let job_ref: &(dyn Fn(usize) + Sync) = &job;
+        // SAFETY: erases the stack lifetime of `job`.  Sound because (a)
+        // every worker dereferences the pointer only between `recv()` and
+        // its `epoch_done.wait()`, and (b) on every path below the driver
+        // either parks on the same `epoch_done` barrier before
+        // `job`/`cells` can drop, or aborts the process (failed publish)
+        // without unwinding past them.
+        let raw = Job(unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync + '_),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(job_ref)
         });
+        for (m, tx) in self.job_txs.iter().enumerate() {
+            if tx.send(raw).is_err() {
+                // A worker's recv loop has exited — the pool invariant is
+                // already broken, and the workers before `m` hold the raw
+                // job pointer: unwinding here would free the stack-local
+                // closure (and the `&mut` state in `cells`) under them
+                // while they park forever at the P-party comm barrier.
+                // There is no safe continuation; fail fast.
+                eprintln!("fatal: worker pool thread {m} of {p} exited before the epoch");
+                std::process::abort();
+            }
+        }
+        self.epoch_done.wait(); // the (P+1)-th party: epoch complete
+        self.epochs += 1;
+
+        // All workers are parked on their job channels again; the cells
+        // are exclusively the driver's from here on.  Drain EVERY panic
+        // slot before rethrowing: if two machines panicked in this epoch,
+        // leaving the second payload behind would spuriously fail the
+        // next (clean) superstep on this pool.
+        let mut first_panic = None;
+        for (m, slot) in self.panics.iter().enumerate() {
+            if let Some(payload) = slot.lock().unwrap().take() {
+                eprintln!("worker thread {m} panicked inside a superstep closure");
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
+        }
 
         // Fold the reports into the metrics mirror (driver thread).
         let mut next = Vec::with_capacity(p);
         let mut dirty = false;
         let mut max_compute_ns = 0u64;
         let mut max_comm_ns = 0u64;
-        for (m, report) in reports.into_iter().enumerate() {
+        for (m, cell) in cells.into_iter().enumerate() {
             let WorkerReport {
                 acct,
                 inbox,
@@ -262,7 +504,11 @@ impl Substrate for ThreadedCluster {
                 sent_msgs,
                 compute_ns,
                 comm_ns,
-            } = report;
+            } = cell
+                .into_inner()
+                .unwrap()
+                .report
+                .expect("worker finished the epoch without a report");
             self.metrics.work_by_machine[m] += acct.work_units;
             self.metrics.executed_by_machine[m] += acct.executed_tasks;
             self.metrics.sent_by_machine[m] += sent_words;
@@ -396,5 +642,92 @@ mod tests {
         assert!(tc.max_busy_ms() > 0.0);
         assert_eq!(tc.metrics.supersteps, 1);
         assert!(tc.metrics.time.computation > 0.0);
+    }
+
+    #[test]
+    fn pool_spawns_exactly_p_threads_across_many_supersteps() {
+        let p = 3;
+        let mut tc = ThreadedCluster::new(p);
+        assert_eq!(tc.pool_threads(), p);
+        let mut state = vec![0u64; p];
+        for _ in 0..50 {
+            let _: Vec<Vec<Nothing>> = tc.superstep(
+                &mut state,
+                no_messages(p),
+                |_m, st, _in, _acct| {
+                    *st += 1;
+                    Vec::new()
+                },
+                nothing_words,
+            );
+        }
+        // Still the same P threads: the pool is persistent.
+        assert_eq!(tc.pool_threads(), p);
+        assert_eq!(tc.epochs(), 50);
+        assert_eq!(tc.worker_epochs(), vec![50; p]);
+        assert_eq!(state, vec![50; p]);
+    }
+
+    #[test]
+    fn partial_spawn_fails_closed() {
+        // A worker stack larger than the virtual address space cannot be
+        // mapped, so the spawn fails deterministically and the
+        // constructor must return an error (never a smaller pool).
+        let err = ThreadedCluster::try_new_with_stack(4, Some(usize::MAX / 2));
+        assert!(err.is_err(), "impossible stack size must fail the spawn");
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("of 4 worker threads"), "context lost: {msg}");
+    }
+
+    #[test]
+    fn superstep_panic_propagates_without_deadlock() {
+        let result = std::panic::catch_unwind(|| {
+            let mut tc = ThreadedCluster::new(4);
+            let mut state = vec![(); 4];
+            let _: Vec<Vec<Nothing>> = tc.superstep(
+                &mut state,
+                no_messages(4),
+                |m, _st, _in, _acct| {
+                    if m == 2 {
+                        panic!("boom on machine 2");
+                    }
+                    Vec::new()
+                },
+                nothing_words,
+            );
+        });
+        let payload = result.expect_err("panic must propagate to the driver");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("boom"), "unexpected payload: {msg}");
+    }
+
+    #[test]
+    fn pool_survives_between_differently_typed_supersteps() {
+        // The same pool must serve supersteps with different payload
+        // types (the SPMD graph engine alternates value and contribution
+        // messages within one round).
+        let mut tc = ThreadedCluster::new(2);
+        let mut state = vec![(); 2];
+        let ints = tc.superstep(
+            &mut state,
+            no_messages(2),
+            |m, _st, _in, _acct| vec![((m + 1) % 2, m as u64)],
+            |_| 1,
+        );
+        let strs = tc.superstep(
+            &mut state,
+            ints,
+            |m, _st, inbox, _acct| {
+                inbox
+                    .into_iter()
+                    .map(|x| ((m + 1) % 2, format!("got-{x}")))
+                    .collect::<Vec<(usize, String)>>()
+            },
+            |s: &String| s.len() as u64,
+        );
+        assert_eq!(strs[0], vec!["got-0".to_string()]);
+        assert_eq!(strs[1], vec!["got-1".to_string()]);
+        assert_eq!(tc.epochs(), 2);
+        assert_eq!(tc.worker_epochs(), vec![2, 2]);
     }
 }

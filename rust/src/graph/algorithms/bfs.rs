@@ -1,8 +1,13 @@
-//! Breadth-first search via DISTEDGEMAP (paper Algorithm 2).
+//! Breadth-first search via DISTEDGEMAP (paper Algorithm 2), in both
+//! forms: against the cost-model [`GraphEngine`] and in SPMD form against
+//! the substrate-generic [`SpmdEngine`].
 
+use crate::exec::Substrate;
 use crate::graph::engine::GraphEngine;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
+use crate::MachineId;
 
 /// Returns the hop distance from `src` per vertex (-1 = unreachable).
 pub fn bfs<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
@@ -34,4 +39,59 @@ pub fn bfs<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
         );
     }
     dist
+}
+
+/// Machine-local BFS state: hop distances for the owned vertex range.
+pub struct BfsShard {
+    pub base: Vid,
+    pub dist: Vec<i64>,
+}
+
+impl BfsShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let r = meta.part.range(m);
+        BfsShard { base: r.start, dist: vec![-1; (r.end - r.start) as usize] }
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid) -> usize {
+        (v - self.base) as usize
+    }
+}
+
+/// BFS in SPMD form: identical rounds to [`bfs`], but the per-round hop
+/// count travels as a real message through the substrate, so the same
+/// code runs (bit-identically) on the simulator and the threaded pool.
+pub fn bfs_spmd<B: Substrate>(engine: &mut SpmdEngine<B, BfsShard>, src: Vid) -> Vec<i64> {
+    let owner = engine.meta().part.owner(src);
+    {
+        let st = engine.algo_mut(owner);
+        let i = st.idx(src);
+        st.dist[i] = 0;
+    }
+    engine.set_frontier_single(src);
+    let mut round = 0i64;
+    while engine.frontier_len() > 0 {
+        round += 1;
+        let r = round as f64;
+        engine.edge_map(
+            // The source is on the current frontier, so the candidate
+            // distance is simply this round number (Algorithm 2 line 4).
+            &move |_m, _st: &BfsShard, _u| Some(r),
+            &|sv, _u, _v, _w| Some(sv),
+            // merge: all contributions equal this round; keep one.
+            &|a, _b| a,
+            // write_back: first writer wins (Algorithm 2 lines 6-9).
+            &|st: &mut BfsShard, v, val| {
+                let i = st.idx(v);
+                if st.dist[i] < 0 {
+                    st.dist[i] = val as i64;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    engine.gather(|_m, st| st.dist.clone())
 }

@@ -1,7 +1,12 @@
-//! Connected components by min-label propagation via DISTEDGEMAP.
+//! Connected components by min-label propagation via DISTEDGEMAP, in
+//! cost-model and SPMD form.
 
+use crate::exec::Substrate;
 use crate::graph::engine::GraphEngine;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::subset::DistVertexSubset;
+use crate::graph::Vid;
+use crate::MachineId;
 
 /// Returns, per vertex, the minimum vertex id of its component.
 pub fn cc<E: GraphEngine>(engine: &mut E) -> Vec<u32> {
@@ -30,4 +35,51 @@ pub fn cc<E: GraphEngine>(engine: &mut E) -> Vec<u32> {
         );
     }
     label.into_iter().map(|l| l as u32).collect()
+}
+
+/// Machine-local CC state: component labels for the owned range.
+pub struct CcShard {
+    pub base: Vid,
+    pub label: Vec<f64>,
+}
+
+impl CcShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let r = meta.part.range(m);
+        CcShard { base: r.start, label: (r.start..r.end).map(|v| v as f64).collect() }
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid) -> usize {
+        (v - self.base) as usize
+    }
+}
+
+/// CC in SPMD form: labels travel as real messages and min-fold at the
+/// owners.  Vertex ids are exact in f64, so the fixpoint is bit-identical
+/// to [`cc`] on every substrate and machine count.
+pub fn cc_spmd<B: Substrate>(engine: &mut SpmdEngine<B, CcShard>) -> Vec<u32> {
+    let meta = engine.meta();
+    engine.charge_local((meta.n / meta.p.max(1)) as u64); // init sweep
+    engine.set_frontier_all();
+    while engine.frontier_len() > 0 {
+        engine.edge_map(
+            // f: offer our label to the neighbor.
+            &|_m, st: &CcShard, u| Some(st.label[st.idx(u)]),
+            &|sv, _u, _v, _w| Some(sv),
+            // ⊗: smallest label wins.
+            &|a, b| a.min(b),
+            // ⊙: adopt improvements, stay active while changing.
+            &|st: &mut CcShard, v, val| {
+                let i = st.idx(v);
+                if val < st.label[i] {
+                    st.label[i] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    engine.gather(|_m, st| st.label.iter().map(|l| *l as u32).collect())
 }

@@ -1,6 +1,15 @@
 //! The five paper algorithms (§5, Appendix C) written against
 //! [`GraphEngine::edge_map`] — each a page of user-level code, mirroring
 //! the paper's "BC in fewer than 70 lines" interface-conciseness claim.
+//!
+//! BFS, SSSP, CC and PR additionally ship `*_spmd` variants written
+//! against the substrate-generic [`crate::graph::spmd::SpmdEngine`]:
+//! same rounds, but vertex state is sharded per machine and source
+//! values/contributions travel as real messages, so one implementation
+//! runs bit-identically on the BSP simulator and on the threaded worker
+//! pool (`tests/graph_exec_equivalence.rs`).
+//!
+//! [`GraphEngine::edge_map`]: crate::graph::engine::GraphEngine::edge_map
 
 mod bc;
 mod bfs;
@@ -9,10 +18,10 @@ mod pagerank;
 mod sssp;
 
 pub use bc::bc;
-pub use bfs::bfs;
-pub use cc::cc;
-pub use pagerank::pagerank;
-pub use sssp::sssp;
+pub use bfs::{bfs, bfs_spmd, BfsShard};
+pub use cc::{cc, cc_spmd, CcShard};
+pub use pagerank::{pagerank, pagerank_spmd, PrShard, DAMPING};
+pub use sssp::{sssp, sssp_spmd, SsspShard};
 
 /// Which algorithm — used by the benchmark harness tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -6,8 +6,12 @@
 //! the `spmv_panel` Pallas artifact (alpha·A·x + beta); the simulator
 //! charges it as one work unit per edge.
 
+use crate::exec::Substrate;
 use crate::graph::engine::GraphEngine;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::subset::DistVertexSubset;
+use crate::graph::Vid;
+use crate::MachineId;
 
 pub const DAMPING: f64 = 0.85;
 
@@ -56,4 +60,78 @@ pub fn pagerank<E: GraphEngine>(engine: &mut E, iters: usize) -> Vec<f64> {
         std::mem::swap(&mut st.rank, &mut st.next);
     }
     st.rank
+}
+
+/// Machine-local PR state: rank and next-rank for the owned range.
+pub struct PrShard {
+    pub base: Vid,
+    pub rank: Vec<f64>,
+    pub next: Vec<f64>,
+}
+
+impl PrShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let r = meta.part.range(m);
+        let n_local = (r.end - r.start) as usize;
+        let n = meta.n as f64;
+        PrShard {
+            base: r.start,
+            rank: vec![1.0 / n; n_local],
+            next: vec![(1.0 - DAMPING) / n; n_local],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid) -> usize {
+        (v - self.base) as usize
+    }
+}
+
+/// PageRank in SPMD form: each owner broadcasts `rank[u]/deg(u)` as a
+/// real message (destination-aware in dense mode), contributions ⊕-fold
+/// per destination in (sender, emission-index) order.  Because f64
+/// addition rounds, the fold *grouping* — per block machine, then per
+/// destination tree — is part of the result's bit pattern: runs are
+/// bit-identical across substrates and across repeats at fixed (P,
+/// flags), equal to an ascending-source sequential fold at P=1, and
+/// equal to it only up to rounding for P>1 (see `graph/spmd.rs` docs).
+pub fn pagerank_spmd<B: Substrate>(
+    engine: &mut SpmdEngine<B, PrShard>,
+    iters: usize,
+) -> Vec<f64> {
+    let meta = engine.meta();
+    let n = meta.n;
+    let base = (1.0 - DAMPING) / n as f64;
+    let per_machine = (n / meta.p.max(1)) as u64;
+    engine.charge_local(per_machine); // rank init sweep
+    for _ in 0..iters {
+        // Per-round base reset: O(n/P) on each worker, inside the
+        // substrate, so the threaded busy clocks contain the work the
+        // ledger charges for it.
+        engine.local_step(per_machine, |_m, st| st.next.fill(base));
+        engine.set_frontier_all();
+        let meta_c = std::sync::Arc::clone(&meta);
+        engine.edge_map(
+            // f: share of the source's rank (dangling-free contribution).
+            &move |_m, st: &PrShard, u| {
+                let d = meta_c.out_deg[u as usize];
+                if d == 0 {
+                    None
+                } else {
+                    Some(st.rank[st.idx(u)] / d as f64)
+                }
+            },
+            &|sv, _u, _v, _w| Some(sv),
+            // ⊗: contributions add.
+            &|a, b| a + b,
+            // ⊙: damped update; frontier membership irrelevant (dense).
+            &|st: &mut PrShard, v, agg| {
+                let i = st.idx(v);
+                st.next[i] = base + DAMPING * agg;
+                false
+            },
+        );
+        engine.for_each_algo(|_m, st| std::mem::swap(&mut st.rank, &mut st.next));
+    }
+    engine.gather(|_m, st| st.rank.clone())
 }

@@ -3,9 +3,12 @@
 //! computation AOT-compiled as the `relax_batch` Pallas artifact; the
 //! simulator charges it as one work unit per edge either way.
 
+use crate::exec::Substrate;
 use crate::graph::engine::GraphEngine;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
+use crate::MachineId;
 
 /// Returns the shortest distance from `src` per vertex (f64::INFINITY =
 /// unreachable).  Weights must be non-negative.
@@ -39,4 +42,65 @@ pub fn sssp<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<f64> {
         );
     }
     dist
+}
+
+/// Machine-local SSSP state: tentative distances for the owned range.
+pub struct SsspShard {
+    pub base: Vid,
+    pub dist: Vec<f64>,
+}
+
+impl SsspShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let r = meta.part.range(m);
+        SsspShard { base: r.start, dist: vec![f64::INFINITY; (r.end - r.start) as usize] }
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid) -> usize {
+        (v - self.base) as usize
+    }
+}
+
+/// SSSP in SPMD form: the frontier vertex's tentative distance is
+/// broadcast as a real message (down the source tree in sparse mode) and
+/// the relaxation `min(dv, du + w)` runs at the block machines — the
+/// distributed shape of the same `relax_batch` computation.  `min` is
+/// exact in f64, so the result is bit-identical to [`sssp`] and to any
+/// correct sequential solver, at every machine count, on both substrates.
+pub fn sssp_spmd<B: Substrate>(engine: &mut SpmdEngine<B, SsspShard>, src: Vid) -> Vec<f64> {
+    let owner = engine.meta().part.owner(src);
+    {
+        let st = engine.algo_mut(owner);
+        let i = st.idx(src);
+        st.dist[i] = 0.0;
+    }
+    engine.set_frontier_single(src);
+    // Bellman-Ford settles within n rounds on non-negative weights; the
+    // frontier normally empties long before that.
+    let max_rounds = engine.meta().n as u64 + 1;
+    let mut rounds = 0u64;
+    while engine.frontier_len() > 0 && rounds < max_rounds {
+        rounds += 1;
+        engine.edge_map(
+            // The owner ships the frontier vertex's tentative distance.
+            &|_m, st: &SsspShard, u| Some(st.dist[st.idx(u)]),
+            // Candidate distance through the frontier vertex, computed at
+            // the block machine from the delivered value.
+            &|sv, _u, _v, w| Some(sv + w as f64),
+            // ⊗: keep the shortest candidate.
+            &|a, b| a.min(b),
+            // ⊙: relax; stay active only on improvement.
+            &|st: &mut SsspShard, v, val| {
+                let i = st.idx(v);
+                if val < st.dist[i] {
+                    st.dist[i] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    engine.gather(|_m, st| st.dist.clone())
 }

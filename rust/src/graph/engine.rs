@@ -14,6 +14,14 @@
 //! broadcast) and to return write-backs (up destination trees / direct).
 //! BSP phase separation (all `f` reads happen before any `write_back`
 //! mutation) keeps the simulated semantics equal to the distributed ones.
+//!
+//! This module is the *cost-model* engine behind every paper figure.  Its
+//! SPMD sibling, [`crate::graph::spmd::SpmdEngine`], implements the same
+//! round with machine-private shards and real value-carrying messages
+//! over the [`crate::exec::Substrate`] trait, so it runs unchanged on the
+//! simulator **and** on [`crate::exec::ThreadedCluster`]'s worker pool;
+//! `tests/graph_exec_equivalence.rs` pins the two engines and the two
+//! substrates together.
 
 use crate::bsp::Cluster;
 use crate::det::{det_map, DetMap};
@@ -134,12 +142,14 @@ impl Flags {
 
 /// Fraction divisor for the sparse→dense switch: dense when
 /// Σdeg(U) + |U| > m / DENSE_DIV (Ligra's heuristic, paper §5.1).
-const DENSE_DIV: u64 = 20;
+/// Shared with the SPMD engine ([`crate::graph::spmd`]) so both make the
+/// same mode decision on the same frontier.
+pub(crate) const DENSE_DIV: u64 = 20;
 
 /// Words on the wire for a (vertex, value) pair.
-const VAL_WORDS: u64 = 2;
+pub(crate) const VAL_WORDS: u64 = 2;
 /// Words for a contribution message {v, value, tag}.
-const CONTRIB_WORDS: u64 = 3;
+pub(crate) const CONTRIB_WORDS: u64 = 3;
 
 /// The abstract engine interface the five graph algorithms run against.
 pub trait GraphEngine {
@@ -216,7 +226,9 @@ impl Engine {
         Engine { dg, cluster, flags, label: label.to_string(), eff_work_pct }
     }
 
-    fn effective_pct(flags: &Flags, cost: crate::CostModel) -> u64 {
+    /// Effective local-work multiplier x100 for a flags/cost pair — also
+    /// used by the SPMD engine so both charge identical work units.
+    pub(crate) fn effective_pct(flags: &Flags, cost: crate::CostModel) -> u64 {
         let numa_pct = if flags.numa_oblivious {
             (cost.numa.compute_penalty() * 100.0).round() as u64
         } else {

@@ -63,6 +63,22 @@ pub fn tree_levels(
     fanout: usize,
     p: usize,
 ) -> Vec<Vec<(MachineId, MachineId)>> {
+    tree_levels_impl(key, members, root, fanout, p, false)
+}
+
+/// Shared builder for the two tree variants — one grouping loop, one
+/// hashed-parent formula, so the accounting trees and the value-carrying
+/// relay trees can never drift apart structurally.  `dedup_parents`
+/// collapses duplicate transit parents before the next grouping round
+/// (the relay variant's machine-unique-position invariant).
+fn tree_levels_impl(
+    key: u64,
+    members: &[MachineId],
+    root: MachineId,
+    fanout: usize,
+    p: usize,
+    dedup_parents: bool,
+) -> Vec<Vec<(MachineId, MachineId)>> {
     let fanout = fanout.max(2);
     let mut levels = Vec::new();
     let mut cur: Vec<MachineId> = members.to_vec();
@@ -75,7 +91,9 @@ pub fn tree_levels(
             for &child in group {
                 edges.push((child, parent));
             }
-            next.push(parent);
+            if !dedup_parents || !next.contains(&parent) {
+                next.push(parent);
+            }
         }
         levels.push(edges);
         cur = next;
@@ -87,6 +105,27 @@ pub fn tree_levels(
         levels.push(last);
     }
     levels
+}
+
+/// Like [`tree_levels`], but with duplicate transit parents removed
+/// before each next grouping round, so every machine appears **at most
+/// once per level**.  [`tree_levels`] may hash two groups of one level to
+/// the same parent and then treat that machine as two children of the
+/// next level — harmless when the tree only *accounts* messages (the
+/// cost-model engine), but wrong when the messages carry real partial
+/// aggregates: the duplicated holder would send (and double-count) its
+/// merged value twice.  The SPMD engine therefore walks these levels:
+/// a machine holding a value/partial for the keyed vertex at depth `d`
+/// has exactly one `(machine, parent)` edge in `levels[d]` — or none,
+/// iff it is the root holding the final value.
+pub fn relay_tree_levels(
+    key: u64,
+    members: &[MachineId],
+    root: MachineId,
+    fanout: usize,
+    p: usize,
+) -> Vec<Vec<(MachineId, MachineId)>> {
+    tree_levels_impl(key, members, root, fanout, p, true)
 }
 
 /// Ingest `g` onto `p` machines.  `c` is the tree fanout / hot threshold
@@ -393,5 +432,59 @@ mod tests {
         let levels = tree_levels(9, &members, 0, 2, 16);
         // depth ≤ ceil(log2 16) + 1
         assert!(levels.len() <= 5, "depth {}", levels.len());
+    }
+
+    #[test]
+    fn relay_tree_levels_unique_child_per_level() {
+        // The relay invariant: no machine appears as child twice in one
+        // level (tree_levels does not guarantee this when two groups hash
+        // to the same transit parent).
+        for key in [1u64, 7, 42, 0xD5, 991] {
+            for p in [4usize, 8, 16] {
+                let members: Vec<usize> = (0..p).collect();
+                for root in [0usize, p - 1] {
+                    let levels = relay_tree_levels(key, &members, root, 2, p);
+                    for (d, level) in levels.iter().enumerate() {
+                        let mut children: Vec<usize> =
+                            level.iter().map(|(c, _)| *c).collect();
+                        let n = children.len();
+                        children.sort_unstable();
+                        children.dedup();
+                        assert_eq!(children.len(), n, "dup child at level {d} (key={key})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relay_tree_walk_conserves_partials() {
+        // Simulate the SPMD merge walk: every member starts with value 1;
+        // at level d, each holder with a (m, parent) edge ships its
+        // partial to the parent.  The root must end with exactly
+        // |members| — nothing lost, nothing double-counted.
+        for key in [3u64, 19, 0x5EED] {
+            let p = 16;
+            let members: Vec<usize> = (0..12).collect();
+            let root = 5usize;
+            let levels = relay_tree_levels(key, &members, root, 3, p);
+            let mut holding = vec![0u64; p];
+            for &m in &members {
+                holding[m] += 1;
+            }
+            for level in &levels {
+                let mut incoming = vec![0u64; p];
+                for &(child, parent) in level {
+                    incoming[parent] += holding[child];
+                    holding[child] = 0;
+                }
+                for m in 0..p {
+                    holding[m] += incoming[m];
+                }
+            }
+            assert_eq!(holding[root], members.len() as u64, "key={key}");
+            let stray: u64 = (0..p).filter(|m| *m != root).map(|m| holding[m]).sum();
+            assert_eq!(stray, 0, "partials stranded off-root (key={key})");
+        }
     }
 }

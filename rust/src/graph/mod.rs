@@ -8,8 +8,14 @@
 //!   source/destination communication trees.
 //! * [`subset`] — `DistVertexSubset` (sparse hash-set / dense bitmap).
 //! * [`engine`] — the TDO-GP `DistEdgeMap` engine with sparse-dense
-//!   dual-mode execution and the T1/T2/T3 technique toggles.
-//! * [`algorithms`] — BFS, SSSP, BC, CC, PR over the engine trait.
+//!   dual-mode execution and the T1/T2/T3 technique toggles (cost-model
+//!   backend for the paper figures).
+//! * [`spmd`] — the same `DistEdgeMap` round in SPMD form over
+//!   [`crate::exec::Substrate`]: machine-private shards, real
+//!   value-carrying messages, runs on the simulator *and* on the
+//!   threaded worker pool with bit-identical results.
+//! * [`algorithms`] — BFS, SSSP, BC, CC, PR over the engine trait, plus
+//!   `*_spmd` variants for the substrate-generic engine.
 //! * [`baselines`] — gemini-like, linear-algebra-like, ligra-dist.
 
 pub mod algorithms;
@@ -17,6 +23,7 @@ pub mod baselines;
 pub mod engine;
 pub mod gen;
 pub mod ingest;
+pub mod spmd;
 pub mod subset;
 
 use crate::bsp::MachineId;

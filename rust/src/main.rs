@@ -16,6 +16,8 @@
 //! repro table6  [--seed S]                     big NUMA server (§6.5)
 //! repro exec    [--threads P | --machines P] [--per-machine N]
 //!               [--gamma G] [--seed S]         REAL threaded substrate
+//! repro graph   [--backend sim|threaded] [--threads P | --machines P]
+//!               [--seed S]                     TDO-GP edge_map on the pool
 //! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
@@ -25,6 +27,12 @@
 //! model ties the two counts together, so `--threads` and `--machines`
 //! are synonyms), validates every run against the sequential oracle, and
 //! prints measured per-machine wall-clock.
+//!
+//! `repro graph` runs PageRank and SSSP through the SPMD `DistEdgeMap`
+//! engine on the persistent threaded worker pool, asserts the results
+//! are bit-identical to the BSP-simulator backend of the *same* engine,
+//! and prints the measured per-machine busy table (exit 1 on
+//! divergence).  `--backend sim` skips the threaded leg.
 //!
 //! (CLI is hand-rolled: the offline build has no clap — see Cargo.toml.)
 
@@ -38,6 +46,7 @@ struct Args {
     gamma: f64,
     threads: Option<usize>,
     machines: Option<usize>,
+    backend: String,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -62,6 +71,7 @@ fn parse_args() -> Args {
         gamma: 1.0,
         threads: None,
         machines: None,
+        backend: "threaded".to_string(),
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -73,6 +83,7 @@ fn parse_args() -> Args {
             "--gamma" => args.gamma = parse_flag(&argv, &mut i, "--gamma"),
             "--threads" => args.threads = Some(parse_flag(&argv, &mut i, "--threads")),
             "--machines" => args.machines = Some(parse_flag(&argv, &mut i, "--machines")),
+            "--backend" => args.backend = parse_flag(&argv, &mut i, "--backend"),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -148,6 +159,26 @@ fn smoke() {
     println!("\nsmoke OK");
 }
 
+/// Resolve the worker/machine count shared by the threaded subcommands
+/// (`--threads` and `--machines` are synonyms — one worker per machine).
+fn resolve_p(args: &Args) -> usize {
+    let p = match (args.threads, args.machines) {
+        (Some(t), Some(m)) if t != m => {
+            eprintln!(
+                "--threads {t} and --machines {m} disagree: the shared-nothing \
+                 substrate runs exactly one worker thread per logical machine"
+            );
+            std::process::exit(2);
+        }
+        (t, m) => t.or(m).unwrap_or(8),
+    };
+    if p < 1 {
+        eprintln!("--threads/--machines must be >= 1");
+        std::process::exit(2);
+    }
+    p
+}
+
 fn main() {
     let args = parse_args();
     match args.cmd.as_str() {
@@ -179,26 +210,26 @@ fn main() {
             repro::graphs::table6(args.seed);
         }
         "exec" => {
-            let p = match (args.threads, args.machines) {
-                (Some(t), Some(m)) if t != m => {
-                    eprintln!(
-                        "--threads {t} and --machines {m} disagree: the shared-nothing \
-                         substrate runs exactly one worker thread per logical machine"
-                    );
-                    std::process::exit(2);
-                }
-                (t, m) => t.or(m).unwrap_or(8),
-            };
-            if p < 1 {
-                eprintln!("--threads/--machines must be >= 1");
-                std::process::exit(2);
-            }
+            let p = resolve_p(&args);
             if args.per_machine < 1 {
                 eprintln!("--per-machine must be >= 1");
                 std::process::exit(2);
             }
             let summary = repro::exec::run_exec(p, args.per_machine, args.gamma, args.seed);
             if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
+        "graph" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            if !repro::graphs::run_graph_backend(p, args.seed, &args.backend) {
                 std::process::exit(1);
             }
         }
@@ -216,8 +247,9 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|all|smoke> \
-                 [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P]"
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|graph|all|smoke> \
+                 [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
+                 [--backend sim|threaded]"
             );
             std::process::exit(2);
         }

@@ -1,13 +1,20 @@
 //! Graph-system reproductions: Table 2 (end-to-end), Fig 8 (strong
 //! scaling), Fig 9 (weak scaling), Fig 10 (breakdown), Table 3 (TD-Orch
-//! ablation), Table 4 (technique ablation), Tables 5/6 (NUMA ablations).
+//! ablation), Table 4 (technique ablation), Tables 5/6 (NUMA ablations) —
+//! all on the BSP cost-model simulator — plus `repro graph`, which runs
+//! the SPMD `DistEdgeMap` engine on the REAL threaded worker pool and
+//! validates it bit-for-bit against the simulator backend.
 
-use crate::graph::algorithms::{bc, bfs, cc, pagerank, sssp, Algorithm};
+use crate::exec::ThreadedCluster;
+use crate::graph::algorithms::{
+    bc, bfs, cc, pagerank, pagerank_spmd, sssp, sssp_spmd, Algorithm, PrShard, SsspShard,
+};
 use crate::graph::engine::{Engine, Flags, GraphEngine};
 use crate::graph::gen::{self, Dataset};
+use crate::graph::spmd::SpmdEngine;
 use crate::graph::Graph;
 use crate::metrics::Breakdown;
-use crate::CostModel;
+use crate::{Cluster, CostModel, Substrate};
 
 use super::{fmt_s, geomean, TablePrinter};
 
@@ -337,6 +344,113 @@ pub fn table6(seed: u64) -> Vec<(String, String, f64)> {
     }
     println!();
     rows
+}
+
+/// One algorithm's leg of `repro graph`: run the SPMD engine on a
+/// substrate and return the result bits plus, for the threaded backend,
+/// the per-machine busy clocks.
+fn spmd_pr<B: Substrate>(sub: B, g: &Graph) -> (Vec<f64>, B) {
+    let mut e = SpmdEngine::tdo_gp(sub, g, CostModel::paper_cluster(), PrShard::new);
+    let rank = pagerank_spmd(&mut e, PR_ITERS);
+    (rank, e.into_sub())
+}
+
+fn spmd_sssp<B: Substrate>(sub: B, g: &Graph) -> (Vec<f64>, B) {
+    let mut e = SpmdEngine::tdo_gp(sub, g, CostModel::paper_cluster(), SsspShard::new);
+    let d = sssp_spmd(&mut e, 0);
+    (d, e.into_sub())
+}
+
+/// Bit-exact f64 slice equality — the comparison the cross-backend
+/// determinism contract is stated in (shared with
+/// `benches/graph_wallclock.rs`).
+pub fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// `repro graph` — TDO-GP's `DistEdgeMap` on the chosen backend.
+///
+/// `backend` is `"sim"` (cost-model simulator only) or `"threaded"`
+/// (default): run PageRank and SSSP through the *same* SPMD engine on
+/// both backends, assert the threaded results are bit-identical to the
+/// simulated ones, and report measured per-machine busy wall-clock from
+/// the persistent worker pool.  Returns overall validity (the process
+/// exit code mirrors it).
+pub fn run_graph_backend(p: usize, seed: u64, backend: &str) -> bool {
+    assert!(p >= 1, "need at least one machine");
+    let g = gen::barabasi_albert(20_000, 6, seed);
+    println!(
+        "\n## repro graph — TDO-GP edge_map, SPMD engine: BA graph n={} m={}, P={p}, \
+         seed {seed}, backend {backend}\n",
+        g.n,
+        g.m()
+    );
+
+    let (pr_sim, sim_pr) = spmd_pr(Cluster::new(p, CostModel::paper_cluster()), &g);
+    let (ss_sim, sim_ss) = spmd_sssp(Cluster::new(p, CostModel::paper_cluster()), &g);
+    println!(
+        "simulator: PR({PR_ITERS} iters) sim {:.4}s over {} supersteps; SSSP sim {:.4}s over {} supersteps",
+        sim_pr.metrics.sim_seconds(),
+        sim_pr.metrics.supersteps,
+        sim_ss.metrics.sim_seconds(),
+        sim_ss.metrics.supersteps,
+    );
+
+    if backend == "sim" {
+        println!("\ngraph OK (simulator only)");
+        return true;
+    }
+
+    // ONE pool serves both algorithms: PR runs, the cluster is taken
+    // back, its ledger snapshotted and reset, and SSSP reuses the same
+    // P parked workers — so the thread count printed below is the whole
+    // run's thread count, which is the persistent-pool contract.
+    let (pr_thr, mut tc) = spmd_pr(ThreadedCluster::new(p), &g);
+    let pr_busy = tc.busy_ms_by_machine();
+    let pr_max = tc.max_busy_ms();
+    let pr_imb = tc.metrics.work_imbalance();
+    let pr_epochs = tc.epochs();
+    tc.reset_metrics();
+    let (ss_thr, tc) = spmd_sssp(tc, &g);
+    let ss_busy = tc.busy_ms_by_machine();
+    let pr_ok = bits_equal(&pr_thr, &pr_sim);
+    let ss_ok = bits_equal(&ss_thr, &ss_sim);
+    println!(
+        "threaded == simulator (bit-identical): PR {}  SSSP {}",
+        if pr_ok { "PASS" } else { "FAIL" },
+        if ss_ok { "PASS" } else { "FAIL" },
+    );
+    println!(
+        "worker pool: {} threads total, reused across PR ({} epochs) and SSSP ({} epochs) \
+         — spawned once per run",
+        tc.pool_threads(),
+        pr_epochs,
+        tc.epochs() - pr_epochs,
+    );
+
+    println!("\nper-machine busy wall-clock (ms), one pooled OS thread per machine:");
+    let t = TablePrinter::new(&["machine", "PR", "SSSP"], &[7, 10, 10]);
+    for m in 0..p {
+        t.row(&[
+            m.to_string(),
+            format!("{:.2}", pr_busy[m]),
+            format!("{:.2}", ss_busy[m]),
+        ]);
+    }
+    println!(
+        "\nmax-loaded machine: PR {:.2} ms  SSSP {:.2} ms;  work imbalance(max/mean): PR {:.2}  SSSP {:.2}",
+        pr_max,
+        tc.max_busy_ms(),
+        pr_imb,
+        tc.metrics.work_imbalance(),
+    );
+
+    let all_valid = pr_ok && ss_ok;
+    println!(
+        "\ngraph {}",
+        if all_valid { "OK" } else { "FAILED (threaded diverged from simulator)" }
+    );
+    all_valid
 }
 
 #[cfg(test)]

@@ -4,29 +4,18 @@
 //! only in cost structure).
 
 mod common;
+mod ref_util;
 
+use ref_util::bfs_ref;
 use tdorch::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
 use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
 use tdorch::graph::engine::{Engine, GraphEngine};
 use tdorch::graph::{gen, Graph, Vid};
 use tdorch::CostModel;
 
-// ---------- references ----------
-
-fn bfs_ref(g: &Graph, src: Vid) -> Vec<i64> {
-    let mut dist = vec![-1i64; g.n];
-    dist[src as usize] = 0;
-    let mut q = std::collections::VecDeque::from([src]);
-    while let Some(u) = q.pop_front() {
-        for (v, _) in g.neighbors(u) {
-            if dist[*v as usize] < 0 {
-                dist[*v as usize] = dist[u as usize] + 1;
-                q.push_back(*v);
-            }
-        }
-    }
-    dist
-}
+// ---------- references (BFS shared via ref_util; SSSP/CC below are
+// deliberately different algorithms from the equivalence suite's
+// label-correcting oracles — diverse oracles catch more) ----------
 
 fn sssp_ref(g: &Graph, src: Vid) -> Vec<f64> {
     // Dijkstra with a binary heap.

@@ -1,0 +1,331 @@
+//! Cross-backend equivalence for the SPMD TDO-GP engine: for each
+//! algorithm in {PageRank, BFS, SSSP, CC} × engine flags in {TDO-GP,
+//! direct/gemini-like, per-edge/ligra-dist} × P ∈ {1, 2, 8}, the
+//! *threaded* backend (persistent worker pool, real channels) must be
+//! **bit-identical** to the BSP *simulator*, and both must match a
+//! single-machine reference (mirrors `tests/exec_equivalence.rs`).
+//!
+//! The reference comparison has two strengths, per the determinism
+//! contract in `src/graph/spmd.rs`:
+//!
+//! * BFS, SSSP, CC merge with `min`/first-writer — exact in f64 — so
+//!   every (flags, P) cell is bit-identical to the sequential reference.
+//! * PageRank merges with `+`, which rounds, so the fold *grouping* is
+//!   part of the bits: P=1 is bit-identical to a reference folding
+//!   in-edge contributions in ascending source order (that is the P=1
+//!   block-scan order); P>1 regroups the same sums per shard/tree and
+//!   must match the reference to 1e-9 relative — while remaining
+//!   bit-identical *across backends*, which is the claim under test.
+//!
+//! Also here: the determinism property for oversubscribed pools (two
+//! threaded runs at P=16 — more workers than CI cores — produce
+//! identical ledgers and bits) and the persistent-pool regression
+//! (exactly one barrier epoch per superstep, at most P threads ever).
+
+mod ref_util;
+
+use ref_util::bfs_ref;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::algorithms::{
+    bfs_spmd, cc_spmd, pagerank_spmd, sssp, sssp_spmd, BfsShard, CcShard, PrShard, SsspShard,
+    DAMPING,
+};
+use tdorch::graph::engine::{Engine, Flags};
+use tdorch::graph::gen;
+use tdorch::graph::spmd::{Placement, SpmdEngine};
+use tdorch::graph::{Graph, Vid};
+use tdorch::{Cluster, CostModel, Substrate};
+
+const PS: [usize; 3] = [1, 2, 8];
+const PR_ITERS: usize = 5;
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+/// The engine variants under test: TDO-GP and the two "direct" baseline
+/// shapes (pre-merged direct fan-in, and per-edge messages).
+fn variants() -> [(&'static str, Flags, Placement); 3] {
+    [
+        ("tdo-gp", Flags::tdo_gp(), Placement::Spread),
+        ("direct", Flags::gemini_like(), Placement::AtOwner),
+        ("per-edge", Flags::ligra_dist(), Placement::AtOwner),
+    ]
+}
+
+// ---- sequential references (BFS is shared via `ref_util`; SSSP/CC/PR
+// are deliberately *different* algorithms from `graph_algorithms.rs`'s
+// Dijkstra/union-find oracles — diverse oracles, and f64 evaluation
+// order here is part of the bit-exactness argument) ----
+
+/// Label-correcting SSSP.  The final value per vertex is the `min` over
+/// all path sums (each computed source-to-vertex left to right), which is
+/// evaluation-order independent — hence bit-comparable to the engines.
+fn sssp_ref(g: &Graph, src: Vid) -> Vec<f64> {
+    let mut dist = vec![f64::INFINITY; g.n];
+    dist[src as usize] = 0.0;
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for u in 0..g.n as Vid {
+            if !dist[u as usize].is_finite() {
+                continue;
+            }
+            for (v, w) in g.neighbors(u) {
+                let cand = dist[u as usize] + *w as f64;
+                if cand < dist[*v as usize] {
+                    dist[*v as usize] = cand;
+                    changed = true;
+                }
+            }
+        }
+    }
+    dist
+}
+
+fn cc_ref(g: &Graph) -> Vec<u32> {
+    let mut label: Vec<u32> = (0..g.n as u32).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for u in 0..g.n as Vid {
+            for (v, _) in g.neighbors(u) {
+                let l = label[u as usize];
+                if l < label[*v as usize] {
+                    label[*v as usize] = l;
+                    changed = true;
+                }
+            }
+        }
+    }
+    label
+}
+
+/// PageRank folding each vertex's in-contributions in ascending source
+/// order — the exact order a P=1 block scan produces.
+fn pr_ref(g: &Graph, iters: usize) -> Vec<f64> {
+    let n = g.n;
+    let base = (1.0 - DAMPING) / n as f64;
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut agg: Vec<Option<f64>> = vec![None; n];
+        for u in 0..n as Vid {
+            let d = g.out_degree(u);
+            if d == 0 {
+                continue;
+            }
+            let share = rank[u as usize] / d as f64;
+            for (v, _) in g.neighbors(u) {
+                let slot = &mut agg[*v as usize];
+                *slot = Some(match *slot {
+                    Some(a) => a + share,
+                    None => share,
+                });
+            }
+        }
+        rank = agg
+            .into_iter()
+            .map(|a| match a {
+                Some(a) => base + DAMPING * a,
+                None => base,
+            })
+            .collect();
+    }
+    rank
+}
+
+// ---- engine runners, generic over the substrate ----
+
+fn run_bfs<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<i64> {
+    let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "bfs", BfsShard::new);
+    bfs_spmd(&mut e, 0)
+}
+
+fn run_sssp<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<f64> {
+    let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "sssp", SsspShard::new);
+    sssp_spmd(&mut e, 0)
+}
+
+fn run_cc<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<u32> {
+    let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "cc", CcShard::new);
+    cc_spmd(&mut e)
+}
+
+fn run_pr<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<f64> {
+    let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "pr", PrShard::new);
+    pagerank_spmd(&mut e, PR_ITERS)
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], msg: &str) {
+    assert_eq!(a.len(), b.len(), "{msg}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{msg}: vertex {i}: {x} vs {y}");
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64], rel: f64, msg: &str) {
+    assert_eq!(a.len(), b.len(), "{msg}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1e-30);
+        assert!(
+            (x - y).abs() / scale < rel,
+            "{msg}: vertex {i}: {x} vs {y} (rel {})",
+            (x - y).abs() / scale
+        );
+    }
+}
+
+#[test]
+fn bfs_threaded_bitwise_equals_simulator_and_reference() {
+    let g = gen::barabasi_albert(700, 5, 42);
+    let expected = bfs_ref(&g, 0);
+    for (label, flags, pl) in variants() {
+        for p in PS {
+            let sim = run_bfs(Cluster::new(p, cost()), &g, flags, pl);
+            let thr = run_bfs(ThreadedCluster::new(p), &g, flags, pl);
+            assert_eq!(sim, expected, "bfs/{label} p={p}: simulator != reference");
+            assert_eq!(thr, sim, "bfs/{label} p={p}: threaded != simulator");
+        }
+    }
+}
+
+#[test]
+fn sssp_threaded_bitwise_equals_simulator_and_reference() {
+    let g = gen::barabasi_albert(700, 5, 42);
+    let expected = sssp_ref(&g, 0);
+    for (label, flags, pl) in variants() {
+        for p in PS {
+            let sim = run_sssp(Cluster::new(p, cost()), &g, flags, pl);
+            let thr = run_sssp(ThreadedCluster::new(p), &g, flags, pl);
+            assert_bits_eq(&sim, &expected, &format!("sssp/{label} p={p} sim vs ref"));
+            assert_bits_eq(&thr, &sim, &format!("sssp/{label} p={p} thr vs sim"));
+        }
+    }
+}
+
+#[test]
+fn cc_threaded_bitwise_equals_simulator_and_reference() {
+    // community_ring has several dense clusters bridged sparsely — a
+    // harder label-propagation workload than one giant component.
+    let g = gen::community_ring(600, 6, 8, 42);
+    let expected = cc_ref(&g);
+    for (label, flags, pl) in variants() {
+        for p in PS {
+            let sim = run_cc(Cluster::new(p, cost()), &g, flags, pl);
+            let thr = run_cc(ThreadedCluster::new(p), &g, flags, pl);
+            assert_eq!(sim, expected, "cc/{label} p={p}: simulator != reference");
+            assert_eq!(thr, sim, "cc/{label} p={p}: threaded != simulator");
+        }
+    }
+}
+
+#[test]
+fn pagerank_threaded_bitwise_equals_simulator() {
+    let g = gen::barabasi_albert(700, 5, 42);
+    let expected = pr_ref(&g, PR_ITERS);
+    for (label, flags, pl) in variants() {
+        for p in PS {
+            let sim = run_pr(Cluster::new(p, cost()), &g, flags, pl);
+            let thr = run_pr(ThreadedCluster::new(p), &g, flags, pl);
+            // The headline claim: real threads == simulator, bit for bit.
+            assert_bits_eq(&thr, &sim, &format!("pr/{label} p={p} thr vs sim"));
+            if p == 1 {
+                // P=1 block order IS ascending-source order: exact.
+                assert_bits_eq(&sim, &expected, &format!("pr/{label} p=1 sim vs ref"));
+            } else {
+                // P>1 regroups the same f64 sums: rounding-close only.
+                assert_close(&sim, &expected, 1e-9, &format!("pr/{label} p={p} sim vs ref"));
+            }
+        }
+    }
+}
+
+#[test]
+fn spmd_sssp_matches_cost_model_engine() {
+    // The SPMD engine and the legacy cost-model engine share ingestion
+    // and an exact merge operator, so their SSSP answers are identical.
+    let g = gen::barabasi_albert(900, 5, 7);
+    let mut legacy = Engine::tdo_gp(&g, 8, cost());
+    let expected = sssp(&mut legacy, 0);
+    let got = run_sssp(Cluster::new(8, cost()), &g, Flags::tdo_gp(), Placement::Spread);
+    assert_bits_eq(&got, &expected, "spmd vs cost-model engine");
+}
+
+#[test]
+fn oversubscribed_threaded_runs_are_deterministic() {
+    // P=16 workers on a small CI box is heavily oversubscribed; the
+    // schedule varies wildly between runs, but the results AND the whole
+    // accounting ledger (work, bytes, messages, supersteps, per-machine
+    // orderings) must not.
+    let g = gen::barabasi_albert(500, 5, 9);
+    let run = || {
+        let mut e = SpmdEngine::tdo_gp(ThreadedCluster::new(16), &g, cost(), PrShard::new);
+        let rank = pagerank_spmd(&mut e, PR_ITERS);
+        // (clone: ThreadedCluster has a Drop impl that joins the pool)
+        let ledger = e.sub().metrics.clone();
+        (rank, ledger)
+    };
+    let (rank_a, m_a) = run();
+    let (rank_b, m_b) = run();
+    assert_bits_eq(&rank_a, &rank_b, "oversubscribed rank bits");
+    assert_eq!(m_a.work_by_machine, m_b.work_by_machine, "work ledger");
+    assert_eq!(m_a.sent_by_machine, m_b.sent_by_machine, "sent-bytes ledger");
+    assert_eq!(m_a.recv_by_machine, m_b.recv_by_machine, "recv-bytes ledger");
+    assert_eq!(m_a.total_words, m_b.total_words, "total words");
+    assert_eq!(m_a.total_msgs, m_b.total_msgs, "total msgs");
+    assert_eq!(m_a.supersteps, m_b.supersteps, "superstep count");
+
+    // Same seed ⇒ same ledger also vs the single-threaded simulator run
+    // of the identical engine (the substrate must not leak into the
+    // accounting).
+    let mut sim = SpmdEngine::tdo_gp(Cluster::new(16, cost()), &g, cost(), PrShard::new);
+    let rank_sim = pagerank_spmd(&mut sim, PR_ITERS);
+    assert_bits_eq(&rank_a, &rank_sim, "threaded vs simulator bits");
+    let cm = &sim.sub().metrics;
+    assert_eq!(m_a.work_by_machine, cm.work_by_machine, "work ledger vs simulator");
+}
+
+#[test]
+fn persistent_pool_one_epoch_per_superstep() {
+    // The pool must execute exactly one barrier epoch per superstep on
+    // every worker — no lost or duplicated payload rounds — and never
+    // spawn more than P threads however many supersteps run.
+    let g = gen::barabasi_albert(400, 4, 3);
+    let p = 4;
+    let mut e = SpmdEngine::tdo_gp(ThreadedCluster::new(p), &g, cost(), SsspShard::new);
+    let dist = sssp_spmd(&mut e, 0);
+    assert!(dist.iter().filter(|d| d.is_finite()).count() > 1, "sssp reached nothing");
+    let tc = e.into_sub();
+    assert_eq!(tc.pool_threads(), p, "pool grew beyond P threads");
+    let epochs = tc.epochs();
+    assert!(epochs > 0, "no epochs recorded");
+    assert_eq!(
+        tc.worker_epochs(),
+        vec![epochs; p],
+        "workers disagree on epoch count: a superstep was lost or duplicated"
+    );
+    // Every *accounted* superstep is an epoch (ledger-empty barriers are
+    // epochs too, so epochs ≥ supersteps).
+    assert!(
+        epochs >= tc.metrics.supersteps,
+        "fewer epochs ({epochs}) than accounted supersteps ({})",
+        tc.metrics.supersteps
+    );
+}
+
+#[test]
+fn threaded_spawn_failure_is_loud() {
+    // An impossible worker stack cannot be mapped: the constructor must
+    // fail closed (error, not a smaller pool and not a hang).
+    let err = ThreadedCluster::try_new_with_stack(8, Some(usize::MAX / 2));
+    match err {
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("of 8 worker threads"), "missing context: {msg}");
+        }
+        Ok(tc) => panic!(
+            "spawning with an impossible stack unexpectedly succeeded ({} threads)",
+            tc.pool_threads()
+        ),
+    }
+}

@@ -1,0 +1,31 @@
+//! Shared sequential reference solvers for the integration test crates
+//! (the `benches/bench_util` pattern, for tests).
+//!
+//! Only references that are *verbatim identical* across suites live
+//! here.  The suites deliberately keep their own, algorithmically
+//! different oracles where diversity strengthens the check:
+//! `graph_algorithms.rs` validates SSSP against heap Dijkstra and CC
+//! against union-find, while `graph_exec_equivalence.rs` uses a
+//! label-correcting SSSP and min-label-propagation CC whose f64
+//! evaluation order is part of the bit-exactness argument — collapsing
+//! those into one copy would make the suites validate against a single
+//! (possibly wrong) oracle.
+
+use tdorch::graph::{Graph, Vid};
+
+/// Textbook queue BFS: hop distance from `src` per vertex (-1 =
+/// unreachable).
+pub fn bfs_ref(g: &Graph, src: Vid) -> Vec<i64> {
+    let mut dist = vec![-1i64; g.n];
+    dist[src as usize] = 0;
+    let mut q = std::collections::VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for (v, _) in g.neighbors(u) {
+            if dist[*v as usize] < 0 {
+                dist[*v as usize] = dist[u as usize] + 1;
+                q.push_back(*v);
+            }
+        }
+    }
+    dist
+}

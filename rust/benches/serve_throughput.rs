@@ -1,0 +1,112 @@
+//! Bench: online serving throughput — queries/sec of the mixed
+//! {BFS, SSSP, PR, CC} Zipf stream on a long-lived engine, sim vs
+//! threaded backend.  Engine construction (ingestion, relay-tree
+//! precompute, worker-pool spawn) happens OUTSIDE the timed region; the
+//! timed closure is exactly what a serving process pays per stream:
+//! admission + batching + per-query shard reset + query execution.
+//! `cargo bench --bench serve_throughput`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::engine::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::ingestions;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::workload::{generate_stream, hot_source_order, QueryMix, StreamConfig};
+use tdorch::{Cluster, CostModel};
+
+const QUERIES: usize = 48;
+const ITERS: usize = 3;
+
+fn report_line(label: &str, rep: &ServeReport) {
+    let (s50, _, s99) = rep.service_ms_percentiles();
+    let (w50, _, w99) = rep.wait_tick_percentiles();
+    println!(
+        "    {label}: {:.1} queries/sec over {} served ({} batches); \
+         service p50 {s50:.2} / p99 {s99:.2} ms; wait p50 {w50:.0} / p99 {w99:.0} ticks",
+        rep.queries_per_sec(),
+        rep.served(),
+        rep.batches,
+    );
+}
+
+fn main() {
+    let b = Bench::new("serve_throughput");
+    let g = gen::barabasi_albert(10_000, 6, 7);
+    let cost = CostModel::paper_cluster();
+    let ing0 = ingestions();
+    println!("BA graph n={} m={}, {QUERIES}-query balanced mix, zipf 1.5", g.n, g.m());
+
+    for p in [4usize, 8] {
+        let dg = ingest_once(&g, p, cost, Placement::Spread);
+        let hot = hot_source_order(&dg.out_deg);
+        let stream = generate_stream(
+            StreamConfig { queries: QUERIES, per_tick: 2, zipf_s: 1.5, mix: QueryMix::balanced() },
+            &hot,
+            42,
+        );
+        let cfg = ServeConfig::default();
+
+        let mut sim = Server::new(
+            SpmdEngine::from_ingested(
+                Cluster::new(p, cost),
+                dg.clone(),
+                cost,
+                Flags::tdo_gp(),
+                "serve-sim",
+                QueryShard::new,
+            ),
+            cfg,
+        );
+        let mut last_sim: Option<ServeReport> = None;
+        b.run(&format!("serve-sim-P{p}"), ITERS, || {
+            let rep = sim.run(&stream);
+            let n = rep.served();
+            last_sim = Some(rep);
+            n
+        });
+        report_line("sim", last_sim.as_ref().expect("at least one iteration ran"));
+
+        let mut thr = Server::new(
+            SpmdEngine::from_ingested(
+                ThreadedCluster::new(p),
+                dg,
+                cost,
+                Flags::tdo_gp(),
+                "serve-threaded",
+                QueryShard::new,
+            ),
+            cfg,
+        );
+        let mut last_thr: Option<ServeReport> = None;
+        b.run(&format!("serve-threaded-P{p}"), ITERS, || {
+            let rep = thr.run(&stream);
+            let n = rep.served();
+            last_thr = Some(rep);
+            n
+        });
+        let rep = last_thr.as_ref().expect("at least one iteration ran");
+        report_line("threaded", rep);
+        // Cross-backend spot check on the last iteration's bits (the full
+        // per-query contract lives in tests/serve_equivalence.rs).
+        let sim_rep = last_sim.as_ref().unwrap();
+        for (s, t) in sim_rep.results.iter().zip(&rep.results) {
+            assert_eq!(s.id, t.id, "batch schedules diverged across backends");
+            assert_eq!(s.bits, t.bits, "query {} bits diverged across backends", s.id);
+        }
+        println!(
+            "    pool: {} threads, {} epochs, {} resets over {} streams",
+            thr.engine().sub().pool_threads(),
+            thr.engine().sub().epochs(),
+            thr.engine().resets(),
+            ITERS,
+        );
+    }
+
+    let ingested = ingestions() - ing0;
+    assert_eq!(ingested, 2, "serving must ingest exactly once per machine count");
+    println!("\ningestions: {ingested} (one per machine count, shared by both backends)");
+}

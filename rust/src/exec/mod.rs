@@ -30,7 +30,7 @@
 pub mod apps;
 pub mod threaded;
 
-pub use threaded::ThreadedCluster;
+pub use threaded::{PoolSnapshot, ThreadedCluster};
 
 use crate::bsp::{Cluster, MachineId};
 

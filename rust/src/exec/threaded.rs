@@ -150,6 +150,33 @@ fn worker_loop(
     }
 }
 
+/// Point-in-time counters of a long-lived pool.  The serving layer keeps
+/// one `ThreadedCluster` alive across an entire query stream (the pool is
+/// spawned once, reused by every query via `reset_for_query`), so
+/// per-query accounting is done by snapshotting before/after each
+/// dispatch and diffing with [`PoolSnapshot::since`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolSnapshot {
+    /// Completed barrier epochs (== supersteps driven through the pool).
+    pub epochs: u64,
+    /// Total busy wall-clock across all machines, nanoseconds.
+    pub busy_ns: u64,
+}
+
+impl PoolSnapshot {
+    /// Counters accumulated between `earlier` and `self`.  Saturating:
+    /// `epochs` is monotone for the pool's lifetime, but `busy_ns`
+    /// derives from the busy clocks, which
+    /// [`ThreadedCluster::reset_metrics`] zeroes — a snapshot taken
+    /// before a reset would otherwise underflow the diff.
+    pub fn since(&self, earlier: PoolSnapshot) -> PoolSnapshot {
+        PoolSnapshot {
+            epochs: self.epochs.saturating_sub(earlier.epochs),
+            busy_ns: self.busy_ns.saturating_sub(earlier.busy_ns),
+        }
+    }
+}
+
 /// A real cluster of P persistent worker threads (see module docs).
 pub struct ThreadedCluster {
     p: usize,
@@ -291,6 +318,15 @@ impl ThreadedCluster {
     /// Per-machine busy milliseconds (compute + comm).
     pub fn busy_ms_by_machine(&self) -> Vec<f64> {
         (0..self.p).map(|m| self.busy_ns(m) as f64 / 1e6).collect()
+    }
+
+    /// Current pool counters, for per-query/per-batch accounting on a
+    /// long-lived serving cluster (see [`PoolSnapshot`]).
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            epochs: self.epochs,
+            busy_ns: (0..self.p).map(|m| self.busy_ns(m)).sum(),
+        }
     }
 
     /// Reset the ledger (the pool and its epoch counters stay).
@@ -666,6 +702,36 @@ mod tests {
         assert_eq!(tc.epochs(), 50);
         assert_eq!(tc.worker_epochs(), vec![50; p]);
         assert_eq!(state, vec![50; p]);
+    }
+
+    #[test]
+    fn snapshot_diffs_isolate_per_unit_epochs() {
+        // The serving layer's per-query accounting: snapshot before and
+        // after a unit of work; the diff holds exactly that unit's epochs.
+        let mut tc = ThreadedCluster::new(2);
+        let mut state = vec![(); 2];
+        let s0 = tc.snapshot();
+        assert_eq!(s0.epochs, 0);
+        for _ in 0..3 {
+            let _: Vec<Vec<Nothing>> = tc.superstep(
+                &mut state,
+                no_messages(2),
+                |_m, _st, _in, acct| {
+                    acct.work(1);
+                    Vec::new()
+                },
+                nothing_words,
+            );
+        }
+        let s1 = tc.snapshot();
+        assert_eq!(s1.since(s0).epochs, 3);
+        let _: Vec<Vec<Nothing>> = tc.superstep(
+            &mut state,
+            no_messages(2),
+            |_m, _st, _in, _acct| Vec::new(),
+            nothing_words,
+        );
+        assert_eq!(tc.snapshot().since(s1).epochs, 1, "empty supersteps are epochs too");
     }
 
     #[test]

@@ -9,6 +9,8 @@ use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
+use super::ShardAccess;
+
 /// Returns the hop distance from `src` per vertex (-1 = unreachable).
 pub fn bfs<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
     let part = engine.part().clone();
@@ -49,8 +51,19 @@ pub struct BfsShard {
 
 impl BfsShard {
     pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = BfsShard { base: 0, dist: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query`: restore the
+    /// freshly-constructed state in place (allocation reused across
+    /// queries on the serving path).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
         let r = meta.part.range(m);
-        BfsShard { base: r.start, dist: vec![-1; (r.end - r.start) as usize] }
+        self.base = r.start;
+        self.dist.clear();
+        self.dist.resize((r.end - r.start) as usize, -1);
     }
 
     #[inline]
@@ -62,10 +75,15 @@ impl BfsShard {
 /// BFS in SPMD form: identical rounds to [`bfs`], but the per-round hop
 /// count travels as a real message through the substrate, so the same
 /// code runs (bit-identically) on the simulator and the threaded pool.
-pub fn bfs_spmd<B: Substrate>(engine: &mut SpmdEngine<B, BfsShard>, src: Vid) -> Vec<i64> {
+/// Generic over [`ShardAccess`] so both a dedicated BFS engine and the
+/// serving layer's multi-algorithm engine can call it.
+pub fn bfs_spmd<B: Substrate, AS: Send + ShardAccess<BfsShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    src: Vid,
+) -> Vec<i64> {
     let owner = engine.meta().part.owner(src);
     {
-        let st = engine.algo_mut(owner);
+        let st = engine.algo_mut(owner).shard_mut();
         let i = st.idx(src);
         st.dist[i] = 0;
     }
@@ -77,12 +95,13 @@ pub fn bfs_spmd<B: Substrate>(engine: &mut SpmdEngine<B, BfsShard>, src: Vid) ->
         engine.edge_map(
             // The source is on the current frontier, so the candidate
             // distance is simply this round number (Algorithm 2 line 4).
-            &move |_m, _st: &BfsShard, _u| Some(r),
+            &move |_m, _st: &AS, _u| Some(r),
             &|sv, _u, _v, _w| Some(sv),
             // merge: all contributions equal this round; keep one.
             &|a, _b| a,
             // write_back: first writer wins (Algorithm 2 lines 6-9).
-            &|st: &mut BfsShard, v, val| {
+            &|st: &mut AS, v, val| {
+                let st = st.shard_mut();
                 let i = st.idx(v);
                 if st.dist[i] < 0 {
                     st.dist[i] = val as i64;
@@ -93,5 +112,5 @@ pub fn bfs_spmd<B: Substrate>(engine: &mut SpmdEngine<B, BfsShard>, src: Vid) ->
             },
         );
     }
-    engine.gather(|_m, st| st.dist.clone())
+    engine.gather(|_m, st| st.shard().dist.clone())
 }

@@ -8,6 +8,8 @@ use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
+use super::ShardAccess;
+
 /// Returns, per vertex, the minimum vertex id of its component.
 pub fn cc<E: GraphEngine>(engine: &mut E) -> Vec<u32> {
     let part = engine.part().clone();
@@ -45,8 +47,18 @@ pub struct CcShard {
 
 impl CcShard {
     pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = CcShard { base: 0, label: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query` (in-place,
+    /// allocation reused across queries).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
         let r = meta.part.range(m);
-        CcShard { base: r.start, label: (r.start..r.end).map(|v| v as f64).collect() }
+        self.base = r.start;
+        self.label.clear();
+        self.label.extend((r.start..r.end).map(|v| v as f64));
     }
 
     #[inline]
@@ -58,22 +70,28 @@ impl CcShard {
 /// CC in SPMD form: labels travel as real messages and min-fold at the
 /// owners.  Vertex ids are exact in f64, so the fixpoint is bit-identical
 /// to [`cc`] on every substrate and machine count.
-pub fn cc_spmd<B: Substrate>(engine: &mut SpmdEngine<B, CcShard>) -> Vec<u32> {
+pub fn cc_spmd<B: Substrate, AS: Send + ShardAccess<CcShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+) -> Vec<u32> {
     let meta = engine.meta();
     engine.charge_local((meta.n / meta.p.max(1)) as u64); // init sweep
     engine.set_frontier_all();
     while engine.frontier_len() > 0 {
         engine.edge_map(
             // f: offer our label to the neighbor.
-            &|_m, st: &CcShard, u| Some(st.label[st.idx(u)]),
+            &|_m, st: &AS, u| {
+                let s = st.shard();
+                Some(s.label[s.idx(u)])
+            },
             &|sv, _u, _v, _w| Some(sv),
             // ⊗: smallest label wins.
             &|a, b| a.min(b),
             // ⊙: adopt improvements, stay active while changing.
-            &|st: &mut CcShard, v, val| {
-                let i = st.idx(v);
-                if val < st.label[i] {
-                    st.label[i] = val;
+            &|st: &mut AS, v, val| {
+                let s = st.shard_mut();
+                let i = s.idx(v);
+                if val < s.label[i] {
+                    s.label[i] = val;
                     true
                 } else {
                     false
@@ -81,5 +99,5 @@ pub fn cc_spmd<B: Substrate>(engine: &mut SpmdEngine<B, CcShard>) -> Vec<u32> {
             },
         );
     }
-    engine.gather(|_m, st| st.label.iter().map(|l| *l as u32).collect())
+    engine.gather(|_m, st| st.shard().label.iter().map(|l| *l as u32).collect())
 }

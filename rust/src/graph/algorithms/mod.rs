@@ -23,6 +23,31 @@ pub use cc::{cc, cc_spmd, CcShard};
 pub use pagerank::{pagerank, pagerank_spmd, PrShard, DAMPING};
 pub use sssp::{sssp, sssp_spmd, SsspShard};
 
+/// Projection from an engine's machine-local algorithm state to one
+/// algorithm's shard.  The `*_spmd` runners are generic over this, so
+/// they serve two callers with one implementation: a single-algorithm
+/// engine (`SpmdEngine<B, BfsShard>` — the identity impl below), and the
+/// serving layer's [`crate::serve::QueryShard`], which holds all four
+/// shards so ONE long-lived engine (one ingestion, one worker pool) can
+/// run the whole {BFS, SSSP, PR, CC} query mix, switching algorithms via
+/// `SpmdEngine::reset_for_query` instead of engine reconstruction.
+pub trait ShardAccess<S> {
+    fn shard(&self) -> &S;
+    fn shard_mut(&mut self) -> &mut S;
+}
+
+impl<S> ShardAccess<S> for S {
+    #[inline]
+    fn shard(&self) -> &S {
+        self
+    }
+
+    #[inline]
+    fn shard_mut(&mut self) -> &mut S {
+        self
+    }
+}
+
 /// Which algorithm — used by the benchmark harness tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {

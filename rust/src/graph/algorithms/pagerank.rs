@@ -13,6 +13,8 @@ use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
+use super::ShardAccess;
+
 pub const DAMPING: f64 = 0.85;
 
 struct PrState {
@@ -71,14 +73,22 @@ pub struct PrShard {
 
 impl PrShard {
     pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = PrShard { base: 0, rank: Vec::new(), next: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query` (in-place,
+    /// allocations reused across queries).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
         let r = meta.part.range(m);
         let n_local = (r.end - r.start) as usize;
         let n = meta.n as f64;
-        PrShard {
-            base: r.start,
-            rank: vec![1.0 / n; n_local],
-            next: vec![(1.0 - DAMPING) / n; n_local],
-        }
+        self.base = r.start;
+        self.rank.clear();
+        self.rank.resize(n_local, 1.0 / n);
+        self.next.clear();
+        self.next.resize(n_local, (1.0 - DAMPING) / n);
     }
 
     #[inline]
@@ -95,8 +105,8 @@ impl PrShard {
 /// bit-identical across substrates and across repeats at fixed (P,
 /// flags), equal to an ascending-source sequential fold at P=1, and
 /// equal to it only up to rounding for P>1 (see `graph/spmd.rs` docs).
-pub fn pagerank_spmd<B: Substrate>(
-    engine: &mut SpmdEngine<B, PrShard>,
+pub fn pagerank_spmd<B: Substrate, AS: Send + ShardAccess<PrShard>>(
+    engine: &mut SpmdEngine<B, AS>,
     iters: usize,
 ) -> Vec<f64> {
     let meta = engine.meta();
@@ -108,30 +118,35 @@ pub fn pagerank_spmd<B: Substrate>(
         // Per-round base reset: O(n/P) on each worker, inside the
         // substrate, so the threaded busy clocks contain the work the
         // ledger charges for it.
-        engine.local_step(per_machine, |_m, st| st.next.fill(base));
+        engine.local_step(per_machine, |_m, st: &mut AS| st.shard_mut().next.fill(base));
         engine.set_frontier_all();
         let meta_c = std::sync::Arc::clone(&meta);
         engine.edge_map(
             // f: share of the source's rank (dangling-free contribution).
-            &move |_m, st: &PrShard, u| {
+            &move |_m, st: &AS, u| {
                 let d = meta_c.out_deg[u as usize];
                 if d == 0 {
                     None
                 } else {
-                    Some(st.rank[st.idx(u)] / d as f64)
+                    let s = st.shard();
+                    Some(s.rank[s.idx(u)] / d as f64)
                 }
             },
             &|sv, _u, _v, _w| Some(sv),
             // ⊗: contributions add.
             &|a, b| a + b,
             // ⊙: damped update; frontier membership irrelevant (dense).
-            &|st: &mut PrShard, v, agg| {
-                let i = st.idx(v);
-                st.next[i] = base + DAMPING * agg;
+            &|st: &mut AS, v, agg| {
+                let s = st.shard_mut();
+                let i = s.idx(v);
+                s.next[i] = base + DAMPING * agg;
                 false
             },
         );
-        engine.for_each_algo(|_m, st| std::mem::swap(&mut st.rank, &mut st.next));
+        engine.for_each_algo(|_m, st| {
+            let s = st.shard_mut();
+            std::mem::swap(&mut s.rank, &mut s.next);
+        });
     }
-    engine.gather(|_m, st| st.rank.clone())
+    engine.gather(|_m, st| st.shard().rank.clone())
 }

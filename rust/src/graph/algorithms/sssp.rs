@@ -10,6 +10,8 @@ use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
+use super::ShardAccess;
+
 /// Returns the shortest distance from `src` per vertex (f64::INFINITY =
 /// unreachable).  Weights must be non-negative.
 pub fn sssp<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<f64> {
@@ -52,8 +54,18 @@ pub struct SsspShard {
 
 impl SsspShard {
     pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = SsspShard { base: 0, dist: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query` (in-place,
+    /// allocation reused across queries).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
         let r = meta.part.range(m);
-        SsspShard { base: r.start, dist: vec![f64::INFINITY; (r.end - r.start) as usize] }
+        self.base = r.start;
+        self.dist.clear();
+        self.dist.resize((r.end - r.start) as usize, f64::INFINITY);
     }
 
     #[inline]
@@ -68,10 +80,13 @@ impl SsspShard {
 /// distributed shape of the same `relax_batch` computation.  `min` is
 /// exact in f64, so the result is bit-identical to [`sssp`] and to any
 /// correct sequential solver, at every machine count, on both substrates.
-pub fn sssp_spmd<B: Substrate>(engine: &mut SpmdEngine<B, SsspShard>, src: Vid) -> Vec<f64> {
+pub fn sssp_spmd<B: Substrate, AS: Send + ShardAccess<SsspShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    src: Vid,
+) -> Vec<f64> {
     let owner = engine.meta().part.owner(src);
     {
-        let st = engine.algo_mut(owner);
+        let st = engine.algo_mut(owner).shard_mut();
         let i = st.idx(src);
         st.dist[i] = 0.0;
     }
@@ -84,17 +99,21 @@ pub fn sssp_spmd<B: Substrate>(engine: &mut SpmdEngine<B, SsspShard>, src: Vid) 
         rounds += 1;
         engine.edge_map(
             // The owner ships the frontier vertex's tentative distance.
-            &|_m, st: &SsspShard, u| Some(st.dist[st.idx(u)]),
+            &|_m, st: &AS, u| {
+                let s = st.shard();
+                Some(s.dist[s.idx(u)])
+            },
             // Candidate distance through the frontier vertex, computed at
             // the block machine from the delivered value.
             &|sv, _u, _v, w| Some(sv + w as f64),
             // ⊗: keep the shortest candidate.
             &|a, b| a.min(b),
             // ⊙: relax; stay active only on improvement.
-            &|st: &mut SsspShard, v, val| {
-                let i = st.idx(v);
-                if val < st.dist[i] {
-                    st.dist[i] = val;
+            &|st: &mut AS, v, val| {
+                let s = st.shard_mut();
+                let i = s.idx(v);
+                if val < s.dist[i] {
+                    s.dist[i] = val;
                     true
                 } else {
                     false
@@ -102,5 +121,5 @@ pub fn sssp_spmd<B: Substrate>(engine: &mut SpmdEngine<B, SsspShard>, src: Vid) 
             },
         );
     }
-    engine.gather(|_m, st| st.dist.clone())
+    engine.gather(|_m, st| st.shard().dist.clone())
 }

@@ -9,11 +9,33 @@
 //! its in-edges are the leaves of its *destination tree* (write-back
 //! aggregation) — the persisted meta-task trees of §5.1.
 
+use std::cell::Cell;
+
 use crate::bsp::{Cluster, MachineId};
 use crate::det::{det_map, DetMap};
 use crate::rng::{hash2, hash64};
 
 use super::{Graph, VertexPart, Vid};
+
+thread_local! {
+    /// Per-thread count of full ingestion passes (see [`ingestions`]).
+    static INGESTIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of full ingestion passes ([`ingest`] / [`ingest_at_owner`])
+/// executed on the **calling thread** so far.  This is the serving
+/// layer's regression counter: `repro serve` and `repro graph` assert
+/// the graph was ingested exactly once however many queries ran, and
+/// `SpmdEngine::reset_for_query` is what lets them keep that promise.
+/// Thread-local on purpose — engines ingest on the thread constructing
+/// them, so parallel test runs cannot disturb each other's counts.
+pub fn ingestions() -> u64 {
+    INGESTIONS.with(|c| c.get())
+}
+
+fn note_ingestion() {
+    INGESTIONS.with(|c| c.set(c.get() + 1));
+}
 
 /// One edge block: a contiguous chunk of a vertex's out-edges parked on
 /// one machine.
@@ -132,6 +154,7 @@ pub fn relay_tree_levels(
 /// parameter (the paper's C).  Communication and work of the
 /// preprocessing pass are charged to `cluster`.
 pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
+    note_ingestion();
     let p = cluster.p;
     let part = VertexPart::degree_balanced(g, p);
     let n = g.n;
@@ -264,6 +287,7 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
 /// lives on its source's owner — no transit machines, so hub vertices
 /// concentrate work on one machine.
 pub fn ingest_at_owner(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
+    note_ingestion();
     let p = cluster.p;
     let part = VertexPart::degree_balanced(g, p);
     let n = g.n;

@@ -22,6 +22,12 @@
 //! threaded backend ([`exec::ThreadedCluster`]) — one OS worker thread
 //! per logical machine, channels, a reusable barrier, and measured
 //! per-machine wall-clock.
+//!
+//! Serving ([`serve`]): an online layer that admits a continuous Zipf
+//! query stream ({BFS, SSSP, PR, CC}), batches it deterministically, and
+//! dispatches on a long-lived `SpmdEngine` — one ingestion and one
+//! worker pool per process, queries separated by
+//! `SpmdEngine::reset_for_query`.
 
 pub mod baselines;
 pub mod kvstore;
@@ -36,6 +42,7 @@ pub mod orchestration;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod workload;
 

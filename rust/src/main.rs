@@ -18,6 +18,9 @@
 //!               [--gamma G] [--seed S]         REAL threaded substrate
 //! repro graph   [--backend sim|threaded] [--threads P | --machines P]
 //!               [--seed S]                     TDO-GP edge_map on the pool
+//! repro serve   [--backend sim|threaded] [--threads P] [--queries N]
+//!               [--zipf S] [--batch B] [--seed S]
+//!                                              online Zipf query stream
 //! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
@@ -34,6 +37,13 @@
 //! and prints the measured per-machine busy table (exit 1 on
 //! divergence).  `--backend sim` skips the threaded leg.
 //!
+//! `repro serve` admits an open-loop {BFS,SSSP,PR,CC} query stream with
+//! Zipf-skewed sources, batches it, and serves it on ONE long-lived
+//! engine (graph ingested exactly once — verified by counter), cross
+//! -checking every result bit-for-bit against a single-shot sim
+//! reference and reporting wait/service percentiles plus queries/sec
+//! (exit 1 on any divergence or a second ingestion).
+//!
 //! (CLI is hand-rolled: the offline build has no clap — see Cargo.toml.)
 
 use tdorch::repro;
@@ -47,6 +57,9 @@ struct Args {
     threads: Option<usize>,
     machines: Option<usize>,
     backend: String,
+    queries: usize,
+    zipf: f64,
+    batch: usize,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -72,6 +85,9 @@ fn parse_args() -> Args {
         threads: None,
         machines: None,
         backend: "threaded".to_string(),
+        queries: 64,
+        zipf: 1.5,
+        batch: 8,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -84,6 +100,9 @@ fn parse_args() -> Args {
             "--threads" => args.threads = Some(parse_flag(&argv, &mut i, "--threads")),
             "--machines" => args.machines = Some(parse_flag(&argv, &mut i, "--machines")),
             "--backend" => args.backend = parse_flag(&argv, &mut i, "--backend"),
+            "--queries" => args.queries = parse_flag(&argv, &mut i, "--queries"),
+            "--zipf" => args.zipf = parse_flag(&argv, &mut i, "--zipf"),
+            "--batch" => args.batch = parse_flag(&argv, &mut i, "--batch"),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -233,6 +252,31 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "serve" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            if args.queries < 1 || args.batch < 1 {
+                eprintln!("--queries and --batch must be >= 1");
+                std::process::exit(2);
+            }
+            let summary = repro::serve::run_serve(
+                p,
+                args.queries,
+                args.zipf,
+                args.batch,
+                args.seed,
+                &args.backend,
+            );
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
         "all" => {
             repro::kv::fig5(args.per_machine, args.seed);
             repro::graphs::table2(args.seed);
@@ -247,9 +291,9 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|graph|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|graph|serve|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
-                 [--backend sim|threaded]"
+                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B]"
             );
             std::process::exit(2);
         }

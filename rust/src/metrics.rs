@@ -97,6 +97,43 @@ impl Metrics {
     }
 }
 
+/// Nearest-rank percentile of `samples` (`q` in [0, 1]; q = 0.5 is the
+/// median).  Sorts a copy — the serving layer calls this once per report,
+/// not per query.  Empty input yields NaN (there is no sample to report);
+/// a single sample is every percentile of itself; ties collapse naturally
+/// (every percentile of `[5, 5, 5]` is 5).  NaN *samples* are a caller
+/// bug and panic.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("percentile: NaN sample"));
+    rank_in_sorted(&xs, q)
+}
+
+#[inline]
+fn rank_in_sorted(xs_sorted: &[f64], q: f64) -> f64 {
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * xs_sorted.len() as f64).ceil() as usize;
+    xs_sorted[rank.clamp(1, xs_sorted.len()) - 1]
+}
+
+/// The (p50, p95, p99) triple the serving reports print — one sort,
+/// three rank reads.
+pub fn p50_p95_p99(samples: &[f64]) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("percentile: NaN sample"));
+    (
+        rank_in_sorted(&xs, 0.50),
+        rank_in_sorted(&xs, 0.95),
+        rank_in_sorted(&xs, 0.99),
+    )
+}
+
 /// Summary of one benchmark run, printable as a paper-style table row.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -168,5 +205,47 @@ mod tests {
     fn breakdown_total() {
         let b = Breakdown { communication: 1.0, computation: 2.0, overhead: 0.5 };
         assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_nan() {
+        assert!(percentile(&[], 0.5).is_nan());
+        let (a, b, c) = p50_p95_p99(&[]);
+        assert!(a.is_nan() && b.is_nan() && c.is_nan());
+    }
+
+    #[test]
+    fn percentile_of_single_sample_is_that_sample() {
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.25], q), 7.25, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_of_tied_samples_collapses() {
+        let xs = [5.0, 5.0, 5.0, 5.0];
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&xs, q), 5.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank_on_1_to_100() {
+        // Input deliberately unsorted: percentile sorts internally.
+        let mut xs: Vec<f64> = (1..=100).rev().map(|x| x as f64).collect();
+        xs.swap(3, 77);
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0, "q=0 is the minimum");
+        assert_eq!(percentile(&xs, 1.0), 100.0, "q=1 is the maximum");
+        assert_eq!(p50_p95_p99(&xs), (50.0, 95.0, 99.0));
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_q() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -0.5), 1.0);
+        assert_eq!(percentile(&xs, 1.5), 3.0);
     }
 }

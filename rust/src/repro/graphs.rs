@@ -6,15 +6,15 @@
 //! validates it bit-for-bit against the simulator backend.
 
 use crate::exec::ThreadedCluster;
-use crate::graph::algorithms::{
-    bc, bfs, cc, pagerank, pagerank_spmd, sssp, sssp_spmd, Algorithm, PrShard, SsspShard,
-};
+use crate::graph::algorithms::{bc, bfs, cc, pagerank, pagerank_spmd, sssp, sssp_spmd, Algorithm};
 use crate::graph::engine::{Engine, Flags, GraphEngine};
 use crate::graph::gen::{self, Dataset};
-use crate::graph::spmd::SpmdEngine;
+use crate::graph::ingest::ingestions;
+use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use crate::graph::Graph;
 use crate::metrics::Breakdown;
-use crate::{Cluster, CostModel, Substrate};
+use crate::serve::QueryShard;
+use crate::{Cluster, CostModel};
 
 use super::{fmt_s, geomean, TablePrinter};
 
@@ -346,21 +346,6 @@ pub fn table6(seed: u64) -> Vec<(String, String, f64)> {
     rows
 }
 
-/// One algorithm's leg of `repro graph`: run the SPMD engine on a
-/// substrate and return the result bits plus, for the threaded backend,
-/// the per-machine busy clocks.
-fn spmd_pr<B: Substrate>(sub: B, g: &Graph) -> (Vec<f64>, B) {
-    let mut e = SpmdEngine::tdo_gp(sub, g, CostModel::paper_cluster(), PrShard::new);
-    let rank = pagerank_spmd(&mut e, PR_ITERS);
-    (rank, e.into_sub())
-}
-
-fn spmd_sssp<B: Substrate>(sub: B, g: &Graph) -> (Vec<f64>, B) {
-    let mut e = SpmdEngine::tdo_gp(sub, g, CostModel::paper_cluster(), SsspShard::new);
-    let d = sssp_spmd(&mut e, 0);
-    (d, e.into_sub())
-}
-
 /// Bit-exact f64 slice equality — the comparison the cross-backend
 /// determinism contract is stated in (shared with
 /// `benches/graph_wallclock.rs`).
@@ -374,10 +359,14 @@ pub fn bits_equal(a: &[f64], b: &[f64]) -> bool {
 /// (default): run PageRank and SSSP through the *same* SPMD engine on
 /// both backends, assert the threaded results are bit-identical to the
 /// simulated ones, and report measured per-machine busy wall-clock from
-/// the persistent worker pool.  Returns overall validity (the process
-/// exit code mirrors it).
+/// the persistent worker pool.  The graph is ingested exactly ONCE for
+/// the whole run (`ingest_once` + `from_ingested` clones; algorithms are
+/// separated by `reset_for_query`, the serving-layer contract) — the
+/// `ingestions()` counter is part of the validity this returns.
 pub fn run_graph_backend(p: usize, seed: u64, backend: &str) -> bool {
     assert!(p >= 1, "need at least one machine");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
     let g = gen::barabasi_albert(20_000, 6, seed);
     println!(
         "\n## repro graph — TDO-GP edge_map, SPMD engine: BA graph n={} m={}, P={p}, \
@@ -386,32 +375,62 @@ pub fn run_graph_backend(p: usize, seed: u64, backend: &str) -> bool {
         g.m()
     );
 
-    let (pr_sim, sim_pr) = spmd_pr(Cluster::new(p, CostModel::paper_cluster()), &g);
-    let (ss_sim, sim_ss) = spmd_sssp(Cluster::new(p, CostModel::paper_cluster()), &g);
+    // ONE ingestion; every engine on every backend clones the placement.
+    let dg = ingest_once(&g, p, cost, Placement::Spread);
+    let reset = |m: crate::MachineId, meta: &crate::graph::spmd::GraphMeta, st: &mut QueryShard| {
+        st.reset(m, meta)
+    };
+
+    let mut sim = SpmdEngine::from_ingested(
+        Cluster::new(p, cost),
+        dg.clone(),
+        cost,
+        Flags::tdo_gp(),
+        "tdo-gp-spmd",
+        QueryShard::new,
+    );
+    let pr_sim = pagerank_spmd(&mut sim, PR_ITERS);
+    let (pr_sim_s, pr_sim_steps) =
+        (sim.sub().metrics.sim_seconds(), sim.sub().metrics.supersteps);
+    sim.sub_mut().reset_metrics();
+    sim.reset_for_query(reset);
+    let ss_sim = sssp_spmd(&mut sim, 0);
     println!(
-        "simulator: PR({PR_ITERS} iters) sim {:.4}s over {} supersteps; SSSP sim {:.4}s over {} supersteps",
-        sim_pr.metrics.sim_seconds(),
-        sim_pr.metrics.supersteps,
-        sim_ss.metrics.sim_seconds(),
-        sim_ss.metrics.supersteps,
+        "simulator: PR({PR_ITERS} iters) sim {pr_sim_s:.4}s over {pr_sim_steps} supersteps; \
+         SSSP sim {:.4}s over {} supersteps  (one engine, reset between queries)",
+        sim.sub().metrics.sim_seconds(),
+        sim.sub().metrics.supersteps,
     );
 
+    let ingested = ingestions() - ing0;
     if backend == "sim" {
-        println!("\ngraph OK (simulator only)");
-        return true;
+        println!("\ningestions this run: {ingested}");
+        let ok = ingested == 1;
+        println!("graph {}", if ok { "OK (simulator only)" } else { "FAILED (re-ingested)" });
+        return ok;
     }
 
-    // ONE pool serves both algorithms: PR runs, the cluster is taken
-    // back, its ledger snapshotted and reset, and SSSP reuses the same
-    // P parked workers — so the thread count printed below is the whole
-    // run's thread count, which is the persistent-pool contract.
-    let (pr_thr, mut tc) = spmd_pr(ThreadedCluster::new(p), &g);
-    let pr_busy = tc.busy_ms_by_machine();
-    let pr_max = tc.max_busy_ms();
-    let pr_imb = tc.metrics.work_imbalance();
-    let pr_epochs = tc.epochs();
-    tc.reset_metrics();
-    let (ss_thr, tc) = spmd_sssp(tc, &g);
+    // ONE engine (hence one pool and the same single ingestion) serves
+    // both algorithms on the threaded backend too: PR runs, the ledger
+    // is snapshotted and reset, reset_for_query re-inits the shards, and
+    // SSSP reuses the same P parked workers.
+    let mut thr = SpmdEngine::from_ingested(
+        ThreadedCluster::new(p),
+        dg,
+        cost,
+        Flags::tdo_gp(),
+        "tdo-gp-spmd",
+        QueryShard::new,
+    );
+    let pr_thr = pagerank_spmd(&mut thr, PR_ITERS);
+    let pr_busy = thr.sub().busy_ms_by_machine();
+    let pr_max = thr.sub().max_busy_ms();
+    let pr_imb = thr.sub().metrics.work_imbalance();
+    let pr_epochs = thr.sub().epochs();
+    thr.sub_mut().reset_metrics();
+    thr.reset_for_query(reset);
+    let ss_thr = sssp_spmd(&mut thr, 0);
+    let tc = thr.sub();
     let ss_busy = tc.busy_ms_by_machine();
     let pr_ok = bits_equal(&pr_thr, &pr_sim);
     let ss_ok = bits_equal(&ss_thr, &ss_sim);
@@ -421,8 +440,8 @@ pub fn run_graph_backend(p: usize, seed: u64, backend: &str) -> bool {
         if ss_ok { "PASS" } else { "FAIL" },
     );
     println!(
-        "worker pool: {} threads total, reused across PR ({} epochs) and SSSP ({} epochs) \
-         — spawned once per run",
+        "worker pool: {} threads total, reused across PR ({} epochs) and SSSP ({} epochs, \
+         incl. the reset epoch) — spawned once per run",
         tc.pool_threads(),
         pr_epochs,
         tc.epochs() - pr_epochs,
@@ -445,10 +464,16 @@ pub fn run_graph_backend(p: usize, seed: u64, backend: &str) -> bool {
         tc.metrics.work_imbalance(),
     );
 
-    let all_valid = pr_ok && ss_ok;
+    let ingested = ingestions() - ing0;
+    println!("ingestions this run: {ingested} (both backends share one placement)");
+    let all_valid = pr_ok && ss_ok && ingested == 1;
     println!(
         "\ngraph {}",
-        if all_valid { "OK" } else { "FAILED (threaded diverged from simulator)" }
+        if all_valid {
+            "OK"
+        } else {
+            "FAILED (threaded diverged from simulator, or the graph was re-ingested)"
+        }
     );
     all_valid
 }

@@ -6,6 +6,7 @@
 pub mod exec;
 pub mod graphs;
 pub mod kv;
+pub mod serve;
 
 /// Geometric mean of positive values.
 pub fn geomean(xs: &[f64]) -> f64 {

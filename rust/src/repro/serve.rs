@@ -1,0 +1,251 @@
+//! `repro serve` — the online serving layer end to end.
+//!
+//! Admits a deterministic open-loop stream of {BFS, SSSP, PR, CC}
+//! queries with Zipf-skewed traversal sources, batches it, and serves it
+//! on ONE long-lived `SpmdEngine` (sim or threaded backend).  Every
+//! served query is cross-checked **bit-for-bit** against a single-shot
+//! run on a sim-backend reference engine, and the whole process is held
+//! to the serving contract: the graph is ingested exactly once
+//! (`graph::ingest::ingestions()` is the witness), however many queries
+//! run.  The cross-check walks the stream in *reverse* order, so state
+//! leaking across queries on either engine meets a different predecessor
+//! and breaks the comparison instead of cancelling out.
+//!
+//! Reported: per-kind and overall queue-wait percentiles (logical
+//! ticks), service-time percentiles (measured ms), sustained
+//! queries/sec, batch count, rejections, and — on the threaded backend —
+//! worker-pool epoch accounting per query.
+
+use crate::exec::{PoolSnapshot, ThreadedCluster};
+use crate::graph::engine::Flags;
+use crate::graph::gen;
+use crate::graph::ingest::ingestions;
+use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use crate::metrics::p50_p95_p99;
+use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::workload::{generate_stream, hot_source_order, QueryKind, QueryMix, StreamConfig};
+use crate::{Cluster, CostModel};
+
+use super::TablePrinter;
+
+/// Graph size for the serving runs: big enough that hub skew shapes the
+/// load, small enough for the CI smoke leg.
+const SERVE_N: usize = 8_000;
+const SERVE_K: usize = 6;
+/// Open-loop arrival rate (queries per logical tick).
+const ARRIVALS_PER_TICK: usize = 2;
+
+/// Result of one `repro serve` invocation (consumed by main/tests).
+pub struct ServeSummary {
+    pub served: usize,
+    pub rejected: u64,
+    pub mismatches: usize,
+    /// Ingestion passes this run performed (must be exactly 1).
+    pub ingestions: u64,
+    pub all_valid: bool,
+}
+
+pub fn run_serve(
+    p: usize,
+    queries: usize,
+    zipf_s: f64,
+    batch: usize,
+    seed: u64,
+    backend: &str,
+) -> ServeSummary {
+    assert!(p >= 1, "need at least one machine");
+    assert!(queries >= 1, "need at least one query");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
+    let g = gen::barabasi_albert(SERVE_N, SERVE_K, seed);
+    println!(
+        "\n## repro serve — online {{BFS,SSSP,PR,CC}} Zipf stream on the reused engine: \
+         BA graph n={} m={}, P={p}, {queries} queries, zipf {zipf_s}, batch {batch}, \
+         seed {seed}, backend {backend}\n",
+        g.n,
+        g.m()
+    );
+
+    // ONE ingestion for the whole process; both engines (serving +
+    // cross-check reference) are built from clones of this placement.
+    let dg = ingest_once(&g, p, cost, Placement::Spread);
+    let cfg = ServeConfig { batch, ..ServeConfig::default() };
+    let mut reference = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost),
+            dg.clone(),
+            cost,
+            Flags::tdo_gp(),
+            "serve-sim-ref",
+            QueryShard::new,
+        ),
+        cfg,
+    );
+    let hot = hot_source_order(&reference.engine().meta().out_deg);
+    let stream = generate_stream(
+        StreamConfig { queries, per_tick: ARRIVALS_PER_TICK, zipf_s, mix: QueryMix::balanced() },
+        &hot,
+        seed,
+    );
+
+    let (report, pool_note): (ServeReport, Option<String>) = if backend == "threaded" {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                ThreadedCluster::new(p),
+                dg,
+                cost,
+                Flags::tdo_gp(),
+                "serve-threaded",
+                QueryShard::new,
+            ),
+            cfg,
+        );
+        let mut snaps: Vec<PoolSnapshot> = Vec::new();
+        let report = server.run_with(&stream, |_r, e| snaps.push(e.sub().snapshot()));
+        let engine = server.into_engine();
+        let tc = engine.sub();
+        let total = tc.snapshot();
+        // Per-query epoch accounting: each observer snapshot closes one
+        // query's window, so consecutive diffs are that query's epochs
+        // (reset epoch included) and busy nanoseconds.
+        let mut prev = PoolSnapshot::default();
+        let mut max_epochs = 0u64;
+        let mut max_busy_ms = 0.0f64;
+        for s in &snaps {
+            let d = s.since(prev);
+            max_epochs = max_epochs.max(d.epochs);
+            max_busy_ms = max_busy_ms.max(d.busy_ns as f64 / 1e6);
+            prev = *s;
+        }
+        let mean_epochs = if snaps.is_empty() {
+            0.0
+        } else {
+            total.epochs as f64 / snaps.len() as f64
+        };
+        let note = format!(
+            "worker pool: {} threads spawned once for the whole stream; {} epochs total — \
+             per query (incl. its reset epoch): mean {mean_epochs:.1} / max {max_epochs} \
+             epochs, max {max_busy_ms:.2} ms busy; {:.1} ms busy summed over machines",
+            tc.pool_threads(),
+            total.epochs,
+            total.busy_ns as f64 / 1e6,
+        );
+        (report, Some(note))
+    } else {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                Cluster::new(p, cost),
+                dg,
+                cost,
+                Flags::tdo_gp(),
+                "serve-sim",
+                QueryShard::new,
+            ),
+            cfg,
+        );
+        (server.run(&stream), None)
+    };
+
+    // Cross-check EVERY served query against the single-shot sim
+    // reference, in reverse stream order (see module docs).
+    let mut mismatches = 0usize;
+    for r in report.results.iter().rev() {
+        let q = stream[r.id as usize];
+        debug_assert_eq!(q.id, r.id, "stream ids must be positional");
+        if reference.run_query(&q) != r.bits {
+            mismatches += 1;
+            eprintln!(
+                "MISMATCH: query {} ({}) diverged from the sim single-shot reference",
+                r.id,
+                r.kind.label()
+            );
+        }
+    }
+
+    let t = TablePrinter::new(
+        &["kind", "served", "wait p50/p95/p99 (ticks)", "service p50/p95/p99 (ms)"],
+        &[5, 7, 25, 26],
+    );
+    for kind in QueryKind::ALL {
+        let waits: Vec<f64> = report
+            .results
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.wait_ticks as f64)
+            .collect();
+        let svc: Vec<f64> = report
+            .results
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.service_ms)
+            .collect();
+        if waits.is_empty() {
+            // A short or heavily skewed run can draw zero queries of a
+            // kind; a dash beats a NaN/NaN/NaN row.
+            t.row(&[kind.label().to_string(), "0".to_string(), "-".to_string(), "-".to_string()]);
+            continue;
+        }
+        let (w50, w95, w99) = p50_p95_p99(&waits);
+        let (s50, s95, s99) = p50_p95_p99(&svc);
+        t.row(&[
+            kind.label().to_string(),
+            waits.len().to_string(),
+            format!("{w50:.0} / {w95:.0} / {w99:.0}"),
+            format!("{s50:.2} / {s95:.2} / {s99:.2}"),
+        ]);
+    }
+
+    let (w50, _, w99) = report.wait_tick_percentiles();
+    let (s50, _, s99) = report.service_ms_percentiles();
+    println!(
+        "\noverall: {} served, {} rejected, {} batches over {} logical ticks; \
+         wait p50 {w50:.0} / p99 {w99:.0} ticks; service p50 {s50:.2} / p99 {s99:.2} ms; \
+         {:.1} queries/sec",
+        report.served(),
+        report.rejected,
+        report.batches,
+        report.ticks,
+        report.queries_per_sec(),
+    );
+    if let Some(note) = pool_note {
+        println!("{note}");
+    }
+    let ingested = ingestions() - ing0;
+    println!(
+        "ingestions this run: {ingested} (one shared placement; engines cloned from it, \
+         queries separated by reset_for_query)"
+    );
+
+    let all_valid = mismatches == 0
+        && ingested == 1
+        && report.served() as u64 + report.rejected == queries as u64;
+    println!(
+        "\nserve {}",
+        if all_valid {
+            "OK (every query bit-identical to the single-shot sim reference; graph ingested once)"
+        } else {
+            "FAILED"
+        }
+    );
+    ServeSummary {
+        served: report.served(),
+        rejected: report.rejected,
+        mismatches,
+        ingestions: ingested,
+        all_valid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_serve_sim_smoke_is_valid() {
+        let s = run_serve(2, 6, 1.5, 4, 7, "sim");
+        assert_eq!(s.mismatches, 0);
+        assert_eq!(s.ingestions, 1);
+        assert!(s.all_valid);
+        assert_eq!(s.served as u64 + s.rejected, 6);
+    }
+}

@@ -14,11 +14,27 @@
 //!
 //! The real engine needs the `xla` crate, which the offline build image
 //! cannot fetch (no registry).  It therefore compiles only with
-//! `--features xla` after vendoring the dependency (see Cargo.toml).  The
-//! default build ships a stub [`Engine`] with the same API whose `load`
-//! always fails, so every consumer (KV store, smoke test, benches)
-//! degrades to the native lambda path exactly as if artifacts were
-//! missing.  Manifest parsing is feature-independent and stays tested.
+//! `--features xla` **and** `--cfg xla_vendored` after vendoring the
+//! dependency (see Cargo.toml).  The default build ships a stub
+//! [`Engine`] with the same API whose `load` always fails, so every
+//! consumer (KV store, smoke test, benches) degrades to the native
+//! lambda path exactly as if artifacts were missing.  Building with the
+//! feature but without the vendored crate hits the directed
+//! `compile_error!` below instead of a bare E0433 "undeclared crate
+//! `xla`".  Manifest parsing is feature-independent and stays tested.
+
+// `--all-features` / `--features xla` without the vendored crate used to
+// die with E0433 at the first `xla::` path.  Gate the real engine on the
+// `xla_vendored` cfg as well, so the only error in that configuration is
+// this recipe.  (`xla_vendored` is declared to check-cfg via
+// [lints.rust] in Cargo.toml.)
+#[cfg(all(feature = "xla", not(xla_vendored)))]
+compile_error!(
+    "tdorch was built with `--features xla` but the xla-rs crate is not vendored: \
+     vendor it (e.g. into rust/vendor/xla-rs), add `xla = { path = \"vendor/xla-rs\" }` \
+     under [dependencies] in rust/Cargo.toml, then rebuild with \
+     RUSTFLAGS=\"--cfg xla_vendored\" --features xla (see Cargo.toml)"
+);
 
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -115,18 +131,18 @@ fn default_dir() -> String {
 // ---------------------------------------------------------------------
 
 /// Artifact engine stub — the crate was built without the `xla` feature.
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", xla_vendored)))]
 pub struct Engine {
     dir: PathBuf,
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", xla_vendored)))]
 impl Engine {
     fn unavailable(what: &str) -> RuntimeError {
         RuntimeError::new(format!(
-            "{what}: tdorch was built without the `xla` feature — PJRT artifact \
+            "{what}: tdorch was built without the real PJRT engine — artifact \
              execution is unavailable; vendor the xla crate and rebuild with \
-             `--features xla` (see Cargo.toml)"
+             `--features xla` and RUSTFLAGS=\"--cfg xla_vendored\" (see Cargo.toml)"
         ))
     }
 
@@ -181,14 +197,14 @@ impl Engine {
 // ---------------------------------------------------------------------
 
 /// A compiled artifact plus its manifest metadata.
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", xla_vendored))]
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
     entry: ManifestEntry,
 }
 
 /// The PJRT engine: one CPU client, one compiled executable per artifact.
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", xla_vendored))]
 pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -207,12 +223,12 @@ pub struct Engine {
 // accessed by at most one thread at a time.  Literals built per call are
 // thread-local.  If xla-rs ever documents thread-safe execution, the
 // lock can be dropped.
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", xla_vendored))]
 unsafe impl Send for Engine {}
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", xla_vendored))]
 unsafe impl Sync for Engine {}
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", xla_vendored))]
 impl Engine {
     /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {

@@ -1,0 +1,135 @@
+//! `serve` — the online multi-query serving layer over the persistent
+//! TD-Orch runtime.
+//!
+//! Everything below this module runs *one* query end-to-end; everything
+//! in this module is about running a **stream** of queries on engines
+//! that live for the whole process:
+//!
+//! ```text
+//!   workload::generate_stream         (deterministic open-loop arrivals)
+//!        │ admission (bounded queue; overflow is rejected, not buffered)
+//!        ▼
+//!   serve::Server  ── batch former (close on size B or tick deadline D)
+//!        │ dispatch: queries back-to-back on the SAME engine
+//!        ▼
+//!   SpmdEngine<B, QueryShard> ── reset_for_query between queries
+//!        │                        (shards re-init; ingestion, relay
+//!        ▼                         trees, worker pool all KEPT)
+//!   exec::Substrate (Cluster | ThreadedCluster)
+//! ```
+//!
+//! The central invariant is **one ingestion per process**: the graph is
+//! placed once ([`crate::graph::spmd::ingest_once`]), every engine —
+//! serving and cross-check reference — is built from clones of that
+//! placement ([`crate::graph::spmd::SpmdEngine::from_ingested`]), and
+//! [`QueryShard::reset`] restores query state in place.
+//! `graph::ingest::ingestions()` counts placement passes so `repro
+//! serve`, `repro graph` and the tests can *assert* the invariant rather
+//! than trust it.
+//!
+//! ## Determinism contract for batched runs
+//!
+//! For a fixed (stream, [`ServeConfig`], graph, P): admission decisions,
+//! rejections, batch composition, per-query queue waits and every
+//! query's result bits are identical across runs and across substrates —
+//! batching is driven by *logical ticks* (arrival indices), never by
+//! wall-clock, and each query starts from a reset engine whose result is
+//! bit-identical to a fresh engine's (`tests/serve_equivalence.rs`).
+//! Only the measured service times and throughput vary with the host.
+
+mod server;
+
+pub use server::{QueryResult, ServeConfig, ServeReport, Server, DEFAULT_PR_ITERS};
+
+use crate::bsp::MachineId;
+use crate::graph::algorithms::{BfsShard, CcShard, PrShard, ShardAccess, SsspShard};
+use crate::graph::spmd::GraphMeta;
+use crate::workload::QueryKind;
+
+/// Machine-local state for the whole {BFS, SSSP, PR, CC} query mix: all
+/// four algorithm shards side by side (each O(n/P)), so ONE long-lived
+/// engine serves every query kind.  The `ShardAccess` impls project out
+/// the slice the running algorithm needs; [`QueryShard::reset`] is the
+/// `reset_for_query` hook that restores the freshly-initialized state in
+/// place between queries (allocations reused).
+pub struct QueryShard {
+    pub bfs: BfsShard,
+    pub sssp: SsspShard,
+    pub cc: CcShard,
+    pub pr: PrShard,
+}
+
+impl QueryShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        QueryShard {
+            bfs: BfsShard::new(m, meta),
+            sssp: SsspShard::new(m, meta),
+            cc: CcShard::new(m, meta),
+            pr: PrShard::new(m, meta),
+        }
+    }
+
+    /// Restore every algorithm slice to its freshly-constructed state
+    /// (the safe catch-all hook; `repro graph` uses it between its two
+    /// differently-kinded queries).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
+        self.bfs.reset(m, meta);
+        self.sssp.reset(m, meta);
+        self.cc.reset(m, meta);
+        self.pr.reset(m, meta);
+    }
+
+    /// Restore only the shard `kind` is about to run on.  Sufficient —
+    /// and bit-identical to a full [`QueryShard::reset`] — on the
+    /// serving path, because every query resets its own shard before
+    /// running and no algorithm ever reads a sibling's slice; it skips
+    /// three of the four O(n/P) fills per query.
+    pub fn reset_kind(&mut self, kind: QueryKind, m: MachineId, meta: &GraphMeta) {
+        match kind {
+            QueryKind::Bfs => self.bfs.reset(m, meta),
+            QueryKind::Sssp => self.sssp.reset(m, meta),
+            QueryKind::Pr => self.pr.reset(m, meta),
+            QueryKind::Cc => self.cc.reset(m, meta),
+        }
+    }
+}
+
+impl ShardAccess<BfsShard> for QueryShard {
+    fn shard(&self) -> &BfsShard {
+        &self.bfs
+    }
+
+    fn shard_mut(&mut self) -> &mut BfsShard {
+        &mut self.bfs
+    }
+}
+
+impl ShardAccess<SsspShard> for QueryShard {
+    fn shard(&self) -> &SsspShard {
+        &self.sssp
+    }
+
+    fn shard_mut(&mut self) -> &mut SsspShard {
+        &mut self.sssp
+    }
+}
+
+impl ShardAccess<CcShard> for QueryShard {
+    fn shard(&self) -> &CcShard {
+        &self.cc
+    }
+
+    fn shard_mut(&mut self) -> &mut CcShard {
+        &mut self.cc
+    }
+}
+
+impl ShardAccess<PrShard> for QueryShard {
+    fn shard(&self) -> &PrShard {
+        &self.pr
+    }
+
+    fn shard_mut(&mut self) -> &mut PrShard {
+        &mut self.pr
+    }
+}

@@ -1,0 +1,247 @@
+//! The serving loop: bounded admission, deterministic batch formation,
+//! back-to-back dispatch on the reused engine (see the module docs in
+//! [`super`] for the pipeline picture and the determinism contract).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::exec::Substrate;
+use crate::graph::algorithms::{bfs_spmd, cc_spmd, pagerank_spmd, sssp_spmd};
+use crate::graph::spmd::SpmdEngine;
+use crate::graph::Vid;
+use crate::metrics::p50_p95_p99;
+use crate::workload::{Query, QueryKind};
+
+use super::QueryShard;
+
+/// PageRank iterations per PR query on the serving path (matches the
+/// equivalence suite's round count; `repro table2`'s figure runs keep
+/// their own deeper constant).
+pub const DEFAULT_PR_ITERS: usize = 5;
+
+/// Batching/admission policy.  All knobs are *logical* (query counts and
+/// ticks), so a config fully determines the batch schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Close a batch as soon as this many queries are pending.
+    pub batch: usize,
+    /// ...or as soon as the oldest pending query has waited this many
+    /// ticks (bounds tail latency under a trickle of arrivals).
+    pub deadline_ticks: u64,
+    /// Bounded admission queue: arrivals beyond this are rejected — an
+    /// open-loop server sheds load instead of buffering unboundedly.
+    pub queue_cap: usize,
+    /// PageRank iterations per PR query.
+    pub pr_iters: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch: 8, deadline_ticks: 4, queue_cap: 64, pr_iters: DEFAULT_PR_ITERS }
+    }
+}
+
+/// One served query's outcome.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub id: u64,
+    pub kind: QueryKind,
+    pub source: Vid,
+    /// Canonical result encoding — BFS hop counts and CC labels
+    /// zero/sign-extended to u64, SSSP/PR f64 bit patterns — so every
+    /// kind cross-checks with one `bits == bits` comparison (see
+    /// [`Server::run_query`]).
+    pub bits: Vec<u64>,
+    /// Logical ticks between arrival and dispatch (deterministic).
+    pub wait_ticks: u64,
+    /// Measured service wall-clock, milliseconds (host-dependent).
+    pub service_ms: f64,
+    /// Sequence number of the batch this query was dispatched in.
+    pub batch: u64,
+}
+
+/// Outcome of a whole serving run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub results: Vec<QueryResult>,
+    /// Arrivals dropped at admission (queue full).
+    pub rejected: u64,
+    pub batches: u64,
+    /// Logical ticks the run spanned.
+    pub ticks: u64,
+    /// Wall-clock of the whole admission+dispatch loop, milliseconds.
+    pub wall_ms: f64,
+}
+
+impl ServeReport {
+    pub fn served(&self) -> usize {
+        self.results.len()
+    }
+
+    /// Sustained throughput over the whole run (NaN for an empty run).
+    pub fn queries_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return f64::NAN;
+        }
+        self.results.len() as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// (p50, p95, p99) of per-query service wall-clock, ms.
+    pub fn service_ms_percentiles(&self) -> (f64, f64, f64) {
+        let xs: Vec<f64> = self.results.iter().map(|r| r.service_ms).collect();
+        p50_p95_p99(&xs)
+    }
+
+    /// (p50, p95, p99) of per-query queue wait, logical ticks.
+    pub fn wait_tick_percentiles(&self) -> (f64, f64, f64) {
+        let xs: Vec<f64> = self.results.iter().map(|r| r.wait_ticks as f64).collect();
+        p50_p95_p99(&xs)
+    }
+}
+
+/// The online server: admits a stream, forms batches, dispatches each
+/// batch back-to-back on one long-lived engine.
+pub struct Server<B: Substrate> {
+    engine: SpmdEngine<B, QueryShard>,
+    cfg: ServeConfig,
+}
+
+impl<B: Substrate> Server<B> {
+    pub fn new(engine: SpmdEngine<B, QueryShard>, cfg: ServeConfig) -> Self {
+        assert!(cfg.batch >= 1, "batch size must be >= 1");
+        assert!(cfg.queue_cap >= 1, "queue capacity must be >= 1");
+        assert!(cfg.pr_iters >= 1, "PR needs at least one iteration");
+        Server { engine, cfg }
+    }
+
+    pub fn engine(&self) -> &SpmdEngine<B, QueryShard> {
+        &self.engine
+    }
+
+    /// Consume the server, returning the engine (to read final substrate
+    /// metrics after the stream is done).
+    pub fn into_engine(self) -> SpmdEngine<B, QueryShard> {
+        self.engine
+    }
+
+    /// Execute one query on the reused engine: reset the shard its
+    /// algorithm runs on (`QueryShard::reset_kind` — ingestion, relay
+    /// trees and the worker pool stay), run the algorithm, encode the
+    /// result canonically.  This is also the "single-shot" path the
+    /// cross-checks use — a reset engine is bit-equivalent to a fresh
+    /// one.
+    pub fn run_query(&mut self, q: &Query) -> Vec<u64> {
+        let kind = q.kind;
+        self.engine
+            .reset_for_query(move |m, meta, st: &mut QueryShard| st.reset_kind(kind, m, meta));
+        match q.kind {
+            QueryKind::Bfs => bfs_spmd(&mut self.engine, q.source)
+                .into_iter()
+                .map(|d| d as u64)
+                .collect(),
+            QueryKind::Sssp => sssp_spmd(&mut self.engine, q.source)
+                .into_iter()
+                .map(f64::to_bits)
+                .collect(),
+            QueryKind::Pr => pagerank_spmd(&mut self.engine, self.cfg.pr_iters)
+                .into_iter()
+                .map(f64::to_bits)
+                .collect(),
+            QueryKind::Cc => cc_spmd(&mut self.engine)
+                .into_iter()
+                .map(|l| l as u64)
+                .collect(),
+        }
+    }
+
+    /// Drive the full admission → batch → dispatch loop over `stream`
+    /// (which must be in nondecreasing arrival order, as
+    /// `generate_stream` emits it).
+    pub fn run(&mut self, stream: &[Query]) -> ServeReport {
+        self.run_with(stream, |_r, _e| {})
+    }
+
+    /// Like [`Server::run`], with a per-query observer called right
+    /// after each dispatch with the fresh result and the engine — the
+    /// hook `repro serve` uses to snapshot pool counters per query.
+    pub fn run_with(
+        &mut self,
+        stream: &[Query],
+        mut observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
+    ) -> ServeReport {
+        debug_assert!(
+            stream.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "stream must arrive in nondecreasing tick order"
+        );
+        let cfg = self.cfg;
+        let mut pending: VecDeque<Query> = VecDeque::new();
+        let mut results: Vec<QueryResult> = Vec::with_capacity(stream.len());
+        let mut rejected = 0u64;
+        let mut batches = 0u64;
+        let mut next = 0usize; // cursor into `stream`
+        let mut tick = 0u64;
+        let t0 = Instant::now();
+        while next < stream.len() || !pending.is_empty() {
+            // ---- admission: this tick's arrivals, bounded queue ----
+            while next < stream.len() && stream[next].arrival <= tick {
+                if pending.len() < cfg.queue_cap {
+                    pending.push_back(stream[next]);
+                } else {
+                    rejected += 1;
+                }
+                next += 1;
+            }
+            // ---- batch formation + dispatch ----
+            loop {
+                let full = pending.len() >= cfg.batch;
+                let overdue = pending
+                    .front()
+                    .is_some_and(|q| tick - q.arrival >= cfg.deadline_ticks);
+                // End of stream: nothing else will ever top the batch up,
+                // so drain instead of waiting out the deadline.
+                let draining = next >= stream.len() && !pending.is_empty();
+                if !(full || overdue || draining) {
+                    break;
+                }
+                let take = pending.len().min(cfg.batch);
+                let batch_seq = batches;
+                batches += 1;
+                for _ in 0..take {
+                    let q = pending.pop_front().expect("batch drew from an empty queue");
+                    let ts = Instant::now();
+                    let bits = self.run_query(&q);
+                    let res = QueryResult {
+                        id: q.id,
+                        kind: q.kind,
+                        source: q.source,
+                        bits,
+                        wait_ticks: tick - q.arrival,
+                        service_ms: ts.elapsed().as_secs_f64() * 1e3,
+                        batch: batch_seq,
+                    };
+                    observe(&res, &self.engine);
+                    results.push(res);
+                }
+            }
+            tick += 1;
+            // Idle gap: nothing is queued and the next arrival is in
+            // the future — jump straight to its tick instead of
+            // spinning one loop iteration per empty tick (a caller-built
+            // stream may place arrivals arbitrarily far apart).  No
+            // query is waiting, so no wait computation can observe the
+            // skipped ticks.
+            if pending.is_empty() {
+                if let Some(q) = stream.get(next) {
+                    tick = tick.max(q.arrival);
+                }
+            }
+        }
+        ServeReport {
+            results,
+            rejected,
+            batches,
+            ticks: tick,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}

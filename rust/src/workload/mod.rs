@@ -1,8 +1,11 @@
 //! Workload generators for the paper's evaluations: YCSB mixes over
-//! Zipf-distributed keys (§4) and adversarial single-key batches.
+//! Zipf-distributed keys (§4), adversarial single-key batches, and the
+//! serving layer's open-loop graph query streams ([`queries`]).
 
+pub mod queries;
 pub mod ycsb;
 pub mod zipf;
 
+pub use queries::{generate_stream, hot_source_order, Query, QueryKind, QueryMix, StreamConfig};
 pub use ycsb::{YcsbKind, YcsbWorkload};
 pub use zipf::Zipf;

@@ -1,0 +1,180 @@
+//! Deterministic open-loop graph query streams for the serving layer.
+//!
+//! The paper frames TD-Orch as a *serving* framework (§2: batches of
+//! lambda tasks under Zipf-skewed access); hotspot-aware stream work
+//! (AutoFlow, arXiv:2103.08888; DPA, arXiv:2308.00938) shows the
+//! interesting load-balancing behavior only appears under a continuous
+//! skewed query stream.  This module generates that stream: a mixed
+//! {BFS, SSSP, PR, CC} sequence whose BFS/SSSP sources are drawn
+//! Zipf-distributed over vertex *hotness ranks* — rank k is the k-th
+//! highest-out-degree vertex ([`hot_source_order`]) — so a high exponent
+//! concentrates traversal roots on the hubs, the adversarial case for
+//! owner-centric placements.
+//!
+//! The stream is a pure function of (hot order, config, seed).  It never
+//! sees the machine count: the same seed drives byte-identical streams
+//! into a P=1 engine and a P=64 engine (`tests/serve_stream.rs`), which
+//! is what keeps serving runs cross-checkable against any reference
+//! deployment.  Arrivals are open-loop at a fixed per-tick rate —
+//! arrivals never wait for completions, so queueing behavior is the
+//! server's problem, not the generator's.
+
+use crate::graph::Vid;
+use crate::rng::Rng;
+
+use super::Zipf;
+
+/// Which algorithm a query runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    Bfs,
+    Sssp,
+    Pr,
+    Cc,
+}
+
+impl QueryKind {
+    pub const ALL: [QueryKind; 4] =
+        [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Pr, QueryKind::Cc];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QueryKind::Bfs => "BFS",
+            QueryKind::Sssp => "SSSP",
+            QueryKind::Pr => "PR",
+            QueryKind::Cc => "CC",
+        }
+    }
+}
+
+/// One query in the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Query {
+    pub id: u64,
+    pub kind: QueryKind,
+    /// Source vertex.  BFS/SSSP traverse from it; PR/CC ignore it, but
+    /// it is drawn for *every* query so the stream layout (and every
+    /// later query) is independent of the kind mix.
+    pub source: Vid,
+    /// Logical arrival tick (open loop: fixed arrivals per tick).
+    pub arrival: u64,
+}
+
+/// Relative weights of the four query kinds.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryMix {
+    pub bfs: u32,
+    pub sssp: u32,
+    pub pr: u32,
+    pub cc: u32,
+}
+
+impl QueryMix {
+    /// The canonical serving mix: all four kinds, equally weighted.
+    pub fn balanced() -> Self {
+        QueryMix { bfs: 1, sssp: 1, pr: 1, cc: 1 }
+    }
+
+    fn total(&self) -> u32 {
+        self.bfs + self.sssp + self.pr + self.cc
+    }
+
+    fn pick(&self, r: u32) -> QueryKind {
+        debug_assert!(r < self.total());
+        if r < self.bfs {
+            QueryKind::Bfs
+        } else if r < self.bfs + self.sssp {
+            QueryKind::Sssp
+        } else if r < self.bfs + self.sssp + self.pr {
+            QueryKind::Pr
+        } else {
+            QueryKind::Cc
+        }
+    }
+}
+
+/// Vertices ordered hottest-first (out-degree descending, vertex id
+/// ascending on ties) — the Zipf rank → source mapping.  Derived from
+/// the per-vertex degree array, which is a property of the GRAPH, not of
+/// the deployment: every machine count produces the same order.
+pub fn hot_source_order(out_deg: &[u32]) -> Vec<Vid> {
+    let mut order: Vec<Vid> = (0..out_deg.len() as Vid).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(out_deg[v as usize]), v));
+    order
+}
+
+/// Open-loop stream parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    pub queries: usize,
+    /// Queries arriving per logical tick (fixed-rate open loop).
+    pub per_tick: usize,
+    /// Zipf exponent over source-vertex hotness ranks.
+    pub zipf_s: f64,
+    pub mix: QueryMix,
+}
+
+/// Generate the deterministic query stream: query `i` arrives at tick
+/// `i / per_tick`, draws its kind from the weighted mix and its source
+/// from Zipf(`zipf_s`) over `hot_order` ranks.  Arrivals are emitted in
+/// nondecreasing tick order (what `serve::Server::run` requires).
+pub fn generate_stream(cfg: StreamConfig, hot_order: &[Vid], seed: u64) -> Vec<Query> {
+    assert!(cfg.per_tick >= 1, "need at least one arrival per tick");
+    assert!(!hot_order.is_empty(), "empty source universe");
+    let total = cfg.mix.total();
+    assert!(total > 0, "query mix has zero total weight");
+    let zipf = Zipf::new(hot_order.len(), cfg.zipf_s);
+    let mut rng = Rng::new(seed);
+    (0..cfg.queries)
+        .map(|i| {
+            let kind = cfg.mix.pick(rng.next_below(total as u64) as u32);
+            let source = hot_order[zipf.sample(&mut rng)];
+            Query { id: i as u64, kind, source, arrival: (i / cfg.per_tick) as u64 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(queries: usize, zipf_s: f64) -> StreamConfig {
+        StreamConfig { queries, per_tick: 3, zipf_s, mix: QueryMix::balanced() }
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let hot: Vec<Vid> = (0..500).collect();
+        let a = generate_stream(cfg(300, 1.5), &hot, 42);
+        let b = generate_stream(cfg(300, 1.5), &hot, 42);
+        assert_eq!(a, b);
+        let c = generate_stream(cfg(300, 1.5), &hot, 43);
+        assert_ne!(a, c, "distinct seeds must diverge");
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_at_the_configured_rate() {
+        let hot: Vec<Vid> = (0..100).collect();
+        let s = generate_stream(cfg(10, 1.2), &hot, 7);
+        let arrivals: Vec<u64> = s.iter().map(|q| q.arrival).collect();
+        assert_eq!(arrivals, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3]);
+        assert_eq!(s[4].id, 4);
+    }
+
+    #[test]
+    fn balanced_mix_covers_every_kind() {
+        let hot: Vec<Vid> = (0..100).collect();
+        let s = generate_stream(cfg(400, 1.2), &hot, 11);
+        for kind in QueryKind::ALL {
+            let count = s.iter().filter(|q| q.kind == kind).count();
+            // 100 expected per kind; 3σ ≈ 26.
+            assert!(count > 50, "{}: only {count}/400", kind.label());
+        }
+    }
+
+    #[test]
+    fn hot_source_order_is_degree_descending_id_ascending() {
+        let out_deg = [3u32, 9, 9, 1, 0];
+        assert_eq!(hot_source_order(&out_deg), vec![1, 2, 0, 3, 4]);
+    }
+}

@@ -1,0 +1,201 @@
+//! The serving layer's correctness contract:
+//!
+//! 1. `reset_for_query` is *observationally* engine reconstruction: a
+//!    query on a reset, already-used engine is bit-identical to the same
+//!    query on a brand-new engine — this is what licenses `repro serve`
+//!    to cross-check against a once-built reference instead of
+//!    re-ingesting per query.
+//! 2. A threaded server driving a batched mixed stream matches fresh
+//!    sim-backend single-shot runs, query by query, bit for bit.
+//! 3. A whole serving deployment (serving engine + cross-check engine,
+//!    both backends) performs exactly ONE ingestion pass, counted by the
+//!    thread-local `graph::ingest::ingestions()` witness.
+//! 4. `repro graph` holds the same one-ingestion line after its rewire.
+
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::engine::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::ingestions;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::graph::Graph;
+use tdorch::repro::graphs::run_graph_backend;
+use tdorch::serve::{QueryShard, ServeConfig, Server};
+use tdorch::workload::{generate_stream, hot_source_order, Query, QueryKind, QueryMix, StreamConfig};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig { batch: 4, deadline_ticks: 2, queue_cap: 32, pr_iters: 3 }
+}
+
+fn sim_server(g: &Graph, p: usize) -> Server<Cluster> {
+    Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(p, cost()), g, cost(), QueryShard::new),
+        cfg(),
+    )
+}
+
+fn q(id: u64, kind: QueryKind, source: u32) -> Query {
+    Query { id, kind, source, arrival: 0 }
+}
+
+#[test]
+fn reset_for_query_matches_fresh_engine_bits() {
+    let g = gen::barabasi_albert(600, 5, 11);
+    // Probes deliberately differ from the warmup in kind AND source, so
+    // any state surviving a reset comes from a *different* query shape.
+    let warmup = [
+        q(0, QueryKind::Pr, 0),
+        q(1, QueryKind::Bfs, 3),
+        q(2, QueryKind::Cc, 0),
+        q(3, QueryKind::Sssp, 17),
+    ];
+    let probes = [
+        q(10, QueryKind::Bfs, 0),
+        q(11, QueryKind::Sssp, 5),
+        q(12, QueryKind::Pr, 0),
+        q(13, QueryKind::Cc, 0),
+    ];
+    for p in [1usize, 4] {
+        let mut served = sim_server(&g, p);
+        for w in &warmup {
+            served.run_query(w);
+        }
+        for probe in &probes {
+            let reused = served.run_query(probe);
+            let fresh = sim_server(&g, p).run_query(probe);
+            assert_eq!(
+                reused, fresh,
+                "p={p} {:?}: reset engine diverged from a fresh engine",
+                probe.kind
+            );
+        }
+    }
+
+    // Same property on the threaded backend (the pool outlives queries).
+    let mut served = Server::new(
+        SpmdEngine::tdo_gp(ThreadedCluster::new(4), &g, cost(), QueryShard::new),
+        cfg(),
+    );
+    for w in &warmup {
+        served.run_query(w);
+    }
+    for probe in &probes {
+        let reused = served.run_query(probe);
+        let fresh = sim_server(&g, 4).run_query(probe);
+        assert_eq!(
+            reused, fresh,
+            "threaded p=4 {:?}: reset engine diverged from a fresh sim engine",
+            probe.kind
+        );
+    }
+}
+
+#[test]
+fn threaded_server_stream_matches_fresh_sim_single_shots() {
+    let g = gen::barabasi_albert(500, 5, 7);
+    let p = 4;
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut server = Server::new(
+        SpmdEngine::from_ingested(
+            ThreadedCluster::new(p),
+            dg,
+            cost(),
+            Flags::tdo_gp(),
+            "serve-threaded",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let hot = hot_source_order(&server.engine().meta().out_deg);
+    let stream = generate_stream(
+        StreamConfig { queries: 16, per_tick: 4, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        3,
+    );
+    let report = server.run(&stream);
+    assert_eq!(report.served() as u64 + report.rejected, 16);
+    assert!(report.served() > 0, "nothing served");
+    assert!(report.batches > 0);
+    for r in &report.results {
+        let query = stream[r.id as usize];
+        let fresh = sim_server(&g, p).run_query(&query);
+        assert_eq!(
+            r.bits, fresh,
+            "query {} ({:?}): batched threaded result != fresh sim single-shot",
+            r.id, r.kind
+        );
+    }
+    // The pool served the whole stream with P threads and one reset per
+    // served query.
+    let engine = server.into_engine();
+    assert_eq!(engine.sub().pool_threads(), p);
+    assert_eq!(engine.resets(), report.served() as u64);
+}
+
+#[test]
+fn serving_deployment_ingests_exactly_once() {
+    let g = gen::barabasi_albert(400, 4, 5);
+    let p = 2;
+    let before = ingestions();
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut sim = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost()),
+            dg.clone(),
+            cost(),
+            Flags::tdo_gp(),
+            "serve-sim",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let mut thr = Server::new(
+        SpmdEngine::from_ingested(
+            ThreadedCluster::new(p),
+            dg,
+            cost(),
+            Flags::tdo_gp(),
+            "serve-threaded",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let hot = hot_source_order(&sim.engine().meta().out_deg);
+    let stream = generate_stream(
+        StreamConfig { queries: 24, per_tick: 3, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        9,
+    );
+    let rep_sim = sim.run(&stream);
+    let rep_thr = thr.run(&stream);
+    assert_eq!(
+        ingestions() - before,
+        1,
+        "a serving deployment must ingest once, not per engine or per query"
+    );
+    // The deterministic batch schedule and every result agree across
+    // substrates.
+    assert_eq!(rep_sim.served(), rep_thr.served());
+    assert_eq!(rep_sim.rejected, rep_thr.rejected);
+    assert_eq!(rep_sim.batches, rep_thr.batches);
+    assert_eq!(rep_sim.ticks, rep_thr.ticks);
+    for (a, b) in rep_sim.results.iter().zip(&rep_thr.results) {
+        assert_eq!(a.id, b.id, "dispatch order diverged");
+        assert_eq!(a.batch, b.batch, "query {}: batch assignment diverged", a.id);
+        assert_eq!(a.wait_ticks, b.wait_ticks, "query {}: wait diverged", a.id);
+        assert_eq!(a.bits, b.bits, "query {}: result bits diverged", a.id);
+    }
+}
+
+#[test]
+fn repro_graph_sim_ingests_once() {
+    // The rewired `repro graph` shares one ingestion across everything
+    // it runs; its return value folds the counter check in.
+    let before = ingestions();
+    assert!(run_graph_backend(2, 3, "sim"), "repro graph (sim) reported invalid");
+    assert_eq!(ingestions() - before, 1, "repro graph re-ingested the graph");
+}

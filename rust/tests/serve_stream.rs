@@ -1,0 +1,135 @@
+//! The query-stream generator's contract: machine-count independence,
+//! seed determinism, skew fidelity to the requested Zipf exponent, and
+//! the server's deterministic bounded-queue admission.
+
+use tdorch::graph::gen;
+use tdorch::graph::spmd::SpmdEngine;
+use tdorch::graph::Vid;
+use tdorch::serve::{QueryShard, ServeConfig, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, QueryMix, StreamConfig, Zipf,
+};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+#[test]
+fn stream_is_identical_across_machine_counts() {
+    // The generator sees only graph-derived hotness, never the
+    // deployment: engines at P=1 and P=8 expose the same degree array,
+    // hence the same hot order, hence byte-identical streams for one
+    // seed.
+    let g = gen::barabasi_albert(800, 5, 13);
+    let orders: Vec<Vec<Vid>> = [1usize, 8]
+        .iter()
+        .map(|&p| {
+            let e = SpmdEngine::tdo_gp(Cluster::new(p, cost()), &g, cost(), QueryShard::new);
+            hot_source_order(&e.meta().out_deg)
+        })
+        .collect();
+    assert_eq!(orders[0], orders[1], "hot order must not depend on P");
+    let cfg = StreamConfig { queries: 200, per_tick: 3, zipf_s: 1.2, mix: QueryMix::balanced() };
+    let a = generate_stream(cfg, &orders[0], 42);
+    let b = generate_stream(cfg, &orders[1], 42);
+    assert_eq!(a, b, "same seed must give the same stream at every P");
+    let c = generate_stream(cfg, &orders[0], 43);
+    assert_ne!(a, c, "different seeds must diverge");
+}
+
+#[test]
+fn stream_skew_tracks_requested_exponent() {
+    let n = 1000usize;
+    let hot: Vec<Vid> = (0..n as Vid).collect();
+    let mass_of = |s: f64| {
+        let cfg =
+            StreamConfig { queries: 40_000, per_tick: 8, zipf_s: s, mix: QueryMix::balanced() };
+        let stream = generate_stream(cfg, &hot, 9);
+        stream.iter().filter(|q| q.source == hot[0]).count() as f64 / stream.len() as f64
+    };
+    for s in [1.2f64, 2.5] {
+        let got = mass_of(s);
+        let expect = Zipf::new(n, s).p_hot();
+        // 40k samples put the 3σ band well under 2% relative; 10% is a
+        // loose functional tolerance, not a statistical knife edge.
+        assert!(
+            (got - expect).abs() / expect < 0.10,
+            "s={s}: hottest-source mass {got:.4}, expected {expect:.4}"
+        );
+    }
+    assert!(
+        mass_of(2.5) > mass_of(1.2),
+        "higher exponent must concentrate more traffic on the hottest source"
+    );
+}
+
+#[test]
+fn bounded_queue_rejects_overflow_deterministically() {
+    // 32 queries burst into a 4-deep admission queue in one tick: the
+    // overflow must be shed (open loop), and two identical runs must
+    // agree on exactly which queries were served, their waits, batches
+    // and results.
+    let g = gen::barabasi_albert(300, 4, 2);
+    let serve_cfg = ServeConfig { batch: 4, deadline_ticks: 1, queue_cap: 4, pr_iters: 2 };
+    let hot = {
+        let e = SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new);
+        hot_source_order(&e.meta().out_deg)
+    };
+    let stream = generate_stream(
+        StreamConfig { queries: 32, per_tick: 32, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        5,
+    );
+    let run = || {
+        let mut s = Server::new(
+            SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
+            serve_cfg,
+        );
+        s.run(&stream)
+    };
+    let a = run();
+    assert!(a.rejected > 0, "a 32-query burst must overflow a 4-deep queue");
+    assert_eq!(a.served() as u64 + a.rejected, 32, "every arrival is served or rejected");
+    let b = run();
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.ticks, b.ticks);
+    let ids = |r: &tdorch::serve::ServeReport| -> Vec<(u64, u64, u64)> {
+        r.results.iter().map(|x| (x.id, x.wait_ticks, x.batch)).collect()
+    };
+    assert_eq!(ids(&a), ids(&b), "admission/batching must be deterministic");
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.bits, y.bits, "query {}: bits diverged between identical runs", x.id);
+    }
+}
+
+#[test]
+fn deadline_dispatches_partial_batches() {
+    // A trickle (1 query/tick) against batch=8 would starve without the
+    // tick deadline; with deadline 2, every query must wait at most 2
+    // ticks and batches stay smaller than the size trigger.
+    let g = gen::barabasi_albert(300, 4, 2);
+    let hot = {
+        let e = SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new);
+        hot_source_order(&e.meta().out_deg)
+    };
+    let stream = generate_stream(
+        StreamConfig { queries: 6, per_tick: 1, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        8,
+    );
+    let mut s = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
+        ServeConfig { batch: 8, deadline_ticks: 2, queue_cap: 16, pr_iters: 2 },
+    );
+    let rep = s.run(&stream);
+    assert_eq!(rep.served(), 6);
+    assert_eq!(rep.rejected, 0);
+    assert!(
+        rep.results.iter().all(|r| r.wait_ticks <= 2),
+        "deadline must bound queue wait: {:?}",
+        rep.results.iter().map(|r| r.wait_ticks).collect::<Vec<_>>()
+    );
+    assert!(rep.batches >= 2, "a trickle under deadline must form several partial batches");
+}

@@ -1,6 +1,6 @@
 //! Graph analytics with TDO-GP: all five paper algorithms on a skewed
 //! social graph, compared against the prior-system baselines — a small
-//! Table 2 (paper §6.2).
+//! Table 2 (paper §6.2) on the unified SPMD engine.
 //!
 //! ```sh
 //! cargo run --release --example graph_analytics
@@ -8,9 +8,10 @@
 
 use tdorch::graph::algorithms::{bc, bfs, cc, pagerank, sssp, Algorithm};
 use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
-use tdorch::graph::engine::{Engine, GraphEngine};
 use tdorch::graph::gen;
-use tdorch::CostModel;
+use tdorch::graph::spmd::SpmdEngine;
+use tdorch::serve::QueryShard;
+use tdorch::{Cluster, CostModel};
 
 fn main() {
     let p = 8;
@@ -23,11 +24,14 @@ fn main() {
     );
 
     let cost = CostModel::paper_cluster();
+    // Four policy configurations of ONE engine; each holds all five
+    // algorithm shards (QueryShard), reset between runs exactly like the
+    // serving layer does.
     let mut engines = vec![
-        Engine::tdo_gp(&g, p, cost),
-        gemini_like(&g, p, cost),
-        la_like(&g, p, cost),
-        ligra_dist(&g, p, cost),
+        SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, QueryShard::new),
+        gemini_like(Cluster::new(p, cost), &g, cost, QueryShard::new),
+        la_like(Cluster::new(p, cost), &g, cost, QueryShard::new),
+        ligra_dist(Cluster::new(p, cost), &g, cost, QueryShard::new),
     ];
 
     println!(
@@ -37,7 +41,8 @@ fn main() {
     for alg in Algorithm::ALL {
         print!("{:<6}", alg.label());
         for e in engines.iter_mut() {
-            e.reset_metrics();
+            e.reset_for_query(|m, meta, st: &mut QueryShard| st.reset(m, meta));
+            e.sub_mut().reset_metrics();
             match alg {
                 Algorithm::Bfs => {
                     let d = bfs(e, 0);
@@ -61,16 +66,20 @@ fn main() {
                     assert!(sum > 0.5 && sum <= 1.0 + 1e-6);
                 }
             }
-            print!(" {:>11.4}s", e.metrics().sim_seconds());
+            print!(" {:>11.4}s", e.sub().metrics.sim_seconds());
         }
         println!();
     }
 
     // Verify all engines agree on BFS distances (correctness across
     // engine families — they differ only in cost structure).
-    let reference = bfs(&mut engines[0], 0);
+    let run_bfs = |e: &mut SpmdEngine<Cluster, QueryShard>| {
+        e.reset_for_query(|m, meta, st: &mut QueryShard| st.reset(m, meta));
+        bfs(e, 0)
+    };
+    let reference = run_bfs(&mut engines[0]);
     for e in engines.iter_mut().skip(1) {
-        let d = bfs(e, 0);
+        let d = run_bfs(e);
         assert_eq!(d, reference, "engine disagrees on BFS");
     }
     println!("\nall engines agree on BFS distances");

@@ -7,11 +7,13 @@ mod bench_util;
 
 use bench_util::Bench;
 use tdorch::graph::algorithms::Algorithm;
-use tdorch::graph::engine::{Engine, Flags};
+use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
+use tdorch::graph::spmd::SpmdEngine;
 use tdorch::orchestration::tdorch::TdOrch;
 use tdorch::orchestration::{spread_tasks, Scheduler, Task};
 use tdorch::repro::graphs::run_alg;
+use tdorch::serve::QueryShard;
 use tdorch::{Cluster, CostModel, DistStore};
 
 struct CounterApp;
@@ -67,8 +69,15 @@ fn main() {
     let g = gen::barabasi_albert(10_000, 8, 9);
     let mut pair = (0.0, 0.0);
     b.run("table3-BC-P8", 3, || {
-        let mut lig = Engine::baseline(&g, 8, cost, Flags::ligra_dist(), "ligra-dist");
-        let mut tdo = Engine::tdo_gp(&g, 8, cost);
+        let mut lig = SpmdEngine::baseline(
+            Cluster::new(8, cost),
+            &g,
+            cost,
+            Flags::ligra_dist(),
+            "ligra-dist",
+            QueryShard::new,
+        );
+        let mut tdo = SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, QueryShard::new);
         pair = (
             run_alg(&mut lig, Algorithm::Bc).0,
             run_alg(&mut tdo, Algorithm::Bc).0,
@@ -79,15 +88,19 @@ fn main() {
     assert!(pair.0 > 2.0 * pair.1, "table3 shape regressed");
 
     // Table 4: technique ablations, SSSP P=8.
-    for (label, flags) in [
-        ("-T1", Flags::with_techniques(false, true, true)),
-        ("-T2", Flags::with_techniques(true, false, true)),
-        ("-T3", Flags::with_techniques(true, true, false)),
-    ] {
+    for (label, flags) in Flags::ablations() {
         let mut ratio = 0.0;
         b.run(&format!("table4-SSSP-P8{label}"), 3, || {
-            let mut full = Engine::tdo_gp(&g, 8, cost);
-            let mut abl = Engine::tdo_gp_with(&g, 8, cost, flags, label);
+            let mut full = SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, QueryShard::new);
+            let mut abl = SpmdEngine::new(
+                Cluster::new(8, cost),
+                &g,
+                cost,
+                flags,
+                tdorch::graph::spmd::Placement::Spread,
+                label,
+                QueryShard::new,
+            );
             let t_full = run_alg(&mut full, Algorithm::Sssp).0;
             let t_abl = run_alg(&mut abl, Algorithm::Sssp).0;
             ratio = t_abl / t_full;

@@ -15,8 +15,8 @@ mod bench_util;
 
 use bench_util::Bench;
 use tdorch::exec::ThreadedCluster;
-use tdorch::graph::algorithms::{pagerank_spmd, sssp_spmd};
-use tdorch::graph::engine::Flags;
+use tdorch::graph::algorithms::{pagerank, sssp};
+use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, GraphMeta, Placement, SpmdEngine};
@@ -69,20 +69,20 @@ fn main() {
 
         // Reference bits from the simulator backend of the same engine.
         sim.reset_for_query(reset_pr);
-        let pr_sim = pagerank_spmd(&mut sim, PR_ITERS);
+        let pr_sim = pagerank(&mut sim, PR_ITERS);
         sim.reset_for_query(reset_ss);
-        let ss_sim = sssp_spmd(&mut sim, 0);
+        let ss_sim = sssp(&mut sim, 0);
 
         // ---- PageRank ----
         b.run(&format!("pagerank-sim-P{p}"), ITERS, || {
             sim.reset_for_query(reset_pr);
-            pagerank_spmd(&mut sim, PR_ITERS).len()
+            pagerank(&mut sim, PR_ITERS).len()
         });
 
         let mut pr_runs: Vec<Vec<f64>> = Vec::new();
         b.run(&format!("pagerank-threaded-P{p}"), ITERS, || {
             thr.reset_for_query(reset_pr);
-            let rank = pagerank_spmd(&mut thr, PR_ITERS);
+            let rank = pagerank(&mut thr, PR_ITERS);
             let n = rank.len();
             pr_runs.push(rank);
             n
@@ -101,14 +101,14 @@ fn main() {
         // ---- SSSP ----
         b.run(&format!("sssp-sim-P{p}"), ITERS, || {
             sim.reset_for_query(reset_ss);
-            sssp_spmd(&mut sim, 0).len()
+            sssp(&mut sim, 0).len()
         });
 
         thr.sub_mut().reset_metrics();
         let mut ss_runs: Vec<Vec<f64>> = Vec::new();
         b.run(&format!("sssp-threaded-P{p}"), ITERS, || {
             thr.reset_for_query(reset_ss);
-            let d = sssp_spmd(&mut thr, 0);
+            let d = sssp(&mut thr, 0);
             let n = d.len();
             ss_runs.push(d);
             n

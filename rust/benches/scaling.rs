@@ -5,10 +5,11 @@ mod bench_util;
 
 use bench_util::Bench;
 use tdorch::graph::algorithms::Algorithm;
-use tdorch::graph::engine::Engine;
 use tdorch::graph::gen;
+use tdorch::graph::spmd::SpmdEngine;
 use tdorch::repro::graphs::run_alg;
-use tdorch::CostModel;
+use tdorch::serve::QueryShard;
+use tdorch::{Cluster, CostModel};
 
 fn main() {
     let b = Bench::new("scaling");
@@ -20,7 +21,7 @@ fn main() {
     for p in [1usize, 4, 16] {
         let mut sim = 0.0;
         b.run(&format!("fig8-strong-BC-P{p}"), 3, || {
-            let mut e = Engine::tdo_gp(&g, p, cost);
+            let mut e = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, QueryShard::new);
             sim = run_alg(&mut e, Algorithm::Bc).0;
             sim.to_bits()
         });
@@ -39,7 +40,7 @@ fn main() {
         let g = gen::barabasi_albert(3_000 * p, 8, 6);
         let mut sim = 0.0;
         b.run(&format!("fig9-weak-PR-P{p}"), 3, || {
-            let mut e = Engine::tdo_gp(&g, p, cost);
+            let mut e = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, QueryShard::new);
             sim = run_alg(&mut e, Algorithm::Pr).0;
             sim.to_bits()
         });

@@ -1,5 +1,5 @@
 //! Bench: online serving throughput — queries/sec of the mixed
-//! {BFS, SSSP, PR, CC} Zipf stream on a long-lived engine, sim vs
+//! {BFS, SSSP, PR, CC, BC} Zipf stream on a long-lived engine, sim vs
 //! threaded backend.  Engine construction (ingestion, relay-tree
 //! precompute, worker-pool spawn) happens OUTSIDE the timed region; the
 //! timed closure is exactly what a serving process pays per stream:
@@ -10,7 +10,7 @@ mod bench_util;
 
 use bench_util::Bench;
 use tdorch::exec::ThreadedCluster;
-use tdorch::graph::engine::Flags;
+use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};

@@ -1,13 +1,13 @@
-//! Bench: Table 2 (end-to-end graph runtimes) at reduced scale.
+//! Bench: Table 2 (end-to-end graph runtimes) at reduced scale, on the
+//! unified SPMD engine (the same code path `repro table2` drives).
 //! `cargo bench --bench table2_endtoend`.
 
 mod bench_util;
 
 use bench_util::Bench;
 use tdorch::graph::algorithms::Algorithm;
-use tdorch::graph::engine::{Engine, Flags};
 use tdorch::graph::gen;
-use tdorch::repro::graphs::run_alg;
+use tdorch::repro::graphs::{engines_for, run_alg};
 use tdorch::CostModel;
 
 fn main() {
@@ -23,12 +23,14 @@ fn main() {
             let mut results = Vec::new();
             b.run(&format!("{gname}-{}", alg.label()), 3, || {
                 results.clear();
-                let mut tdo = Engine::tdo_gp(g, p, cost);
-                let mut gem = Engine::baseline(g, p, cost, Flags::gemini_like(), "gemini-like");
-                let mut la = Engine::baseline(g, p, cost, Flags::la_like(), "la-like");
-                results.push(("tdo", run_alg(&mut tdo, alg).0));
-                results.push(("gem", run_alg(&mut gem, alg).0));
-                results.push(("la", run_alg(&mut la, alg).0));
+                // engines_for yields [tdo-gp, gemini-like, la-like,
+                // ligra-dist] — every engine built in the timed region
+                // is also run, so no dead construction work is timed.
+                let mut engines = engines_for(g, p, cost);
+                results.push(("tdo", run_alg(&mut engines[0], alg).0));
+                results.push(("gem", run_alg(&mut engines[1], alg).0));
+                results.push(("la", run_alg(&mut engines[2], alg).0));
+                results.push(("lig", run_alg(&mut engines[3], alg).0));
                 results.len()
             });
             let line: Vec<String> = results
@@ -40,10 +42,9 @@ fn main() {
     }
 
     // Shape checks at bench scale.
-    let mut tdo = Engine::tdo_gp(&road, 16, cost);
-    let mut la = Engine::baseline(&road, 16, cost, Flags::la_like(), "la-like");
-    let t_tdo = run_alg(&mut tdo, Algorithm::Bfs).0;
-    let t_la = run_alg(&mut la, Algorithm::Bfs).0;
+    let mut engines = engines_for(&road, 16, cost);
+    let t_tdo = run_alg(&mut engines[0], Algorithm::Bfs).0;
+    let t_la = run_alg(&mut engines[2], Algorithm::Bfs).0;
     assert!(
         t_la > 2.0 * t_tdo,
         "road BFS shape regressed: la {t_la:.4} vs tdo {t_tdo:.4}"

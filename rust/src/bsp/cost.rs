@@ -57,7 +57,8 @@ impl CostModel {
     /// terms that drive Table 2) would drown under L and the *shapes*
     /// would be lost.  work_unit is the effective memory-bound cost per
     /// edge/vertex touch; g matches 10 GbE; per_msg is per packed item;
-    /// unbatched RPCs are charged separately (`Cluster::account_rpc`).
+    /// unbatched RPCs pay `RPC_MSG_FACTOR` per-msg units instead
+    /// (`Cluster::set_msg_factor`).
     pub fn paper_cluster() -> Self {
         CostModel {
             g: 8.0e-9,

@@ -18,6 +18,13 @@ use crate::metrics::Metrics;
 /// Index of a physical machine in the cluster: `0..P`.
 pub type MachineId = usize;
 
+/// Per-message overhead multiplier for *unbatched* remote operations
+/// (RPC-style requests that cannot be packed with their neighbors — e.g.
+/// per-edge direct pulls): a ~10 µs round-trip against the ~0.1 µs
+/// amortized cost of a packed message item.  Engines select it per
+/// superstep via [`Cluster::set_msg_factor`].
+pub const RPC_MSG_FACTOR: u64 = 300;
+
 /// Per-superstep accumulator, folded into [`Metrics`] at each barrier.
 #[derive(Clone, Debug, Default)]
 struct StepAccum {
@@ -55,6 +62,9 @@ pub struct Cluster {
     pub cost: CostModel,
     pub metrics: Metrics,
     step: StepAccum,
+    /// Per-message overhead units charged to both endpoints of each
+    /// accounted message (1 = packed item; [`RPC_MSG_FACTOR`] = RPC).
+    msg_factor: u64,
 }
 
 impl Cluster {
@@ -65,7 +75,19 @@ impl Cluster {
             cost,
             metrics: Metrics::new(p),
             step: StepAccum::new(p),
+            msg_factor: 1,
         }
+    }
+
+    /// Set the per-message overhead multiplier applied to messages
+    /// accounted from now on: 1 (default) for packed/batched message
+    /// items, [`RPC_MSG_FACTOR`] for unbatchable RPC round-trips.  Only
+    /// the overhead *time* term (`per_msg * max_msgs`) sees the factor;
+    /// the ledger (words, message counts, work) is unaffected, which is
+    /// what keeps the simulator ledger bit-comparable to the measured
+    /// threaded backend whatever the factor.
+    pub fn set_msg_factor(&mut self, factor: u64) {
+        self.msg_factor = factor.max(1);
     }
 
     /// Charge `units` of local work to machine `m` in the current superstep.
@@ -92,9 +114,10 @@ impl Cluster {
         self.step.recv[to] += words;
         // Both endpoints pay the fixed per-message cost (pack + unpack);
         // this is what makes per-edge messaging to a hot vertex's owner
-        // expensive even when the payloads are small.
-        self.step.msgs[from] += 1;
-        self.step.msgs[to] += 1;
+        // expensive even when the payloads are small.  `msg_factor`
+        // scales it for unbatchable RPCs (see `set_msg_factor`).
+        self.step.msgs[from] += self.msg_factor;
+        self.step.msgs[to] += self.msg_factor;
         self.metrics.total_words += words;
         self.metrics.total_msgs += 1;
         self.step.dirty = true;
@@ -127,26 +150,6 @@ impl Cluster {
             self.metrics.work_by_machine[m] += self.step.work[m];
         }
         self.step.reset();
-    }
-
-    /// Account one *unbatched* remote operation (RPC-style request or
-    /// reply that cannot be packed with its neighbors — e.g. per-edge
-    /// direct pulls).  Costs `RPC_MSG_FACTOR` per-message units on both
-    /// endpoints: a ~10 µs round-trip against the ~0.1 µs amortized cost
-    /// of a packed message item.
-    #[inline]
-    pub fn account_rpc(&mut self, from: MachineId, to: MachineId, words: u64) {
-        const RPC_MSG_FACTOR: u64 = 300;
-        if from == to {
-            return;
-        }
-        self.step.sent[from] += words;
-        self.step.recv[to] += words;
-        self.step.msgs[from] += RPC_MSG_FACTOR;
-        self.step.msgs[to] += RPC_MSG_FACTOR;
-        self.metrics.total_words += words;
-        self.metrics.total_msgs += 1;
-        self.step.dirty = true;
     }
 
     /// All-to-all message exchange closing one superstep.
@@ -239,6 +242,38 @@ mod tests {
         c.barrier();
         assert_eq!(c.metrics.supersteps, 0);
         assert_eq!(c.metrics.sim_seconds(), 0.0);
+    }
+
+    #[test]
+    fn msg_factor_scales_overhead_term_only() {
+        // The RPC factor inflates the simulated per-message overhead time
+        // without touching the ledger the threaded backend must match.
+        let cost = CostModel {
+            g: 0.0,
+            l: 0.0,
+            work_unit: 0.0,
+            per_msg: 1.0,
+            numa: NumaTopo::Single,
+        };
+        let mut a = Cluster::new(2, cost);
+        a.account_msg(0, 1, 3);
+        a.barrier();
+        let mut b = Cluster::new(2, cost);
+        b.set_msg_factor(RPC_MSG_FACTOR);
+        b.account_msg(0, 1, 3);
+        b.barrier();
+        assert!((a.metrics.time.overhead - 1.0).abs() < 1e-12);
+        assert!((b.metrics.time.overhead - RPC_MSG_FACTOR as f64).abs() < 1e-12);
+        assert_eq!(a.metrics.total_words, b.metrics.total_words);
+        assert_eq!(a.metrics.total_msgs, b.metrics.total_msgs);
+        assert_eq!(a.metrics.sent_by_machine, b.metrics.sent_by_machine);
+        assert_eq!(a.metrics.recv_by_machine, b.metrics.recv_by_machine);
+        // Factor 0 clamps to 1 (a message always costs at least itself);
+        // resetting to 1 restores packed-item accounting.
+        b.set_msg_factor(0);
+        b.account_msg(1, 0, 3);
+        b.barrier();
+        assert!((b.metrics.time.overhead - (RPC_MSG_FACTOR as f64 + 1.0)).abs() < 1e-12);
     }
 
     #[test]

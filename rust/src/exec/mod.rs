@@ -80,6 +80,17 @@ pub trait Substrate {
     /// Number of logical machines P.
     fn machines(&self) -> usize;
 
+    /// Per-message overhead multiplier for messages accounted in
+    /// subsequent supersteps: 1 (default) for packed/batched items,
+    /// [`crate::bsp::RPC_MSG_FACTOR`] for unbatchable per-item RPC
+    /// round-trips (the per-edge "direct pull" wire shape).  Only
+    /// *accounting* backends act on it — the simulator folds it into its
+    /// overhead time term; the measured threaded backend ignores it (its
+    /// per-message cost is real wall-clock).  The ledger both backends
+    /// share (words, message counts, work) never sees the factor, so
+    /// cross-backend bit-equality is unaffected.
+    fn set_msg_factor(&mut self, _factor: u64) {}
+
     /// Run one superstep.
     ///
     /// `state[m]` is machine `m`'s private state (on the threaded backend
@@ -111,6 +122,10 @@ pub trait Substrate {
 impl Substrate for Cluster {
     fn machines(&self) -> usize {
         self.p
+    }
+
+    fn set_msg_factor(&mut self, factor: u64) {
+        Cluster::set_msg_factor(self, factor);
     }
 
     fn superstep<St, Tin, Tout, F, W>(

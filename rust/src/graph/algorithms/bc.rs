@@ -1,90 +1,154 @@
 //! Betweenness centrality from a single root (Brandes forward/backward,
-//! paper Algorithm 3 / Appendix C) via DISTEDGEMAP.
+//! paper Algorithm 3 / Appendix C) via DISTEDGEMAP — two phases on the
+//! unified SPMD engine.
+//!
+//! Forward: level-synchronous BFS accumulating shortest-path counts
+//! (σ travels as a real message; ⊕-merge sums path counts; first level
+//! wins at the owner).  The per-level frontiers are snapshotted
+//! ([`SpmdEngine::frontier_parts`]) so the backward pass can replay them
+//! deepest-first.
+//!
+//! Backward: each child v at level r+1 broadcasts its dependency share
+//! `(1 + δ(v)) / σ(v)`; shares ⊕-merge per destination, and the **owner**
+//! applies the parent filter — the frontier is exactly the level-(r+1)
+//! vertices, so "u is a parent" reduces to `level(u) == r`, a check on
+//! owner-local state.  Filtering at the owner instead of per edge keeps
+//! the edge lambda free of destination-side state (which a block machine
+//! does not have in shared-nothing form) and admits the same share set a
+//! per-edge `level(u) == level(v) - 1` filter would: on a symmetric
+//! graph, every frontier child adjacent to a level-r vertex is one hop
+//! below it.  Same-or-deeper neighbors receive a merged value too, but
+//! their owner discards it, exactly as the per-edge filter would have
+//! produced no contribution for them.
 
-use crate::graph::engine::GraphEngine;
-use crate::graph::subset::DistVertexSubset;
+use crate::exec::Substrate;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::Vid;
+use crate::MachineId;
 
-struct BcState {
-    /// Number of shortest paths from the root.
-    sigma: Vec<f64>,
-    /// BFS level (-1 = unreached).
-    level: Vec<i64>,
-    /// Dependency accumulator.
-    delta: Vec<f64>,
-    round: i64,
+use super::ShardAccess;
+
+/// Machine-local BC state for the owned range: path counts σ, BFS
+/// levels (-1 = unreached), dependency accumulators δ.
+pub struct BcShard {
+    pub base: Vid,
+    pub sigma: Vec<f64>,
+    pub level: Vec<i64>,
+    pub delta: Vec<f64>,
+}
+
+impl BcShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = BcShard { base: 0, sigma: Vec::new(), level: Vec::new(), delta: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query` (in-place,
+    /// allocations reused across queries).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
+        let r = meta.part.range(m);
+        let n_local = (r.end - r.start) as usize;
+        self.base = r.start;
+        self.sigma.clear();
+        self.sigma.resize(n_local, 0.0);
+        self.level.clear();
+        self.level.resize(n_local, -1);
+        self.delta.clear();
+        self.delta.resize(n_local, 0.0);
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid) -> usize {
+        (v - self.base) as usize
+    }
 }
 
 /// Single-root BC scores (unnormalized, root's own score = 0), as used in
 /// the paper's performance tests.
-pub fn bc<E: GraphEngine>(engine: &mut E, root: Vid) -> Vec<f64> {
-    let part = engine.part().clone();
-    let n = engine.n();
-    let mut st = BcState {
-        sigma: vec![0.0; n],
-        level: vec![-1; n],
-        delta: vec![0.0; n],
-        round: 0,
-    };
-    st.sigma[root as usize] = 1.0;
-    st.level[root as usize] = 0;
+pub fn bc<B: Substrate, AS: Send + ShardAccess<BcShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    root: Vid,
+) -> Vec<f64> {
+    let owner = engine.meta().part.owner(root);
+    {
+        let st = engine.algo_mut(owner).shard_mut();
+        let i = st.idx(root);
+        st.sigma[i] = 1.0;
+        st.level[i] = 0;
+    }
+    engine.set_frontier_single(root);
 
     // ---- Forward pass: BFS levels + path counts ----
-    let mut frontier = DistVertexSubset::single(&part, root);
-    let mut frontiers = vec![frontier.clone()];
-    while !frontier.is_empty() {
-        st.round += 1;
-        frontier = engine.edge_map(
-            &mut st,
-            &frontier,
+    let mut frontiers = vec![engine.frontier_parts()];
+    let mut round = 0i64;
+    while engine.frontier_len() > 0 {
+        round += 1;
+        let r = round;
+        engine.edge_map(
             // f_forward: propagate path counts (Algorithm 3 line 4).
-            &mut |st: &BcState, u, _v, _w| Some(st.sigma[u as usize]),
+            &|_m, st: &AS, u| {
+                let s = st.shard();
+                Some(s.sigma[s.idx(u)])
+            },
+            &|sv, _u, _v, _w| Some(sv),
             // ⊗: path counts add.
             &|a, b| a + b,
             // wb_forward: first level wins; accumulate sigma.
-            &mut |st, v, agg| {
-                if st.level[v as usize] < 0 {
-                    st.level[v as usize] = st.round;
-                    st.sigma[v as usize] = agg;
+            &move |st: &mut AS, v, agg| {
+                let s = st.shard_mut();
+                let i = s.idx(v);
+                if s.level[i] < 0 {
+                    s.level[i] = r;
+                    s.sigma[i] = agg;
                     true
                 } else {
                     false
                 }
             },
         );
-        frontiers.push(frontier.clone());
+        frontiers.push(engine.frontier_parts());
     }
 
-    // ---- Backward pass: dependency accumulation ----
-    // Process levels deepest-first; symmetric edges mean edge_map from
-    // the level-(r+1) frontier reaches its level-r parents.
+    // ---- Backward pass: dependency accumulation, deepest level first.
+    // Symmetric edges mean edge_map from the level-(r+1) frontier reaches
+    // its level-r parents; the owner-side level check selects them (see
+    // module docs).
     for r in (0..frontiers.len().saturating_sub(1)).rev() {
-        let deeper = frontiers[r + 1].clone();
-        if deeper.is_empty() {
+        let deeper = &frontiers[r + 1];
+        if deeper.iter().all(|part| part.is_empty()) {
             continue;
         }
+        engine.set_frontier_parts(deeper);
+        let parent_level = r as i64;
         engine.edge_map(
-            &mut st,
-            &deeper,
             // f_backward: child v at level r+1 offers its dependency
-            // share to parents one level up.
-            &mut |st: &BcState, v, u, _w| {
-                if st.level[u as usize] == st.level[v as usize] - 1 {
-                    Some((1.0 + st.delta[v as usize]) / st.sigma[v as usize])
-                } else {
-                    None
-                }
+            // share to its neighbors.
+            &|_m, st: &AS, v| {
+                let s = st.shard();
+                let i = s.idx(v);
+                Some((1.0 + s.delta[i]) / s.sigma[i])
             },
+            &|sv, _u, _v, _w| Some(sv),
             // ⊗: shares add.
             &|a, b| a + b,
-            // wb_backward: delta[u] = sigma[u] * Σ shares.
-            &mut |st, u, agg| {
-                st.delta[u as usize] = st.sigma[u as usize] * agg;
+            // wb_backward: parents (level == r) take δ(u) = σ(u)·Σshares;
+            // everyone else discards the aggregate.
+            &move |st: &mut AS, u, agg| {
+                let s = st.shard_mut();
+                let i = s.idx(u);
+                if s.level[i] == parent_level {
+                    s.delta[i] = s.sigma[i] * agg;
+                }
                 false
             },
         );
     }
 
-    st.delta[root as usize] = 0.0;
-    st.delta
+    {
+        let st = engine.algo_mut(owner).shard_mut();
+        let i = st.idx(root);
+        st.delta[i] = 0.0;
+    }
+    engine.gather(|_m, st| st.shard().delta.clone())
 }

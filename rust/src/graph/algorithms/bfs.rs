@@ -1,47 +1,12 @@
-//! Breadth-first search via DISTEDGEMAP (paper Algorithm 2), in both
-//! forms: against the cost-model [`GraphEngine`] and in SPMD form against
-//! the substrate-generic [`SpmdEngine`].
+//! Breadth-first search via DISTEDGEMAP (paper Algorithm 2) on the
+//! unified SPMD engine.
 
 use crate::exec::Substrate;
-use crate::graph::engine::GraphEngine;
 use crate::graph::spmd::{GraphMeta, SpmdEngine};
-use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
 use super::ShardAccess;
-
-/// Returns the hop distance from `src` per vertex (-1 = unreachable).
-pub fn bfs<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<i64> {
-    let part = engine.part().clone();
-    let mut dist = vec![-1i64; engine.n()];
-    dist[src as usize] = 0;
-    let mut frontier = DistVertexSubset::single(&part, src);
-    let mut round = 0i64;
-    while !frontier.is_empty() {
-        round += 1;
-        let r = round;
-        frontier = engine.edge_map(
-            &mut dist,
-            &frontier,
-            // f: the source is on the current frontier, so the new
-            // distance is simply this round number (Algorithm 2 line 4).
-            &mut |_, _, _, _| Some(r as f64),
-            // merge: all contributions equal this round; keep one.
-            &|a, _| a,
-            // write_back: first writer wins (Algorithm 2 lines 6-9).
-            &mut |dist, v, val| {
-                if dist[v as usize] < 0 {
-                    dist[v as usize] = val as i64;
-                    true
-                } else {
-                    false
-                }
-            },
-        );
-    }
-    dist
-}
 
 /// Machine-local BFS state: hop distances for the owned vertex range.
 pub struct BfsShard {
@@ -72,12 +37,13 @@ impl BfsShard {
     }
 }
 
-/// BFS in SPMD form: identical rounds to [`bfs`], but the per-round hop
-/// count travels as a real message through the substrate, so the same
-/// code runs (bit-identically) on the simulator and the threaded pool.
-/// Generic over [`ShardAccess`] so both a dedicated BFS engine and the
-/// serving layer's multi-algorithm engine can call it.
-pub fn bfs_spmd<B: Substrate, AS: Send + ShardAccess<BfsShard>>(
+/// Returns the hop distance from `src` per vertex (-1 = unreachable).
+/// The per-round hop count travels as a real message through the
+/// substrate, so the same code runs (bit-identically) on the simulator
+/// and the threaded pool.  Generic over [`ShardAccess`] so both a
+/// dedicated BFS engine and the serving layer's multi-algorithm engine
+/// can call it.
+pub fn bfs<B: Substrate, AS: Send + ShardAccess<BfsShard>>(
     engine: &mut SpmdEngine<B, AS>,
     src: Vid,
 ) -> Vec<i64> {

@@ -1,43 +1,11 @@
-//! Connected components by min-label propagation via DISTEDGEMAP, in
-//! cost-model and SPMD form.
+//! Connected components by min-label propagation via DISTEDGEMAP.
 
 use crate::exec::Substrate;
-use crate::graph::engine::GraphEngine;
 use crate::graph::spmd::{GraphMeta, SpmdEngine};
-use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
 use super::ShardAccess;
-
-/// Returns, per vertex, the minimum vertex id of its component.
-pub fn cc<E: GraphEngine>(engine: &mut E) -> Vec<u32> {
-    let part = engine.part().clone();
-    let n = engine.n();
-    let mut label: Vec<f64> = (0..n).map(|v| v as f64).collect();
-    engine.charge_local((n / engine.part().p().max(1)) as u64); // init sweep
-    let mut frontier = DistVertexSubset::all(&part);
-    while !frontier.is_empty() {
-        frontier = engine.edge_map(
-            &mut label,
-            &frontier,
-            // f: offer our label to the neighbor.
-            &mut |label: &Vec<f64>, u, _v, _w| Some(label[u as usize]),
-            // ⊗: smallest label wins.
-            &|a, b| a.min(b),
-            // ⊙: adopt improvements, stay active while changing.
-            &mut |label, v, val| {
-                if val < label[v as usize] {
-                    label[v as usize] = val;
-                    true
-                } else {
-                    false
-                }
-            },
-        );
-    }
-    label.into_iter().map(|l| l as u32).collect()
-}
 
 /// Machine-local CC state: component labels for the owned range.
 pub struct CcShard {
@@ -67,10 +35,11 @@ impl CcShard {
     }
 }
 
-/// CC in SPMD form: labels travel as real messages and min-fold at the
-/// owners.  Vertex ids are exact in f64, so the fixpoint is bit-identical
-/// to [`cc`] on every substrate and machine count.
-pub fn cc_spmd<B: Substrate, AS: Send + ShardAccess<CcShard>>(
+/// Returns, per vertex, the minimum vertex id of its component.  Labels
+/// travel as real messages and min-fold at the owners.  Vertex ids are
+/// exact in f64, so the fixpoint is bit-identical on every substrate and
+/// machine count.
+pub fn cc<B: Substrate, AS: Send + ShardAccess<CcShard>>(
     engine: &mut SpmdEngine<B, AS>,
 ) -> Vec<u32> {
     let meta = engine.meta();

@@ -1,15 +1,12 @@
-//! The five paper algorithms (§5, Appendix C) written against
-//! [`GraphEngine::edge_map`] — each a page of user-level code, mirroring
-//! the paper's "BC in fewer than 70 lines" interface-conciseness claim.
-//!
-//! BFS, SSSP, CC and PR additionally ship `*_spmd` variants written
-//! against the substrate-generic [`crate::graph::spmd::SpmdEngine`]:
-//! same rounds, but vertex state is sharded per machine and source
-//! values/contributions travel as real messages, so one implementation
-//! runs bit-identically on the BSP simulator and on the threaded worker
-//! pool (`tests/graph_exec_equivalence.rs`).
-//!
-//! [`GraphEngine::edge_map`]: crate::graph::engine::GraphEngine::edge_map
+//! The five paper algorithms (§5, Appendix C), each ONE shard type plus
+//! ONE runner written against the unified SPMD engine's `edge_map`
+//! ([`crate::graph::spmd::SpmdEngine`]) — a page of user-level code per
+//! algorithm, mirroring the paper's "BC in fewer than 70 lines"
+//! interface-conciseness claim.  Vertex state is sharded per machine and
+//! source values/contributions travel as real messages, so every
+//! implementation runs bit-identically on the BSP simulator (the figure
+//! paths) and on the threaded worker pool (the runtime/serving paths) —
+//! `tests/graph_exec_equivalence.rs` pins that contract.
 
 mod bc;
 mod bfs;
@@ -17,20 +14,20 @@ mod cc;
 mod pagerank;
 mod sssp;
 
-pub use bc::bc;
-pub use bfs::{bfs, bfs_spmd, BfsShard};
-pub use cc::{cc, cc_spmd, CcShard};
-pub use pagerank::{pagerank, pagerank_spmd, PrShard, DAMPING};
-pub use sssp::{sssp, sssp_spmd, SsspShard};
+pub use bc::{bc, BcShard};
+pub use bfs::{bfs, BfsShard};
+pub use cc::{cc, CcShard};
+pub use pagerank::{pagerank, PrShard, DAMPING};
+pub use sssp::{sssp, SsspShard};
 
 /// Projection from an engine's machine-local algorithm state to one
-/// algorithm's shard.  The `*_spmd` runners are generic over this, so
-/// they serve two callers with one implementation: a single-algorithm
-/// engine (`SpmdEngine<B, BfsShard>` — the identity impl below), and the
-/// serving layer's [`crate::serve::QueryShard`], which holds all four
+/// algorithm's shard.  The runners are generic over this, so they serve
+/// two callers with one implementation: a single-algorithm engine
+/// (`SpmdEngine<B, BfsShard>` — the identity impl below), and the
+/// serving layer's [`crate::serve::QueryShard`], which holds all five
 /// shards so ONE long-lived engine (one ingestion, one worker pool) can
-/// run the whole {BFS, SSSP, PR, CC} query mix, switching algorithms via
-/// `SpmdEngine::reset_for_query` instead of engine reconstruction.
+/// run the whole {BFS, SSSP, PR, CC, BC} query mix, switching algorithms
+/// via `SpmdEngine::reset_for_query` instead of engine reconstruction.
 pub trait ShardAccess<S> {
     fn shard(&self) -> &S;
     fn shard_mut(&mut self) -> &mut S;

@@ -7,62 +7,13 @@
 //! charges it as one work unit per edge.
 
 use crate::exec::Substrate;
-use crate::graph::engine::GraphEngine;
 use crate::graph::spmd::{GraphMeta, SpmdEngine};
-use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
 use super::ShardAccess;
 
 pub const DAMPING: f64 = 0.85;
-
-struct PrState {
-    rank: Vec<f64>,
-    next: Vec<f64>,
-    out_deg: Vec<u64>,
-}
-
-/// Run `iters` PageRank iterations; returns the final rank vector.
-pub fn pagerank<E: GraphEngine>(engine: &mut E, iters: usize) -> Vec<f64> {
-    let part = engine.part().clone();
-    let n = engine.n();
-    let base = (1.0 - DAMPING) / n as f64;
-    let per_machine = (n / part.p().max(1)) as u64;
-    let mut st = PrState {
-        rank: vec![1.0 / n as f64; n],
-        next: vec![base; n],
-        out_deg: (0..n as u32).map(|u| engine.out_degree(u)).collect(),
-    };
-    engine.charge_local(per_machine); // rank init sweep
-    let all = DistVertexSubset::all(&part);
-    for _ in 0..iters {
-        st.next.fill(base);
-        engine.charge_local(per_machine); // per-round base reset
-        engine.edge_map(
-            &mut st,
-            &all,
-            // f: share of the source's rank (dangling-free contribution).
-            &mut |st: &PrState, u, _v, _w| {
-                let d = st.out_deg[u as usize];
-                if d == 0 {
-                    None
-                } else {
-                    Some(st.rank[u as usize] / d as f64)
-                }
-            },
-            // ⊗: contributions add.
-            &|a, b| a + b,
-            // ⊙: damped update; frontier membership irrelevant (dense).
-            &mut |st, v, agg| {
-                st.next[v as usize] = base + DAMPING * agg;
-                false
-            },
-        );
-        std::mem::swap(&mut st.rank, &mut st.next);
-    }
-    st.rank
-}
 
 /// Machine-local PR state: rank and next-rank for the owned range.
 pub struct PrShard {
@@ -97,15 +48,16 @@ impl PrShard {
     }
 }
 
-/// PageRank in SPMD form: each owner broadcasts `rank[u]/deg(u)` as a
-/// real message (destination-aware in dense mode), contributions ⊕-fold
-/// per destination in (sender, emission-index) order.  Because f64
-/// addition rounds, the fold *grouping* — per block machine, then per
-/// destination tree — is part of the result's bit pattern: runs are
-/// bit-identical across substrates and across repeats at fixed (P,
-/// flags), equal to an ascending-source sequential fold at P=1, and
-/// equal to it only up to rounding for P>1 (see `graph/spmd.rs` docs).
-pub fn pagerank_spmd<B: Substrate, AS: Send + ShardAccess<PrShard>>(
+/// Run `iters` PageRank iterations; returns the final rank vector.  Each
+/// owner broadcasts `rank[u]/deg(u)` as a real message (destination
+/// -aware in dense mode); contributions ⊕-fold per destination in
+/// (sender, emission-index) order.  Because f64 addition rounds, the
+/// fold *grouping* — per block machine, then per destination tree — is
+/// part of the result's bit pattern: runs are bit-identical across
+/// substrates and across repeats at fixed (P, flags), equal to an
+/// ascending-source sequential fold at P=1, and equal to it only up to
+/// rounding for P>1 (see `graph/spmd.rs` docs).
+pub fn pagerank<B: Substrate, AS: Send + ShardAccess<PrShard>>(
     engine: &mut SpmdEngine<B, AS>,
     iters: usize,
 ) -> Vec<f64> {

@@ -4,47 +4,11 @@
 //! simulator charges it as one work unit per edge either way.
 
 use crate::exec::Substrate;
-use crate::graph::engine::GraphEngine;
 use crate::graph::spmd::{GraphMeta, SpmdEngine};
-use crate::graph::subset::DistVertexSubset;
 use crate::graph::Vid;
 use crate::MachineId;
 
 use super::ShardAccess;
-
-/// Returns the shortest distance from `src` per vertex (f64::INFINITY =
-/// unreachable).  Weights must be non-negative.
-pub fn sssp<E: GraphEngine>(engine: &mut E, src: Vid) -> Vec<f64> {
-    let part = engine.part().clone();
-    let mut dist = vec![f64::INFINITY; engine.n()];
-    dist[src as usize] = 0.0;
-    let mut frontier = DistVertexSubset::single(&part, src);
-    // Bellman-Ford terminates after at most n rounds on any graph with
-    // non-negative weights; the frontier usually empties much earlier.
-    let max_rounds = engine.n() as u64 + 1;
-    let mut rounds = 0;
-    while !frontier.is_empty() && rounds < max_rounds {
-        rounds += 1;
-        frontier = engine.edge_map(
-            &mut dist,
-            &frontier,
-            // f: candidate distance through the frontier vertex.
-            &mut |dist: &Vec<f64>, u, _v, w| Some(dist[u as usize] + w as f64),
-            // ⊗: keep the shortest candidate.
-            &|a, b| a.min(b),
-            // ⊙: relax; stay active only on improvement.
-            &mut |dist, v, val| {
-                if val < dist[v as usize] {
-                    dist[v as usize] = val;
-                    true
-                } else {
-                    false
-                }
-            },
-        );
-    }
-    dist
-}
 
 /// Machine-local SSSP state: tentative distances for the owned range.
 pub struct SsspShard {
@@ -74,13 +38,14 @@ impl SsspShard {
     }
 }
 
-/// SSSP in SPMD form: the frontier vertex's tentative distance is
-/// broadcast as a real message (down the source tree in sparse mode) and
-/// the relaxation `min(dv, du + w)` runs at the block machines — the
-/// distributed shape of the same `relax_batch` computation.  `min` is
-/// exact in f64, so the result is bit-identical to [`sssp`] and to any
-/// correct sequential solver, at every machine count, on both substrates.
-pub fn sssp_spmd<B: Substrate, AS: Send + ShardAccess<SsspShard>>(
+/// Returns the shortest distance from `src` per vertex (f64::INFINITY =
+/// unreachable).  Weights must be non-negative.  The frontier vertex's
+/// tentative distance is broadcast as a real message (down the source
+/// tree in sparse mode) and the relaxation `min(dv, du + w)` runs at the
+/// block machines.  `min` is exact in f64, so the result is
+/// bit-identical to any correct sequential solver, at every machine
+/// count, on both substrates.
+pub fn sssp<B: Substrate, AS: Send + ShardAccess<SsspShard>>(
     engine: &mut SpmdEngine<B, AS>,
     src: Vid,
 ) -> Vec<f64> {

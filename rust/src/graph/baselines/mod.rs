@@ -1,5 +1,6 @@
-//! Prior-system baseline engines (paper §6.1), reimplemented as policy
-//! configurations of the shared engine core so comparisons isolate the
+//! Prior-system baseline engines (paper §6.1), expressed as policy
+//! configurations of the ONE unified engine core
+//! ([`crate::graph::spmd::SpmdEngine`]) so comparisons isolate the
 //! scheduling/layout differences the paper attributes its wins to:
 //!
 //! * [`gemini_like`] — the graph-algorithm family (Gemini): edges pinned
@@ -9,20 +10,43 @@
 //! * [`la_like`] — the linear-algebra family (Graphite/LA3): full SpMV
 //!   scan every round regardless of frontier sparsity.
 //! * [`ligra_dist`] — Table 3's prototype: Ligra semantics + direct pull,
-//!   per-edge contribution messages, no TD-Orch ingestion or trees.
+//!   per-edge RPC contribution messages, no TD-Orch ingestion or trees.
+//!
+//! Each helper is generic over the execution substrate, like the engine
+//! itself: hand it a [`crate::bsp::Cluster`] for the simulated-cost
+//! figure paths or a [`crate::exec::ThreadedCluster`] to run the same
+//! baseline on the real worker pool.
 
-use crate::graph::engine::{Engine, Flags};
+use crate::bsp::MachineId;
+use crate::exec::Substrate;
+use crate::graph::flags::Flags;
+use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::Graph;
 use crate::CostModel;
 
-pub fn gemini_like(g: &Graph, p: usize, cost: CostModel) -> Engine {
-    Engine::baseline(g, p, cost, Flags::gemini_like(), "gemini-like")
+pub fn gemini_like<B: Substrate, AS: Send>(
+    sub: B,
+    g: &Graph,
+    cost: CostModel,
+    init: impl Fn(MachineId, &GraphMeta) -> AS,
+) -> SpmdEngine<B, AS> {
+    SpmdEngine::baseline(sub, g, cost, Flags::gemini_like(), "gemini-like", init)
 }
 
-pub fn la_like(g: &Graph, p: usize, cost: CostModel) -> Engine {
-    Engine::baseline(g, p, cost, Flags::la_like(), "la-like")
+pub fn la_like<B: Substrate, AS: Send>(
+    sub: B,
+    g: &Graph,
+    cost: CostModel,
+    init: impl Fn(MachineId, &GraphMeta) -> AS,
+) -> SpmdEngine<B, AS> {
+    SpmdEngine::baseline(sub, g, cost, Flags::la_like(), "la-like", init)
 }
 
-pub fn ligra_dist(g: &Graph, p: usize, cost: CostModel) -> Engine {
-    Engine::baseline(g, p, cost, Flags::ligra_dist(), "ligra-dist")
+pub fn ligra_dist<B: Substrate, AS: Send>(
+    sub: B,
+    g: &Graph,
+    cost: CostModel,
+    init: impl Fn(MachineId, &GraphMeta) -> AS,
+) -> SpmdEngine<B, AS> {
+    SpmdEngine::baseline(sub, g, cost, Flags::ligra_dist(), "ligra-dist", init)
 }

@@ -74,32 +74,27 @@ pub struct DistGraph {
     pub stats: IngestStats,
 }
 
-/// Aggregation/broadcast tree over `members` rooted at `root`: returns
-/// bottom-up levels of (child_machine, parent_machine) message edges,
-/// C-ary, transit machines mapped by hash — the meta-task tree of §3.3
-/// persisted for graph use.  Empty when members == [root].
-pub fn tree_levels(
+/// Aggregation/broadcast relay tree over `members` rooted at `root`:
+/// returns bottom-up levels of (child_machine, parent_machine) message
+/// edges, C-ary, transit machines mapped by hash — the meta-task tree of
+/// §3.3 persisted for graph use.  Empty when members == [root].
+///
+/// Duplicate transit parents are removed before each next grouping
+/// round, so every machine appears **at most once per level**: a machine
+/// holding a value/partial for the keyed vertex at depth `d` has exactly
+/// one `(machine, parent)` edge in `levels[d]` — or none, iff it is the
+/// root holding the final value.  This is load-bearing now that the tree
+/// carries real partial aggregates (the unified SPMD engine): a machine
+/// hashed into two positions of one level would otherwise send — and
+/// double-count — its merged partial twice.  (The retired accounting
+/// -only cost engine tolerated such duplicates; its non-deduped
+/// `tree_levels` variant died with it.)
+pub fn relay_tree_levels(
     key: u64,
     members: &[MachineId],
     root: MachineId,
     fanout: usize,
     p: usize,
-) -> Vec<Vec<(MachineId, MachineId)>> {
-    tree_levels_impl(key, members, root, fanout, p, false)
-}
-
-/// Shared builder for the two tree variants — one grouping loop, one
-/// hashed-parent formula, so the accounting trees and the value-carrying
-/// relay trees can never drift apart structurally.  `dedup_parents`
-/// collapses duplicate transit parents before the next grouping round
-/// (the relay variant's machine-unique-position invariant).
-fn tree_levels_impl(
-    key: u64,
-    members: &[MachineId],
-    root: MachineId,
-    fanout: usize,
-    p: usize,
-    dedup_parents: bool,
 ) -> Vec<Vec<(MachineId, MachineId)>> {
     let fanout = fanout.max(2);
     let mut levels = Vec::new();
@@ -113,7 +108,7 @@ fn tree_levels_impl(
             for &child in group {
                 edges.push((child, parent));
             }
-            if !dedup_parents || !next.contains(&parent) {
+            if !next.contains(&parent) {
                 next.push(parent);
             }
         }
@@ -127,27 +122,6 @@ fn tree_levels_impl(
         levels.push(last);
     }
     levels
-}
-
-/// Like [`tree_levels`], but with duplicate transit parents removed
-/// before each next grouping round, so every machine appears **at most
-/// once per level**.  [`tree_levels`] may hash two groups of one level to
-/// the same parent and then treat that machine as two children of the
-/// next level — harmless when the tree only *accounts* messages (the
-/// cost-model engine), but wrong when the messages carry real partial
-/// aggregates: the duplicated holder would send (and double-count) its
-/// merged value twice.  The SPMD engine therefore walks these levels:
-/// a machine holding a value/partial for the keyed vertex at depth `d`
-/// has exactly one `(machine, parent)` edge in `levels[d]` — or none,
-/// iff it is the root holding the final value.
-pub fn relay_tree_levels(
-    key: u64,
-    members: &[MachineId],
-    root: MachineId,
-    fanout: usize,
-    p: usize,
-) -> Vec<Vec<(MachineId, MachineId)>> {
-    tree_levels_impl(key, members, root, fanout, p, true)
 }
 
 /// Ingest `g` onto `p` machines.  `c` is the tree fanout / hot threshold
@@ -431,10 +405,10 @@ mod tests {
     }
 
     #[test]
-    fn tree_levels_structure() {
+    fn relay_tree_structure() {
         // 9 members, fanout 3, root 0: one transit level then the root.
         let members: Vec<usize> = (1..10).collect();
-        let levels = tree_levels(42, &members, 0, 3, 16);
+        let levels = relay_tree_levels(42, &members, 0, 3, 16);
         assert!(levels.len() >= 2);
         // Bottom level has one message per member.
         assert_eq!(levels[0].len(), 9);
@@ -444,25 +418,27 @@ mod tests {
     }
 
     #[test]
-    fn tree_levels_trivial_cases() {
-        assert!(tree_levels(1, &[5], 5, 4, 8).is_empty());
-        let lv = tree_levels(1, &[3], 5, 4, 8);
+    fn relay_tree_trivial_cases() {
+        assert!(relay_tree_levels(1, &[5], 5, 4, 8).is_empty());
+        let lv = relay_tree_levels(1, &[3], 5, 4, 8);
         assert_eq!(lv, vec![vec![(3, 5)]]);
     }
 
     #[test]
-    fn tree_levels_bounded_depth() {
+    fn relay_tree_bounded_depth() {
         let members: Vec<usize> = (0..16).collect();
-        let levels = tree_levels(9, &members, 0, 2, 16);
+        let levels = relay_tree_levels(9, &members, 0, 2, 16);
         // depth ≤ ceil(log2 16) + 1
         assert!(levels.len() <= 5, "depth {}", levels.len());
     }
 
     #[test]
     fn relay_tree_levels_unique_child_per_level() {
-        // The relay invariant: no machine appears as child twice in one
-        // level (tree_levels does not guarantee this when two groups hash
-        // to the same transit parent).
+        // The relay invariant (regression for the retired non-deduped
+        // `tree_levels`, which could hash two groups of one level to the
+        // same transit parent and then treat that machine as two children
+        // of the next — a double-send of a real merged partial): no
+        // machine appears as child twice in one level.
         for key in [1u64, 7, 42, 0xD5, 991] {
             for p in [4usize, 8, 16] {
                 let members: Vec<usize> = (0..p).collect();

@@ -6,25 +6,27 @@
 //! * [`ingest`] — ingestion-time orchestration: degree-balanced vertex
 //!   pinning, edge-block placement (transit machines for hot vertices),
 //!   source/destination communication trees.
-//! * [`subset`] — `DistVertexSubset` (sparse hash-set / dense bitmap).
-//! * [`engine`] — the TDO-GP `DistEdgeMap` engine with sparse-dense
-//!   dual-mode execution and the T1/T2/T3 technique toggles (cost-model
-//!   backend for the paper figures).
-//! * [`spmd`] — the same `DistEdgeMap` round in SPMD form over
-//!   [`crate::exec::Substrate`]: machine-private shards, real
-//!   value-carrying messages, runs on the simulator *and* on the
-//!   threaded worker pool with bit-identical results.
-//! * [`algorithms`] — BFS, SSSP, BC, CC, PR over the engine trait, plus
-//!   `*_spmd` variants for the substrate-generic engine.
-//! * [`baselines`] — gemini-like, linear-algebra-like, ligra-dist.
+//! * [`flags`] — the policy matrix: one [`flags::Flags`] block selects
+//!   TDO-GP vs each baseline family and carries the T1/T2/T3 ablation
+//!   knobs.
+//! * [`spmd`] — THE engine: the `DistEdgeMap` round (paper §5.1, Fig 6)
+//!   in SPMD form over [`crate::exec::Substrate`] — machine-private
+//!   shards, real value-carrying messages, sparse-dense dual-mode
+//!   execution, flag-selected policies.  On [`crate::bsp::Cluster`] it
+//!   produces the simulated-cost ledger behind every paper figure; on
+//!   [`crate::exec::ThreadedCluster`] it produces measured wall-clock —
+//!   bit-identically.
+//! * [`algorithms`] — BFS, SSSP, BC, CC, PR, each one shard type + one
+//!   runner against the unified engine.
+//! * [`baselines`] — gemini-like, linear-algebra-like, ligra-dist
+//!   constructors (flags + placement presets of the same engine).
 
 pub mod algorithms;
 pub mod baselines;
-pub mod engine;
+pub mod flags;
 pub mod gen;
 pub mod ingest;
 pub mod spmd;
-pub mod subset;
 
 use crate::bsp::MachineId;
 

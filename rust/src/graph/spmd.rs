@@ -1,10 +1,18 @@
-//! SPMD `DistEdgeMap`: the TDO-GP round on the [`Substrate`] trait.
+//! SPMD `DistEdgeMap`: THE TDO-GP engine, on the [`Substrate`] trait.
 //!
-//! The cost-model engine ([`super::engine::Engine`]) computes against
-//! global state arrays and *accounts* the messages a real deployment
-//! would send.  This module is the other half of the reproduction: the
-//! same read→execute→merge→write-back round (paper §5.1, Fig 6) written
-//! in SPMD form, where
+//! One engine core implements the read→execute→merge→write-back round
+//! (paper §5.1, Fig 6); a [`Flags`] block selects between TDO-GP
+//! (source/destination trees, per-machine pre-merge, destination-aware
+//! broadcast, sparse-dense switching) and the baseline families'
+//! policies (direct exchange, per-edge RPC messages, full scans,
+//! per-round vertex-array overheads).  Every paper figure and the
+//! threaded runtime/serving paths run THIS engine — the figure paths on
+//! [`crate::bsp::Cluster`] (simulated-cost ledger), the runtime on
+//! [`crate::exec::ThreadedCluster`] (measured wall-clock) — so §6's
+//! comparisons are structural: one engine, one substrate API, one
+//! metrics ledger.  (Its accounting-only cost-model predecessor, which
+//! duplicated every algorithm, is retired.)  The round is SPMD
+//! throughout:
 //!
 //! * every machine owns a **shard** — its edge blocks, its slice of the
 //!   algorithm's vertex state, its slice of the frontier — handed to the
@@ -33,11 +41,14 @@
 //!    results are additionally bit-identical to a single-machine
 //!    reference at **every** P, since `min` over the same candidate set
 //!    is order-insensitive.
-//! 3. For rounding merge operators (`+` in PageRank), P=1 matches a
-//!    reference that folds in-edge contributions in ascending source
-//!    order; P>1 regroups the same f64 sums by shard/tree, so it agrees
-//!    with the reference only to rounding (still bit-identical across
-//!    backends and across repeated runs — contract 1 is unconditional).
+//! 3. For rounding merge operators (`+` in PageRank and in BC's σ/δ
+//!    folds), the fold grouping is part of the bits: PageRank at P=1
+//!    matches a reference that folds in-edge contributions in ascending
+//!    source order; P>1 (and BC, whose Brandes reference accumulates in
+//!    BFS-queue order) regroups the same f64 sums by shard/tree, so it
+//!    agrees with the reference only to rounding (still bit-identical
+//!    across backends and across repeated runs — contract 1 is
+//!    unconditional).
 //!
 //! The engine is built to be **long-lived**: [`ingest_once`] +
 //! [`SpmdEngine::from_ingested`] separate the one-time placement pass
@@ -46,20 +57,19 @@
 //! and the worker pool) so the serving layer ([`crate::serve`]) can run
 //! an online query stream with exactly one ingestion per process.
 //!
-//! Tree aggregation uses [`relay_tree_levels`] — the deduplicated variant
-//! of the ingestion-time meta-task trees — because here partials are real
-//! values: a machine that held two positions in one level (possible under
-//! the accounting-only [`super::ingest::tree_levels`]) would double-send
-//! its merged partial.
+//! Tree aggregation uses [`relay_tree_levels`], whose machine-unique
+//! -position invariant matters because partials here are real values: a
+//! machine holding two positions in one level would double-send its
+//! merged partial.
 
 use std::sync::Arc;
 
-use crate::bsp::{Cluster, MachineId};
+use crate::bsp::{Cluster, MachineId, RPC_MSG_FACTOR};
 use crate::det::{det_map, DetMap};
 use crate::exec::{no_messages, nothing_words, MachineAcct, Nothing, Substrate};
 use crate::CostModel;
 
-use super::engine::{Engine, Flags, CONTRIB_WORDS, DENSE_DIV, VAL_WORDS};
+use super::flags::{Flags, CONTRIB_WORDS, DENSE_DIV, VAL_WORDS};
 use super::ingest::{ingest, ingest_at_owner, relay_tree_levels, DistGraph, EdgeBlock};
 use super::{Graph, VertexPart, Vid};
 
@@ -113,7 +123,7 @@ pub struct MachineState<AS> {
     blocks: Vec<EdgeBlock>,
     block_of: DetMap<Vid, Vec<u32>>,
     /// Algorithm state for the owned vertex range (e.g. a distance
-    /// slice); see the `*_spmd` constructors in [`super::algorithms`].
+    /// slice); see the shard constructors in [`super::algorithms`].
     pub algo: AS,
     /// Active owned vertices, ascending.
     frontier: Vec<Vid>,
@@ -129,7 +139,7 @@ pub struct MachineState<AS> {
     depth_needed: usize,
 }
 
-/// Block placement policy (mirrors the two cost-model constructors).
+/// Block placement policy (the two ingestion passes of §5.1 / §6.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Placement {
     /// TD-Orch ingestion: hot vertices' blocks spread over transit
@@ -153,8 +163,7 @@ pub struct SpmdEngine<B: Substrate, AS: Send> {
 
 impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     /// Build shards on `sub`'s machines.  Ingestion runs on a scratch
-    /// simulator cluster (the paper times queries, not loading; the
-    /// cost-model engine likewise excludes it via `reset_metrics`).
+    /// simulator cluster (the paper times queries, not loading).
     pub fn new(
         sub: B,
         g: &Graph,
@@ -186,7 +195,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             "ingested for {} machines but the substrate has {p}",
             dg.p
         );
-        let eff_work_pct = Engine::effective_pct(&flags, cost);
+        let eff_work_pct = flags.effective_pct(cost);
         let src_tree: Vec<_> = (0..dg.n)
             .map(|u| {
                 relay_tree_levels(
@@ -256,7 +265,20 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         cost: CostModel,
         init: impl Fn(MachineId, &GraphMeta) -> AS,
     ) -> Self {
-        Self::new(sub, g, cost, Flags::tdo_gp(), Placement::Spread, "tdo-gp-spmd", init)
+        Self::new(sub, g, cost, Flags::tdo_gp(), Placement::Spread, "tdo-gp", init)
+    }
+
+    /// Baseline presets: family flags + owner placement (no transit
+    /// machines, so hub vertices concentrate on their owners).
+    pub fn baseline(
+        sub: B,
+        g: &Graph,
+        cost: CostModel,
+        flags: Flags,
+        label: &str,
+        init: impl Fn(MachineId, &GraphMeta) -> AS,
+    ) -> Self {
+        Self::new(sub, g, cost, flags, Placement::AtOwner, label, init)
     }
 
     pub fn label(&self) -> &str {
@@ -329,6 +351,24 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         let meta = Arc::clone(&self.meta);
         for (m, st) in self.machines.iter_mut().enumerate() {
             st.frontier = meta.part.range(m).collect();
+        }
+    }
+
+    /// Per-machine snapshot of the current frontier (driver-side,
+    /// between supersteps) — BC's forward pass records these to replay
+    /// the levels backward.
+    pub fn frontier_parts(&self) -> Vec<Vec<Vid>> {
+        self.machines.iter().map(|s| s.frontier.clone()).collect()
+    }
+
+    /// Restore a frontier previously captured with
+    /// [`SpmdEngine::frontier_parts`] (each part must hold vertices the
+    /// corresponding machine owns, ascending, as captured).
+    pub fn set_frontier_parts(&mut self, parts: &[Vec<Vid>]) {
+        assert_eq!(parts.len(), self.machines.len(), "frontier parts != machines");
+        for (st, part) in self.machines.iter_mut().zip(parts) {
+            st.frontier.clear();
+            st.frontier.extend_from_slice(part);
         }
     }
 
@@ -429,9 +469,9 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         let eff = self.eff_work_pct;
         let meta = Arc::clone(&self.meta);
 
-        // ---- driver: mode decision from per-shard frontier stats (the
-        // same global scan the cost-model engine performs, done between
-        // supersteps where the driver legitimately owns the shards) ----
+        // ---- driver: mode decision from per-shard frontier stats
+        // (Ligra's sparse-dense heuristic, computed between supersteps
+        // where the driver legitimately owns the shards) ----
         let active_total: usize = self.machines.iter().map(|s| s.frontier.len()).sum();
         if active_total == 0 {
             return 0;
@@ -545,7 +585,13 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         }
 
         // ---- Phase 2: execute f at block machines; emit level-0
-        // contributions (pre-merged per destination, or raw per edge) ----
+        // contributions (pre-merged per destination, or raw per edge;
+        // raw per-edge contributions cannot be packed with their
+        // neighbors, so they are charged as RPC round-trips — the
+        // "direct pull" wire shape the paper's prototype baseline pays)
+        if !flags.premerge {
+            self.sub.set_msg_factor(RPC_MSG_FACTOR);
+        }
         let meta2 = Arc::clone(&meta);
         let mut contrib_msgs: Vec<Vec<(Vid, f64)>> = self.sub.superstep(
             &mut self.machines,
@@ -642,6 +688,9 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             },
             |_: &(Vid, f64)| CONTRIB_WORDS,
         );
+        if !flags.premerge {
+            self.sub.set_msg_factor(1);
+        }
 
         // ---- Phase 3: remaining destination-tree merge levels ----
         let d_dst = if flags.premerge && flags.use_trees {
@@ -741,8 +790,7 @@ mod tests {
     #[test]
     fn spmd_merge_applied_once_per_destination() {
         // Two frontier vertices pointing at one destination: write_back
-        // must see a single merged value (mirrors the cost-model engine's
-        // regression test).
+        // must see a single merged value.
         let g = Graph::from_arcs(
             3,
             vec![(0, 2, 1.0), (1, 2, 1.0), (2, 0, 1.0), (2, 1, 1.0)],
@@ -792,6 +840,68 @@ mod tests {
         let mut total = 0u64;
         e.for_each_algo(|_m, st| total += *st);
         assert_eq!(total, 0, "reinit hook must run on every shard");
+    }
+
+    #[test]
+    fn edge_map_respects_frontier() {
+        // Only edges out of the frontier may fire (ported from the
+        // retired cost-model engine's regression suite).
+        let g = gen::grid2d(8, 3);
+        let sub = Cluster::new(4, CostModel::paper_cluster());
+        let mut engine =
+            SpmdEngine::tdo_gp(sub, &g, CostModel::paper_cluster(), |_m, _meta| ());
+        engine.set_frontier_single(0);
+        let fired = std::sync::Mutex::new(Vec::new());
+        engine.edge_map(
+            &|_m, _st, _u| Some(1.0),
+            &|sv, u, v, _w| {
+                fired.lock().unwrap().push((u, v));
+                Some(sv)
+            },
+            &|a, _b| a,
+            &|_st, _v, _val| false,
+        );
+        let mut fired = fired.into_inner().unwrap();
+        let mut expected: Vec<(Vid, Vid)> =
+            g.neighbors(0).iter().map(|(v, _)| (0, *v)).collect();
+        fired.sort_unstable();
+        expected.sort_unstable();
+        assert_eq!(fired, expected);
+    }
+
+    #[test]
+    fn dense_mode_supersteps_bounded() {
+        // Dense path: broadcast + exec + tree merges + write-back — a
+        // bounded number of supersteps regardless of frontier size.
+        let g = gen::erdos_renyi(500, 3000, 5);
+        let sub = Cluster::new(4, CostModel::paper_cluster());
+        let mut engine =
+            SpmdEngine::tdo_gp(sub, &g, CostModel::paper_cluster(), |_m, _meta| ());
+        engine.set_frontier_all();
+        engine.sub_mut().reset_metrics();
+        engine.edge_map(
+            &|_m, _st, _u| Some(1.0),
+            &|sv, _u, _v, _w| Some(sv),
+            &|a, b| a + b,
+            &|_st, _v, _val| false,
+        );
+        let steps = engine.sub().metrics.supersteps;
+        assert!((1..=8).contains(&steps), "dense round took {steps} supersteps");
+    }
+
+    #[test]
+    fn frontier_parts_roundtrip() {
+        let g = gen::erdos_renyi(120, 500, 2);
+        let sub = Cluster::new(4, CostModel::paper_cluster());
+        let mut e = SpmdEngine::tdo_gp(sub, &g, CostModel::paper_cluster(), |_m, _meta| ());
+        e.set_frontier_all();
+        let parts = e.frontier_parts();
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), e.frontier_len());
+        e.clear_frontier();
+        assert_eq!(e.frontier_len(), 0);
+        e.set_frontier_parts(&parts);
+        assert_eq!(e.frontier_len(), 120);
+        assert_eq!(e.frontier_parts(), parts);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! per-machine wall-clock.
 //!
 //! Serving ([`serve`]): an online layer that admits a continuous Zipf
-//! query stream ({BFS, SSSP, PR, CC}), batches it deterministically, and
+//! query stream ({BFS, SSSP, PR, CC, BC}), batches it deterministically, and
 //! dispatches on a long-lived `SpmdEngine` — one ingestion and one
 //! worker pool per process, queries separated by
 //! `SpmdEngine::reset_for_query`.

@@ -14,6 +14,10 @@
 //! repro table4  [--seed S]                     technique ablation (§6.4)
 //! repro table5  [--seed S]                     single-NUMA PR (§6.5)
 //! repro table6  [--seed S]                     big NUMA server (§6.5)
+//! repro graphs  [--quick] [--edges N] [--seed S]
+//!                                              every graph figure/table;
+//!                                              --quick = CI smoke that
+//!                                              ASSERTS the orderings
 //! repro exec    [--threads P | --machines P] [--per-machine N]
 //!               [--gamma G] [--seed S]         REAL threaded substrate
 //! repro graph   [--backend sim|threaded] [--threads P | --machines P]
@@ -37,7 +41,7 @@
 //! and prints the measured per-machine busy table (exit 1 on
 //! divergence).  `--backend sim` skips the threaded leg.
 //!
-//! `repro serve` admits an open-loop {BFS,SSSP,PR,CC} query stream with
+//! `repro serve` admits an open-loop {BFS,SSSP,PR,CC,BC} query stream with
 //! Zipf-skewed sources, batches it, and serves it on ONE long-lived
 //! engine (graph ingested exactly once — verified by counter), cross
 //! -checking every result bit-for-bit against a single-shot sim
@@ -60,6 +64,7 @@ struct Args {
     queries: usize,
     zipf: f64,
     batch: usize,
+    quick: bool,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -88,6 +93,7 @@ fn parse_args() -> Args {
         queries: 64,
         zipf: 1.5,
         batch: 8,
+        quick: false,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -103,6 +109,7 @@ fn parse_args() -> Args {
             "--queries" => args.queries = parse_flag(&argv, &mut i, "--queries"),
             "--zipf" => args.zipf = parse_flag(&argv, &mut i, "--zipf"),
             "--batch" => args.batch = parse_flag(&argv, &mut i, "--batch"),
+            "--quick" => args.quick = true,
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -124,10 +131,9 @@ fn parse_args() -> Args {
 fn smoke() {
     // A miniature of everything: one orchestration stage on the KV store
     // (XLA-backed if artifacts are present) plus one graph algorithm.
-    use tdorch::graph::algorithms::bfs;
-    use tdorch::graph::engine::Engine as GraphEngineImpl;
-    use tdorch::graph::engine::GraphEngine as _;
+    use tdorch::graph::algorithms::{bfs, BfsShard};
     use tdorch::graph::gen;
+    use tdorch::graph::spmd::SpmdEngine;
     use tdorch::kvstore::{preload, Bucket, KvApp};
     use tdorch::orchestration::tdorch::TdOrch;
     use tdorch::orchestration::{spread_tasks, Scheduler, Task};
@@ -165,15 +171,16 @@ fn smoke() {
 
     println!("\n== smoke: TDO-GP BFS ==");
     let g = gen::barabasi_albert(2_000, 6, 7);
-    let mut ge = GraphEngineImpl::tdo_gp(&g, 8, CostModel::paper_cluster());
-    ge.reset_metrics();
+    let ge_cost = CostModel::paper_cluster();
+    let mut ge = SpmdEngine::tdo_gp(Cluster::new(8, ge_cost), &g, ge_cost, BfsShard::new);
+    ge.sub_mut().reset_metrics();
     let dist = bfs(&mut ge, 0);
     let reached = dist.iter().filter(|d| **d >= 0).count();
     println!(
         "BFS reached {reached}/{} vertices in sim {:.4}s over {} supersteps",
         g.n,
-        ge.metrics().sim_seconds(),
-        ge.metrics().supersteps,
+        ge.sub().metrics.sim_seconds(),
+        ge.sub().metrics.supersteps,
     );
     println!("\nsmoke OK");
 }
@@ -227,6 +234,11 @@ fn main() {
         }
         "table6" => {
             repro::graphs::table6(args.seed);
+        }
+        "graphs" => {
+            if !repro::graphs::run_graphs(args.edges, args.seed, args.quick) {
+                std::process::exit(1);
+            }
         }
         "exec" => {
             let p = resolve_p(&args);
@@ -291,9 +303,9 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|exec|graph|serve|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
-                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B]"
+                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick]"
             );
             std::process::exit(2);
         }

@@ -6,16 +6,16 @@
 //! sequential oracle, and reports *measured* per-machine wall-clock — the
 //! quantity the BSP simulator's max-terms model, observed for real.  A
 //! second leg cross-checks SSSP-as-orchestration-stages on the threaded
-//! backend against the simulated TDO-GP graph engine.
+//! backend against the unified TDO-GP graph engine on the simulator.
 
 use std::collections::HashMap;
 
 use crate::baselines::{DirectPull, DirectPush};
 use crate::exec::apps::sssp_stages;
 use crate::exec::ThreadedCluster;
-use crate::graph::algorithms::sssp as engine_sssp;
-use crate::graph::engine::Engine as SimGraphEngine;
+use crate::graph::algorithms::{sssp as engine_sssp, SsspShard};
 use crate::graph::gen;
+use crate::graph::spmd::SpmdEngine;
 use crate::kvstore::{normalized_snapshot, preload, Bucket, KvApp, KvOp};
 use crate::metrics::Metrics;
 use crate::orchestration::tdorch::TdOrch;
@@ -194,7 +194,9 @@ pub fn run_exec(p: usize, per_machine: usize, gamma: f64, seed: u64) -> ExecSumm
     let g = gen::barabasi_albert(4_000, 6, seed);
     let mut tc = ThreadedCluster::new(p);
     let dist_threaded = sssp_stages(&mut tc, &td, &g, 0);
-    let mut engine = SimGraphEngine::tdo_gp(&g, p, CostModel::paper_cluster());
+    let cost = CostModel::paper_cluster();
+    let mut engine =
+        SpmdEngine::tdo_gp(crate::Cluster::new(p, cost), &g, cost, SsspShard::new);
     let dist_engine = engine_sssp(&mut engine, 0);
     let agree = dist_threaded
         .iter()

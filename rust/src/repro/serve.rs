@@ -1,6 +1,6 @@
 //! `repro serve` — the online serving layer end to end.
 //!
-//! Admits a deterministic open-loop stream of {BFS, SSSP, PR, CC}
+//! Admits a deterministic open-loop stream of {BFS, SSSP, PR, CC, BC}
 //! queries with Zipf-skewed traversal sources, batches it, and serves it
 //! on ONE long-lived `SpmdEngine` (sim or threaded backend).  Every
 //! served query is cross-checked **bit-for-bit** against a single-shot
@@ -17,7 +17,7 @@
 //! worker-pool epoch accounting per query.
 
 use crate::exec::{PoolSnapshot, ThreadedCluster};
-use crate::graph::engine::Flags;
+use crate::graph::flags::Flags;
 use crate::graph::gen;
 use crate::graph::ingest::ingestions;
 use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
@@ -59,7 +59,7 @@ pub fn run_serve(
     let cost = CostModel::paper_cluster();
     let g = gen::barabasi_albert(SERVE_N, SERVE_K, seed);
     println!(
-        "\n## repro serve — online {{BFS,SSSP,PR,CC}} Zipf stream on the reused engine: \
+        "\n## repro serve — online {{BFS,SSSP,PR,CC,BC}} Zipf stream on the reused engine: \
          BA graph n={} m={}, P={p}, {queries} queries, zipf {zipf_s}, batch {batch}, \
          seed {seed}, backend {backend}\n",
         g.n,

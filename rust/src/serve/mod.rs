@@ -42,21 +42,22 @@ mod server;
 pub use server::{QueryResult, ServeConfig, ServeReport, Server, DEFAULT_PR_ITERS};
 
 use crate::bsp::MachineId;
-use crate::graph::algorithms::{BfsShard, CcShard, PrShard, ShardAccess, SsspShard};
+use crate::graph::algorithms::{BcShard, BfsShard, CcShard, PrShard, ShardAccess, SsspShard};
 use crate::graph::spmd::GraphMeta;
 use crate::workload::QueryKind;
 
-/// Machine-local state for the whole {BFS, SSSP, PR, CC} query mix: all
-/// four algorithm shards side by side (each O(n/P)), so ONE long-lived
-/// engine serves every query kind.  The `ShardAccess` impls project out
-/// the slice the running algorithm needs; [`QueryShard::reset`] is the
-/// `reset_for_query` hook that restores the freshly-initialized state in
-/// place between queries (allocations reused).
+/// Machine-local state for the whole {BFS, SSSP, PR, CC, BC} query mix:
+/// all five algorithm shards side by side (each O(n/P)), so ONE
+/// long-lived engine serves every query kind.  The `ShardAccess` impls
+/// project out the slice the running algorithm needs; [`QueryShard::reset`]
+/// is the `reset_for_query` hook that restores the freshly-initialized
+/// state in place between queries (allocations reused).
 pub struct QueryShard {
     pub bfs: BfsShard,
     pub sssp: SsspShard,
     pub cc: CcShard,
     pub pr: PrShard,
+    pub bc: BcShard,
 }
 
 impl QueryShard {
@@ -66,30 +67,33 @@ impl QueryShard {
             sssp: SsspShard::new(m, meta),
             cc: CcShard::new(m, meta),
             pr: PrShard::new(m, meta),
+            bc: BcShard::new(m, meta),
         }
     }
 
     /// Restore every algorithm slice to its freshly-constructed state
-    /// (the safe catch-all hook; `repro graph` uses it between its two
-    /// differently-kinded queries).
+    /// (the safe catch-all hook; `repro graph` and the figure paths use
+    /// it between differently-kinded queries).
     pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
         self.bfs.reset(m, meta);
         self.sssp.reset(m, meta);
         self.cc.reset(m, meta);
         self.pr.reset(m, meta);
+        self.bc.reset(m, meta);
     }
 
     /// Restore only the shard `kind` is about to run on.  Sufficient —
     /// and bit-identical to a full [`QueryShard::reset`] — on the
     /// serving path, because every query resets its own shard before
     /// running and no algorithm ever reads a sibling's slice; it skips
-    /// three of the four O(n/P) fills per query.
+    /// four of the five O(n/P) fills per query.
     pub fn reset_kind(&mut self, kind: QueryKind, m: MachineId, meta: &GraphMeta) {
         match kind {
             QueryKind::Bfs => self.bfs.reset(m, meta),
             QueryKind::Sssp => self.sssp.reset(m, meta),
             QueryKind::Pr => self.pr.reset(m, meta),
             QueryKind::Cc => self.cc.reset(m, meta),
+            QueryKind::Bc => self.bc.reset(m, meta),
         }
     }
 }
@@ -131,5 +135,15 @@ impl ShardAccess<PrShard> for QueryShard {
 
     fn shard_mut(&mut self) -> &mut PrShard {
         &mut self.pr
+    }
+}
+
+impl ShardAccess<BcShard> for QueryShard {
+    fn shard(&self) -> &BcShard {
+        &self.bc
+    }
+
+    fn shard_mut(&mut self) -> &mut BcShard {
+        &mut self.bc
     }
 }

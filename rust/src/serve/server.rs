@@ -6,7 +6,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::exec::Substrate;
-use crate::graph::algorithms::{bfs_spmd, cc_spmd, pagerank_spmd, sssp_spmd};
+use crate::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
 use crate::graph::spmd::SpmdEngine;
 use crate::graph::Vid;
 use crate::metrics::p50_p95_p99;
@@ -48,7 +48,7 @@ pub struct QueryResult {
     pub kind: QueryKind,
     pub source: Vid,
     /// Canonical result encoding — BFS hop counts and CC labels
-    /// zero/sign-extended to u64, SSSP/PR f64 bit patterns — so every
+    /// zero/sign-extended to u64, SSSP/PR/BC f64 bit patterns — so every
     /// kind cross-checks with one `bits == bits` comparison (see
     /// [`Server::run_query`]).
     pub bits: Vec<u64>,
@@ -135,21 +135,25 @@ impl<B: Substrate> Server<B> {
         self.engine
             .reset_for_query(move |m, meta, st: &mut QueryShard| st.reset_kind(kind, m, meta));
         match q.kind {
-            QueryKind::Bfs => bfs_spmd(&mut self.engine, q.source)
+            QueryKind::Bfs => bfs(&mut self.engine, q.source)
                 .into_iter()
                 .map(|d| d as u64)
                 .collect(),
-            QueryKind::Sssp => sssp_spmd(&mut self.engine, q.source)
+            QueryKind::Sssp => sssp(&mut self.engine, q.source)
                 .into_iter()
                 .map(f64::to_bits)
                 .collect(),
-            QueryKind::Pr => pagerank_spmd(&mut self.engine, self.cfg.pr_iters)
+            QueryKind::Pr => pagerank(&mut self.engine, self.cfg.pr_iters)
                 .into_iter()
                 .map(f64::to_bits)
                 .collect(),
-            QueryKind::Cc => cc_spmd(&mut self.engine)
+            QueryKind::Cc => cc(&mut self.engine)
                 .into_iter()
                 .map(|l| l as u64)
+                .collect(),
+            QueryKind::Bc => bc(&mut self.engine, q.source)
+                .into_iter()
+                .map(f64::to_bits)
                 .collect(),
         }
     }

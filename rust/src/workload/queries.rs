@@ -5,7 +5,7 @@
 //! (AutoFlow, arXiv:2103.08888; DPA, arXiv:2308.00938) shows the
 //! interesting load-balancing behavior only appears under a continuous
 //! skewed query stream.  This module generates that stream: a mixed
-//! {BFS, SSSP, PR, CC} sequence whose BFS/SSSP sources are drawn
+//! {BFS, SSSP, PR, CC, BC} sequence whose BFS/SSSP/BC sources are drawn
 //! Zipf-distributed over vertex *hotness ranks* — rank k is the k-th
 //! highest-out-degree vertex ([`hot_source_order`]) — so a high exponent
 //! concentrates traversal roots on the hubs, the adversarial case for
@@ -31,11 +31,12 @@ pub enum QueryKind {
     Sssp,
     Pr,
     Cc,
+    Bc,
 }
 
 impl QueryKind {
-    pub const ALL: [QueryKind; 4] =
-        [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Pr, QueryKind::Cc];
+    pub const ALL: [QueryKind; 5] =
+        [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Pr, QueryKind::Cc, QueryKind::Bc];
 
     pub fn label(self) -> &'static str {
         match self {
@@ -43,6 +44,7 @@ impl QueryKind {
             QueryKind::Sssp => "SSSP",
             QueryKind::Pr => "PR",
             QueryKind::Cc => "CC",
+            QueryKind::Bc => "BC",
         }
     }
 }
@@ -52,31 +54,32 @@ impl QueryKind {
 pub struct Query {
     pub id: u64,
     pub kind: QueryKind,
-    /// Source vertex.  BFS/SSSP traverse from it; PR/CC ignore it, but
-    /// it is drawn for *every* query so the stream layout (and every
+    /// Source vertex.  BFS/SSSP/BC traverse from it; PR/CC ignore it,
+    /// but it is drawn for *every* query so the stream layout (and every
     /// later query) is independent of the kind mix.
     pub source: Vid,
     /// Logical arrival tick (open loop: fixed arrivals per tick).
     pub arrival: u64,
 }
 
-/// Relative weights of the four query kinds.
+/// Relative weights of the five query kinds.
 #[derive(Clone, Copy, Debug)]
 pub struct QueryMix {
     pub bfs: u32,
     pub sssp: u32,
     pub pr: u32,
     pub cc: u32,
+    pub bc: u32,
 }
 
 impl QueryMix {
-    /// The canonical serving mix: all four kinds, equally weighted.
+    /// The canonical serving mix: all five kinds, equally weighted.
     pub fn balanced() -> Self {
-        QueryMix { bfs: 1, sssp: 1, pr: 1, cc: 1 }
+        QueryMix { bfs: 1, sssp: 1, pr: 1, cc: 1, bc: 1 }
     }
 
     fn total(&self) -> u32 {
-        self.bfs + self.sssp + self.pr + self.cc
+        self.bfs + self.sssp + self.pr + self.cc + self.bc
     }
 
     fn pick(&self, r: u32) -> QueryKind {
@@ -87,8 +90,10 @@ impl QueryMix {
             QueryKind::Sssp
         } else if r < self.bfs + self.sssp + self.pr {
             QueryKind::Pr
-        } else {
+        } else if r < self.bfs + self.sssp + self.pr + self.cc {
             QueryKind::Cc
+        } else {
+            QueryKind::Bc
         }
     }
 }
@@ -167,8 +172,8 @@ mod tests {
         let s = generate_stream(cfg(400, 1.2), &hot, 11);
         for kind in QueryKind::ALL {
             let count = s.iter().filter(|q| q.kind == kind).count();
-            // 100 expected per kind; 3σ ≈ 26.
-            assert!(count > 50, "{}: only {count}/400", kind.label());
+            // 80 expected per kind; 3σ ≈ 24.
+            assert!(count > 45, "{}: only {count}/400", kind.label());
         }
     }
 

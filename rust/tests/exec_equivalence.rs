@@ -168,12 +168,13 @@ fn sssp_threaded_matches_simulator() {
 
 #[test]
 fn sssp_threaded_matches_graph_engine() {
-    use tdorch::graph::algorithms::sssp as engine_sssp;
-    use tdorch::graph::engine::Engine as SimGraphEngine;
+    use tdorch::graph::algorithms::{sssp as engine_sssp, SsspShard};
     use tdorch::graph::gen;
+    use tdorch::graph::spmd::SpmdEngine;
 
     let g = gen::barabasi_albert(1_000, 5, 42);
-    let mut engine = SimGraphEngine::tdo_gp(&g, 8, CostModel::paper_cluster());
+    let cost = CostModel::paper_cluster();
+    let mut engine = SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, SsspShard::new);
     let expected = engine_sssp(&mut engine, 0);
     let mut tc = ThreadedCluster::new(8);
     let got = sssp_stages(&mut tc, &TdOrch::new(), &g, 0);

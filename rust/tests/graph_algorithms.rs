@@ -1,17 +1,20 @@
 //! Correctness of the five TDO-GP algorithms against single-threaded
 //! reference implementations, across machine counts and all four engine
-//! families (every engine must compute identical answers — they differ
-//! only in cost structure).
+//! families — every family is a Flags configuration of the ONE unified
+//! SPMD engine, and all of them must compute identical answers (they
+//! differ only in cost structure).
 
 mod common;
 mod ref_util;
 
 use ref_util::bfs_ref;
-use tdorch::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
+use tdorch::graph::algorithms::{
+    bc, bfs, cc, pagerank, sssp, BcShard, BfsShard, CcShard, PrShard, SsspShard,
+};
 use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
-use tdorch::graph::engine::{Engine, GraphEngine};
+use tdorch::graph::spmd::{GraphMeta, SpmdEngine};
 use tdorch::graph::{gen, Graph, Vid};
-use tdorch::CostModel;
+use tdorch::{Cluster, CostModel, MachineId};
 
 // ---------- references (BFS shared via ref_util; SSSP/CC below are
 // deliberately different algorithms from the equivalence suite's
@@ -129,13 +132,19 @@ fn bc_ref(g: &Graph, root: Vid) -> Vec<f64> {
 
 // ---------- harness ----------
 
-fn engines(g: &Graph, p: usize) -> Vec<Engine> {
+/// The four engine families, instantiated for one algorithm's shard
+/// type: TDO-GP plus the three baseline presets of the same engine.
+fn engines<AS: Send>(
+    g: &Graph,
+    p: usize,
+    init: impl Fn(MachineId, &GraphMeta) -> AS + Copy,
+) -> Vec<SpmdEngine<Cluster, AS>> {
     let cost = CostModel::paper_cluster();
     vec![
-        Engine::tdo_gp(g, p, cost),
-        gemini_like(g, p, cost),
-        la_like(g, p, cost),
-        ligra_dist(g, p, cost),
+        SpmdEngine::tdo_gp(Cluster::new(p, cost), g, cost, init),
+        gemini_like(Cluster::new(p, cost), g, cost, init),
+        la_like(Cluster::new(p, cost), g, cost, init),
+        ligra_dist(Cluster::new(p, cost), g, cost, init),
     ]
 }
 
@@ -148,7 +157,7 @@ fn bfs_all_engines_all_p() {
     let g = gen::community_ring(1200, 6, 3, 21);
     let expected = bfs_ref(&g, 0);
     for p in [1, 4, 8] {
-        for mut e in engines(&g, p) {
+        for mut e in engines(&g, p, BfsShard::new) {
             let got = bfs(&mut e, 0);
             assert_eq!(got, expected, "{} p={p}", e.label());
         }
@@ -159,7 +168,7 @@ fn bfs_all_engines_all_p() {
 fn sssp_matches_dijkstra() {
     let g = gen::erdos_renyi(600, 3000, 22);
     let expected = sssp_ref(&g, 5);
-    for mut e in engines(&g, 4) {
+    for mut e in engines(&g, 4, SsspShard::new) {
         let got = sssp(&mut e, 5);
         for v in 0..g.n {
             assert!(
@@ -179,7 +188,7 @@ fn cc_matches_union_find() {
     // threshold plus isolated vertices.
     let g = gen::erdos_renyi(800, 500, 23);
     let expected = cc_ref(&g);
-    for mut e in engines(&g, 8) {
+    for mut e in engines(&g, 8, CcShard::new) {
         let got = cc(&mut e);
         assert_eq!(got, expected, "{}", e.label());
     }
@@ -189,7 +198,7 @@ fn cc_matches_union_find() {
 fn pagerank_matches_reference() {
     let g = gen::barabasi_albert(800, 5, 24);
     let expected = pagerank_ref(&g, 8);
-    for mut e in engines(&g, 4) {
+    for mut e in engines(&g, 4, PrShard::new) {
         let got = pagerank(&mut e, 8);
         for v in 0..g.n {
             assert!(
@@ -210,7 +219,7 @@ fn pagerank_matches_reference() {
 fn bc_matches_brandes() {
     let g = gen::barabasi_albert(500, 4, 25);
     let expected = bc_ref(&g, 3);
-    for mut e in engines(&g, 4) {
+    for mut e in engines(&g, 4, BcShard::new) {
         let got = bc(&mut e, 3);
         for v in 0..g.n {
             assert!(
@@ -228,7 +237,8 @@ fn bc_matches_brandes() {
 fn bfs_on_grid_high_diameter() {
     let g = gen::grid2d(24, 26);
     let expected = bfs_ref(&g, 0);
-    let mut e = Engine::tdo_gp(&g, 16, CostModel::paper_cluster());
+    let cost = CostModel::paper_cluster();
+    let mut e = SpmdEngine::tdo_gp(Cluster::new(16, cost), &g, cost, BfsShard::new);
     assert_eq!(bfs(&mut e, 0), expected);
     // Grid diameter from the corner = 2*(side-1) rounds.
     assert_eq!(*expected.iter().max().unwrap(), 46);
@@ -240,7 +250,8 @@ fn disconnected_source_terminates() {
     arcs.push((3, 4, 1.0));
     arcs.push((4, 3, 1.0));
     let g = Graph::from_arcs(5, arcs);
-    let mut e = Engine::tdo_gp(&g, 2, CostModel::paper_cluster());
+    let cost = CostModel::paper_cluster();
+    let mut e = SpmdEngine::tdo_gp(Cluster::new(2, cost), &g, cost, BfsShard::new);
     let d = bfs(&mut e, 0); // vertex 0 is isolated
     assert_eq!(d[0], 0);
     assert!(d[1..].iter().all(|x| *x == -1));
@@ -250,9 +261,11 @@ fn disconnected_source_terminates() {
 fn tdo_gp_deterministic_across_runs() {
     let g = gen::barabasi_albert(600, 4, 27);
     let run = || {
-        let mut e = Engine::tdo_gp(&g, 8, CostModel::paper_cluster());
+        let cost = CostModel::paper_cluster();
+        let mut e = SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, PrShard::new);
         let r = pagerank(&mut e, 5);
-        (r, e.metrics().total_words, e.metrics().supersteps)
+        let m = &e.sub().metrics;
+        (r, m.total_words, m.supersteps)
     };
     let (r1, w1, s1) = run();
     let (r2, w2, s2) = run();

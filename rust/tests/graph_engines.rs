@@ -1,19 +1,25 @@
 //! Performance-*shape* tests: the qualitative relationships the paper's
 //! evaluation section reports must hold in the simulator (who wins,
-//! and roughly how the gaps scale) — Table 2, Table 3, Fig 8/9 shapes.
+//! and roughly how the gaps scale) — Table 2, Table 3, Fig 8/9 shapes —
+//! now measured on the unified SPMD engine, the same code the threaded
+//! runtime executes (the per-cell ordering matrix lives in
+//! `tests/unified_engine_costs.rs`).
 
 mod common;
 
-use tdorch::graph::algorithms::{bc, bfs, pagerank, sssp};
+use tdorch::graph::algorithms::{bc, bfs, pagerank, sssp, BcShard, BfsShard, PrShard, SsspShard};
 use tdorch::graph::baselines::{gemini_like, la_like, ligra_dist};
-use tdorch::graph::engine::{Engine, GraphEngine};
 use tdorch::graph::gen;
-use tdorch::CostModel;
+use tdorch::graph::spmd::SpmdEngine;
+use tdorch::{Cluster, CostModel};
 
-fn sim_time(e: &mut Engine, run: impl FnOnce(&mut Engine)) -> f64 {
-    e.reset_metrics(); // time queries, not ingestion (as the paper does)
+fn sim_time<AS: Send>(
+    e: &mut SpmdEngine<Cluster, AS>,
+    run: impl FnOnce(&mut SpmdEngine<Cluster, AS>),
+) -> f64 {
+    e.sub_mut().reset_metrics(); // time queries, not ingestion (as the paper does)
     run(e);
-    e.metrics().sim_seconds()
+    e.sub().metrics.sim_seconds()
 }
 
 #[test]
@@ -24,13 +30,16 @@ fn high_diameter_graph_blows_up_baselines() {
     let g = gen::grid2d(340, 31); // n=115k, BFS from the corner takes ~678 rounds
     let p = 8;
     let cost = CostModel::paper_cluster();
-    let t_tdo = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
+    let t_tdo = sim_time(
+        &mut SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, BfsShard::new),
+        |e| {
+            bfs(e, 0);
+        },
+    );
+    let t_gem = sim_time(&mut gemini_like(Cluster::new(p, cost), &g, cost, BfsShard::new), |e| {
         bfs(e, 0);
     });
-    let t_gem = sim_time(&mut gemini_like(&g, p, cost), |e| {
-        bfs(e, 0);
-    });
-    let t_la = sim_time(&mut la_like(&g, p, cost), |e| {
+    let t_la = sim_time(&mut la_like(Cluster::new(p, cost), &g, cost, BfsShard::new), |e| {
         bfs(e, 0);
     });
     assert!(
@@ -49,13 +58,16 @@ fn skewed_graph_favors_tdo_gp() {
     let g = gen::barabasi_albert(60_000, 10, 32);
     let p = 8;
     let cost = CostModel::paper_cluster();
-    let t_tdo = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
+    let t_tdo = sim_time(
+        &mut SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, SsspShard::new),
+        |e| {
+            sssp(e, 0);
+        },
+    );
+    let t_gem = sim_time(&mut gemini_like(Cluster::new(p, cost), &g, cost, SsspShard::new), |e| {
         sssp(e, 0);
     });
-    let t_gem = sim_time(&mut gemini_like(&g, p, cost), |e| {
-        sssp(e, 0);
-    });
-    let t_la = sim_time(&mut la_like(&g, p, cost), |e| {
+    let t_la = sim_time(&mut la_like(Cluster::new(p, cost), &g, cost, SsspShard::new), |e| {
         sssp(e, 0);
     });
     assert!(t_tdo < t_gem, "tdo {t_tdo:.4} !< gemini {t_gem:.4}");
@@ -69,14 +81,19 @@ fn ligra_dist_degrades_with_machines() {
     // or stays flat.
     let g = gen::barabasi_albert(20_000, 8, 33);
     let cost = CostModel::paper_cluster();
-    let bc_time = |mut e: Engine| {
-        sim_time(&mut e, |e| {
+    let lig_time = |p: usize| {
+        sim_time(&mut ligra_dist(Cluster::new(p, cost), &g, cost, BcShard::new), |e| {
             bc(e, 0);
         })
     };
-    let lig_1 = bc_time(ligra_dist(&g, 1, cost));
-    let lig_8 = bc_time(ligra_dist(&g, 8, cost));
-    let tdo_8 = bc_time(Engine::tdo_gp(&g, 8, cost));
+    let lig_1 = lig_time(1);
+    let lig_8 = lig_time(8);
+    let tdo_8 = sim_time(
+        &mut SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, BcShard::new),
+        |e| {
+            bc(e, 0);
+        },
+    );
     assert!(
         lig_8 > 2.0 * lig_1,
         "ligra-dist should degrade with machines: P=1 {lig_1:.4} P=8 {lig_8:.4}"
@@ -94,9 +111,12 @@ fn tdo_gp_weak_scaling_near_flat() {
     let mut times = Vec::new();
     for p in [1usize, 2, 4, 8] {
         let g = gen::barabasi_albert(8_000 * p, 8, 34);
-        let t = sim_time(&mut Engine::tdo_gp(&g, p, cost), |e| {
-            pagerank(e, 5);
-        });
+        let t = sim_time(
+            &mut SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, PrShard::new),
+            |e| {
+                pagerank(e, 5);
+            },
+        );
         times.push(t);
     }
     let ratio = times.last().unwrap() / times.first().unwrap();
@@ -108,12 +128,18 @@ fn tdo_gp_strong_scaling_improves() {
     // Fig 8 shape: more machines => faster (near-linear at this scale).
     let g = gen::barabasi_albert(50_000, 12, 35);
     let cost = CostModel::paper_cluster();
-    let t1 = sim_time(&mut Engine::tdo_gp(&g, 1, cost), |e| {
-        bc(e, 0);
-    });
-    let t8 = sim_time(&mut Engine::tdo_gp(&g, 8, cost), |e| {
-        bc(e, 0);
-    });
+    let t1 = sim_time(
+        &mut SpmdEngine::tdo_gp(Cluster::new(1, cost), &g, cost, BcShard::new),
+        |e| {
+            bc(e, 0);
+        },
+    );
+    let t8 = sim_time(
+        &mut SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, BcShard::new),
+        |e| {
+            bc(e, 0);
+        },
+    );
     assert!(
         t8 < t1 / 2.0,
         "strong scaling: P=8 {t8:.4}s should be well under P=1 {t1:.4}s"
@@ -125,10 +151,11 @@ fn breakdown_reports_all_three_components() {
     // Fig 10 shape: multi-machine runs show nonzero communication,
     // computation AND overhead.
     let g = gen::barabasi_albert(3000, 8, 36);
-    let mut e = Engine::tdo_gp(&g, 8, CostModel::paper_cluster());
-    e.reset_metrics();
+    let cost = CostModel::paper_cluster();
+    let mut e = SpmdEngine::tdo_gp(Cluster::new(8, cost), &g, cost, PrShard::new);
+    e.sub_mut().reset_metrics();
     pagerank(&mut e, 5);
-    let b = e.metrics().time;
+    let b = e.sub().metrics.time;
     assert!(b.communication > 0.0);
     assert!(b.computation > 0.0);
     assert!(b.overhead > 0.0);
@@ -140,7 +167,7 @@ fn numa_cost_models_order_pagerank() {
     // compute; the big all-to-all server is fastest per unit work.
     let g = gen::barabasi_albert(3000, 8, 37);
     let run = |cost: CostModel| {
-        let mut e = Engine::tdo_gp(&g, 1, cost);
+        let mut e = SpmdEngine::tdo_gp(Cluster::new(1, cost), &g, cost, PrShard::new);
         sim_time(&mut e, |e| {
             pagerank(e, 5);
         })

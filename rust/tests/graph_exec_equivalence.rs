@@ -1,8 +1,8 @@
-//! Cross-backend equivalence for the SPMD TDO-GP engine: for each
-//! algorithm in {PageRank, BFS, SSSP, CC} × engine flags in {TDO-GP,
-//! direct/gemini-like, per-edge/ligra-dist} × P ∈ {1, 2, 8}, the
-//! *threaded* backend (persistent worker pool, real channels) must be
-//! **bit-identical** to the BSP *simulator*, and both must match a
+//! Cross-backend equivalence for the unified SPMD engine: for each
+//! algorithm in {PageRank, BFS, SSSP, CC, BC} × engine flags in
+//! {TDO-GP, direct/gemini-like, per-edge/ligra-dist} × P ∈ {1, 2, 8},
+//! the *threaded* backend (persistent worker pool, real channels) must
+//! be **bit-identical** to the BSP *simulator*, and both must match a
 //! single-machine reference (mirrors `tests/exec_equivalence.rs`).
 //!
 //! The reference comparison has two strengths, per the determinism
@@ -16,6 +16,10 @@
 //!   block-scan order); P>1 regroups the same sums per shard/tree and
 //!   must match the reference to 1e-9 relative — while remaining
 //!   bit-identical *across backends*, which is the claim under test.
+//! * BC also merges with `+` (σ and dependency shares), and its Brandes
+//!   reference accumulates in BFS-queue order rather than block order,
+//!   so every (flags, P) cell is rounding-close to the reference and
+//!   bit-identical across backends.
 //!
 //! Also here: the determinism property for oversubscribed pools (two
 //! threaded runs at P=16 — more workers than CI cores — produce
@@ -27,10 +31,9 @@ mod ref_util;
 use ref_util::bfs_ref;
 use tdorch::exec::ThreadedCluster;
 use tdorch::graph::algorithms::{
-    bfs_spmd, cc_spmd, pagerank_spmd, sssp, sssp_spmd, BfsShard, CcShard, PrShard, SsspShard,
-    DAMPING,
+    bc, bfs, cc, pagerank, sssp, BcShard, BfsShard, CcShard, PrShard, SsspShard, DAMPING,
 };
-use tdorch::graph::engine::{Engine, Flags};
+use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::spmd::{Placement, SpmdEngine};
 use tdorch::graph::{Graph, Vid};
@@ -134,26 +137,69 @@ fn pr_ref(g: &Graph, iters: usize) -> Vec<f64> {
     rank
 }
 
+/// Brandes BC, single source — accumulation order is BFS-queue order,
+/// different from any block scan, so the comparison is rounding-close
+/// (the cross-backend comparison stays bitwise).
+fn bc_ref(g: &Graph, root: Vid) -> Vec<f64> {
+    let n = g.n;
+    let mut sigma = vec![0f64; n];
+    let mut dist = vec![-1i64; n];
+    let mut order = Vec::new();
+    sigma[root as usize] = 1.0;
+    dist[root as usize] = 0;
+    let mut q = std::collections::VecDeque::from([root]);
+    while let Some(u) = q.pop_front() {
+        order.push(u);
+        for (v, _) in g.neighbors(u) {
+            let v = *v;
+            if dist[v as usize] < 0 {
+                dist[v as usize] = dist[u as usize] + 1;
+                q.push_back(v);
+            }
+            if dist[v as usize] == dist[u as usize] + 1 {
+                sigma[v as usize] += sigma[u as usize];
+            }
+        }
+    }
+    let mut delta = vec![0f64; n];
+    for &u in order.iter().rev() {
+        for (v, _) in g.neighbors(u) {
+            let v = *v;
+            if dist[v as usize] == dist[u as usize] + 1 {
+                delta[u as usize] +=
+                    sigma[u as usize] / sigma[v as usize] * (1.0 + delta[v as usize]);
+            }
+        }
+    }
+    delta[root as usize] = 0.0;
+    delta
+}
+
 // ---- engine runners, generic over the substrate ----
 
 fn run_bfs<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<i64> {
     let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "bfs", BfsShard::new);
-    bfs_spmd(&mut e, 0)
+    bfs(&mut e, 0)
 }
 
 fn run_sssp<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<f64> {
     let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "sssp", SsspShard::new);
-    sssp_spmd(&mut e, 0)
+    sssp(&mut e, 0)
 }
 
 fn run_cc<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<u32> {
     let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "cc", CcShard::new);
-    cc_spmd(&mut e)
+    cc(&mut e)
 }
 
 fn run_pr<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<f64> {
     let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "pr", PrShard::new);
-    pagerank_spmd(&mut e, PR_ITERS)
+    pagerank(&mut e, PR_ITERS)
+}
+
+fn run_bc<B: Substrate>(sub: B, g: &Graph, flags: Flags, pl: Placement) -> Vec<f64> {
+    let mut e = SpmdEngine::new(sub, g, cost(), flags, pl, "bc", BcShard::new);
+    bc(&mut e, 0)
 }
 
 fn assert_bits_eq(a: &[f64], b: &[f64], msg: &str) {
@@ -241,14 +287,35 @@ fn pagerank_threaded_bitwise_equals_simulator() {
 }
 
 #[test]
-fn spmd_sssp_matches_cost_model_engine() {
-    // The SPMD engine and the legacy cost-model engine share ingestion
-    // and an exact merge operator, so their SSSP answers are identical.
+fn bc_threaded_bitwise_equals_simulator() {
+    let g = gen::barabasi_albert(700, 5, 42);
+    let expected = bc_ref(&g, 0);
+    for (label, flags, pl) in variants() {
+        for p in PS {
+            let sim = run_bc(Cluster::new(p, cost()), &g, flags, pl);
+            let thr = run_bc(ThreadedCluster::new(p), &g, flags, pl);
+            // The headline claim: real threads == simulator, bit for bit.
+            assert_bits_eq(&thr, &sim, &format!("bc/{label} p={p} thr vs sim"));
+            // σ/δ regroup per shard/tree vs the queue-order reference:
+            // rounding-close at every (flags, P).
+            assert_close(&sim, &expected, 1e-9, &format!("bc/{label} p={p} sim vs ref"));
+        }
+    }
+}
+
+#[test]
+fn ablated_flag_profiles_do_not_change_results() {
+    // Correctness is flag-independent: the T1/T2/T3 ablation engines
+    // (and their threaded twins) compute bit-identical SSSP answers —
+    // the knobs may only move cost, never results.
     let g = gen::barabasi_albert(900, 5, 7);
-    let mut legacy = Engine::tdo_gp(&g, 8, cost());
-    let expected = sssp(&mut legacy, 0);
-    let got = run_sssp(Cluster::new(8, cost()), &g, Flags::tdo_gp(), Placement::Spread);
-    assert_bits_eq(&got, &expected, "spmd vs cost-model engine");
+    let expected = sssp_ref(&g, 0);
+    for (label, flags) in Flags::ablations() {
+        let sim = run_sssp(Cluster::new(8, cost()), &g, flags, Placement::Spread);
+        let thr = run_sssp(ThreadedCluster::new(8), &g, flags, Placement::Spread);
+        assert_bits_eq(&sim, &expected, &format!("sssp/{label} sim vs ref"));
+        assert_bits_eq(&thr, &sim, &format!("sssp/{label} thr vs sim"));
+    }
 }
 
 #[test]
@@ -260,7 +327,7 @@ fn oversubscribed_threaded_runs_are_deterministic() {
     let g = gen::barabasi_albert(500, 5, 9);
     let run = || {
         let mut e = SpmdEngine::tdo_gp(ThreadedCluster::new(16), &g, cost(), PrShard::new);
-        let rank = pagerank_spmd(&mut e, PR_ITERS);
+        let rank = pagerank(&mut e, PR_ITERS);
         // (clone: ThreadedCluster has a Drop impl that joins the pool)
         let ledger = e.sub().metrics.clone();
         (rank, ledger)
@@ -279,7 +346,7 @@ fn oversubscribed_threaded_runs_are_deterministic() {
     // of the identical engine (the substrate must not leak into the
     // accounting).
     let mut sim = SpmdEngine::tdo_gp(Cluster::new(16, cost()), &g, cost(), PrShard::new);
-    let rank_sim = pagerank_spmd(&mut sim, PR_ITERS);
+    let rank_sim = pagerank(&mut sim, PR_ITERS);
     assert_bits_eq(&rank_a, &rank_sim, "threaded vs simulator bits");
     let cm = &sim.sub().metrics;
     assert_eq!(m_a.work_by_machine, cm.work_by_machine, "work ledger vs simulator");
@@ -293,7 +360,7 @@ fn persistent_pool_one_epoch_per_superstep() {
     let g = gen::barabasi_albert(400, 4, 3);
     let p = 4;
     let mut e = SpmdEngine::tdo_gp(ThreadedCluster::new(p), &g, cost(), SsspShard::new);
-    let dist = sssp_spmd(&mut e, 0);
+    let dist = sssp(&mut e, 0);
     assert!(dist.iter().filter(|d| d.is_finite()).count() > 1, "sssp reached nothing");
     let tc = e.into_sub();
     assert_eq!(tc.pool_threads(), p, "pool grew beyond P threads");

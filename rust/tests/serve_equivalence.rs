@@ -13,7 +13,7 @@
 //! 4. `repro graph` holds the same one-ingestion line after its rewire.
 
 use tdorch::exec::ThreadedCluster;
-use tdorch::graph::engine::Flags;
+use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
@@ -51,13 +51,15 @@ fn reset_for_query_matches_fresh_engine_bits() {
         q(0, QueryKind::Pr, 0),
         q(1, QueryKind::Bfs, 3),
         q(2, QueryKind::Cc, 0),
-        q(3, QueryKind::Sssp, 17),
+        q(3, QueryKind::Bc, 9),
+        q(4, QueryKind::Sssp, 17),
     ];
     let probes = [
         q(10, QueryKind::Bfs, 0),
         q(11, QueryKind::Sssp, 5),
         q(12, QueryKind::Pr, 0),
         q(13, QueryKind::Cc, 0),
+        q(14, QueryKind::Bc, 2),
     ];
     for p in [1usize, 4] {
         let mut served = sim_server(&g, p);
@@ -198,4 +200,54 @@ fn repro_graph_sim_ingests_once() {
     let before = ingestions();
     assert!(run_graph_backend(2, 3, "sim"), "repro graph (sim) reported invalid");
     assert_eq!(ingestions() - before, 1, "repro graph re-ingested the graph");
+}
+
+#[test]
+fn reset_matches_fresh_engine_bits_across_flag_profiles() {
+    // The reset contract is a property of the ENGINE, not of the TDO-GP
+    // flag set: a baseline-flagged (or ablated) engine reset between
+    // queries stays bit-identical to a fresh engine with the same flags
+    // and placement.
+    let g = gen::barabasi_albert(500, 5, 13);
+    let p = 4;
+    let warmup = [
+        q(0, QueryKind::Pr, 0),
+        q(1, QueryKind::Bc, 3),
+        q(2, QueryKind::Sssp, 11),
+    ];
+    let probes = [
+        q(10, QueryKind::Bfs, 0),
+        q(11, QueryKind::Sssp, 5),
+        q(12, QueryKind::Pr, 0),
+        q(13, QueryKind::Cc, 0),
+        q(14, QueryKind::Bc, 2),
+    ];
+    let (t1_label, t1_flags) = Flags::ablations()[0];
+    let profiles = [
+        ("gemini-like", Flags::gemini_like(), Placement::AtOwner),
+        ("la-like", Flags::la_like(), Placement::AtOwner),
+        ("ligra-dist", Flags::ligra_dist(), Placement::AtOwner),
+        (t1_label, t1_flags, Placement::Spread),
+    ];
+    for (label, flags, pl) in profiles {
+        let build = || {
+            Server::new(
+                SpmdEngine::new(Cluster::new(p, cost()), &g, cost(), flags, pl, label, QueryShard::new),
+                cfg(),
+            )
+        };
+        let mut served = build();
+        for w in &warmup {
+            served.run_query(w);
+        }
+        for probe in &probes {
+            let reused = served.run_query(probe);
+            let fresh = build().run_query(probe);
+            assert_eq!(
+                reused, fresh,
+                "{label} {:?}: reset engine diverged from a fresh engine",
+                probe.kind
+            );
+        }
+    }
 }

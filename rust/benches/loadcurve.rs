@@ -1,0 +1,174 @@
+//! Bench: the latency-vs-offered-load sweep on the pipelined server —
+//! wall-clock per sweep point, sim vs threaded backend, plus the
+//! deterministic schedule columns (goodput/tick, rejection rate, wait
+//! percentiles), which the bench ASSERTS are identical across backends
+//! point by point (the logical service clock is ledger-superstep-driven,
+//! so the queueing dynamics must not depend on the backend).  Engine
+//! construction (ingestion, relay trees, pool spawn) stays outside the
+//! timed region.  `cargo bench --bench loadcurve`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::flags::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::ingestions;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, ClosedLoop, ClosedLoopConfig, QueryMix, StreamConfig,
+};
+use tdorch::{Cluster, CostModel};
+
+const QUERIES: usize = 48;
+const P: usize = 8;
+/// (per_tick, every_ticks): offered rates from 1/8 to 4 queries/tick.
+const RATES: [(usize, u64); 5] = [(1, 8), (1, 2), (1, 1), (2, 1), (4, 1)];
+const CLIENTS: [usize; 3] = [2, 8, 32];
+
+fn cfg() -> ServeConfig {
+    ServeConfig { batch: 4, queue_cap: 8, ..ServeConfig::default() }
+}
+
+fn schedule_line(label: &str, rep: &ServeReport) {
+    let (w50, _, w99) = rep.wait_tick_percentiles();
+    let (st50, _, st99) = rep.service_tick_percentiles();
+    println!(
+        "    {label}: offered {} -> served {} (rejection {:.3}), goodput {:.4}/tick \
+         over {} ticks; wait p50 {w50:.0} / p99 {w99:.0}, service p50 {st50:.0} / \
+         p99 {st99:.0} ticks; wall {:.1} ms",
+        rep.offered(),
+        rep.served(),
+        rep.rejection_rate(),
+        rep.goodput_per_tick(),
+        rep.ticks,
+        rep.wall_ms,
+    );
+}
+
+fn assert_schedules_match(point: &str, sim: &ServeReport, thr: &ServeReport) {
+    assert_eq!(sim.served(), thr.served(), "{point}: served diverged");
+    assert_eq!(sim.rejected, thr.rejected, "{point}: rejections diverged");
+    assert_eq!(sim.batches, thr.batches, "{point}: batch count diverged");
+    assert_eq!(sim.ticks, thr.ticks, "{point}: logical span diverged");
+    for (a, b) in sim.results.iter().zip(&thr.results) {
+        assert_eq!(a.id, b.id, "{point}: dispatch order diverged");
+        assert_eq!(a.wait_ticks, b.wait_ticks, "{point}: query {} wait diverged", a.id);
+        assert_eq!(
+            a.service_ticks, b.service_ticks,
+            "{point}: query {} service ticks diverged",
+            a.id
+        );
+        assert_eq!(a.bits, b.bits, "{point}: query {} bits diverged", a.id);
+    }
+}
+
+fn main() {
+    let b = Bench::new("loadcurve");
+    let g = gen::barabasi_albert(10_000, 6, 7);
+    let cost = CostModel::paper_cluster();
+    let ing0 = ingestions();
+    println!(
+        "BA graph n={} m={}, P={P}, {QUERIES}-query balanced mix per open-loop point, zipf 1.5",
+        g.n,
+        g.m()
+    );
+
+    let dg = ingest_once(&g, P, cost, Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    let mut sim = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(P, cost),
+            dg.clone(),
+            cost,
+            Flags::tdo_gp(),
+            "loadcurve-sim",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let mut thr = Server::new(
+        SpmdEngine::from_ingested(
+            ThreadedCluster::new(P),
+            dg,
+            cost,
+            Flags::tdo_gp(),
+            "loadcurve-threaded",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+
+    for (per_tick, every_ticks) in RATES {
+        let scfg = StreamConfig {
+            queries: QUERIES,
+            per_tick,
+            every_ticks,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        };
+        let stream = generate_stream(scfg, &hot, 42);
+        let point = format!("open-{:.3}qpt", scfg.offered_per_tick());
+        let mut rep_sim: Option<ServeReport> = None;
+        b.run(&format!("{point}-sim"), 1, || {
+            let rep = sim.run(&stream);
+            let n = rep.served();
+            rep_sim = Some(rep);
+            n
+        });
+        let mut rep_thr: Option<ServeReport> = None;
+        b.run(&format!("{point}-threaded"), 1, || {
+            let rep = thr.run(&stream);
+            let n = rep.served();
+            rep_thr = Some(rep);
+            n
+        });
+        let rep_sim = rep_sim.expect("sim point ran");
+        let rep_thr = rep_thr.expect("threaded point ran");
+        schedule_line("sim     ", &rep_sim);
+        schedule_line("threaded", &rep_thr);
+        assert_schedules_match(&point, &rep_sim, &rep_thr);
+    }
+
+    for clients in CLIENTS {
+        let ccfg = ClosedLoopConfig {
+            clients,
+            think_ticks: 4,
+            queries_per_client: 4,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        };
+        let point = format!("closed-{clients}c");
+        let mut rep_sim: Option<ServeReport> = None;
+        b.run(&format!("{point}-sim"), 1, || {
+            let mut src = ClosedLoop::new(ccfg, &hot, 42);
+            let rep = sim.run_source(&mut src, |_r, _e| {});
+            let n = rep.served();
+            rep_sim = Some(rep);
+            n
+        });
+        let mut rep_thr: Option<ServeReport> = None;
+        b.run(&format!("{point}-threaded"), 1, || {
+            let mut src = ClosedLoop::new(ccfg, &hot, 42);
+            let rep = thr.run_source(&mut src, |_r, _e| {});
+            let n = rep.served();
+            rep_thr = Some(rep);
+            n
+        });
+        let rep_sim = rep_sim.expect("sim point ran");
+        let rep_thr = rep_thr.expect("threaded point ran");
+        schedule_line("sim     ", &rep_sim);
+        schedule_line("threaded", &rep_thr);
+        assert_schedules_match(&point, &rep_sim, &rep_thr);
+    }
+
+    println!(
+        "\npool: {} threads, {} epochs over the whole sweep",
+        thr.engine().sub().pool_threads(),
+        thr.engine().sub().epochs(),
+    );
+    let ingested = ingestions() - ing0;
+    assert_eq!(ingested, 1, "the whole sweep must ingest exactly once");
+    println!("ingestions: {ingested} (shared by both backends and every point)");
+}

@@ -25,10 +25,13 @@ fn report_line(label: &str, rep: &ServeReport) {
     let (s50, _, s99) = rep.service_ms_percentiles();
     let (w50, _, w99) = rep.wait_tick_percentiles();
     println!(
-        "    {label}: {:.1} queries/sec over {} served ({} batches); \
+        "    {label}: goodput {:.1} queries/sec over {} served of {} offered \
+         (rejection rate {:.3}, {} batches); \
          service p50 {s50:.2} / p99 {s99:.2} ms; wait p50 {w50:.0} / p99 {w99:.0} ticks",
-        rep.queries_per_sec(),
+        rep.goodput_qps(),
         rep.served(),
+        rep.offered(),
+        rep.rejection_rate(),
         rep.batches,
     );
 }
@@ -44,7 +47,13 @@ fn main() {
         let dg = ingest_once(&g, p, cost, Placement::Spread);
         let hot = hot_source_order(&dg.out_deg);
         let stream = generate_stream(
-            StreamConfig { queries: QUERIES, per_tick: 2, zipf_s: 1.5, mix: QueryMix::balanced() },
+            StreamConfig {
+                queries: QUERIES,
+                per_tick: 2,
+                every_ticks: 1,
+                zipf_s: 1.5,
+                mix: QueryMix::balanced(),
+            },
             &hot,
             42,
         );

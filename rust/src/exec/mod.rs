@@ -91,6 +91,15 @@ pub trait Substrate {
     /// cross-backend bit-equality is unaffected.
     fn set_msg_factor(&mut self, _factor: u64) {}
 
+    /// Ledger supersteps completed so far — supersteps in which at least
+    /// one machine charged work or sent a cross-machine message (both
+    /// backends skip empty ones under exactly this condition).  The
+    /// ledger contract makes the count a pure function of what ran —
+    /// never of the backend or the host — which is what lets the serving
+    /// layer use *deltas* of this counter as a deterministic logical
+    /// clock for per-query service cost ([`crate::serve`]).
+    fn ledger_supersteps(&self) -> u64;
+
     /// Run one superstep.
     ///
     /// `state[m]` is machine `m`'s private state (on the threaded backend
@@ -126,6 +135,10 @@ impl Substrate for Cluster {
 
     fn set_msg_factor(&mut self, factor: u64) {
         Cluster::set_msg_factor(self, factor);
+    }
+
+    fn ledger_supersteps(&self) -> u64 {
+        self.metrics.supersteps
     }
 
     fn superstep<St, Tin, Tout, F, W>(

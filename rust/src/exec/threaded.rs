@@ -175,6 +175,20 @@ impl PoolSnapshot {
             busy_ns: self.busy_ns.saturating_sub(earlier.busy_ns),
         }
     }
+
+    /// Fraction of `p` workers' wall-clock spent busy over a window of
+    /// `wall_ns` nanoseconds: `busy_ns / (wall_ns * p)`.  1.0 means every
+    /// worker computed or communicated for the whole window; the serving
+    /// load curves report it per sweep point to show where the pool — as
+    /// opposed to the admission queue — saturates.  NaN when the window
+    /// is empty (nothing to attribute).
+    pub fn busy_fraction(&self, wall_ns: u64, p: usize) -> f64 {
+        let denom = wall_ns.saturating_mul(p as u64);
+        if denom == 0 {
+            return f64::NAN;
+        }
+        self.busy_ns as f64 / denom as f64
+    }
 }
 
 /// A real cluster of P persistent worker threads (see module docs).
@@ -370,6 +384,10 @@ struct CellIn<'a, St, Tin, Tout> {
 impl Substrate for ThreadedCluster {
     fn machines(&self) -> usize {
         self.p
+    }
+
+    fn ledger_supersteps(&self) -> u64 {
+        self.metrics.supersteps
     }
 
     fn superstep<St, Tin, Tout, F, W>(
@@ -765,6 +783,51 @@ mod tests {
         let payload = result.expect_err("panic must propagate to the driver");
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert!(msg.contains("boom"), "unexpected payload: {msg}");
+    }
+
+    #[test]
+    fn ledger_supersteps_counts_exactly_what_the_simulator_counts() {
+        // The serving layer's logical clock is a DELTA of
+        // `Substrate::ledger_supersteps`, so the two backends must agree
+        // on which supersteps count: work or a cross-machine send marks
+        // a step dirty; a step with only self-sends is skipped by BOTH
+        // (self-sends are free in the simulator and uncounted in
+        // `sent_msgs` here).
+        let cost = crate::bsp::CostModel::paper_cluster();
+        let mut tc = ThreadedCluster::new(2);
+        let mut sim = crate::bsp::Cluster::new(2, cost);
+        let mut st_t = vec![(); 2];
+        let mut st_s = vec![(); 2];
+        // self-send only: must NOT count
+        let self_send = |m: usize, _st: &mut (), _in: Vec<u32>, _acct: &mut MachineAcct| {
+            vec![(m, 7u32)]
+        };
+        // local work only: must count
+        let work_only = |_m: usize, _st: &mut (), _in: Vec<u32>, acct: &mut MachineAcct| {
+            acct.work(1);
+            Vec::<(usize, u32)>::new()
+        };
+        // cross-machine send only: must count
+        let cross_send = |m: usize, _st: &mut (), _in: Vec<u32>, _acct: &mut MachineAcct| {
+            vec![((m + 1) % 2, 9u32)]
+        };
+        let _ = tc.superstep(&mut st_t, no_messages(2), self_send, |_| 1);
+        let _ = tc.superstep(&mut st_t, no_messages(2), work_only, |_| 1);
+        let _ = tc.superstep(&mut st_t, no_messages(2), cross_send, |_| 1);
+        let _ = sim.superstep(&mut st_s, no_messages(2), self_send, |_| 1);
+        let _ = sim.superstep(&mut st_s, no_messages(2), work_only, |_| 1);
+        let _ = sim.superstep(&mut st_s, no_messages(2), cross_send, |_| 1);
+        assert_eq!(Substrate::ledger_supersteps(&tc), 2);
+        assert_eq!(Substrate::ledger_supersteps(&sim), 2);
+        assert_eq!(tc.epochs(), 3, "all three epochs ran on the pool");
+    }
+
+    #[test]
+    fn busy_fraction_bounds() {
+        let s = PoolSnapshot { epochs: 4, busy_ns: 500 };
+        assert!((s.busy_fraction(1000, 1) - 0.5).abs() < 1e-12);
+        assert!((s.busy_fraction(1000, 2) - 0.25).abs() < 1e-12);
+        assert!(s.busy_fraction(0, 2).is_nan(), "empty window has no fraction");
     }
 
     #[test]

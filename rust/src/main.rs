@@ -25,6 +25,11 @@
 //! repro serve   [--backend sim|threaded] [--threads P] [--queries N]
 //!               [--zipf S] [--batch B] [--seed S]
 //!                                              online Zipf query stream
+//! repro loadcurve [--quick] [--backend sim|threaded] [--threads P]
+//!               [--seed S] [--out PATH]        latency vs offered load:
+//!                                              open-loop rate + closed-
+//!                                              loop client sweeps, JSON
+//!                                              report; --quick = CI gate
 //! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
@@ -65,6 +70,7 @@ struct Args {
     zipf: f64,
     batch: usize,
     quick: bool,
+    out: String,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -94,6 +100,7 @@ fn parse_args() -> Args {
         zipf: 1.5,
         batch: 8,
         quick: false,
+        out: "target/loadcurve/loadcurve.json".to_string(),
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -110,6 +117,7 @@ fn parse_args() -> Args {
             "--zipf" => args.zipf = parse_flag(&argv, &mut i, "--zipf"),
             "--batch" => args.batch = parse_flag(&argv, &mut i, "--batch"),
             "--quick" => args.quick = true,
+            "--out" => args.out = parse_flag(&argv, &mut i, "--out"),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -289,6 +297,21 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "loadcurve" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            let summary =
+                repro::loadcurve::run_loadcurve(p, args.seed, &args.backend, args.quick, &args.out);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
         "all" => {
             repro::kv::fig5(args.per_machine, args.seed);
             repro::graphs::table2(args.seed);
@@ -303,9 +326,9 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
-                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick]"
+                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick] [--out PATH]"
             );
             std::process::exit(2);
         }

@@ -92,15 +92,17 @@ pub struct MetaTaskSet<T> {
     pub levels: Vec<Vec<MetaTask<T>>>,
 }
 
+// Manual impl (not derived): a derive would demand `T: Default`, which
+// meta-task payloads have no reason to satisfy.
 impl<T> Default for MetaTaskSet<T> {
     fn default() -> Self {
-        MetaTaskSet { levels: Vec::new() }
+        Self::new()
     }
 }
 
 impl<T> MetaTaskSet<T> {
     pub fn new() -> Self {
-        Self::default()
+        MetaTaskSet { levels: Vec::new() }
     }
 
     pub fn from_ctxs(ctxs: impl IntoIterator<Item = T>) -> Self {

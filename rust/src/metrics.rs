@@ -20,7 +20,9 @@ impl Breakdown {
         self.communication + self.computation + self.overhead
     }
 
-    pub fn add(&mut self, other: &Breakdown) {
+    /// Fold another breakdown into this one.  (Named `accumulate`, not
+    /// `add`, so it cannot be mistaken for an `std::ops::Add` impl.)
+    pub fn accumulate(&mut self, other: &Breakdown) {
         self.communication += other.communication;
         self.computation += other.computation;
         self.overhead += other.overhead;
@@ -119,6 +121,25 @@ fn rank_in_sorted(xs_sorted: &[f64], q: f64) -> f64 {
     xs_sorted[rank.clamp(1, xs_sorted.len()) - 1]
 }
 
+/// A (p50, p95, p99) latency triple as one named value — what the
+/// serving load-curve reports carry per sweep point (in ticks for the
+/// deterministic queue/service quantities, in milliseconds for measured
+/// wall-clock).  Empty-sample summaries are NaN across the board, like
+/// [`percentile`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    pub fn of(samples: &[f64]) -> Self {
+        let (p50, p95, p99) = p50_p95_p99(samples);
+        LatencySummary { p50, p95, p99 }
+    }
+}
+
 /// The (p50, p95, p99) triple the serving reports print — one sort,
 /// three rank reads.
 pub fn p50_p95_p99(samples: &[f64]) -> (f64, f64, f64) {
@@ -205,6 +226,23 @@ mod tests {
     fn breakdown_total() {
         let b = Breakdown { communication: 1.0, computation: 2.0, overhead: 0.5 };
         assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_accumulate_sums_componentwise() {
+        let mut a = Breakdown { communication: 1.0, computation: 2.0, overhead: 0.5 };
+        let b = Breakdown { communication: 0.25, computation: 0.5, overhead: 0.125 };
+        a.accumulate(&b);
+        assert_eq!(a, Breakdown { communication: 1.25, computation: 2.5, overhead: 0.625 });
+    }
+
+    #[test]
+    fn latency_summary_matches_triple() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = LatencySummary::of(&xs);
+        assert_eq!((s.p50, s.p95, s.p99), p50_p95_p99(&xs));
+        let empty = LatencySummary::of(&[]);
+        assert!(empty.p50.is_nan() && empty.p95.is_nan() && empty.p99.is_nan());
     }
 
     #[test]

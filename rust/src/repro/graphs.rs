@@ -429,6 +429,9 @@ pub fn table6(seed: u64) -> Vec<(String, String, f64)> {
 /// (recalibrate a bound here and both enforcers move together).  `secs`
 /// is the `engines_for` order [tdo-gp, gemini-like, la-like,
 /// ligra-dist]; returns one message per violated relation.
+// `!(a < b)` rather than `a >= b`: a NaN cost must count as a violation,
+// and the De-Morganed form would silently pass it.
+#[allow(clippy::neg_cmp_op_on_partial_ord)]
 pub fn ordering_violations(alg: Algorithm, secs: &[f64]) -> Vec<String> {
     assert_eq!(secs.len(), 4, "expected the engines_for family order");
     let (tdo, gem, la, lig) = (secs[0], secs[1], secs[2], secs[3]);

@@ -1,0 +1,577 @@
+//! `repro loadcurve` — latency vs offered load for the serving layer.
+//!
+//! The serving claims of hotspot-aware balancers are judged on exactly
+//! one picture (AutoFlow, arXiv:2103.08888; DPA, arXiv:2308.00938): sweep
+//! offered load, plot goodput / rejection / latency percentiles per
+//! point.  This driver produces that picture twice, on the pipelined
+//! server ([`crate::serve::Server::run_source`]):
+//!
+//! * **open-loop sweep** — fixed-rate Zipf streams at increasing
+//!   queries-per-tick ([`StreamConfig::every_ticks`] expresses the
+//!   underloaded sub-1/tick end); past saturation the bounded queue
+//!   sheds load, so the rejection rate must be **nondecreasing in the
+//!   offered rate** (asserted in `--quick` mode — the CI gate);
+//! * **closed-loop sweep** — client populations of increasing size
+//!   ([`crate::workload::ClosedLoop`]), the self-throttling regime where
+//!   latency, not shedding, absorbs the pressure (a population no larger
+//!   than the queue cap can never be shed — at most one outstanding
+//!   query per client).
+//!
+//! Every point is also a correctness gate: each served query is replayed
+//! single-shot on a sim-backend reference engine (walked in reverse
+//! dispatch order, so cross-query leaks meet a different predecessor and
+//! cannot cancel) and must match **bit for bit**; the whole sweep must
+//! perform exactly ONE ingestion ([`crate::graph::ingest::ingestions`]).
+//!
+//! Because queueing runs on the logical service clock, every
+//! deterministic column of the report (offered, served, rejected, ticks,
+//! wait/service-tick percentiles, goodput/tick) is identical across
+//! backends and hosts; wall-clock columns (ms percentiles, goodput/sec,
+//! pool busy fraction) annotate the run and vary with the machine.
+//!
+//! The per-point results are written as a machine-readable JSON report
+//! (`--out`, default `target/loadcurve/loadcurve.json`) that the CI
+//! release legs upload as a build artifact — the perf trajectory of
+//! every commit is downloadable.
+
+use crate::exec::{PoolSnapshot, Substrate, ThreadedCluster};
+use crate::graph::flags::Flags;
+use crate::graph::gen;
+use crate::graph::ingest::ingestions;
+use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use crate::graph::{Graph, Vid};
+use crate::metrics::LatencySummary;
+use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::workload::{
+    generate_stream, hot_source_order, ArrivalSource, ClosedLoop, ClosedLoopConfig,
+    OpenLoopSource, Query, QueryMix, StreamConfig,
+};
+use crate::{Cluster, CostModel};
+
+use super::TablePrinter;
+
+/// Graph sizes: the full sweep uses the serving graph; `--quick` shrinks
+/// it so the CI gate stays a smoke, not a soak.
+const FULL_N: usize = 8_000;
+const QUICK_N: usize = 2_000;
+const GRAPH_K: usize = 6;
+
+/// Queries per open-loop point.
+const FULL_QUERIES: usize = 64;
+const QUICK_QUERIES: usize = 32;
+
+/// Open-loop offered rates as (per_tick, every_ticks) — ascending
+/// offered load; the quick triple spans under- to heavily-overloaded by
+/// 4x–16x steps so the nondecreasing-rejection assertion is structural,
+/// not a knife edge.
+const FULL_RATES: [(usize, u64); 7] =
+    [(1, 16), (1, 8), (1, 4), (1, 2), (1, 1), (2, 1), (4, 1)];
+const QUICK_RATES: [(usize, u64); 3] = [(1, 16), (1, 4), (4, 1)];
+
+/// Closed-loop population sizes.
+const FULL_CLIENTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+const QUICK_CLIENTS: [usize; 2] = [2, 8];
+const THINK_TICKS: u64 = 4;
+const FULL_PER_CLIENT: usize = 4;
+const QUICK_PER_CLIENT: usize = 8;
+
+fn serve_cfg() -> ServeConfig {
+    // A tight queue (cap 8) so the overloaded end of the sweep actually
+    // sheds; everything else at the serving defaults.
+    ServeConfig { batch: 4, queue_cap: 8, ..ServeConfig::default() }
+}
+
+/// One sweep point, fully evaluated.
+pub struct CurvePoint {
+    pub label: String,
+    /// Configured offered rate, queries/tick (NaN for closed-loop
+    /// points: a closed loop self-paces, so its offered rate is an
+    /// outcome, not a knob).
+    pub offered_rate_cfg: f64,
+    /// Closed-loop population size (None for open-loop points).
+    pub clients: Option<usize>,
+    /// What the generator was configured to offer (stream length /
+    /// `clients * queries_per_client`) — compared against
+    /// served + rejected, so a query the server loses outright is
+    /// caught (served + rejected == `offered` is true by construction
+    /// and catches nothing).
+    pub expected_offered: u64,
+    /// Achieved offered rate over the run's span, queries/tick — for a
+    /// closed loop this is an *outcome* (the population self-paces), so
+    /// it is the number to read where `offered_rate_cfg` is null.
+    pub offered_rate_achieved: f64,
+    pub offered: u64,
+    pub served: u64,
+    pub rejected: u64,
+    pub rejection_rate: f64,
+    pub goodput_per_tick: f64,
+    pub ticks: u64,
+    pub wait_ticks: LatencySummary,
+    pub service_ticks: LatencySummary,
+    /// End-to-end logical latency (queue wait + service) — the y-axis a
+    /// latency-vs-offered-load curve is actually judged on.
+    pub sojourn_ticks: LatencySummary,
+    pub service_ms: LatencySummary,
+    pub wall_ms: f64,
+    pub goodput_qps: f64,
+    /// Worker-pool busy fraction over the point's wall-clock window
+    /// (NaN on the sim backend — there is no pool).
+    pub pool_busy_fraction: f64,
+    pub mismatches: u64,
+}
+
+/// Result of one `repro loadcurve` invocation (consumed by main/tests).
+pub struct LoadCurveSummary {
+    pub open: Vec<CurvePoint>,
+    pub closed: Vec<CurvePoint>,
+    pub mismatches: u64,
+    pub ingestions: u64,
+    /// Open-loop rejection rate nondecreasing in offered load.
+    pub monotone: bool,
+    pub all_valid: bool,
+    pub json_path: Option<String>,
+}
+
+/// Run one point on the server; returns the report and the pool busy
+/// fraction over the point's wall-clock window (`snap` yields None on
+/// backends without a pool).
+fn run_point<B: Substrate>(
+    server: &mut Server<B>,
+    source: &mut dyn ArrivalSource,
+    snap: &dyn Fn(&B) -> Option<PoolSnapshot>,
+) -> (ServeReport, f64) {
+    let before = snap(server.engine().sub());
+    let report = server.run_source(source, |_r, _e| {});
+    let after = snap(server.engine().sub());
+    let busy = match (before, after) {
+        (Some(b), Some(a)) => {
+            let p = server.engine().meta().p;
+            a.since(b).busy_fraction((report.wall_ms * 1e6) as u64, p)
+        }
+        _ => f64::NAN,
+    };
+    (report, busy)
+}
+
+/// Replay every served query single-shot on the sim reference, in
+/// reverse dispatch order; count bitwise divergences.
+fn cross_check(
+    reference: &mut Server<Cluster>,
+    report: &ServeReport,
+    queries_of: &dyn Fn(u64) -> Query,
+    label: &str,
+) -> u64 {
+    let mut mismatches = 0u64;
+    for r in report.results.iter().rev() {
+        let q = queries_of(r.id);
+        debug_assert_eq!(q.id, r.id, "query ids must be positional");
+        if reference.run_query(&q) != r.bits {
+            mismatches += 1;
+            eprintln!(
+                "MISMATCH: {label}: query {} ({}) diverged from the sim single-shot reference",
+                r.id,
+                r.kind.label()
+            );
+        }
+    }
+    mismatches
+}
+
+fn fold_point(
+    label: String,
+    offered_rate_cfg: f64,
+    clients: Option<usize>,
+    expected_offered: u64,
+    report: &ServeReport,
+    pool_busy_fraction: f64,
+    mismatches: u64,
+) -> CurvePoint {
+    let waits: Vec<f64> = report.results.iter().map(|r| r.wait_ticks as f64).collect();
+    let svc_t: Vec<f64> = report.results.iter().map(|r| r.service_ticks as f64).collect();
+    let sojourn: Vec<f64> = report.results.iter().map(|r| r.sojourn_ticks() as f64).collect();
+    let svc_ms: Vec<f64> = report.results.iter().map(|r| r.service_ms).collect();
+    CurvePoint {
+        label,
+        offered_rate_cfg,
+        clients,
+        expected_offered,
+        offered_rate_achieved: report.offered_per_tick(),
+        offered: report.offered(),
+        served: report.served() as u64,
+        rejected: report.rejected,
+        rejection_rate: report.rejection_rate(),
+        goodput_per_tick: report.goodput_per_tick(),
+        ticks: report.ticks,
+        wait_ticks: LatencySummary::of(&waits),
+        service_ticks: LatencySummary::of(&svc_t),
+        sojourn_ticks: LatencySummary::of(&sojourn),
+        service_ms: LatencySummary::of(&svc_ms),
+        wall_ms: report.wall_ms,
+        goodput_qps: report.goodput_qps(),
+        pool_busy_fraction,
+        mismatches,
+    }
+}
+
+/// Run both sweeps on `server` (generic over backend; `snap` extracts a
+/// pool snapshot where one exists).
+fn sweep<B: Substrate>(
+    server: &mut Server<B>,
+    reference: &mut Server<Cluster>,
+    hot: &[Vid],
+    seed: u64,
+    quick: bool,
+    snap: &dyn Fn(&B) -> Option<PoolSnapshot>,
+) -> (Vec<CurvePoint>, Vec<CurvePoint>) {
+    let rates: &[(usize, u64)] = if quick { &QUICK_RATES } else { &FULL_RATES };
+    let queries = if quick { QUICK_QUERIES } else { FULL_QUERIES };
+    let mut open = Vec::new();
+    for &(per_tick, every_ticks) in rates {
+        let cfg = StreamConfig {
+            queries,
+            per_tick,
+            every_ticks,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        };
+        let stream = generate_stream(cfg, hot, seed);
+        let label = format!("open:{:.4}/tick", cfg.offered_per_tick());
+        let (report, busy) = run_point(server, &mut OpenLoopSource::new(&stream), snap);
+        let mismatches =
+            cross_check(reference, &report, &|id| stream[id as usize], &label);
+        open.push(fold_point(
+            label,
+            cfg.offered_per_tick(),
+            None,
+            stream.len() as u64,
+            &report,
+            busy,
+            mismatches,
+        ));
+    }
+    let populations: &[usize] = if quick { &QUICK_CLIENTS } else { &FULL_CLIENTS };
+    let per_client = if quick { QUICK_PER_CLIENT } else { FULL_PER_CLIENT };
+    let mut closed = Vec::new();
+    for &clients in populations {
+        let mut source = ClosedLoop::new(
+            ClosedLoopConfig {
+                clients,
+                think_ticks: THINK_TICKS,
+                queries_per_client: per_client,
+                zipf_s: 1.5,
+                mix: QueryMix::balanced(),
+            },
+            hot,
+            seed,
+        );
+        let label = format!("closed:{clients}c");
+        let (report, busy) = run_point(server, &mut source, snap);
+        debug_assert_eq!(source.emitted().len() as u64, source.offered_total());
+        // The closed loop materializes its queries as it runs, so the
+        // cross-check replays from the emitted log.
+        let mismatches =
+            cross_check(reference, &report, &|id| source.emitted()[id as usize], &label);
+        closed.push(fold_point(
+            label,
+            f64::NAN,
+            Some(clients),
+            source.offered_total(),
+            &report,
+            busy,
+            mismatches,
+        ));
+    }
+    (open, closed)
+}
+
+// ---- JSON (hand-rolled: the offline crate carries zero deps) ----
+
+/// A finite f64 as a JSON number, NaN/inf as `null`.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        x.to_string()
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jlat(l: &LatencySummary) -> String {
+    format!(
+        "{{\"p50\":{},\"p95\":{},\"p99\":{}}}",
+        jnum(l.p50),
+        jnum(l.p95),
+        jnum(l.p99)
+    )
+}
+
+fn jpoint(pt: &CurvePoint) -> String {
+    let clients = match pt.clients {
+        Some(c) => c.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"label\":\"{}\",\"offered_rate_cfg\":{},\"offered_rate_achieved\":{},\
+         \"clients\":{},\"expected_offered\":{},\"offered\":{},\
+         \"served\":{},\"rejected\":{},\"rejection_rate\":{},\"goodput_per_tick\":{},\
+         \"ticks\":{},\"wait_ticks\":{},\"service_ticks\":{},\"sojourn_ticks\":{},\
+         \"service_ms\":{},\
+         \"wall_ms\":{},\"goodput_qps\":{},\"pool_busy_fraction\":{},\"mismatches\":{}}}",
+        pt.label,
+        jnum(pt.offered_rate_cfg),
+        jnum(pt.offered_rate_achieved),
+        clients,
+        pt.expected_offered,
+        pt.offered,
+        pt.served,
+        pt.rejected,
+        jnum(pt.rejection_rate),
+        jnum(pt.goodput_per_tick),
+        pt.ticks,
+        jlat(&pt.wait_ticks),
+        jlat(&pt.service_ticks),
+        jlat(&pt.sojourn_ticks),
+        jlat(&pt.service_ms),
+        jnum(pt.wall_ms),
+        jnum(pt.goodput_qps),
+        jnum(pt.pool_busy_fraction),
+        pt.mismatches,
+    )
+}
+
+fn json_report(
+    g: &Graph,
+    p: usize,
+    seed: u64,
+    backend: &str,
+    quick: bool,
+    open: &[CurvePoint],
+    closed: &[CurvePoint],
+) -> String {
+    let open_json: Vec<String> = open.iter().map(jpoint).collect();
+    let closed_json: Vec<String> = closed.iter().map(jpoint).collect();
+    format!(
+        "{{\"schema\":\"tdorch.loadcurve.v1\",\"graph\":{{\"n\":{},\"m\":{},\
+         \"seed\":{seed}}},\"p\":{p},\"backend\":\"{backend}\",\"quick\":{quick},\
+         \"supersteps_per_tick\":{},\"open_loop\":[{}],\"closed_loop\":[{}]}}\n",
+        g.n,
+        g.m(),
+        serve_cfg().supersteps_per_tick,
+        open_json.join(","),
+        closed_json.join(","),
+    )
+}
+
+fn print_curve(title: &str, points: &[CurvePoint]) {
+    println!("\n### {title}");
+    let t = TablePrinter::new(
+        &[
+            "point",
+            "offered",
+            "served",
+            "rej",
+            "rej.rate",
+            "goodput/tick",
+            "wait p50/p95/p99",
+            "svc p50/p99 (ticks)",
+            "busy",
+        ],
+        &[14, 7, 6, 4, 8, 12, 17, 19, 5],
+    );
+    for pt in points {
+        let busy = if pt.pool_busy_fraction.is_finite() {
+            format!("{:.2}", pt.pool_busy_fraction)
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            pt.label.clone(),
+            pt.offered.to_string(),
+            pt.served.to_string(),
+            pt.rejected.to_string(),
+            format!("{:.3}", pt.rejection_rate),
+            format!("{:.4}", pt.goodput_per_tick),
+            format!(
+                "{:.0} / {:.0} / {:.0}",
+                pt.wait_ticks.p50, pt.wait_ticks.p95, pt.wait_ticks.p99
+            ),
+            format!("{:.0} / {:.0}", pt.service_ticks.p50, pt.service_ticks.p99),
+            busy,
+        ]);
+    }
+}
+
+pub fn run_loadcurve(
+    p: usize,
+    seed: u64,
+    backend: &str,
+    quick: bool,
+    out: &str,
+) -> LoadCurveSummary {
+    assert!(p >= 1, "need at least one machine");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
+    let n = if quick { QUICK_N } else { FULL_N };
+    let g = gen::barabasi_albert(n, GRAPH_K, seed);
+    println!(
+        "\n## repro loadcurve — latency vs offered load on the pipelined server: \
+         BA graph n={} m={}, P={p}, seed {seed}, backend {backend}{}",
+        g.n,
+        g.m(),
+        if quick { ", --quick (CI gate)" } else { "" }
+    );
+
+    let dg = ingest_once(&g, p, cost, Placement::Spread);
+    let mut reference = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost),
+            dg.clone(),
+            cost,
+            Flags::tdo_gp(),
+            "loadcurve-sim-ref",
+            QueryShard::new,
+        ),
+        serve_cfg(),
+    );
+    let hot = hot_source_order(&reference.engine().meta().out_deg);
+
+    let (open, closed) = if backend == "threaded" {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                ThreadedCluster::new(p),
+                dg,
+                cost,
+                Flags::tdo_gp(),
+                "loadcurve-threaded",
+                QueryShard::new,
+            ),
+            serve_cfg(),
+        );
+        sweep(&mut server, &mut reference, &hot, seed, quick, &|tc: &ThreadedCluster| {
+            Some(tc.snapshot())
+        })
+    } else {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                Cluster::new(p, cost),
+                dg,
+                cost,
+                Flags::tdo_gp(),
+                "loadcurve-sim",
+                QueryShard::new,
+            ),
+            serve_cfg(),
+        );
+        sweep(&mut server, &mut reference, &hot, seed, quick, &|_| None)
+    };
+
+    print_curve("open loop (offered rate sweep)", &open);
+    print_curve("closed loop (client population sweep)", &closed);
+
+    let mismatches: u64 = open.iter().chain(&closed).map(|pt| pt.mismatches).sum();
+    let monotone = open
+        .windows(2)
+        .all(|w| w[0].rejection_rate <= w[1].rejection_rate);
+    // Against the CONFIGURED load, not `pt.offered` (which is defined
+    // as served + rejected): a query the server loses outright shrinks
+    // served without raising rejected, and only this comparison sees it.
+    let accounted = open
+        .iter()
+        .chain(&closed)
+        .all(|pt| pt.served + pt.rejected == pt.expected_offered);
+    let ingested = ingestions() - ing0;
+
+    // ---- JSON artifact ----
+    let json = json_report(&g, p, seed, backend, quick, &open, &closed);
+    let json_path = match write_report(out, &json) {
+        Ok(()) => {
+            println!("\nJSON report written to {out}");
+            Some(out.to_string())
+        }
+        Err(e) => {
+            eprintln!("could not write the JSON report to {out}: {e}");
+            None
+        }
+    };
+
+    // The quick sweep is the CI gate: rejection must be nondecreasing in
+    // offered load (a server that sheds LESS when offered MORE is
+    // broken); the full sweep reports the curve without gating on it.
+    let all_valid = mismatches == 0
+        && ingested == 1
+        && accounted
+        && json_path.is_some()
+        && (!quick || monotone);
+    println!(
+        "\nloadcurve {}",
+        if all_valid {
+            "OK (every served query bit-identical to the single-shot sim reference; \
+             graph ingested once; rejection nondecreasing in offered load)"
+        } else {
+            "FAILED"
+        }
+    );
+    if !monotone {
+        eprintln!(
+            "rejection rate is NOT nondecreasing across the open-loop sweep: {:?}",
+            open.iter().map(|pt| pt.rejection_rate).collect::<Vec<_>>()
+        );
+    }
+    if ingested != 1 {
+        eprintln!("expected exactly one ingestion, counted {ingested}");
+    }
+    LoadCurveSummary {
+        open,
+        closed,
+        mismatches,
+        ingestions: ingested,
+        monotone,
+        all_valid,
+        json_path,
+    }
+}
+
+fn write_report(path: &str, json: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_loadcurve_sim_is_valid() {
+        let dir = std::env::temp_dir().join("tdorch-loadcurve-test");
+        let out = dir.join("loadcurve.json");
+        let s = run_loadcurve(2, 7, "sim", true, out.to_str().unwrap());
+        assert_eq!(s.mismatches, 0);
+        assert_eq!(s.ingestions, 1);
+        assert!(s.monotone, "rejection must be nondecreasing in offered load");
+        assert!(s.all_valid);
+        assert_eq!(s.open.len(), 3);
+        assert_eq!(s.closed.len(), 2);
+        // The overloaded end of the quick sweep must actually shed load.
+        assert!(
+            s.open.last().unwrap().rejected > 0,
+            "4 q/tick against a cap-8 queue must reject"
+        );
+        let json = std::fs::read_to_string(&out).expect("report written");
+        assert!(json.starts_with("{\"schema\":\"tdorch.loadcurve.v1\""));
+        assert!(json.contains("\"open_loop\":["));
+        assert!(json.contains("\"sojourn_ticks\":{\"p50\":"));
+        assert!(json.contains("\"expected_offered\":32"), "open points offer 32 queries");
+        assert!(!json.contains("NaN"), "NaN must serialize as null");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jnum_maps_non_finite_to_null() {
+        assert_eq!(jnum(0.5), "0.5");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(f64::INFINITY), "null");
+    }
+}

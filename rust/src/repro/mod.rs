@@ -6,6 +6,7 @@
 pub mod exec;
 pub mod graphs;
 pub mod kv;
+pub mod loadcurve;
 pub mod serve;
 
 /// Geometric mean of positive values.

@@ -12,9 +12,12 @@
 //! and breaks the comparison instead of cancelling out.
 //!
 //! Reported: per-kind and overall queue-wait percentiles (logical
-//! ticks), service-time percentiles (measured ms), sustained
-//! queries/sec, batch count, rejections, and — on the threaded backend —
-//! worker-pool epoch accounting per query.
+//! ticks), service-cost percentiles (deterministic ticks and measured
+//! ms), offered vs goodput throughput with the rejection rate broken out
+//! (shed queries vanish from goodput, never from offered), batch count,
+//! and — on the threaded backend — worker-pool epoch accounting per
+//! query.  For the full latency-vs-offered-load sweeps see
+//! `repro loadcurve` ([`super::loadcurve`]).
 
 use crate::exec::{PoolSnapshot, ThreadedCluster};
 use crate::graph::flags::Flags;
@@ -83,7 +86,13 @@ pub fn run_serve(
     );
     let hot = hot_source_order(&reference.engine().meta().out_deg);
     let stream = generate_stream(
-        StreamConfig { queries, per_tick: ARRIVALS_PER_TICK, zipf_s, mix: QueryMix::balanced() },
+        StreamConfig {
+            queries,
+            per_tick: ARRIVALS_PER_TICK,
+            every_ticks: 1,
+            zipf_s,
+            mix: QueryMix::balanced(),
+        },
         &hot,
         seed,
     );
@@ -196,16 +205,22 @@ pub fn run_serve(
     }
 
     let (w50, _, w99) = report.wait_tick_percentiles();
+    let (st50, _, st99) = report.service_tick_percentiles();
     let (s50, _, s99) = report.service_ms_percentiles();
     println!(
-        "\noverall: {} served, {} rejected, {} batches over {} logical ticks; \
-         wait p50 {w50:.0} / p99 {w99:.0} ticks; service p50 {s50:.2} / p99 {s99:.2} ms; \
-         {:.1} queries/sec",
+        "\noverall: {} offered = {} served + {} rejected (rejection rate {:.3}), \
+         {} batches over {} logical ticks; wait p50 {w50:.0} / p99 {w99:.0} ticks; \
+         service p50 {st50:.0} / p99 {st99:.0} ticks = p50 {s50:.2} / p99 {s99:.2} ms; \
+         goodput {:.4} queries/tick ({:.1}/sec measured, {:.1}/sec offered)",
+        report.offered(),
         report.served(),
         report.rejected,
+        report.rejection_rate(),
         report.batches,
         report.ticks,
-        report.queries_per_sec(),
+        report.goodput_per_tick(),
+        report.goodput_qps(),
+        report.offered_qps(),
     );
     if let Some(note) = pool_note {
         println!("{note}");

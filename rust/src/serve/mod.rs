@@ -6,11 +6,18 @@
 //! that live for the whole process:
 //!
 //! ```text
-//!   workload::generate_stream         (deterministic open-loop arrivals)
-//!        │ admission (bounded queue; overflow is rejected, not buffered)
-//!        ▼
-//!   serve::Server  ── batch former (close on size B or tick deadline D)
-//!        │ dispatch: queries back-to-back on the SAME engine
+//!   workload::OpenLoopSource        workload::ClosedLoop
+//!   (fixed-rate Zipf stream)        (N clients · think time · ≤1
+//!        │                           outstanding query each)
+//!        └───────────┬──────────────┘
+//!                    ▼  ArrivalSource::poll(tick)
+//!        admission (bounded queue; overflow is rejected → on_reject)
+//!                    │         ▲
+//!                    ▼         │ re-polled BETWEEN queries of an
+//!   serve::Server ── batch former (close on size B or tick deadline D;
+//!        │           composition fixed at close)
+//!        │ per-query dispatch:  tick += max(1, ⌈Δledger-supersteps /
+//!        │                     supersteps_per_tick⌉)  → on_complete
 //!        ▼
 //!   SpmdEngine<B, QueryShard> ── reset_for_query between queries
 //!        │                        (shards re-init; ingestion, relay
@@ -27,15 +34,23 @@
 //! serve`, `repro graph` and the tests can *assert* the invariant rather
 //! than trust it.
 //!
-//! ## Determinism contract for batched runs
+//! ## Determinism contract for pipelined runs
 //!
-//! For a fixed (stream, [`ServeConfig`], graph, P): admission decisions,
-//! rejections, batch composition, per-query queue waits and every
-//! query's result bits are identical across runs and across substrates —
-//! batching is driven by *logical ticks* (arrival indices), never by
-//! wall-clock, and each query starts from a reset engine whose result is
-//! bit-identical to a fresh engine's (`tests/serve_equivalence.rs`).
-//! Only the measured service times and throughput vary with the host.
+//! Service occupies **logical time**: each query advances the clock by
+//! its ledger-superstep delta scaled by
+//! [`ServeConfig::supersteps_per_tick`], and admission runs between the
+//! queries of an executing batch — so queueing, shedding and think-time
+//! dynamics all play out on one deterministic clock.  For a fixed
+//! (arrival source, [`ServeConfig`], graph, P): admission decisions,
+//! rejections, batch composition, per-query queue waits, service ticks
+//! and every query's result bits are identical across runs and across
+//! substrates — ledger supersteps are a pure function of (graph, flags,
+//! P), never of the backend or the host, and each query starts from a
+//! reset engine whose result is bit-identical to a fresh engine's
+//! (`tests/serve_equivalence.rs`, `tests/serve_load.rs`).  Only the
+//! measured service milliseconds and wall-clock throughput vary with the
+//! host — which is why the `repro loadcurve` sweeps plot *logical*
+//! goodput and latency and treat wall-clock as annotation.
 
 mod server;
 

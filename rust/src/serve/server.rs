@@ -1,6 +1,7 @@
-//! The serving loop: bounded admission, deterministic batch formation,
-//! back-to-back dispatch on the reused engine (see the module docs in
-//! [`super`] for the pipeline picture and the determinism contract).
+//! The serving loop: bounded **pipelined** admission, deterministic
+//! batch formation, per-query dispatch on the reused engine under a
+//! logical service clock (see the module docs in [`super`] for the
+//! pipeline picture and the determinism contract).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -10,7 +11,7 @@ use crate::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
 use crate::graph::spmd::SpmdEngine;
 use crate::graph::Vid;
 use crate::metrics::p50_p95_p99;
-use crate::workload::{Query, QueryKind};
+use crate::workload::{ArrivalSource, OpenLoopSource, Query, QueryKind};
 
 use super::QueryShard;
 
@@ -26,18 +27,34 @@ pub struct ServeConfig {
     /// Close a batch as soon as this many queries are pending.
     pub batch: usize,
     /// ...or as soon as the oldest pending query has waited this many
-    /// ticks (bounds tail latency under a trickle of arrivals).
+    /// ticks (bounds the time a partial batch sits waiting to close;
+    /// once the server is busy serving, further wait accrues at the
+    /// logical service rate).
     pub deadline_ticks: u64,
     /// Bounded admission queue: arrivals beyond this are rejected — an
     /// open-loop server sheds load instead of buffering unboundedly.
     pub queue_cap: usize,
     /// PageRank iterations per PR query.
     pub pr_iters: usize,
+    /// Logical service rate: how many *ledger* supersteps
+    /// ([`Substrate::ledger_supersteps`]) the server retires per logical
+    /// tick.  A query that consumed S ledger supersteps occupies the
+    /// server for `max(1, ceil(S / supersteps_per_tick))` ticks, which is
+    /// how service time enters the same clock that drives admission —
+    /// deterministically, because ledger supersteps are a pure function
+    /// of (graph, flags, P), never of the backend or the host.
+    pub supersteps_per_tick: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { batch: 8, deadline_ticks: 4, queue_cap: 64, pr_iters: DEFAULT_PR_ITERS }
+        ServeConfig {
+            batch: 8,
+            deadline_ticks: 4,
+            queue_cap: 64,
+            pr_iters: DEFAULT_PR_ITERS,
+            supersteps_per_tick: 8,
+        }
     }
 }
 
@@ -54,10 +71,21 @@ pub struct QueryResult {
     pub bits: Vec<u64>,
     /// Logical ticks between arrival and dispatch (deterministic).
     pub wait_ticks: u64,
+    /// Logical ticks of service this query occupied the server for —
+    /// `max(1, ceil(ledger supersteps / supersteps_per_tick))`,
+    /// deterministic and identical across backends.
+    pub service_ticks: u64,
     /// Measured service wall-clock, milliseconds (host-dependent).
     pub service_ms: f64,
     /// Sequence number of the batch this query was dispatched in.
     pub batch: u64,
+}
+
+impl QueryResult {
+    /// Logical end-to-end latency: queue wait + service, ticks.
+    pub fn sojourn_ticks(&self) -> u64 {
+        self.wait_ticks + self.service_ticks
+    }
 }
 
 /// Outcome of a whole serving run.
@@ -78,12 +106,58 @@ impl ServeReport {
         self.results.len()
     }
 
-    /// Sustained throughput over the whole run (NaN for an empty run).
-    pub fn queries_per_sec(&self) -> f64 {
+    /// Total arrivals the run *offered*: served + rejected.  The old
+    /// `queries_per_sec` reported served-over-wall and called it "the"
+    /// throughput, silently dropping every rejected query from every
+    /// rate metric; offered, goodput and rejection rate are now separate
+    /// quantities.
+    pub fn offered(&self) -> u64 {
+        self.results.len() as u64 + self.rejected
+    }
+
+    /// Fraction of offered queries shed at admission (NaN for an empty
+    /// run — there is no rate to report).
+    pub fn rejection_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            return f64::NAN;
+        }
+        self.rejected as f64 / offered as f64
+    }
+
+    /// *Served* throughput over the measured run, queries/sec (NaN for
+    /// an empty run).
+    pub fn goodput_qps(&self) -> f64 {
         if self.wall_ms <= 0.0 {
             return f64::NAN;
         }
         self.results.len() as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// *Offered* throughput over the measured run, queries/sec —
+    /// rejected queries included (NaN for an empty run).
+    pub fn offered_qps(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return f64::NAN;
+        }
+        self.offered() as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// Served queries per logical tick — the deterministic goodput the
+    /// load curves plot (identical across backends and hosts).
+    pub fn goodput_per_tick(&self) -> f64 {
+        if self.ticks == 0 {
+            return f64::NAN;
+        }
+        self.results.len() as f64 / self.ticks as f64
+    }
+
+    /// Offered queries per logical tick over the run's actual span.
+    pub fn offered_per_tick(&self) -> f64 {
+        if self.ticks == 0 {
+            return f64::NAN;
+        }
+        self.offered() as f64 / self.ticks as f64
     }
 
     /// (p50, p95, p99) of per-query service wall-clock, ms.
@@ -95,6 +169,12 @@ impl ServeReport {
     /// (p50, p95, p99) of per-query queue wait, logical ticks.
     pub fn wait_tick_percentiles(&self) -> (f64, f64, f64) {
         let xs: Vec<f64> = self.results.iter().map(|r| r.wait_ticks as f64).collect();
+        p50_p95_p99(&xs)
+    }
+
+    /// (p50, p95, p99) of per-query logical service cost, ticks.
+    pub fn service_tick_percentiles(&self) -> (f64, f64, f64) {
+        let xs: Vec<f64> = self.results.iter().map(|r| r.service_ticks as f64).collect();
         p50_p95_p99(&xs)
     }
 }
@@ -111,6 +191,7 @@ impl<B: Substrate> Server<B> {
         assert!(cfg.batch >= 1, "batch size must be >= 1");
         assert!(cfg.queue_cap >= 1, "queue capacity must be >= 1");
         assert!(cfg.pr_iters >= 1, "PR needs at least one iteration");
+        assert!(cfg.supersteps_per_tick >= 1, "the service clock needs a positive rate");
         Server { engine, cfg }
     }
 
@@ -171,73 +252,125 @@ impl<B: Substrate> Server<B> {
     pub fn run_with(
         &mut self,
         stream: &[Query],
+        observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
+    ) -> ServeReport {
+        self.run_source(&mut OpenLoopSource::new(stream), observe)
+    }
+
+    /// Admit every arrival `source` has scheduled at or before `tick`
+    /// into the bounded queue; shed (and notify) the overflow.
+    fn admit(
+        source: &mut dyn ArrivalSource,
+        tick: u64,
+        pending: &mut VecDeque<Query>,
+        queue_cap: usize,
+        rejected: &mut u64,
+    ) {
+        for q in source.poll(tick) {
+            if pending.len() < queue_cap {
+                pending.push_back(q);
+            } else {
+                *rejected += 1;
+                source.on_reject(q.id, tick);
+            }
+        }
+    }
+
+    /// The full **pipelined** admission → batch → dispatch loop over any
+    /// [`ArrivalSource`] (open-loop slice or closed-loop clients).
+    ///
+    /// Service occupies logical time: after each query the clock jumps
+    /// forward by that query's deterministic service cost
+    /// ([`ServeConfig::supersteps_per_tick`]) and admission runs *again*
+    /// before the next query of the same batch — so arrivals landing
+    /// while a batch executes are queued (or shed at the cap) exactly
+    /// where they land, not at the end of the batch.  A batch's
+    /// *composition* is still fixed at close: mid-batch arrivals are
+    /// eligible for the next batch only.  Because service costs are
+    /// ledger-superstep deltas (pure functions of (graph, flags, P)),
+    /// the whole admission/wait/rejection schedule is bit-reproducible
+    /// across runs and across backends.
+    pub fn run_source(
+        &mut self,
+        source: &mut dyn ArrivalSource,
         mut observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
     ) -> ServeReport {
-        debug_assert!(
-            stream.windows(2).all(|w| w[0].arrival <= w[1].arrival),
-            "stream must arrive in nondecreasing tick order"
-        );
         let cfg = self.cfg;
         let mut pending: VecDeque<Query> = VecDeque::new();
-        let mut results: Vec<QueryResult> = Vec::with_capacity(stream.len());
+        let mut results: Vec<QueryResult> = Vec::new();
         let mut rejected = 0u64;
         let mut batches = 0u64;
-        let mut next = 0usize; // cursor into `stream`
         let mut tick = 0u64;
         let t0 = Instant::now();
-        while next < stream.len() || !pending.is_empty() {
-            // ---- admission: this tick's arrivals, bounded queue ----
-            while next < stream.len() && stream[next].arrival <= tick {
-                if pending.len() < cfg.queue_cap {
-                    pending.push_back(stream[next]);
-                } else {
-                    rejected += 1;
-                }
-                next += 1;
-            }
-            // ---- batch formation + dispatch ----
-            loop {
-                let full = pending.len() >= cfg.batch;
-                let overdue = pending
-                    .front()
-                    .is_some_and(|q| tick - q.arrival >= cfg.deadline_ticks);
-                // End of stream: nothing else will ever top the batch up,
-                // so drain instead of waiting out the deadline.
-                let draining = next >= stream.len() && !pending.is_empty();
-                if !(full || overdue || draining) {
-                    break;
-                }
+        loop {
+            // ---- admission at the current logical time ----
+            Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
+            let full = pending.len() >= cfg.batch;
+            let overdue = pending
+                .front()
+                .is_some_and(|q| tick - q.arrival >= cfg.deadline_ticks);
+            // Source exhausted: nothing will ever top the batch up, so
+            // drain instead of waiting out the deadline.
+            let draining = source.done() && !pending.is_empty();
+            if full || overdue || draining {
+                // ---- close a batch (composition fixed now) and serve
+                //      its queries one by one on the logical clock ----
                 let take = pending.len().min(cfg.batch);
                 let batch_seq = batches;
                 batches += 1;
                 for _ in 0..take {
                     let q = pending.pop_front().expect("batch drew from an empty queue");
+                    let wait_ticks = tick - q.arrival;
+                    let s0 = self.engine.sub().ledger_supersteps();
                     let ts = Instant::now();
                     let bits = self.run_query(&q);
+                    let service_ms = ts.elapsed().as_secs_f64() * 1e3;
+                    let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
+                    let service_ticks = steps.div_ceil(cfg.supersteps_per_tick).max(1);
+                    tick += service_ticks;
                     let res = QueryResult {
                         id: q.id,
                         kind: q.kind,
                         source: q.source,
                         bits,
-                        wait_ticks: tick - q.arrival,
-                        service_ms: ts.elapsed().as_secs_f64() * 1e3,
+                        wait_ticks,
+                        service_ticks,
+                        service_ms,
                         batch: batch_seq,
                     };
+                    source.on_complete(q.id, tick);
                     observe(&res, &self.engine);
                     results.push(res);
+                    // ---- pipelined admission: arrivals that landed
+                    //      during this query's service window ----
+                    Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
                 }
+                // Re-evaluate immediately: the queue may already hold a
+                // full (or overdue) next batch at the post-service tick.
+                continue;
             }
-            tick += 1;
-            // Idle gap: nothing is queued and the next arrival is in
-            // the future — jump straight to its tick instead of
-            // spinning one loop iteration per empty tick (a caller-built
-            // stream may place arrivals arbitrarily far apart).  No
-            // query is waiting, so no wait computation can observe the
-            // skipped ticks.
             if pending.is_empty() {
-                if let Some(q) = stream.get(next) {
-                    tick = tick.max(q.arrival);
+                match source.next_arrival() {
+                    _ if source.done() => break,
+                    // Idle gap: jump to the next scheduled arrival
+                    // instead of spinning tick by tick.  No query is
+                    // waiting, so no wait computation can observe the
+                    // skipped ticks; `max(tick + 1)` guarantees progress
+                    // even against a source that mis-schedules into the
+                    // past.
+                    Some(t) => tick = t.max(tick + 1),
+                    None => {
+                        // A live source with nothing scheduled and
+                        // nothing in flight cannot make progress — a
+                        // source-contract violation, not a server state.
+                        if cfg!(debug_assertions) {
+                            panic!("ArrivalSource not done but nothing scheduled or queued");
+                        }
+                        break;
+                    }
                 }
+            } else {
+                tick += 1;
             }
         }
         ServeReport {

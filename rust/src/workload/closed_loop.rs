@@ -1,0 +1,274 @@
+//! Closed-loop clients for the serving layer.
+//!
+//! The open-loop generator ([`super::queries::generate_stream`]) offers
+//! load that never reacts to the server — the right model for measuring
+//! shed load past saturation, but it cannot show the self-throttling
+//! regime every interactive deployment actually runs in.  This module is
+//! the complementary model (the canonical closed-loop harness shape —
+//! N clients, think time, at most one outstanding request each):
+//!
+//! * each of `clients` clients keeps **at most one query outstanding**;
+//! * after its query completes (or is shed at admission), the client
+//!   *thinks* for `think_ticks` logical ticks, then issues the next one
+//!   — so the offered rate adapts to service latency, with an upper
+//!   bound of `clients / (think_ticks + service)` queries per tick;
+//! * each client draws kinds and Zipf sources from its **own** RNG
+//!   stream (split off the run seed), so the sequence of queries a
+//!   client issues is independent of how the other clients' completions
+//!   interleave — the whole run is a deterministic function of
+//!   (config, hot order, seed, and the server's logical clock).
+//!
+//! A shed query counts against the client's budget and triggers the same
+//! think-time backoff as a completion (retry-after, not hammering), so
+//! `clients * queries_per_client` is exactly the offered load of a run.
+//!
+//! The model talks to the server through the
+//! [`ArrivalSource`](super::queries::ArrivalSource) feedback hooks; the
+//! server's admission loop polls it between queries of an executing
+//! batch, which is what makes think-time expire *during* service —
+//! see `serve::Server::run_source`.
+
+use crate::graph::Vid;
+use crate::rng::{splitmix64, Rng};
+
+use super::queries::{ArrivalSource, Query, QueryMix};
+use super::Zipf;
+
+/// Closed-loop client population parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoopConfig {
+    /// Number of concurrent clients (the offered-load knob: a load curve
+    /// sweeps this).
+    pub clients: usize,
+    /// Logical ticks a client thinks between its previous query's
+    /// completion (or rejection) and its next issue.
+    pub think_ticks: u64,
+    /// Queries each client issues before retiring (bounds the run).
+    pub queries_per_client: usize,
+    /// Zipf exponent over source-vertex hotness ranks.
+    pub zipf_s: f64,
+    pub mix: QueryMix,
+}
+
+struct Client {
+    rng: Rng,
+    /// Earliest tick this client may issue its next query.
+    issue_at: u64,
+    issued: usize,
+    /// A query is in the admission queue or in service right now.
+    outstanding: bool,
+}
+
+/// Deterministic closed-loop [`ArrivalSource`]: see the module docs.
+pub struct ClosedLoop {
+    cfg: ClosedLoopConfig,
+    zipf: Zipf,
+    hot: Vec<Vid>,
+    clients: Vec<Client>,
+    /// `owner[id]` = index of the client that issued query `id` (ids are
+    /// assigned in emission order).
+    owner: Vec<usize>,
+    /// Every query emitted so far, indexed by id — the cross-check
+    /// replays served queries against a single-shot reference from here.
+    emitted: Vec<Query>,
+}
+
+impl ClosedLoop {
+    pub fn new(cfg: ClosedLoopConfig, hot_order: &[Vid], seed: u64) -> Self {
+        assert!(cfg.clients >= 1, "need at least one client");
+        assert!(cfg.queries_per_client >= 1, "each client needs a query budget");
+        assert!(!hot_order.is_empty(), "empty source universe");
+        assert!(cfg.mix.total() > 0, "query mix has zero total weight");
+        let mut sm = seed;
+        let clients = (0..cfg.clients)
+            .map(|_| Client {
+                rng: Rng::new(splitmix64(&mut sm)),
+                issue_at: 0,
+                issued: 0,
+                outstanding: false,
+            })
+            .collect();
+        ClosedLoop {
+            cfg,
+            zipf: Zipf::new(hot_order.len(), cfg.zipf_s),
+            hot: hot_order.to_vec(),
+            clients,
+            owner: Vec::new(),
+            emitted: Vec::new(),
+        }
+    }
+
+    /// Total queries this population will offer over a full run.
+    pub fn offered_total(&self) -> u64 {
+        (self.cfg.clients * self.cfg.queries_per_client) as u64
+    }
+
+    /// Every query emitted so far, indexed by id.
+    pub fn emitted(&self) -> &[Query] {
+        &self.emitted
+    }
+
+    /// Which client issued query `id`.
+    pub fn owner_of(&self, id: u64) -> usize {
+        self.owner[id as usize]
+    }
+
+    fn client_finished(&mut self, id: u64, tick: u64) {
+        let c = self.owner[id as usize];
+        let client = &mut self.clients[c];
+        debug_assert!(client.outstanding, "feedback for a query client {c} never issued");
+        client.outstanding = false;
+        client.issue_at = tick + self.cfg.think_ticks;
+    }
+}
+
+impl ArrivalSource for ClosedLoop {
+    fn poll(&mut self, tick: u64) -> Vec<Query> {
+        let total = self.cfg.mix.total();
+        let mut out = Vec::new();
+        for (c, client) in self.clients.iter_mut().enumerate() {
+            if client.outstanding
+                || client.issued >= self.cfg.queries_per_client
+                || client.issue_at > tick
+            {
+                continue;
+            }
+            let kind = self.cfg.mix.pick(client.rng.next_below(total as u64) as u32);
+            let source = self.hot[self.zipf.sample(&mut client.rng)];
+            let q = Query { id: self.emitted.len() as u64, kind, source, arrival: tick };
+            client.outstanding = true;
+            client.issued += 1;
+            self.owner.push(c);
+            self.emitted.push(q);
+            out.push(q);
+        }
+        out
+    }
+
+    fn next_arrival(&self) -> Option<u64> {
+        self.clients
+            .iter()
+            .filter(|c| !c.outstanding && c.issued < self.cfg.queries_per_client)
+            .map(|c| c.issue_at)
+            .min()
+    }
+
+    fn done(&self) -> bool {
+        self.clients.iter().all(|c| c.issued >= self.cfg.queries_per_client)
+    }
+
+    fn on_complete(&mut self, id: u64, tick: u64) {
+        self.client_finished(id, tick);
+    }
+
+    fn on_reject(&mut self, id: u64, tick: u64) {
+        // Shedding is a completion from the client's point of view: back
+        // off one think time before retrying with the next query.
+        self.client_finished(id, tick);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(clients: usize, think: u64, per_client: usize) -> ClosedLoopConfig {
+        ClosedLoopConfig {
+            clients,
+            think_ticks: think,
+            queries_per_client: per_client,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        }
+    }
+
+    /// Drive a source like the server does, completing every query
+    /// `service` ticks after its dispatch tick (single-server FIFO, batch
+    /// of 1) — enough to exercise the full issue→complete→think cycle
+    /// without the serving layer.
+    fn drive(src: &mut ClosedLoop, service: u64) -> Vec<Query> {
+        let mut tick = 0u64;
+        let mut seen = Vec::new();
+        let mut queue: std::collections::VecDeque<Query> = std::collections::VecDeque::new();
+        while !(src.done() && queue.is_empty()) {
+            queue.extend(src.poll(tick));
+            if let Some(q) = queue.pop_front() {
+                tick += service;
+                src.on_complete(q.id, tick);
+                seen.push(q);
+            } else {
+                match src.next_arrival() {
+                    Some(t) => tick = t.max(tick + 1),
+                    None => break,
+                }
+            }
+        }
+        seen
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let hot: Vec<Vid> = (0..200).collect();
+        let a = drive(&mut ClosedLoop::new(cfg(4, 3, 8), &hot, 42), 2);
+        let b = drive(&mut ClosedLoop::new(cfg(4, 3, 8), &hot, 42), 2);
+        assert_eq!(a, b, "identical seeds must give identical schedules");
+        let c = drive(&mut ClosedLoop::new(cfg(4, 3, 8), &hot, 43), 2);
+        assert_ne!(a, c, "distinct seeds must diverge");
+    }
+
+    #[test]
+    fn budget_is_exact_and_one_outstanding_per_client() {
+        let hot: Vec<Vid> = (0..100).collect();
+        let mut src = ClosedLoop::new(cfg(3, 2, 5), &hot, 7);
+        let seen = drive(&mut src, 4);
+        assert_eq!(seen.len() as u64, src.offered_total(), "every budgeted query issues");
+        assert_eq!(src.emitted().len(), seen.len());
+        assert!(src.done());
+        // With service 4 and one server, a client can never have two
+        // queries in flight: consecutive queries of one client are
+        // separated by at least service + think ticks.
+        for c in 0..3 {
+            let mine: Vec<&Query> =
+                seen.iter().filter(|q| src.owner_of(q.id) == c).collect();
+            assert_eq!(mine.len(), 5, "client {c} must issue its whole budget");
+            for w in mine.windows(2) {
+                assert!(
+                    w[1].arrival >= w[0].arrival + 4 + 2,
+                    "client {c} overlapped its own queries"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejection_backs_off_like_completion() {
+        let hot: Vec<Vid> = (0..50).collect();
+        let mut src = ClosedLoop::new(cfg(1, 5, 2), &hot, 9);
+        let first = src.poll(0);
+        assert_eq!(first.len(), 1);
+        assert!(src.poll(0).is_empty(), "one outstanding query per client");
+        src.on_reject(first[0].id, 3);
+        assert_eq!(src.next_arrival(), Some(8), "rejected at 3 + think 5");
+        assert!(src.poll(7).is_empty());
+        let second = src.poll(8);
+        assert_eq!(second.len(), 1);
+        src.on_complete(second[0].id, 10);
+        assert!(src.done(), "budget of 2 spent");
+        assert_eq!(src.next_arrival(), None);
+    }
+
+    #[test]
+    fn think_time_throttles_offered_rate() {
+        let hot: Vec<Vid> = (0..100).collect();
+        // Near-instant service: the inter-arrival spacing is governed by
+        // think time (arrivals at 0, 11, 22, 33, 44 for service 1).
+        let seen = drive(&mut ClosedLoop::new(cfg(1, 10, 5), &hot, 3), 1);
+        assert_eq!(seen.len(), 5);
+        for w in seen.windows(2) {
+            assert!(
+                w[1].arrival - w[0].arrival >= 11,
+                "arrivals must be separated by service + think"
+            );
+        }
+    }
+}

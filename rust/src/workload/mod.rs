@@ -1,11 +1,19 @@
 //! Workload generators for the paper's evaluations: YCSB mixes over
 //! Zipf-distributed keys (§4), adversarial single-key batches, and the
-//! serving layer's open-loop graph query streams ([`queries`]).
+//! serving layer's graph query arrivals — open-loop fixed-rate streams
+//! ([`queries`]) and closed-loop client populations ([`closed_loop`]),
+//! both feeding the server through the [`ArrivalSource`] admission
+//! interface.
 
+pub mod closed_loop;
 pub mod queries;
 pub mod ycsb;
 pub mod zipf;
 
-pub use queries::{generate_stream, hot_source_order, Query, QueryKind, QueryMix, StreamConfig};
+pub use closed_loop::{ClosedLoop, ClosedLoopConfig};
+pub use queries::{
+    generate_stream, hot_source_order, ArrivalSource, OpenLoopSource, Query, QueryKind, QueryMix,
+    StreamConfig,
+};
 pub use ycsb::{YcsbKind, YcsbWorkload};
 pub use zipf::Zipf;

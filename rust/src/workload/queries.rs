@@ -108,23 +108,38 @@ pub fn hot_source_order(out_deg: &[u32]) -> Vec<Vid> {
     order
 }
 
-/// Open-loop stream parameters.
+/// Open-loop stream parameters.  The offered load is
+/// `per_tick / every_ticks` queries per logical tick: `per_tick` arrivals
+/// land together every `every_ticks` ticks, so rates *below* one query
+/// per tick (the underloaded end of a latency-vs-offered-load curve) are
+/// expressible as `per_tick: 1, every_ticks: k`.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamConfig {
     pub queries: usize,
-    /// Queries arriving per logical tick (fixed-rate open loop).
+    /// Queries arriving per arrival event (fixed-rate open loop).
     pub per_tick: usize,
+    /// Ticks between consecutive arrival events (1 = every tick).
+    pub every_ticks: u64,
     /// Zipf exponent over source-vertex hotness ranks.
     pub zipf_s: f64,
     pub mix: QueryMix,
 }
 
+impl StreamConfig {
+    /// Configured offered load in queries per logical tick.
+    pub fn offered_per_tick(&self) -> f64 {
+        self.per_tick as f64 / self.every_ticks as f64
+    }
+}
+
 /// Generate the deterministic query stream: query `i` arrives at tick
-/// `i / per_tick`, draws its kind from the weighted mix and its source
-/// from Zipf(`zipf_s`) over `hot_order` ranks.  Arrivals are emitted in
-/// nondecreasing tick order (what `serve::Server::run` requires).
+/// `(i / per_tick) * every_ticks`, draws its kind from the weighted mix
+/// and its source from Zipf(`zipf_s`) over `hot_order` ranks.  Arrivals
+/// are emitted in nondecreasing tick order (what `serve::Server::run`
+/// requires).
 pub fn generate_stream(cfg: StreamConfig, hot_order: &[Vid], seed: u64) -> Vec<Query> {
-    assert!(cfg.per_tick >= 1, "need at least one arrival per tick");
+    assert!(cfg.per_tick >= 1, "need at least one arrival per event");
+    assert!(cfg.every_ticks >= 1, "arrival events need a period of at least one tick");
     assert!(!hot_order.is_empty(), "empty source universe");
     let total = cfg.mix.total();
     assert!(total > 0, "query mix has zero total weight");
@@ -134,9 +149,85 @@ pub fn generate_stream(cfg: StreamConfig, hot_order: &[Vid], seed: u64) -> Vec<Q
         .map(|i| {
             let kind = cfg.mix.pick(rng.next_below(total as u64) as u32);
             let source = hot_order[zipf.sample(&mut rng)];
-            Query { id: i as u64, kind, source, arrival: (i / cfg.per_tick) as u64 }
+            Query {
+                id: i as u64,
+                kind,
+                source,
+                arrival: (i / cfg.per_tick) as u64 * cfg.every_ticks,
+            }
         })
         .collect()
+}
+
+/// How the serving loop consumes arrivals: a source is polled tick by
+/// tick and — unlike a fixed slice — can *react* to completions, which
+/// is what a closed-loop client model needs
+/// ([`super::closed_loop::ClosedLoop`]).  Implementations must be
+/// deterministic functions of (config, seed, observed tick/feedback
+/// sequence): the server promises to drive them with a deterministic
+/// logical clock, and together that makes whole serving runs
+/// bit-reproducible.
+pub trait ArrivalSource {
+    /// Hand out every not-yet-emitted query whose arrival time is at or
+    /// before `tick`, in deterministic order.  Called with nondecreasing
+    /// ticks, possibly several times per tick (the server re-polls
+    /// between queries of an executing batch); each query is emitted
+    /// exactly once.
+    fn poll(&mut self, tick: u64) -> Vec<Query>;
+
+    /// Earliest tick at which a currently-scheduled future arrival will
+    /// occur (None = nothing scheduled right now; a closed loop may
+    /// schedule more after a completion).  Lets the server skip idle
+    /// ticks without missing an admission.
+    fn next_arrival(&self) -> Option<u64>;
+
+    /// True once the source will never emit another query.
+    fn done(&self) -> bool;
+
+    /// Feedback: query `id` finished service at logical `tick`.
+    fn on_complete(&mut self, _id: u64, _tick: u64) {}
+
+    /// Feedback: query `id` was shed at admission (queue full) at `tick`.
+    fn on_reject(&mut self, _id: u64, _tick: u64) {}
+}
+
+/// [`ArrivalSource`] view of a pregenerated open-loop stream: arrivals
+/// never wait for completions, so the feedback hooks are no-ops.
+pub struct OpenLoopSource<'a> {
+    stream: &'a [Query],
+    next: usize,
+}
+
+impl<'a> OpenLoopSource<'a> {
+    pub fn new(stream: &'a [Query]) -> Self {
+        debug_assert!(
+            stream.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "stream must arrive in nondecreasing tick order"
+        );
+        OpenLoopSource { stream, next: 0 }
+    }
+}
+
+impl ArrivalSource for OpenLoopSource<'_> {
+    fn poll(&mut self, tick: u64) -> Vec<Query> {
+        let mut out = Vec::new();
+        while let Some(q) = self.stream.get(self.next) {
+            if q.arrival > tick {
+                break;
+            }
+            out.push(*q);
+            self.next += 1;
+        }
+        out
+    }
+
+    fn next_arrival(&self) -> Option<u64> {
+        self.stream.get(self.next).map(|q| q.arrival)
+    }
+
+    fn done(&self) -> bool {
+        self.next >= self.stream.len()
+    }
 }
 
 #[cfg(test)]
@@ -144,7 +235,7 @@ mod tests {
     use super::*;
 
     fn cfg(queries: usize, zipf_s: f64) -> StreamConfig {
-        StreamConfig { queries, per_tick: 3, zipf_s, mix: QueryMix::balanced() }
+        StreamConfig { queries, per_tick: 3, every_ticks: 1, zipf_s, mix: QueryMix::balanced() }
     }
 
     #[test]
@@ -181,5 +272,37 @@ mod tests {
     fn hot_source_order_is_degree_descending_id_ascending() {
         let out_deg = [3u32, 9, 9, 1, 0];
         assert_eq!(hot_source_order(&out_deg), vec![1, 2, 0, 3, 4]);
+    }
+
+    #[test]
+    fn every_ticks_spaces_arrival_events() {
+        let hot: Vec<Vid> = (0..100).collect();
+        let mut c = cfg(7, 1.2);
+        c.per_tick = 2;
+        c.every_ticks = 5;
+        let s = generate_stream(c, &hot, 7);
+        let arrivals: Vec<u64> = s.iter().map(|q| q.arrival).collect();
+        assert_eq!(arrivals, vec![0, 0, 5, 5, 10, 10, 15]);
+        assert!((c.offered_per_tick() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn open_loop_source_emits_each_query_once_and_skips_ahead() {
+        let hot: Vec<Vid> = (0..100).collect();
+        let mut c = cfg(6, 1.2);
+        c.per_tick = 2;
+        c.every_ticks = 4;
+        let stream = generate_stream(c, &hot, 3);
+        let mut src = OpenLoopSource::new(&stream);
+        assert_eq!(src.next_arrival(), Some(0));
+        assert!(!src.done());
+        let first = src.poll(0);
+        assert_eq!(first.len(), 2);
+        assert!(src.poll(0).is_empty(), "re-polling the same tick re-emits nothing");
+        assert_eq!(src.next_arrival(), Some(4));
+        assert_eq!(src.poll(7).len(), 2);
+        assert_eq!(src.poll(100).len(), 2);
+        assert!(src.done());
+        assert_eq!(src.next_arrival(), None);
     }
 }

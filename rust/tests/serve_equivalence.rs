@@ -28,7 +28,13 @@ fn cost() -> CostModel {
 }
 
 fn cfg() -> ServeConfig {
-    ServeConfig { batch: 4, deadline_ticks: 2, queue_cap: 32, pr_iters: 3 }
+    ServeConfig {
+        batch: 4,
+        deadline_ticks: 2,
+        queue_cap: 32,
+        pr_iters: 3,
+        ..ServeConfig::default()
+    }
 }
 
 fn sim_server(g: &Graph, p: usize) -> Server<Cluster> {
@@ -114,7 +120,13 @@ fn threaded_server_stream_matches_fresh_sim_single_shots() {
     );
     let hot = hot_source_order(&server.engine().meta().out_deg);
     let stream = generate_stream(
-        StreamConfig { queries: 16, per_tick: 4, zipf_s: 1.5, mix: QueryMix::balanced() },
+        StreamConfig {
+            queries: 16,
+            per_tick: 4,
+            every_ticks: 1,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        },
         &hot,
         3,
     );
@@ -168,7 +180,13 @@ fn serving_deployment_ingests_exactly_once() {
     );
     let hot = hot_source_order(&sim.engine().meta().out_deg);
     let stream = generate_stream(
-        StreamConfig { queries: 24, per_tick: 3, zipf_s: 1.5, mix: QueryMix::balanced() },
+        StreamConfig {
+            queries: 24,
+            per_tick: 3,
+            every_ticks: 1,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        },
         &hot,
         9,
     );
@@ -189,6 +207,12 @@ fn serving_deployment_ingests_exactly_once() {
         assert_eq!(a.id, b.id, "dispatch order diverged");
         assert_eq!(a.batch, b.batch, "query {}: batch assignment diverged", a.id);
         assert_eq!(a.wait_ticks, b.wait_ticks, "query {}: wait diverged", a.id);
+        assert_eq!(
+            a.service_ticks, b.service_ticks,
+            "query {}: logical service cost diverged (ledger supersteps must be \
+             backend-independent)",
+            a.id
+        );
         assert_eq!(a.bits, b.bits, "query {}: result bits diverged", a.id);
     }
 }

@@ -30,7 +30,13 @@ fn stream_is_identical_across_machine_counts() {
         })
         .collect();
     assert_eq!(orders[0], orders[1], "hot order must not depend on P");
-    let cfg = StreamConfig { queries: 200, per_tick: 3, zipf_s: 1.2, mix: QueryMix::balanced() };
+    let cfg = StreamConfig {
+        queries: 200,
+        per_tick: 3,
+        every_ticks: 1,
+        zipf_s: 1.2,
+        mix: QueryMix::balanced(),
+    };
     let a = generate_stream(cfg, &orders[0], 42);
     let b = generate_stream(cfg, &orders[1], 42);
     assert_eq!(a, b, "same seed must give the same stream at every P");
@@ -43,8 +49,13 @@ fn stream_skew_tracks_requested_exponent() {
     let n = 1000usize;
     let hot: Vec<Vid> = (0..n as Vid).collect();
     let mass_of = |s: f64| {
-        let cfg =
-            StreamConfig { queries: 40_000, per_tick: 8, zipf_s: s, mix: QueryMix::balanced() };
+        let cfg = StreamConfig {
+            queries: 40_000,
+            per_tick: 8,
+            every_ticks: 1,
+            zipf_s: s,
+            mix: QueryMix::balanced(),
+        };
         let stream = generate_stream(cfg, &hot, 9);
         stream.iter().filter(|q| q.source == hot[0]).count() as f64 / stream.len() as f64
     };
@@ -71,13 +82,25 @@ fn bounded_queue_rejects_overflow_deterministically() {
     // agree on exactly which queries were served, their waits, batches
     // and results.
     let g = gen::barabasi_albert(300, 4, 2);
-    let serve_cfg = ServeConfig { batch: 4, deadline_ticks: 1, queue_cap: 4, pr_iters: 2 };
+    let serve_cfg = ServeConfig {
+        batch: 4,
+        deadline_ticks: 1,
+        queue_cap: 4,
+        pr_iters: 2,
+        ..ServeConfig::default()
+    };
     let hot = {
         let e = SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new);
         hot_source_order(&e.meta().out_deg)
     };
     let stream = generate_stream(
-        StreamConfig { queries: 32, per_tick: 32, zipf_s: 1.5, mix: QueryMix::balanced() },
+        StreamConfig {
+            queries: 32,
+            per_tick: 32,
+            every_ticks: 1,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        },
         &hot,
         5,
     );
@@ -106,30 +129,57 @@ fn bounded_queue_rejects_overflow_deterministically() {
 
 #[test]
 fn deadline_dispatches_partial_batches() {
-    // A trickle (1 query/tick) against batch=8 would starve without the
-    // tick deadline; with deadline 2, every query must wait at most 2
-    // ticks and batches stay smaller than the size trigger.
+    // A slow trickle against batch=8 would starve without the tick
+    // deadline.  Under the pipelined clock the deadline bounds the time
+    // a partial batch sits waiting to CLOSE while the server is idle —
+    // once service occupies the clock, later arrivals accrue wait at the
+    // service rate — so the sharp guarantees are: the first batch's
+    // head-of-line query waits exactly the deadline (the server is idle
+    // before it), batches stay partial (smaller than the size trigger),
+    // and nothing waits forever.
     let g = gen::barabasi_albert(300, 4, 2);
     let hot = {
         let e = SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new);
         hot_source_order(&e.meta().out_deg)
     };
+    // One arrival every 64 ticks: far slower than any query's service,
+    // so the server drains completely between arrivals and EVERY query
+    // is its batch's head of line.
     let stream = generate_stream(
-        StreamConfig { queries: 6, per_tick: 1, zipf_s: 1.5, mix: QueryMix::balanced() },
+        StreamConfig {
+            queries: 6,
+            per_tick: 1,
+            every_ticks: 64,
+            zipf_s: 1.5,
+            mix: QueryMix::balanced(),
+        },
         &hot,
         8,
     );
     let mut s = Server::new(
         SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
-        ServeConfig { batch: 8, deadline_ticks: 2, queue_cap: 16, pr_iters: 2 },
+        ServeConfig {
+            batch: 8,
+            deadline_ticks: 2,
+            queue_cap: 16,
+            pr_iters: 2,
+            ..ServeConfig::default()
+        },
     );
     let rep = s.run(&stream);
     assert_eq!(rep.served(), 6);
     assert_eq!(rep.rejected, 0);
-    assert!(
-        rep.results.iter().all(|r| r.wait_ticks <= 2),
-        "deadline must bound queue wait: {:?}",
-        rep.results.iter().map(|r| r.wait_ticks).collect::<Vec<_>>()
+    assert_eq!(rep.batches, 6, "a drained server forms one partial batch per arrival");
+    let waits: Vec<u64> = rep.results.iter().map(|r| r.wait_ticks).collect();
+    // The last arrival exhausts the source, so the drain rule dispatches
+    // it immediately instead of waiting out the deadline.
+    assert_eq!(
+        waits,
+        vec![2, 2, 2, 2, 2, 0],
+        "an idle server must close each partial batch exactly at the deadline"
     );
-    assert!(rep.batches >= 2, "a trickle under deadline must form several partial batches");
+    assert!(
+        rep.results.iter().all(|r| r.service_ticks >= 1),
+        "service must occupy at least one logical tick"
+    );
 }

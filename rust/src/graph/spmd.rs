@@ -67,6 +67,7 @@ use std::sync::Arc;
 use crate::bsp::{Cluster, MachineId, RPC_MSG_FACTOR};
 use crate::det::{det_map, DetMap};
 use crate::exec::{no_messages, nothing_words, MachineAcct, Nothing, Substrate};
+use crate::mutate::{self, DeltaNote, EdgeOp, MutationBatch};
 use crate::CostModel;
 
 use super::flags::{Flags, CONTRIB_WORDS, DENSE_DIV, VAL_WORDS};
@@ -91,7 +92,11 @@ pub fn ingest_once(g: &Graph, p: usize, cost: CostModel, placement: Placement) -
 
 /// Read-only graph metadata replicated to every machine (a real system
 /// ships this catalog with the shards at ingestion; sharing it through an
-/// `Arc` models replication without P deep copies).
+/// `Arc` models replication without P deep copies).  `Clone` exists for
+/// the delta path: [`SpmdEngine::apply_delta`] updates the catalog via
+/// `Arc::make_mut` — copy-on-write, so an engine whose meta nobody else
+/// holds (the steady serving state) patches it in place.
+#[derive(Clone)]
 pub struct GraphMeta {
     pub n: usize,
     pub m: usize,
@@ -159,6 +164,13 @@ pub struct SpmdEngine<B: Substrate, AS: Send> {
     label: String,
     eff_work_pct: u64,
     resets: u64,
+    /// Number of mutation batches absorbed ([`SpmdEngine::apply_delta`]).
+    /// Epoch 0 is the freshly-ingested graph; every batch — even an empty
+    /// one — advances the epoch by exactly one, so an epoch value fully
+    /// identifies a graph snapshot given the mutation stream.
+    graph_epoch: u64,
+    /// Total directed edge ops absorbed across all epochs.
+    mutations_applied: u64,
 }
 
 impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
@@ -255,6 +267,8 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             label: label.to_string(),
             eff_work_pct,
             resets: 0,
+            graph_epoch: 0,
+            mutations_applied: 0,
         }
     }
 
@@ -411,6 +425,164 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     /// serving layer's per-engine query counter).
     pub fn resets(&self) -> u64 {
         self.resets
+    }
+
+    /// Current graph epoch: 0 = freshly ingested, +1 per absorbed
+    /// mutation batch.  Stamped on every `QueryResult` by the server —
+    /// it fully identifies the snapshot a result was computed on.
+    pub fn graph_epoch(&self) -> u64 {
+        self.graph_epoch
+    }
+
+    /// Total directed edge ops absorbed in place so far.
+    pub fn mutations_applied(&self) -> u64 {
+        self.mutations_applied
+    }
+
+    /// Absorb one mutation batch **in place**, inside a single superstep
+    /// on the substrate — no re-ingestion ([`crate::mutate`] module docs
+    /// have the full contract; `ingest::ingestions()` is the witness).
+    ///
+    /// The driver routes each directed op to the machines that can hold
+    /// the arc under the frozen placement: inserts to the source's owner
+    /// (where deltas accrete), deletes to the source's current leaf set
+    /// ∪ the owner — the union covers an arc inserted at the owner
+    /// earlier in the SAME batch, before this catalog update.  Workers
+    /// patch their blocks with the [`mutate::delta`] helpers (first-match
+    /// shift delete, emptied blocks kept — the identical rules
+    /// `DistGraph::apply_batch` replays) and ship per-(vertex, machine)
+    /// [`DeltaNote`]s to machine 0; the driver folds them last-note-wins
+    /// into the shared catalog via `Arc::make_mut`, then rebuilds relay
+    /// trees for exactly the dirty vertices.  Every inbox is
+    /// driver-built, so work charges and results are bit-identical
+    /// across backends; a non-empty batch costs exactly one ledger
+    /// superstep.  Returns the number of directed ops applied.
+    pub fn apply_delta(&mut self, batch: &MutationBatch) -> usize {
+        let p = self.meta.p;
+        let mut inboxes: Vec<Vec<EdgeOp>> = (0..p).map(|_| Vec::new()).collect();
+        for op in &batch.ops {
+            match *op {
+                EdgeOp::Insert { u, .. } => {
+                    inboxes[self.meta.part.owner(u)].push(*op);
+                }
+                EdgeOp::Delete { u, .. } => {
+                    let owner = self.meta.part.owner(u);
+                    let mut sent_owner = false;
+                    for &leaf in &self.meta.src_leaves[u as usize] {
+                        inboxes[leaf].push(*op);
+                        sent_owner |= leaf == owner;
+                    }
+                    if !sent_owner {
+                        inboxes[owner].push(*op);
+                    }
+                }
+            }
+        }
+
+        let notes_by_dest: Vec<Vec<DeltaNote>> = self.sub.superstep(
+            &mut self.machines,
+            inboxes,
+            move |m, st: &mut MachineState<AS>, inbox: Vec<EdgeOp>, acct: &mut MachineAcct| {
+                let ops = inbox.len() as u64;
+                let MachineState { blocks, block_of, .. } = st;
+                let mut out: Vec<(MachineId, DeltaNote)> = Vec::new();
+                for op in inbox {
+                    match op {
+                        EdgeOp::Insert { u, v, w } => {
+                            mutate::insert_arc(blocks, block_of, u, v, w);
+                            out.push((0, DeltaNote {
+                                vertex: u,
+                                machine: m as u32,
+                                is_src: true,
+                                present: true,
+                                deg_delta: 1,
+                            }));
+                            out.push((0, DeltaNote {
+                                vertex: v,
+                                machine: m as u32,
+                                is_src: false,
+                                present: true,
+                                deg_delta: 0,
+                            }));
+                        }
+                        EdgeOp::Delete { u, v } => {
+                            // The arc is globally unique: at most one of
+                            // the probed machines finds it.
+                            if mutate::delete_arc(blocks, block_of, u, v) {
+                                out.push((0, DeltaNote {
+                                    vertex: u,
+                                    machine: m as u32,
+                                    is_src: true,
+                                    present: mutate::holds_src(blocks, block_of, u),
+                                    deg_delta: -1,
+                                }));
+                                out.push((0, DeltaNote {
+                                    vertex: v,
+                                    machine: m as u32,
+                                    is_src: false,
+                                    present: mutate::holds_dst(blocks, v),
+                                    deg_delta: 0,
+                                }));
+                            }
+                        }
+                    }
+                }
+                acct.work(ops);
+                out
+            },
+            |_: &DeltaNote| 2,
+        );
+
+        // Fold the notes into the shared catalog.  Delivery is (sender,
+        // emission-index) ordered on both backends, so per-(vertex,
+        // machine) notes arrive in that machine's application order and
+        // last-note-wins is correct; `set_membership` is idempotent.
+        let notes = &notes_by_dest[0];
+        let applied = notes.len() / 2;
+        let meta = Arc::make_mut(&mut self.meta);
+        let mut dirty_src: Vec<Vid> = Vec::new();
+        let mut dirty_dst: Vec<Vid> = Vec::new();
+        let mut m_delta: i64 = 0;
+        for note in notes {
+            let vid = note.vertex as usize;
+            if note.is_src {
+                mutate::set_membership(&mut meta.src_leaves[vid], note.machine as usize, note.present);
+                meta.out_deg[vid] = (meta.out_deg[vid] as i64 + note.deg_delta as i64) as u32;
+                m_delta += note.deg_delta as i64;
+                dirty_src.push(note.vertex);
+            } else {
+                mutate::set_membership(&mut meta.dst_leaves[vid], note.machine as usize, note.present);
+                dirty_dst.push(note.vertex);
+            }
+        }
+        meta.m = (meta.m as i64 + m_delta) as usize;
+        dirty_src.sort_unstable();
+        dirty_src.dedup();
+        dirty_dst.sort_unstable();
+        dirty_dst.dedup();
+        // Relay trees are pure functions of (key, leaves, root, c, p):
+        // rebuild exactly the dirty ones, with the construction-time keys.
+        for &u in &dirty_src {
+            meta.src_tree[u as usize] = relay_tree_levels(
+                u as u64,
+                &meta.src_leaves[u as usize],
+                meta.part.owner(u),
+                meta.c,
+                p,
+            );
+        }
+        for &v in &dirty_dst {
+            meta.dst_tree[v as usize] = relay_tree_levels(
+                v as u64 ^ 0xD5,
+                &meta.dst_leaves[v as usize],
+                meta.part.owner(v),
+                meta.c,
+                p,
+            );
+        }
+        self.graph_epoch += 1;
+        self.mutations_applied += applied as u64;
+        applied
     }
 
     #[inline]

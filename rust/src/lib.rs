@@ -27,7 +27,10 @@
 //! query stream ({BFS, SSSP, PR, CC, BC}), batches it deterministically, and
 //! dispatches on a long-lived `SpmdEngine` — one ingestion and one
 //! worker pool per process, queries separated by
-//! `SpmdEngine::reset_for_query`.
+//! `SpmdEngine::reset_for_query`.  Live mutation ([`mutate`]): seeded
+//! edge delta batches absorbed in place between dispatches
+//! (`SpmdEngine::apply_delta`), each bumping an epoch stamped on every
+//! result — still one ingestion per process.
 
 pub mod baselines;
 pub mod kvstore;
@@ -38,6 +41,7 @@ pub mod forest;
 pub mod graph;
 pub mod metatask;
 pub mod metrics;
+pub mod mutate;
 pub mod orchestration;
 pub mod repro;
 pub mod rng;

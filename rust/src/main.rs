@@ -30,6 +30,16 @@
 //!                                              open-loop rate + closed-
 //!                                              loop client sweeps, JSON
 //!                                              report; --quick = CI gate
+//! repro mutate  [--quick] [--backend sim|threaded] [--threads P]
+//!               [--seed S]                     live edge mutations under
+//!                                              serving traffic, every
+//!                                              result cross-checked at
+//!                                              its epoch; CI gate
+//! repro bench-snapshot [--out DIR] [--check] [--baseline DIR]
+//!                                              regenerate the committed
+//!                                              perf snapshots; --check
+//!                                              diffs them against the
+//!                                              repo-root baselines
 //! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
@@ -53,6 +63,14 @@
 //! reference and reporting wait/service percentiles plus queries/sec
 //! (exit 1 on any divergence or a second ingestion).
 //!
+//! `repro mutate` interleaves seeded edge insert/delete batches with the
+//! serving stream on the same logical clock: deltas are absorbed in
+//! place by `SpmdEngine::apply_delta` (the served engine still ingests
+//! exactly once), each bumping the engine's graph epoch, and every
+//! post-mutation result is cross-checked bit-for-bit against reference
+//! engines built at exactly that epoch (exit 1 on divergence, a second
+//! ingestion, or an epoch-accounting violation).
+//!
 //! (CLI is hand-rolled: the offline build has no clap — see Cargo.toml.)
 
 use tdorch::repro;
@@ -70,7 +88,12 @@ struct Args {
     zipf: f64,
     batch: usize,
     quick: bool,
-    out: String,
+    /// `--out` target; `None` = the subcommand's own default
+    /// (loadcurve: `target/loadcurve/loadcurve.json`; bench-snapshot:
+    /// `target/bench-snapshot`).
+    out: Option<String>,
+    check: bool,
+    baseline: String,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -100,7 +123,9 @@ fn parse_args() -> Args {
         zipf: 1.5,
         batch: 8,
         quick: false,
-        out: "target/loadcurve/loadcurve.json".to_string(),
+        out: None,
+        check: false,
+        baseline: "..".to_string(),
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -117,7 +142,9 @@ fn parse_args() -> Args {
             "--zipf" => args.zipf = parse_flag(&argv, &mut i, "--zipf"),
             "--batch" => args.batch = parse_flag(&argv, &mut i, "--batch"),
             "--quick" => args.quick = true,
-            "--out" => args.out = parse_flag(&argv, &mut i, "--out"),
+            "--out" => args.out = Some(parse_flag(&argv, &mut i, "--out")),
+            "--check" => args.check = true,
+            "--baseline" => args.baseline = parse_flag(&argv, &mut i, "--baseline"),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -306,8 +333,41 @@ fn main() {
                     std::process::exit(2);
                 }
             }
+            let out = args
+                .out
+                .clone()
+                .unwrap_or_else(|| "target/loadcurve/loadcurve.json".to_string());
             let summary =
-                repro::loadcurve::run_loadcurve(p, args.seed, &args.backend, args.quick, &args.out);
+                repro::loadcurve::run_loadcurve(p, args.seed, &args.backend, args.quick, &out);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
+        "mutate" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            let summary = repro::mutate::run_mutate(p, args.seed, &args.backend, args.quick);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
+        "bench-snapshot" => {
+            let out = args
+                .out
+                .clone()
+                .unwrap_or_else(|| "target/bench-snapshot".to_string());
+            let baseline = if args.check {
+                Some(args.baseline.as_str())
+            } else {
+                None
+            };
+            let summary = repro::bench_snapshot::run_bench_snapshot(&out, baseline);
             if !summary.all_valid {
                 std::process::exit(1);
             }
@@ -326,9 +386,10 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|bench-snapshot|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
-                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick] [--out PATH]"
+                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick] [--out PATH] \
+                 [--check] [--baseline DIR]"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,316 @@
+//! In-place delta application over ingested edge blocks.
+//!
+//! The frozen-placement contract: partition and block placement are
+//! decided once, at epoch-0 ingestion, and **never revisited** by a
+//! delta.  Inserted arcs accrete at the source's *owner* machine
+//! (appended to its first resident block, or a fresh block if the owner
+//! holds none), deleted arcs are removed from whichever machine holds
+//! them, and emptied blocks stay in place so block indices — which
+//! `block_of` references — remain stable.  That keeps a mutated engine's
+//! state a pure function of (epoch-0 ingest, op sequence), independent
+//! of when queries interleave, which is what lets `repro mutate`
+//! rebuild a bit-identical reference by replaying the same ops onto a
+//! fresh clone of the epoch-0 `DistGraph`.
+//!
+//! What a delta *does* maintain incrementally: `out_deg`, the arc count
+//! `m`, and the source/destination tree leaf sets (sorted machine lists,
+//! updated by binary-search splice).  [`recompute_leaves`] is the
+//! from-scratch ground truth the incremental path is tested against.
+
+use crate::bsp::MachineId;
+use crate::det::DetMap;
+use crate::graph::ingest::{DistGraph, EdgeBlock};
+use crate::graph::Vid;
+
+use super::stream::{EdgeOp, MutationBatch};
+
+/// A note shipped to the delta superstep's driver: machine `machine`'s
+/// holdings for `vertex` changed — `present` is whether it still holds
+/// source blocks (is_src) / in-edges (!is_src) of the vertex afterwards,
+/// and `deg_delta` the out-degree change it caused.  Per-(vertex,
+/// machine) notes arrive in application order, so last-note-wins.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaNote {
+    pub vertex: Vid,
+    pub machine: u32,
+    pub is_src: bool,
+    pub present: bool,
+    pub deg_delta: i32,
+}
+
+/// Insert arc u→v into ONE machine's holdings: appended to u's first
+/// resident block, or a new block when the machine holds none (the
+/// owner-accretion path — deltas never spawn blocks on transit
+/// machines).
+pub fn insert_arc(
+    blocks: &mut Vec<EdgeBlock>,
+    block_of: &mut DetMap<Vid, Vec<u32>>,
+    u: Vid,
+    v: Vid,
+    w: f32,
+) {
+    let idxs = block_of.entry(u).or_default();
+    if let Some(&first) = idxs.first() {
+        blocks[first as usize].targets.push((v, w));
+    } else {
+        let idx = blocks.len() as u32;
+        blocks.push(EdgeBlock { src: u, targets: vec![(v, w)] });
+        idxs.push(idx);
+    }
+}
+
+/// Delete arc u→v from ONE machine's holdings: first match across u's
+/// blocks in index order, removed by shift (`Vec::remove`) so the
+/// surviving target order — and therefore every later f64 fold over the
+/// block — is a deterministic function of the op sequence.  Returns
+/// whether the arc was found here.  Emptied blocks are kept: block
+/// indices must stay stable.
+pub fn delete_arc(
+    blocks: &mut [EdgeBlock],
+    block_of: &DetMap<Vid, Vec<u32>>,
+    u: Vid,
+    v: Vid,
+) -> bool {
+    let Some(idxs) = block_of.get(&u) else { return false };
+    for &bi in idxs {
+        let targets = &mut blocks[bi as usize].targets;
+        if let Some(pos) = targets.iter().position(|(t, _)| *t == v) {
+            targets.remove(pos);
+            return true;
+        }
+    }
+    false
+}
+
+/// Does this machine still hold any out-edge of `u`?  (Source-tree leaf
+/// membership after a delete.)
+pub fn holds_src(blocks: &[EdgeBlock], block_of: &DetMap<Vid, Vec<u32>>, u: Vid) -> bool {
+    block_of
+        .get(&u)
+        .is_some_and(|idxs| idxs.iter().any(|&bi| !blocks[bi as usize].targets.is_empty()))
+}
+
+/// Does this machine still hold any in-edge of `v`?  (Destination-tree
+/// leaf membership after a delete; a full scan of the machine's blocks,
+/// mirroring how ingestion discovers dst leaves.)
+pub fn holds_dst(blocks: &[EdgeBlock], v: Vid) -> bool {
+    blocks.iter().any(|b| b.targets.iter().any(|(t, _)| *t == v))
+}
+
+/// Splice machine `m` in or out of a sorted leaf list according to
+/// `present`.  Idempotent: re-asserting an existing membership is a
+/// no-op, which is what makes per-(vertex, machine) last-note-wins
+/// folding correct.
+pub fn set_membership(leaves: &mut Vec<MachineId>, m: MachineId, present: bool) {
+    debug_assert!(leaves.windows(2).all(|w| w[0] < w[1]), "leaf lists are sorted+deduped");
+    match leaves.binary_search(&m) {
+        Ok(pos) => {
+            if !present {
+                leaves.remove(pos);
+            }
+        }
+        Err(pos) => {
+            if present {
+                leaves.insert(pos, m);
+            }
+        }
+    }
+}
+
+/// Ground-truth leaf sets from a full scan of every machine's blocks —
+/// exactly how ingestion derives them, O(m).  The incremental membership
+/// maintenance in [`DistGraph::apply_batch`] / `SpmdEngine::apply_delta`
+/// is tested against this.
+pub fn recompute_leaves(dg: &DistGraph) -> (Vec<Vec<MachineId>>, Vec<Vec<MachineId>>) {
+    let mut src: Vec<Vec<MachineId>> = vec![Vec::new(); dg.n];
+    let mut dst: Vec<Vec<MachineId>> = vec![Vec::new(); dg.n];
+    for (mach, machine_blocks) in dg.blocks.iter().enumerate() {
+        for block in machine_blocks {
+            if block.targets.is_empty() {
+                continue;
+            }
+            src[block.src as usize].push(mach);
+            for (v, _) in &block.targets {
+                dst[*v as usize].push(mach);
+            }
+        }
+    }
+    for leaves in src.iter_mut().chain(dst.iter_mut()) {
+        leaves.sort_unstable();
+        leaves.dedup();
+    }
+    (src, dst)
+}
+
+impl DistGraph {
+    /// Replay one mutation batch directly onto this `DistGraph` — the
+    /// single-address-space reference for `SpmdEngine::apply_delta`,
+    /// following the identical frozen-placement rules (inserts at
+    /// `part.owner(u)`, first-match delete, emptied blocks kept).
+    /// Returns the number of directed ops applied.
+    pub fn apply_batch(&mut self, batch: &MutationBatch) -> usize {
+        let mut applied = 0;
+        for op in &batch.ops {
+            match *op {
+                EdgeOp::Insert { u, v, w } => {
+                    let owner = self.part.owner(u);
+                    insert_arc(&mut self.blocks[owner], &mut self.block_of[owner], u, v, w);
+                    set_membership(&mut self.src_leaves[u as usize], owner, true);
+                    set_membership(&mut self.dst_leaves[v as usize], owner, true);
+                    self.out_deg[u as usize] += 1;
+                    self.m += 1;
+                    applied += 1;
+                }
+                EdgeOp::Delete { u, v } => {
+                    // The arc is globally unique, so at most one machine
+                    // holds it; scan in ascending machine order.
+                    let found = (0..self.p).find(|&mach| {
+                        delete_arc(&mut self.blocks[mach], &self.block_of[mach], u, v)
+                    });
+                    if let Some(mach) = found {
+                        let src_present =
+                            holds_src(&self.blocks[mach], &self.block_of[mach], u);
+                        let dst_present = holds_dst(&self.blocks[mach], v);
+                        set_membership(&mut self.src_leaves[u as usize], mach, src_present);
+                        set_membership(&mut self.dst_leaves[v as usize], mach, dst_present);
+                        self.out_deg[u as usize] -= 1;
+                        self.m -= 1;
+                        applied += 1;
+                    }
+                }
+            }
+        }
+        applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::ingest::ingest;
+    use crate::graph::Graph;
+    use crate::mutate::stream::{generate_mutations, MutationConfig};
+    use crate::workload::hot_source_order;
+    use crate::{Cluster, CostModel};
+
+    fn ingested(n: usize, p: usize, seed: u64) -> (Graph, DistGraph) {
+        let g = gen::barabasi_albert(n, 5, seed);
+        let mut c = Cluster::new(p, CostModel::paper_cluster());
+        let dg = ingest(&mut c, &g, 8);
+        (g, dg)
+    }
+
+    fn mcfg(batches: usize) -> MutationConfig {
+        MutationConfig {
+            batches,
+            ops_per_batch: 12,
+            insert_pct: 55,
+            zipf_s: 1.2,
+            start_tick: 0,
+            every_ticks: 1,
+        }
+    }
+
+    #[test]
+    fn apply_batch_keeps_leaves_in_sync_with_ground_truth() {
+        let (g, mut dg) = ingested(800, 4, 3);
+        let hot = hot_source_order(&dg.out_deg);
+        let stream = generate_mutations(mcfg(5), &g, &hot, 17);
+        for b in &stream {
+            let applied = dg.apply_batch(b);
+            assert_eq!(applied, b.ops.len(), "stream ops are valid by construction");
+            let (src, dst) = recompute_leaves(&dg);
+            assert_eq!(dg.src_leaves, src, "incremental src leaves drifted");
+            assert_eq!(dg.dst_leaves, dst, "incremental dst leaves drifted");
+        }
+    }
+
+    #[test]
+    fn apply_batch_tracks_degrees_and_arc_count() {
+        let (g, mut dg) = ingested(600, 4, 9);
+        let hot = hot_source_order(&dg.out_deg);
+        let stream = generate_mutations(mcfg(4), &g, &hot, 23);
+        for b in &stream {
+            dg.apply_batch(b);
+        }
+        let placed: usize = dg
+            .blocks
+            .iter()
+            .flat_map(|bs| bs.iter().map(|b| b.targets.len()))
+            .sum();
+        assert_eq!(placed, dg.m, "m must equal resident arcs");
+        let mut deg = vec![0u32; dg.n];
+        for bs in &dg.blocks {
+            for b in bs {
+                deg[b.src as usize] += b.targets.len() as u32;
+            }
+        }
+        assert_eq!(deg, dg.out_deg, "out_deg must equal resident block sizes");
+    }
+
+    #[test]
+    fn blocks_never_move_or_vanish() {
+        // Frozen placement: deltas may append targets, create owner
+        // blocks, or empty blocks out — but an existing block's index
+        // and src never change.
+        let (g, mut dg) = ingested(600, 4, 5);
+        let before: Vec<Vec<Vid>> =
+            dg.blocks.iter().map(|bs| bs.iter().map(|b| b.src).collect()).collect();
+        let hot = hot_source_order(&dg.out_deg);
+        for b in &generate_mutations(mcfg(6), &g, &hot, 31) {
+            dg.apply_batch(b);
+        }
+        for (mach, srcs) in before.iter().enumerate() {
+            assert!(dg.blocks[mach].len() >= srcs.len(), "blocks vanished on {mach}");
+            for (i, &src) in srcs.iter().enumerate() {
+                assert_eq!(dg.blocks[mach][i].src, src, "block {i}@{mach} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn set_membership_splices_sorted_lists() {
+        let mut leaves: Vec<MachineId> = vec![1, 4, 7];
+        set_membership(&mut leaves, 4, true); // idempotent re-assert
+        assert_eq!(leaves, vec![1, 4, 7]);
+        set_membership(&mut leaves, 3, true);
+        assert_eq!(leaves, vec![1, 3, 4, 7]);
+        set_membership(&mut leaves, 7, false);
+        assert_eq!(leaves, vec![1, 3, 4]);
+        set_membership(&mut leaves, 9, false); // absent removal is a no-op
+        assert_eq!(leaves, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn insert_then_delete_roundtrips_on_one_machine() {
+        let (_, mut dg) = ingested(300, 2, 1);
+        let u: Vid = 0;
+        let owner = dg.part.owner(u);
+        let deg0 = dg.out_deg[u as usize];
+        // A self-consistent directed pair to a far vertex.
+        let v: Vid = 250;
+        let batch = MutationBatch {
+            id: 0,
+            arrival: 0,
+            ops: vec![
+                EdgeOp::Insert { u, v, w: 2.5 },
+                EdgeOp::Insert { u: v, v: u, w: 2.5 },
+            ],
+        };
+        assert_eq!(dg.apply_batch(&batch), 2);
+        assert_eq!(dg.out_deg[u as usize], deg0 + 1);
+        assert!(dg.src_leaves[u as usize].contains(&owner));
+        assert!(dg.dst_leaves[v as usize].contains(&owner));
+        let undo = MutationBatch {
+            id: 1,
+            arrival: 0,
+            ops: vec![EdgeOp::Delete { u, v }, EdgeOp::Delete { u: v, v: u }],
+        };
+        assert_eq!(dg.apply_batch(&undo), 2);
+        assert_eq!(dg.out_deg[u as usize], deg0);
+        let (src, dst) = recompute_leaves(&dg);
+        assert_eq!(dg.src_leaves, src);
+        assert_eq!(dg.dst_leaves, dst);
+    }
+}

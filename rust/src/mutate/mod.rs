@@ -1,0 +1,52 @@
+//! Live graph mutation under serving traffic.
+//!
+//! PRs 3–5 built a serving stack that ingests once and serves a frozen
+//! graph; this subsystem makes the resident engine absorb **edge delta
+//! batches in place** while queries keep flowing — the "data moves too"
+//! regime the paper's task-data orchestration targets, with the
+//! epoch/timestamp discipline of differential dataflow's incremental
+//! model providing the consistency story.
+//!
+//! The delta path, end to end:
+//!
+//! ```text
+//!   generate_mutations(cfg, g, hot, seed)          P-independent stream
+//!        │  Vec<MutationBatch>  (Zipf-by-hotness edge ops, valid in order)
+//!        ▼
+//!   MutationFeed ── pop_due(tick) ──► Server::run_source_mutating
+//!        │   (logical service clock; epoch barrier: batches apply only
+//!        │    BETWEEN query dispatches, never inside one)
+//!        ▼
+//!   SpmdEngine::apply_delta(batch)                 ONE pool superstep
+//!        │   workers patch blocks/block_of in place (delta.rs helpers)
+//!        │   and ship DeltaNotes to the driver, which splices leaf
+//!        │   sets, degrees, and rebuilds ONLY the dirty relay trees
+//!        ▼
+//!   graph_epoch += 1     stamped on the engine, every QueryResult,
+//!                        every MutationRecord, and the ServeReport
+//! ```
+//!
+//! **The counter-witness extends to deltas.**  `ingest::ingestions()`
+//! counts full ingestion passes; `apply_delta` never calls one, so a
+//! mutating serving run still finishes with exactly 1 ingestion on the
+//! served engine — `repro mutate` enforces it, making "absorbed in
+//! place" an enforceable property rather than a code-review claim.
+//!
+//! **Snapshot consistency.**  Every query executes against exactly one
+//! epoch: batch composition is fixed at close and mutations apply only
+//! between dispatches, so `QueryResult::graph_epoch` fully identifies
+//! the graph a result was computed on.  `repro mutate` exploits that to
+//! cross-check every result bit-for-bit against reference engines built
+//! at that epoch (replayed placement for all five kinds; a true fresh
+//! ingest of the mutated graph for the placement-independent exact
+//! kinds BFS/SSSP/CC).
+
+pub mod delta;
+pub mod stream;
+
+pub use delta::{
+    delete_arc, holds_dst, holds_src, insert_arc, recompute_leaves, set_membership, DeltaNote,
+};
+pub use stream::{
+    generate_mutations, EdgeOp, MutationBatch, MutationConfig, MutationFeed, MutationStream,
+};

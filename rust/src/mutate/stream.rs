@@ -1,0 +1,338 @@
+//! Deterministic live-mutation streams for the serving layer.
+//!
+//! Production graphs change while they are served; differential
+//! dataflow's incremental model (and the dynamic-graph sections of the
+//! massive-graphs survey, arXiv 2404.06037) frame the workload as a
+//! stream of timestamped edge *delta batches* interleaved with queries.
+//! This module generates that stream the same way [`crate::workload::queries`]
+//! generates query streams: a pure function of (graph, hotness order,
+//! config, seed) that **never sees the machine count or the backend** —
+//! the same seed drives byte-identical mutation batches into a P=1
+//! engine and a P=64 engine, on the simulator or the threaded pool
+//! (`tests/mutate_equivalence.rs`), which is what keeps mutating runs
+//! cross-checkable against any reference deployment.
+//!
+//! Mutations address vertices by Zipf-distributed *hotness rank*
+//! (hubs churn most, the adversarial case for placement), and the
+//! generator maintains a shadow adjacency so every emitted operation is
+//! valid **at its application point in the stream**: inserts only create
+//! absent edges, deletes only remove present ones, and each undirected
+//! edge op is emitted as its two directed arcs back-to-back — the graph
+//! stays symmetric, exactly like [`crate::graph::gen`] builds it.
+
+use crate::det::{det_set, DetSet};
+use crate::graph::{Graph, Vid};
+use crate::rng::Rng;
+use crate::workload::Zipf;
+
+/// One directed-arc mutation.  Undirected edge operations appear in the
+/// stream as two consecutive `EdgeOp`s (u→v then v→u, same weight).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeOp {
+    Insert { u: Vid, v: Vid, w: f32 },
+    Delete { u: Vid, v: Vid },
+}
+
+/// One epoch's worth of mutations: applied atomically between query
+/// dispatches, bumping the engine's `graph_epoch` by exactly one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MutationBatch {
+    pub id: u64,
+    /// Logical service-clock tick at which the batch becomes due.
+    pub arrival: u64,
+    pub ops: Vec<EdgeOp>,
+}
+
+/// The full mutation stream, in nondecreasing arrival order.
+pub type MutationStream = Vec<MutationBatch>;
+
+/// Stream parameters.  Like [`crate::workload::StreamConfig`], everything
+/// is logical (op counts and ticks), so a config fully determines the
+/// delta schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct MutationConfig {
+    /// Number of delta batches (== number of epoch bumps).
+    pub batches: usize,
+    /// Undirected edge operations per batch (each emits 2 directed ops).
+    pub ops_per_batch: usize,
+    /// Percentage (0..=100) of operations that are inserts; the rest are
+    /// deletes.
+    pub insert_pct: u32,
+    /// Zipf exponent over vertex hotness ranks for the endpoints.
+    pub zipf_s: f64,
+    /// Tick of the first batch.
+    pub start_tick: u64,
+    /// Ticks between consecutive batches.
+    pub every_ticks: u64,
+}
+
+/// Attempts per operation before the slot is skipped (e.g. a delete drawn
+/// for an isolated vertex); bounded so generation always terminates.
+const MAX_ATTEMPTS: usize = 64;
+
+#[inline]
+fn arc_key(u: Vid, v: Vid) -> u64 {
+    ((u as u64) << 32) | v as u64
+}
+
+/// Generate the deterministic mutation stream: batch `i` arrives at tick
+/// `start_tick + i * every_ticks`; endpoints are drawn Zipf(`zipf_s`)
+/// over `hot` ranks (rank 0 = hottest).  A shadow adjacency keeps every
+/// op valid at its application point, so a consumer that applies the
+/// stream in order never sees a duplicate insert or a miss on delete.
+/// Pure function of (g, hot, cfg, seed) — P and backend never enter.
+pub fn generate_mutations(
+    cfg: MutationConfig,
+    g: &Graph,
+    hot: &[Vid],
+    seed: u64,
+) -> MutationStream {
+    assert!(cfg.every_ticks >= 1, "batches need a period of at least one tick");
+    assert!(cfg.insert_pct <= 100, "insert_pct is a percentage");
+    assert!(!hot.is_empty(), "empty vertex universe");
+    let zipf = Zipf::new(hot.len(), cfg.zipf_s);
+    let mut rng = Rng::new(seed);
+
+    // Shadow state: adjacency lists + directed-arc membership, evolved
+    // alongside the stream so validity is judged against the graph AS
+    // MUTATED SO FAR, not the original.
+    let mut adj: Vec<Vec<Vid>> = (0..g.n as Vid)
+        .map(|u| g.neighbors(u).iter().map(|(v, _)| *v).collect())
+        .collect();
+    let mut present: DetSet<u64> = det_set();
+    for u in 0..g.n as Vid {
+        for (v, _) in g.neighbors(u) {
+            present.insert(arc_key(u, *v));
+        }
+    }
+
+    let mut stream = Vec::with_capacity(cfg.batches);
+    for b in 0..cfg.batches {
+        let mut ops = Vec::with_capacity(cfg.ops_per_batch * 2);
+        for _ in 0..cfg.ops_per_batch {
+            for _attempt in 0..MAX_ATTEMPTS {
+                let u = hot[zipf.sample(&mut rng)];
+                let insert = rng.next_below(100) < cfg.insert_pct as u64;
+                if insert {
+                    let v = hot[zipf.sample(&mut rng)];
+                    if v == u || present.contains(&arc_key(u, v)) {
+                        continue;
+                    }
+                    // Same weight distribution as graph::gen, symmetric.
+                    let w = 1.0 + rng.next_f32() * 9.0;
+                    ops.push(EdgeOp::Insert { u, v, w });
+                    ops.push(EdgeOp::Insert { u: v, v: u, w });
+                    present.insert(arc_key(u, v));
+                    present.insert(arc_key(v, u));
+                    adj[u as usize].push(v);
+                    adj[v as usize].push(u);
+                } else {
+                    if adj[u as usize].is_empty() {
+                        continue;
+                    }
+                    let idx = rng.next_usize(adj[u as usize].len());
+                    let v = adj[u as usize][idx];
+                    ops.push(EdgeOp::Delete { u, v });
+                    ops.push(EdgeOp::Delete { u: v, v: u });
+                    present.remove(&arc_key(u, v));
+                    present.remove(&arc_key(v, u));
+                    adj[u as usize].swap_remove(idx);
+                    let back = adj[v as usize]
+                        .iter()
+                        .position(|x| *x == u)
+                        .expect("shadow adjacency must be symmetric");
+                    adj[v as usize].swap_remove(back);
+                }
+                break;
+            }
+        }
+        stream.push(MutationBatch {
+            id: b as u64,
+            arrival: cfg.start_tick + b as u64 * cfg.every_ticks,
+            ops,
+        });
+    }
+    stream
+}
+
+/// How the serving loop consumes a mutation stream: polled on the
+/// logical service clock between query dispatches, mirroring
+/// [`crate::workload::ArrivalSource`] for arrivals.  Batches come out in
+/// schedule order, exactly once each.
+pub struct MutationFeed {
+    stream: MutationStream,
+    next: usize,
+}
+
+impl MutationFeed {
+    pub fn new(stream: MutationStream) -> Self {
+        assert!(
+            stream.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "mutation batches must arrive in nondecreasing tick order"
+        );
+        MutationFeed { stream, next: 0 }
+    }
+
+    /// A feed with no batches — what a mutation-free serving run uses.
+    pub fn empty() -> Self {
+        MutationFeed { stream: Vec::new(), next: 0 }
+    }
+
+    /// Earliest tick at which an unconsumed batch is scheduled.
+    pub fn next_arrival(&self) -> Option<u64> {
+        self.stream.get(self.next).map(|b| b.arrival)
+    }
+
+    /// Hand out the next batch iff it is due at `tick` (call in a loop —
+    /// several batches can fall due inside one service window).
+    pub fn pop_due(&mut self, tick: u64) -> Option<MutationBatch> {
+        let b = self.stream.get(self.next)?;
+        if b.arrival > tick {
+            return None;
+        }
+        self.next += 1;
+        Some(b.clone())
+    }
+
+    /// Hand out the next batch regardless of schedule — the post-stream
+    /// drain path, so the final epoch never depends on where the query
+    /// stream happened to end.
+    pub fn pop_next(&mut self) -> Option<MutationBatch> {
+        let b = self.stream.get(self.next)?;
+        self.next += 1;
+        Some(b.clone())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.stream.len() - self.next
+    }
+
+    pub fn done(&self) -> bool {
+        self.next >= self.stream.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::workload::hot_source_order;
+
+    fn cfg(batches: usize, ops: usize) -> MutationConfig {
+        MutationConfig {
+            batches,
+            ops_per_batch: ops,
+            insert_pct: 60,
+            zipf_s: 1.2,
+            start_tick: 2,
+            every_ticks: 6,
+        }
+    }
+
+    fn setup() -> (Graph, Vec<Vid>) {
+        let g = gen::barabasi_albert(400, 5, 3);
+        let hot: Vec<Vid> = {
+            let mut deg = vec![0u32; g.n];
+            for (u, d) in deg.iter_mut().enumerate() {
+                *d = g.out_degree(u as Vid) as u32;
+            }
+            hot_source_order(&deg)
+        };
+        (g, hot)
+    }
+
+    #[test]
+    fn same_seed_same_stream_distinct_seeds_diverge() {
+        let (g, hot) = setup();
+        let a = generate_mutations(cfg(4, 8), &g, &hot, 42);
+        let b = generate_mutations(cfg(4, 8), &g, &hot, 42);
+        assert_eq!(a, b);
+        let c = generate_mutations(cfg(4, 8), &g, &hot, 43);
+        assert_ne!(a, c, "distinct seeds must diverge");
+    }
+
+    #[test]
+    fn arrivals_follow_the_schedule() {
+        let (g, hot) = setup();
+        let s = generate_mutations(cfg(4, 4), &g, &hot, 7);
+        let arrivals: Vec<u64> = s.iter().map(|b| b.arrival).collect();
+        assert_eq!(arrivals, vec![2, 8, 14, 20]);
+        assert_eq!(s[2].id, 2);
+    }
+
+    #[test]
+    fn every_op_is_valid_at_its_application_point() {
+        // Replay the stream against an independently-maintained arc set:
+        // every directed insert must hit an absent arc, every delete a
+        // present one, and ops must come in symmetric directed pairs.
+        let (g, hot) = setup();
+        let s = generate_mutations(cfg(6, 16), &g, &hot, 11);
+        let mut present: DetSet<u64> = det_set();
+        for u in 0..g.n as Vid {
+            for (v, _) in g.neighbors(u) {
+                present.insert(arc_key(u, *v));
+            }
+        }
+        let mut total_ops = 0usize;
+        for b in &s {
+            assert_eq!(b.ops.len() % 2, 0, "directed ops come in pairs");
+            for pair in b.ops.chunks(2) {
+                match (pair[0], pair[1]) {
+                    (EdgeOp::Insert { u, v, w }, EdgeOp::Insert { u: v2, v: u2, w: w2 }) => {
+                        assert_eq!((u, v), (u2, v2), "pair must be the reverse arc");
+                        assert_eq!(w.to_bits(), w2.to_bits(), "symmetric weight");
+                        assert_ne!(u, v, "no self loops");
+                        assert!(present.insert(arc_key(u, v)), "insert of a present arc");
+                        assert!(present.insert(arc_key(v, u)), "insert of a present arc");
+                        assert!((1.0..10.0).contains(&w));
+                    }
+                    (EdgeOp::Delete { u, v }, EdgeOp::Delete { u: v2, v: u2 }) => {
+                        assert_eq!((u, v), (u2, v2), "pair must be the reverse arc");
+                        assert!(present.remove(&arc_key(u, v)), "delete of an absent arc");
+                        assert!(present.remove(&arc_key(v, u)), "delete of an absent arc");
+                    }
+                    other => panic!("mixed directed pair: {other:?}"),
+                }
+            }
+            total_ops += b.ops.len();
+        }
+        assert!(total_ops > 0, "stream must mutate something");
+    }
+
+    #[test]
+    fn mix_covers_inserts_and_deletes() {
+        let (g, hot) = setup();
+        let s = generate_mutations(cfg(8, 32), &g, &hot, 5);
+        let ins = s
+            .iter()
+            .flat_map(|b| &b.ops)
+            .filter(|o| matches!(o, EdgeOp::Insert { .. }))
+            .count();
+        let del = s
+            .iter()
+            .flat_map(|b| &b.ops)
+            .filter(|o| matches!(o, EdgeOp::Delete { .. }))
+            .count();
+        assert!(ins > 0 && del > 0, "60/40 mix must draw both ({ins} ins / {del} del)");
+    }
+
+    #[test]
+    fn feed_emits_each_batch_once_in_order() {
+        let (g, hot) = setup();
+        let s = generate_mutations(cfg(3, 4), &g, &hot, 9);
+        let mut feed = MutationFeed::new(s.clone());
+        assert_eq!(feed.next_arrival(), Some(2));
+        assert_eq!(feed.remaining(), 3);
+        assert!(feed.pop_due(1).is_none(), "not due yet");
+        let b0 = feed.pop_due(2).expect("batch 0 due at tick 2");
+        assert_eq!(b0.id, 0);
+        assert!(feed.pop_due(7).is_none(), "batch 1 arrives at 8");
+        let b1 = feed.pop_due(30).expect("due");
+        assert_eq!(b1.id, 1);
+        let b2 = feed.pop_next().expect("drain ignores the schedule");
+        assert_eq!(b2.id, 2);
+        assert!(feed.done());
+        assert_eq!(feed.next_arrival(), None);
+        assert!(MutationFeed::empty().done());
+    }
+}

@@ -1,0 +1,292 @@
+//! `repro bench-snapshot` — committed perf snapshots with a CI check
+//! gate.
+//!
+//! The repo commits two perf snapshot files at its root:
+//!
+//! * `BENCH_graph_wallclock.json` — key points of the graph-engine
+//!   sweep (per-(P, algorithm) simulated seconds, ledger supersteps,
+//!   total words on a fixed BA graph);
+//! * `BENCH_loadcurve.json` — key points of the quick load-curve sweep
+//!   (per-point offered/served/rejected, tick-domain wait percentiles,
+//!   logical goodput).
+//!
+//! Only **machine-normalized** quantities go into the `deterministic`
+//! object: everything in it is a pure function of (graph, flags, P,
+//! seed, config) in the cost/tick domain — never host wall-clock, which
+//! lives outside the compared region as annotation (`host`, `status`).
+//! That is what makes the snapshots committable: the same commit
+//! produces byte-identical `deterministic` objects on every machine, so
+//! CI can *diff* them instead of applying noise tolerances.
+//!
+//! `repro bench-snapshot` regenerates both files under `--out` (default
+//! `target/bench-snapshot/`).  With `--check --baseline <dir>` it also
+//! compares each fresh `deterministic` object against the committed
+//! file in `<dir>`:
+//!
+//! * committed file missing ............................ FAIL
+//! * committed file carries `"status":"pending"` ....... warn + pass
+//!   (the placeholder committed before the numbers first land, and the
+//!   escape hatch when an intentional perf change re-baselines)
+//! * committed file contains the fresh object .......... pass
+//! * anything else ..................................... FAIL — the
+//!   deterministic perf surface moved without a snapshot refresh.
+//!
+//! Refreshing after an intentional change is one command:
+//! `cargo run --release -- bench-snapshot` and copy the two files from
+//! the out dir over the repo-root ones.
+
+use crate::graph::gen;
+use crate::graph::algorithms::Algorithm;
+use crate::graph::spmd::SpmdEngine;
+use crate::serve::QueryShard;
+use crate::{Cluster, CostModel};
+
+use super::graphs::run_alg;
+use super::loadcurve::{run_loadcurve, CurvePoint};
+
+/// Repo-root snapshot file names (also the names written under `--out`).
+pub const GRAPH_FILE: &str = "BENCH_graph_wallclock.json";
+pub const LOADCURVE_FILE: &str = "BENCH_loadcurve.json";
+
+const GRAPH_N: usize = 2_000;
+const GRAPH_K: usize = 6;
+const SEED: u64 = 7;
+const MACHINES: [usize; 2] = [2, 8];
+
+pub struct BenchSnapshotSummary {
+    /// Paths of the freshly written snapshot files.
+    pub wrote: Vec<String>,
+    /// Baseline files that matched the fresh deterministic object.
+    pub checked: usize,
+    /// Baseline files still carrying the `pending` placeholder.
+    pub pending: usize,
+    /// Baseline files that exist but disagree (or could not be read).
+    pub mismatches: usize,
+    pub all_valid: bool,
+}
+
+/// Outcome of comparing one committed snapshot against the fresh
+/// deterministic object (separated from I/O so it is unit-testable).
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub enum CheckOutcome {
+    /// Committed file contains the fresh deterministic object verbatim.
+    Ok,
+    /// Committed file is the `"status":"pending"` placeholder.
+    Pending,
+    /// Committed file disagrees with the fresh deterministic object.
+    Mismatch,
+}
+
+pub fn check_file(committed: &str, det: &str) -> CheckOutcome {
+    if committed.contains("\"status\":\"pending\"") {
+        CheckOutcome::Pending
+    } else if committed.contains(det) {
+        CheckOutcome::Ok
+    } else {
+        CheckOutcome::Mismatch
+    }
+}
+
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        x.to_string()
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The graph-engine key points: TDO-GP on a fixed BA graph, every
+/// algorithm at P ∈ {2, 8}.  Simulated seconds, ledger supersteps and
+/// total words are all cost-domain quantities — bit-identical across
+/// hosts for a fixed commit.
+fn graph_det_json() -> String {
+    let cost = CostModel::paper_cluster();
+    let g = gen::barabasi_albert(GRAPH_N, GRAPH_K, SEED);
+    let mut points = Vec::new();
+    for p in MACHINES {
+        let mut engine = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, QueryShard::new);
+        for alg in Algorithm::ALL {
+            let (s, _) = run_alg(&mut engine, alg);
+            let m = &engine.sub().metrics;
+            points.push(format!(
+                "{{\"label\":\"p{p}-{}\",\"sim_seconds\":{},\"supersteps\":{},\
+                 \"total_words\":{}}}",
+                alg.label().to_lowercase(),
+                jnum(s),
+                m.supersteps,
+                m.total_words,
+            ));
+        }
+    }
+    format!(
+        "{{\"graph\":{{\"kind\":\"barabasi_albert\",\"n\":{},\"m\":{},\"seed\":{SEED}}},\
+         \"engine\":\"tdo-gp\",\"points\":[{}]}}",
+        g.n,
+        g.m(),
+        points.join(",")
+    )
+}
+
+fn lc_point(pt: &CurvePoint) -> String {
+    format!(
+        "{{\"label\":\"{}\",\"offered\":{},\"served\":{},\"rejected\":{},\"ticks\":{},\
+         \"graph_epoch\":{},\"wait_p50\":{},\"wait_p99\":{},\"goodput_per_tick\":{}}}",
+        pt.label,
+        pt.offered,
+        pt.served,
+        pt.rejected,
+        pt.ticks,
+        pt.graph_epoch,
+        jnum(pt.wait_ticks.p50),
+        jnum(pt.wait_ticks.p99),
+        jnum(pt.goodput_per_tick),
+    )
+}
+
+/// The load-curve key points: the quick sim sweep, tick-domain fields
+/// only (the full v2 report with wall-clock annotation is written to
+/// `lc_out` as a side artifact).  Returns (deterministic object, sweep
+/// validity).
+fn loadcurve_det_json(lc_out: &str) -> (String, bool) {
+    let lc = run_loadcurve(2, SEED, "sim", true, lc_out);
+    let open: Vec<String> = lc.open.iter().map(lc_point).collect();
+    let closed: Vec<String> = lc.closed.iter().map(lc_point).collect();
+    let det = format!(
+        "{{\"open\":[{}],\"closed\":[{}]}}",
+        open.join(","),
+        closed.join(",")
+    );
+    (det, lc.all_valid)
+}
+
+fn snapshot_json(schema: &str, det: &str) -> String {
+    format!(
+        "{{\"schema\":\"{schema}\",\"status\":\"ok\",\
+         \"refresh\":\"cargo run --release -- bench-snapshot\",\
+         \"deterministic\":{det},\
+         \"host\":{{\"os\":\"{}\",\"arch\":\"{}\"}}}}\n",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+    )
+}
+
+pub fn run_bench_snapshot(out_dir: &str, baseline: Option<&str>) -> BenchSnapshotSummary {
+    println!("\n## repro bench-snapshot — machine-normalized perf key points\n");
+    let graph_det = graph_det_json();
+    let (lc_det, lc_valid) = loadcurve_det_json(&format!("{out_dir}/loadcurve-quick-sim.json"));
+    let files = [
+        (GRAPH_FILE, "tdorch.bench.graph.v1", &graph_det),
+        (LOADCURVE_FILE, "tdorch.bench.loadcurve.v1", &lc_det),
+    ];
+
+    let mut wrote = Vec::new();
+    let mut write_failures = 0usize;
+    if let Err(e) = std::fs::create_dir_all(out_dir) {
+        println!("FAILED to create {out_dir}: {e}");
+        write_failures += 1;
+    }
+    for (name, schema, det) in &files {
+        let path = format!("{out_dir}/{name}");
+        match std::fs::write(&path, snapshot_json(schema, det)) {
+            Ok(()) => {
+                println!("wrote {path}");
+                wrote.push(path);
+            }
+            Err(e) => {
+                println!("FAILED to write {path}: {e}");
+                write_failures += 1;
+            }
+        }
+    }
+
+    let (mut checked, mut pending, mut mismatches) = (0usize, 0usize, 0usize);
+    if let Some(base) = baseline {
+        for (name, _, det) in &files {
+            let path = format!("{base}/{name}");
+            match std::fs::read_to_string(&path) {
+                Err(e) => {
+                    println!("CHECK FAILED: baseline {path} unreadable: {e}");
+                    mismatches += 1;
+                }
+                Ok(committed) => match check_file(&committed, det) {
+                    CheckOutcome::Ok => {
+                        println!("check OK: {path} matches the fresh snapshot");
+                        checked += 1;
+                    }
+                    CheckOutcome::Pending => {
+                        println!(
+                            "check PENDING: {path} is still the placeholder — \
+                             commit the freshly written file to arm the gate"
+                        );
+                        pending += 1;
+                    }
+                    CheckOutcome::Mismatch => {
+                        println!(
+                            "CHECK FAILED: {path} disagrees with the fresh snapshot — \
+                             deterministic perf surface moved; refresh the committed \
+                             file if the change is intentional"
+                        );
+                        mismatches += 1;
+                    }
+                },
+            }
+        }
+    }
+
+    let all_valid = lc_valid && mismatches == 0 && write_failures == 0;
+    println!(
+        "\nbench-snapshot {}  (wrote {}, checked {checked}, pending {pending}, \
+         mismatches {mismatches})",
+        if all_valid { "OK" } else { "FAILED" },
+        wrote.len(),
+    );
+    BenchSnapshotSummary {
+        wrote,
+        checked,
+        pending,
+        mismatches,
+        all_valid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_file_classifies_the_three_outcomes() {
+        let det = "{\"points\":[{\"label\":\"p2-bfs\"}]}";
+        let fresh = snapshot_json("s.v1", det);
+        assert_eq!(check_file(&fresh, det), CheckOutcome::Ok);
+        let placeholder = "{\"schema\":\"s.v1\",\"status\":\"pending\"}";
+        assert_eq!(check_file(placeholder, det), CheckOutcome::Pending);
+        let stale = snapshot_json("s.v1", "{\"points\":[]}");
+        assert_eq!(check_file(&stale, det), CheckOutcome::Mismatch);
+    }
+
+    #[test]
+    fn graph_points_are_stable_across_runs() {
+        let a = graph_det_json();
+        let b = graph_det_json();
+        assert_eq!(a, b, "cost-domain points must be run-to-run identical");
+        for p in MACHINES {
+            assert!(a.contains(&format!("\"label\":\"p{p}-bfs\"")));
+        }
+        assert!(!a.contains("null"), "every point must be finite");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_matches_its_own_baseline() {
+        let dir = std::env::temp_dir().join("tdorch-bench-snapshot-test");
+        let out = dir.to_str().unwrap();
+        // Fresh files are written before the check reads them back, so a
+        // self-baseline run must fully pass: nothing pending, nothing
+        // mismatched.
+        let s = run_bench_snapshot(out, Some(out));
+        assert_eq!(s.wrote.len(), 2);
+        assert_eq!(s.checked, 2);
+        assert_eq!(s.pending, 0);
+        assert_eq!(s.mismatches, 0);
+        assert!(s.all_valid);
+    }
+}

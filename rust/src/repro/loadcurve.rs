@@ -30,9 +30,11 @@
 //! pool busy fraction) annotate the run and vary with the machine.
 //!
 //! The per-point results are written as a machine-readable JSON report
-//! (`--out`, default `target/loadcurve/loadcurve.json`) that the CI
-//! release legs upload as a build artifact — the perf trajectory of
-//! every commit is downloadable.
+//! (`--out`, default `target/loadcurve/loadcurve.json`; schema
+//! `tdorch.loadcurve.v2`, which added the per-point `graph_epoch` —
+//! constant 0 for these mutation-free sweeps) that the CI release legs
+//! upload as a build artifact — the perf trajectory of every commit is
+//! downloadable.
 
 use crate::exec::{PoolSnapshot, Substrate, ThreadedCluster};
 use crate::graph::flags::Flags;
@@ -118,6 +120,10 @@ pub struct CurvePoint {
     /// (NaN on the sim backend — there is no pool).
     pub pool_busy_fraction: f64,
     pub mismatches: u64,
+    /// Engine epoch when the point finished — constant 0 here (the
+    /// sweeps are mutation-free), present so downstream tooling keys on
+    /// the same field `repro mutate` runs populate.
+    pub graph_epoch: u64,
 }
 
 /// Result of one `repro loadcurve` invocation (consumed by main/tests).
@@ -210,6 +216,7 @@ fn fold_point(
         goodput_qps: report.goodput_qps(),
         pool_busy_fraction,
         mismatches,
+        graph_epoch: report.graph_epoch,
     }
 }
 
@@ -313,8 +320,8 @@ fn jpoint(pt: &CurvePoint) -> String {
         "{{\"label\":\"{}\",\"offered_rate_cfg\":{},\"offered_rate_achieved\":{},\
          \"clients\":{},\"expected_offered\":{},\"offered\":{},\
          \"served\":{},\"rejected\":{},\"rejection_rate\":{},\"goodput_per_tick\":{},\
-         \"ticks\":{},\"wait_ticks\":{},\"service_ticks\":{},\"sojourn_ticks\":{},\
-         \"service_ms\":{},\
+         \"ticks\":{},\"graph_epoch\":{},\"wait_ticks\":{},\"service_ticks\":{},\
+         \"sojourn_ticks\":{},\"service_ms\":{},\
          \"wall_ms\":{},\"goodput_qps\":{},\"pool_busy_fraction\":{},\"mismatches\":{}}}",
         pt.label,
         jnum(pt.offered_rate_cfg),
@@ -327,6 +334,7 @@ fn jpoint(pt: &CurvePoint) -> String {
         jnum(pt.rejection_rate),
         jnum(pt.goodput_per_tick),
         pt.ticks,
+        pt.graph_epoch,
         jlat(&pt.wait_ticks),
         jlat(&pt.service_ticks),
         jlat(&pt.sojourn_ticks),
@@ -350,7 +358,7 @@ fn json_report(
     let open_json: Vec<String> = open.iter().map(jpoint).collect();
     let closed_json: Vec<String> = closed.iter().map(jpoint).collect();
     format!(
-        "{{\"schema\":\"tdorch.loadcurve.v1\",\"graph\":{{\"n\":{},\"m\":{},\
+        "{{\"schema\":\"tdorch.loadcurve.v2\",\"graph\":{{\"n\":{},\"m\":{},\
          \"seed\":{seed}}},\"p\":{p},\"backend\":\"{backend}\",\"quick\":{quick},\
          \"supersteps_per_tick\":{},\"open_loop\":[{}],\"closed_loop\":[{}]}}\n",
         g.n,
@@ -560,8 +568,12 @@ mod tests {
             "4 q/tick against a cap-8 queue must reject"
         );
         let json = std::fs::read_to_string(&out).expect("report written");
-        assert!(json.starts_with("{\"schema\":\"tdorch.loadcurve.v1\""));
+        assert!(json.starts_with("{\"schema\":\"tdorch.loadcurve.v2\""));
         assert!(json.contains("\"open_loop\":["));
+        assert!(
+            json.contains("\"graph_epoch\":0"),
+            "mutation-free sweeps report epoch 0 on every point"
+        );
         assert!(json.contains("\"sojourn_ticks\":{\"p50\":"));
         assert!(json.contains("\"expected_offered\":32"), "open points offer 32 queries");
         assert!(!json.contains("NaN"), "NaN must serialize as null");

@@ -3,10 +3,12 @@
 //! prints the same rows/series the paper reports, from runs on the BSP
 //! substrate, and returns the raw numbers for benches/tests.
 
+pub mod bench_snapshot;
 pub mod exec;
 pub mod graphs;
 pub mod kv;
 pub mod loadcurve;
+pub mod mutate;
 pub mod serve;
 
 /// Geometric mean of positive values.

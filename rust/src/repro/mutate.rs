@@ -1,0 +1,409 @@
+//! `repro mutate` — live graph mutation under serving traffic, verified
+//! bit-for-bit.
+//!
+//! Replays a deterministic interleaving of Zipf-hotness edge delta
+//! batches and {BFS, SSSP, PR, CC, BC} queries on ONE long-lived engine
+//! ([`crate::serve::Server::run_source_mutating`]), then cross-checks
+//! every served query against reference engines built **at that query's
+//! epoch**, walking the results in reverse order like `repro serve` so
+//! state leaking across queries or deltas meets a different predecessor
+//! and breaks the comparison instead of cancelling out.  Two references:
+//!
+//! 1. **Replayed placement, all five kinds, bit-for-bit** — a fresh
+//!    engine per epoch from `DistGraph::apply_batch` replayed onto a
+//!    clone of the epoch-0 ingestion.  `apply_delta` follows the
+//!    identical frozen-placement rules inside pool supersteps, so even
+//!    the rounding-merge kinds (PR/BC, whose f64 fold grouping is part
+//!    of the bits) must match exactly.
+//! 2. **Fresh ingestion, exact kinds, bit-for-bit** — the mutated edge
+//!    set re-ingested from scratch (new placement pass) for BFS/SSSP/CC,
+//!    whose min/first-writer merges are placement-independent by the
+//!    determinism contract.  This pins that the in-place deltas really
+//!    produce *the mutated graph*, not merely a self-consistent state.
+//!
+//! The run fails (exit 1) on any divergence, on a second ingestion on
+//! the served engine (`ingest::ingestions()` is the witness — reference
+//! 2's re-ingests happen only after the witness is read), or on a broken
+//! epoch discipline (epochs must be nondecreasing in dispatch order and
+//! finish at the number of scheduled batches).
+
+use crate::exec::ThreadedCluster;
+use crate::graph::flags::Flags;
+use crate::graph::gen;
+use crate::graph::ingest::{ingestions, DistGraph};
+use crate::graph::spmd::{ingest_once, GraphMeta, Placement, SpmdEngine};
+use crate::graph::{Graph, Vid};
+use crate::mutate::{generate_mutations, EdgeOp, MutationConfig, MutationFeed};
+use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
+};
+use crate::{Cluster, CostModel};
+
+use super::TablePrinter;
+
+const FULL_N: usize = 8_000;
+const QUICK_N: usize = 2_000;
+const GRAPH_K: usize = 6;
+const FULL_QUERIES: usize = 64;
+const QUICK_QUERIES: usize = 24;
+/// Open-loop arrival rate (queries per logical tick).
+const ARRIVALS_PER_TICK: usize = 2;
+const ZIPF_S: f64 = 1.5;
+
+fn mutation_cfg(quick: bool) -> MutationConfig {
+    MutationConfig {
+        batches: if quick { 4 } else { 8 },
+        ops_per_batch: if quick { 8 } else { 16 },
+        insert_pct: 60,
+        zipf_s: 1.2,
+        start_tick: 2,
+        every_ticks: 6,
+    }
+}
+
+/// Result of one `repro mutate` invocation (consumed by main/tests).
+pub struct MutateSummary {
+    pub served: usize,
+    pub rejected: u64,
+    /// Divergences against the replayed-placement reference (all kinds).
+    pub mismatches_replay: usize,
+    /// Divergences against the fresh-ingestion reference (exact kinds).
+    pub mismatches_fresh: usize,
+    /// Queries the fresh-ingestion reference covered.
+    pub checked_fresh: usize,
+    /// Ingestion passes on the serving side (must be exactly 1).
+    pub ingestions_serving: u64,
+    /// Engine epoch after the run (must equal scheduled batches).
+    pub final_epoch: u64,
+    /// Queries that executed against a mutated graph (epoch > 0).
+    pub post_mutation_queries: usize,
+    pub all_valid: bool,
+}
+
+fn arc_key(u: Vid, v: Vid) -> u64 {
+    ((u as u64) << 32) | v as u64
+}
+
+pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSummary {
+    assert!(p >= 1, "need at least one machine");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
+    let n = if quick { QUICK_N } else { FULL_N };
+    let queries = if quick { QUICK_QUERIES } else { FULL_QUERIES };
+    let g = gen::barabasi_albert(n, GRAPH_K, seed);
+    let mcfg = mutation_cfg(quick);
+    println!(
+        "\n## repro mutate — live edge deltas under a {{BFS,SSSP,PR,CC,BC}} Zipf stream on \
+         the reused engine: BA graph n={} m={}, P={p}, {queries} queries, {} delta batches × \
+         {} edge ops, seed {seed}, backend {backend}\n",
+        g.n,
+        g.m(),
+        mcfg.batches,
+        mcfg.ops_per_batch,
+    );
+
+    // ONE ingestion for the serving side; every reference below is built
+    // from clones (reference 1) or counted separately (reference 2).
+    let dg = ingest_once(&g, p, cost, Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    let stream = generate_stream(
+        StreamConfig {
+            queries,
+            per_tick: ARRIVALS_PER_TICK,
+            every_ticks: 1,
+            zipf_s: ZIPF_S,
+            mix: QueryMix::balanced(),
+        },
+        &hot,
+        seed,
+    );
+    // Derived seed: the mutation draw chain must not alias the query
+    // stream's.
+    let batches = generate_mutations(mcfg, &g, &hot, seed.wrapping_add(1));
+    let scheduled = batches.len() as u64;
+
+    let serve_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
+    let (report, final_meta, engine_epoch): (ServeReport, std::sync::Arc<GraphMeta>, u64) =
+        if backend == "threaded" {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                ThreadedCluster::new(p),
+                dg.clone(),
+                cost,
+                Flags::tdo_gp(),
+                "mutate-threaded",
+                QueryShard::new,
+            ),
+            serve_cfg,
+        );
+        let report = server.run_source_mutating(
+            &mut OpenLoopSource::new(&stream),
+            &mut MutationFeed::new(batches.clone()),
+            |_r, _e| {},
+        );
+        let engine = server.into_engine();
+        (report, engine.meta(), engine.graph_epoch())
+    } else {
+        let mut server = Server::new(
+            SpmdEngine::from_ingested(
+                Cluster::new(p, cost),
+                dg.clone(),
+                cost,
+                Flags::tdo_gp(),
+                "mutate-sim",
+                QueryShard::new,
+            ),
+            serve_cfg,
+        );
+        let report = server.run_source_mutating(
+            &mut OpenLoopSource::new(&stream),
+            &mut MutationFeed::new(batches.clone()),
+            |_r, _e| {},
+        );
+        let engine = server.into_engine();
+        (report, engine.meta(), engine.graph_epoch())
+    };
+
+    // THE WITNESS, read before any reference exists: the serving side
+    // must have ingested exactly once, deltas included.
+    let ingestions_serving = ingestions() - ing0;
+
+    // ---- epoch discipline ----
+    let epochs_nondecreasing = report
+        .results
+        .windows(2)
+        .all(|w| w[0].graph_epoch <= w[1].graph_epoch);
+    let records_consistent = report.mutations.len() as u64 == scheduled
+        && report
+            .mutations
+            .iter()
+            .enumerate()
+            .all(|(i, m)| m.epoch_after == i as u64 + 1 && m.applied_tick >= m.arrival);
+    let epochs_ok = report.graph_epoch == scheduled
+        && engine_epoch == scheduled
+        && epochs_nondecreasing
+        && records_consistent;
+    let post_mutation_queries =
+        report.results.iter().filter(|r| r.graph_epoch > 0).count();
+
+    // ---- reference 1: replayed placement, per-epoch DistGraph
+    // snapshots from apply_batch on clones of the epoch-0 ingestion ----
+    let mut dgs: Vec<DistGraph> = Vec::with_capacity(batches.len() + 1);
+    dgs.push(dg);
+    for b in &batches {
+        let mut next = dgs.last().expect("nonempty").clone();
+        next.apply_batch(b);
+        dgs.push(next);
+    }
+
+    // Structural check: the served engine's catalog must equal the
+    // replayed final snapshot field for field.
+    let last = &dgs[scheduled as usize];
+    let structure_ok = final_meta.m == last.m
+        && final_meta.out_deg == last.out_deg
+        && final_meta.src_leaves == last.src_leaves
+        && final_meta.dst_leaves == last.dst_leaves;
+
+    let mut mismatches_replay = 0usize;
+    {
+        // Reverse walk: epochs are nonincreasing, so each reference
+        // engine is built at most once per epoch.
+        let mut reference: Option<(u64, Server<Cluster>)> = None;
+        for r in report.results.iter().rev() {
+            if reference.as_ref().map(|(e, _)| *e) != Some(r.graph_epoch) {
+                reference = Some((
+                    r.graph_epoch,
+                    Server::new(
+                        SpmdEngine::from_ingested(
+                            Cluster::new(p, cost),
+                            dgs[r.graph_epoch as usize].clone(),
+                            cost,
+                            Flags::tdo_gp(),
+                            "mutate-replay-ref",
+                            QueryShard::new,
+                        ),
+                        serve_cfg,
+                    ),
+                ));
+            }
+            let (_, srv) = reference.as_mut().expect("just built");
+            let q = Query { id: r.id, kind: r.kind, source: r.source, arrival: 0 };
+            if srv.run_query(&q) != r.bits {
+                mismatches_replay += 1;
+                eprintln!(
+                    "MISMATCH (replayed placement): query {} ({}) at epoch {} diverged",
+                    r.id,
+                    r.kind.label(),
+                    r.graph_epoch
+                );
+            }
+        }
+    }
+
+    // ---- reference 2: fresh ingestion of the mutated edge set, exact
+    // kinds only (placement-independent merges) ----
+    let mut arcmap: crate::det::DetMap<u64, f32> = crate::det::det_map();
+    for u in 0..g.n as Vid {
+        for &(v, w) in g.neighbors(u) {
+            arcmap.insert(arc_key(u, v), w);
+        }
+    }
+    let mut graphs: Vec<Graph> = Vec::with_capacity(batches.len() + 1);
+    graphs.push(g.clone());
+    for b in &batches {
+        for op in &b.ops {
+            match *op {
+                EdgeOp::Insert { u, v, w } => {
+                    arcmap.insert(arc_key(u, v), w);
+                }
+                EdgeOp::Delete { u, v } => {
+                    arcmap.remove(&arc_key(u, v));
+                }
+            }
+        }
+        let arcs: Vec<(Vid, Vid, f32)> = arcmap
+            .iter()
+            .map(|(&k, &w)| ((k >> 32) as Vid, (k & 0xFFFF_FFFF) as Vid, w))
+            .collect();
+        graphs.push(Graph::from_arcs(g.n, arcs));
+    }
+    let arc_counts_ok =
+        (0..=scheduled as usize).all(|e| graphs[e].m() == dgs[e].m);
+
+    let mut mismatches_fresh = 0usize;
+    let mut checked_fresh = 0usize;
+    {
+        let mut fresh: Vec<Option<Server<Cluster>>> =
+            (0..=scheduled as usize).map(|_| None).collect();
+        for r in report.results.iter().rev() {
+            if !matches!(r.kind, QueryKind::Bfs | QueryKind::Sssp | QueryKind::Cc) {
+                continue;
+            }
+            let e = r.graph_epoch as usize;
+            if fresh[e].is_none() {
+                // A genuinely new placement pass — counted by the
+                // ingestion witness, which was already read above.
+                let fdg = ingest_once(&graphs[e], p, cost, Placement::Spread);
+                fresh[e] = Some(Server::new(
+                    SpmdEngine::from_ingested(
+                        Cluster::new(p, cost),
+                        fdg,
+                        cost,
+                        Flags::tdo_gp(),
+                        "mutate-fresh-ref",
+                        QueryShard::new,
+                    ),
+                    serve_cfg,
+                ));
+            }
+            let srv = fresh[e].as_mut().expect("just built");
+            checked_fresh += 1;
+            let q = Query { id: r.id, kind: r.kind, source: r.source, arrival: 0 };
+            if srv.run_query(&q) != r.bits {
+                mismatches_fresh += 1;
+                eprintln!(
+                    "MISMATCH (fresh ingestion): query {} ({}) at epoch {} diverged",
+                    r.id,
+                    r.kind.label(),
+                    r.graph_epoch
+                );
+            }
+        }
+    }
+
+    // ---- report ----
+    let t = TablePrinter::new(
+        &["batch", "arrival", "applied@", "ops", "epoch after", "service ticks"],
+        &[5, 7, 8, 5, 11, 13],
+    );
+    for m in &report.mutations {
+        t.row(&[
+            m.batch_id.to_string(),
+            m.arrival.to_string(),
+            m.applied_tick.to_string(),
+            m.ops.to_string(),
+            m.epoch_after.to_string(),
+            m.service_ticks.to_string(),
+        ]);
+    }
+    println!();
+    let t = TablePrinter::new(&["kind", "served", "post-mutation", "fresh-checked"], &[5, 7, 13, 13]);
+    for kind in QueryKind::ALL {
+        let of_kind: Vec<_> = report.results.iter().filter(|r| r.kind == kind).collect();
+        let post = of_kind.iter().filter(|r| r.graph_epoch > 0).count();
+        let exact = matches!(kind, QueryKind::Bfs | QueryKind::Sssp | QueryKind::Cc);
+        t.row(&[
+            kind.label().to_string(),
+            of_kind.len().to_string(),
+            post.to_string(),
+            if exact { of_kind.len().to_string() } else { "-".to_string() },
+        ]);
+    }
+    let total_ops: usize = report.mutations.iter().map(|m| m.ops).sum();
+    println!(
+        "\noverall: {} offered = {} served + {} rejected over {} logical ticks; \
+         {} delta batches ({} directed ops) absorbed in place → final epoch {}; \
+         {} queries executed on a mutated graph",
+        report.offered(),
+        report.served(),
+        report.rejected,
+        report.ticks,
+        scheduled,
+        total_ops,
+        report.graph_epoch,
+        post_mutation_queries,
+    );
+    println!(
+        "ingestions on the serving side: {ingestions_serving} (deltas absorbed by \
+         apply_delta supersteps — never by re-ingestion; the fresh-ingest reference's \
+         own passes are read separately)"
+    );
+
+    let all_valid = mismatches_replay == 0
+        && mismatches_fresh == 0
+        && checked_fresh > 0
+        && ingestions_serving == 1
+        && report.served() as u64 + report.rejected == queries as u64
+        && epochs_ok
+        && structure_ok
+        && arc_counts_ok
+        && post_mutation_queries > 0;
+    println!(
+        "\nmutate {}",
+        if all_valid {
+            "OK (every query bit-identical to its epoch's references; deltas absorbed \
+             with exactly one ingestion)"
+        } else {
+            "FAILED"
+        }
+    );
+    MutateSummary {
+        served: report.served(),
+        rejected: report.rejected,
+        mismatches_replay,
+        mismatches_fresh,
+        checked_fresh,
+        ingestions_serving,
+        final_epoch: report.graph_epoch,
+        post_mutation_queries,
+        all_valid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_mutate_sim_quick_is_valid() {
+        let s = run_mutate(2, 7, "sim", true);
+        assert_eq!(s.mismatches_replay, 0);
+        assert_eq!(s.mismatches_fresh, 0);
+        assert!(s.checked_fresh > 0);
+        assert_eq!(s.ingestions_serving, 1);
+        assert_eq!(s.final_epoch, 4);
+        assert!(s.post_mutation_queries > 0, "mutations must land mid-stream");
+        assert!(s.all_valid);
+    }
+}

@@ -51,10 +51,28 @@
 //! measured service milliseconds and wall-clock throughput vary with the
 //! host — which is why the `repro loadcurve` sweeps plot *logical*
 //! goodput and latency and treat wall-clock as annotation.
+//!
+//! ## Live mutation
+//!
+//! [`Server::run_source_mutating`] interleaves a
+//! [`crate::mutate::MutationFeed`] of edge delta batches with the query
+//! stream on the same logical clock: a due batch is absorbed in place by
+//! `SpmdEngine::apply_delta` (no re-ingestion — the one-ingestion
+//! witness extends to mutating runs) **between** query dispatches, never
+//! inside one, bumping the engine's `graph_epoch`.  Every
+//! [`QueryResult`] carries the epoch it executed against and every
+//! absorbed batch leaves a [`MutationRecord`] in the [`ServeReport`],
+//! which is what lets `repro mutate` cross-check each result against a
+//! reference engine built at exactly that snapshot.  The determinism
+//! contract above extends verbatim: for a fixed (source, feed, config,
+//! graph, P) the full interleaving — epochs, waits, rejections, bits —
+//! is identical across runs and across substrates.
 
 mod server;
 
-pub use server::{QueryResult, ServeConfig, ServeReport, Server, DEFAULT_PR_ITERS};
+pub use server::{
+    MutationRecord, QueryResult, ServeConfig, ServeReport, Server, DEFAULT_PR_ITERS,
+};
 
 use crate::bsp::MachineId;
 use crate::graph::algorithms::{BcShard, BfsShard, CcShard, PrShard, ShardAccess, SsspShard};

@@ -11,6 +11,7 @@ use crate::graph::algorithms::{bc, bfs, cc, pagerank, sssp};
 use crate::graph::spmd::SpmdEngine;
 use crate::graph::Vid;
 use crate::metrics::p50_p95_p99;
+use crate::mutate::MutationFeed;
 use crate::workload::{ArrivalSource, OpenLoopSource, Query, QueryKind};
 
 use super::QueryShard;
@@ -79,6 +80,10 @@ pub struct QueryResult {
     pub service_ms: f64,
     /// Sequence number of the batch this query was dispatched in.
     pub batch: u64,
+    /// Graph epoch the query executed against (0 = the freshly-ingested
+    /// graph; mutations apply only *between* dispatches, so one epoch
+    /// fully identifies the snapshot this result was computed on).
+    pub graph_epoch: u64,
 }
 
 impl QueryResult {
@@ -86,6 +91,23 @@ impl QueryResult {
     pub fn sojourn_ticks(&self) -> u64 {
         self.wait_ticks + self.service_ticks
     }
+}
+
+/// One absorbed mutation batch in a serving run's timeline.
+#[derive(Clone, Debug)]
+pub struct MutationRecord {
+    pub batch_id: u64,
+    /// Logical tick the batch was scheduled for.
+    pub arrival: u64,
+    /// Tick at which it actually applied (>= arrival: the epoch barrier
+    /// makes a due batch wait out the dispatch in progress).
+    pub applied_tick: u64,
+    /// Engine epoch after absorption (batch k brings the epoch to k+1).
+    pub epoch_after: u64,
+    /// Directed edge ops applied.
+    pub ops: usize,
+    /// Logical ticks the application occupied the server for.
+    pub service_ticks: u64,
 }
 
 /// Outcome of a whole serving run.
@@ -99,6 +121,11 @@ pub struct ServeReport {
     pub ticks: u64,
     /// Wall-clock of the whole admission+dispatch loop, milliseconds.
     pub wall_ms: f64,
+    /// Engine epoch when the run finished — equals the number of
+    /// mutation batches absorbed; constant 0 for a mutation-free run.
+    pub graph_epoch: u64,
+    /// Timeline of absorbed mutation batches (empty without a feed).
+    pub mutations: Vec<MutationRecord>,
 }
 
 impl ServeReport {
@@ -277,7 +304,52 @@ impl<B: Substrate> Server<B> {
     }
 
     /// The full **pipelined** admission → batch → dispatch loop over any
-    /// [`ArrivalSource`] (open-loop slice or closed-loop clients).
+    /// [`ArrivalSource`] (open-loop slice or closed-loop clients) — the
+    /// mutation-free entry point: [`Server::run_source_mutating`] with
+    /// an empty feed.
+    pub fn run_source(
+        &mut self,
+        source: &mut dyn ArrivalSource,
+        observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
+    ) -> ServeReport {
+        self.run_source_mutating(source, &mut MutationFeed::empty(), observe)
+    }
+
+    /// Absorb every mutation batch due at the current tick, advancing the
+    /// logical clock by each batch's deterministic service cost — the
+    /// same ledger-superstep pricing queries pay.
+    fn apply_due_mutations(
+        &mut self,
+        feed: &mut MutationFeed,
+        tick: &mut u64,
+        records: &mut Vec<MutationRecord>,
+    ) {
+        while let Some(batch) = feed.pop_due(*tick) {
+            let s0 = self.engine.sub().ledger_supersteps();
+            let applied = self.engine.apply_delta(&batch);
+            let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
+            let service_ticks = steps.div_ceil(self.cfg.supersteps_per_tick).max(1);
+            let applied_tick = *tick;
+            *tick += service_ticks;
+            records.push(MutationRecord {
+                batch_id: batch.id,
+                arrival: batch.arrival,
+                applied_tick,
+                epoch_after: self.engine.graph_epoch(),
+                ops: applied,
+                service_ticks,
+            });
+        }
+    }
+
+    /// [`Server::run_source`] with live graph mutation: delta batches
+    /// from `feed` interleave with queries **on the same logical service
+    /// clock**, under an epoch barrier — a due batch applies only
+    /// *between* dispatches (never inside one), so every query executes
+    /// against exactly one consistent snapshot, identified by the
+    /// `graph_epoch` stamped on its result.  Queries that queue behind a
+    /// delta absorb its service time as wait, exactly as they would
+    /// behind another query.
     ///
     /// Service occupies logical time: after each query the clock jumps
     /// forward by that query's deterministic service cost
@@ -288,22 +360,31 @@ impl<B: Substrate> Server<B> {
     /// *composition* is still fixed at close: mid-batch arrivals are
     /// eligible for the next batch only.  Because service costs are
     /// ledger-superstep deltas (pure functions of (graph, flags, P)),
-    /// the whole admission/wait/rejection schedule is bit-reproducible
-    /// across runs and across backends.
-    pub fn run_source(
+    /// the whole admission/wait/rejection/mutation schedule is
+    /// bit-reproducible across runs and across backends.
+    ///
+    /// When the query stream ends before the feed, the remaining batches
+    /// are drained at their scheduled ticks, so the final epoch — and
+    /// the graph the engine holds afterwards — is a function of the feed
+    /// alone, never of where the stream happened to stop.
+    pub fn run_source_mutating(
         &mut self,
         source: &mut dyn ArrivalSource,
+        feed: &mut MutationFeed,
         mut observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
     ) -> ServeReport {
         let cfg = self.cfg;
         let mut pending: VecDeque<Query> = VecDeque::new();
         let mut results: Vec<QueryResult> = Vec::new();
+        let mut mutations: Vec<MutationRecord> = Vec::new();
         let mut rejected = 0u64;
         let mut batches = 0u64;
         let mut tick = 0u64;
         let t0 = Instant::now();
         loop {
-            // ---- admission at the current logical time ----
+            // ---- deltas due at the current logical time apply first,
+            //      then admission sees the post-mutation clock ----
+            self.apply_due_mutations(feed, &mut tick, &mut mutations);
             Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
             let full = pending.len() >= cfg.batch;
             let overdue = pending
@@ -319,8 +400,13 @@ impl<B: Substrate> Server<B> {
                 let batch_seq = batches;
                 batches += 1;
                 for _ in 0..take {
+                    // Epoch barrier: deltas that fell due during the
+                    // previous query's service window apply here,
+                    // BETWEEN dispatches — never inside one.
+                    self.apply_due_mutations(feed, &mut tick, &mut mutations);
                     let q = pending.pop_front().expect("batch drew from an empty queue");
                     let wait_ticks = tick - q.arrival;
+                    let graph_epoch = self.engine.graph_epoch();
                     let s0 = self.engine.sub().ledger_supersteps();
                     let ts = Instant::now();
                     let bits = self.run_query(&q);
@@ -337,6 +423,7 @@ impl<B: Substrate> Server<B> {
                         service_ticks,
                         service_ms,
                         batch: batch_seq,
+                        graph_epoch,
                     };
                     source.on_complete(q.id, tick);
                     observe(&res, &self.engine);
@@ -350,14 +437,24 @@ impl<B: Substrate> Server<B> {
                 continue;
             }
             if pending.is_empty() {
-                match source.next_arrival() {
-                    _ if source.done() => break,
-                    // Idle gap: jump to the next scheduled arrival
-                    // instead of spinning tick by tick.  No query is
-                    // waiting, so no wait computation can observe the
-                    // skipped ticks; `max(tick + 1)` guarantees progress
-                    // even against a source that mis-schedules into the
-                    // past.
+                if source.done() {
+                    break;
+                }
+                let next = match (source.next_arrival(), feed.next_arrival()) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (Some(a), None) => Some(a),
+                    (None, Some(b)) => Some(b),
+                    (None, None) => None,
+                };
+                match next {
+                    // Idle gap: jump to the next scheduled arrival — of
+                    // a query OR a delta batch, whichever is earlier, so
+                    // deltas apply at their due tick and later queries
+                    // never absorb their service time as phantom wait.
+                    // No query is waiting, so no wait computation can
+                    // observe the skipped ticks; `max(tick + 1)`
+                    // guarantees progress even against a source that
+                    // mis-schedules into the past.
                     Some(t) => tick = t.max(tick + 1),
                     None => {
                         // A live source with nothing scheduled and
@@ -373,12 +470,21 @@ impl<B: Substrate> Server<B> {
                 tick += 1;
             }
         }
+        // ---- post-stream drain: remaining scheduled deltas apply at
+        //      their due ticks (the clock may jump forward to reach
+        //      them), so the final epoch is feed-determined ----
+        while let Some(arrival) = feed.next_arrival() {
+            tick = tick.max(arrival);
+            self.apply_due_mutations(feed, &mut tick, &mut mutations);
+        }
         ServeReport {
             results,
             rejected,
             batches,
             ticks: tick,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            graph_epoch: self.engine.graph_epoch(),
+            mutations,
         }
     }
 }

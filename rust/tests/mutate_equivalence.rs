@@ -1,0 +1,361 @@
+//! The live-mutation correctness contract:
+//!
+//! 1. The seeded `MutationStream` is a pure function of (config, graph,
+//!    hotness order, seed) — bit-identical across machine counts and
+//!    backends, like the query stream.
+//! 2. `SpmdEngine::apply_delta` keeps the engine's catalog (degrees,
+//!    arc count, leaf sets, relay trees) exactly in sync with replaying
+//!    the same batches onto the `DistGraph` by `apply_batch`, and every
+//!    relay tree — dirty or not — equals a from-scratch
+//!    `relay_tree_levels` computation on the mutated leaf sets.
+//! 3. Queries on a delta-mutated engine are bit-identical to a fresh
+//!    engine built from the replayed placement — for ALL five kinds,
+//!    because in-place deltas preserve block layout and hence f64 fold
+//!    grouping.
+//! 4. A full interleaved mutating serve run is bit-identical across the
+//!    sim and threaded substrates: epochs, waits, mutation records,
+//!    result bits — and the deployment still ingests exactly once.
+//! 5. For the exact (min/first-writer) kinds, the mutated engine also
+//!    matches a TRUE fresh ingestion of the mutated edge set — the
+//!    placement-independent end of the determinism contract.
+
+use tdorch::det::det_map;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::flags::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::{ingestions, relay_tree_levels, DistGraph};
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::graph::{Graph, Vid};
+use tdorch::mutate::{
+    generate_mutations, recompute_leaves, EdgeOp, MutationConfig, MutationFeed, MutationStream,
+};
+use tdorch::serve::{QueryShard, ServeConfig, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
+};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        batch: 4,
+        deadline_ticks: 2,
+        queue_cap: 32,
+        pr_iters: 3,
+        ..ServeConfig::default()
+    }
+}
+
+fn mcfg(batches: usize) -> MutationConfig {
+    MutationConfig {
+        batches,
+        ops_per_batch: 6,
+        insert_pct: 60,
+        zipf_s: 1.2,
+        start_tick: 1,
+        every_ticks: 3,
+    }
+}
+
+fn batches_for(g: &Graph, n_batches: usize, seed: u64) -> MutationStream {
+    let hot_deg: Vec<u32> = (0..g.n as Vid).map(|u| g.out_degree(u) as u32).collect();
+    let hot = hot_source_order(&hot_deg);
+    generate_mutations(mcfg(n_batches), g, &hot, seed)
+}
+
+#[test]
+fn mutation_stream_is_machine_count_independent() {
+    let g = gen::barabasi_albert(500, 5, 11);
+    // The hotness order the stream is addressed by comes from the
+    // GLOBAL degree vector, which every placement at every P carries
+    // identically — so the stream is a pure function of the graph, not
+    // of the deployment.
+    let streams: Vec<MutationStream> = [1usize, 8]
+        .iter()
+        .map(|&p| {
+            let dg = ingest_once(&g, p, cost(), Placement::Spread);
+            let engine = SpmdEngine::from_ingested(
+                Cluster::new(p, cost()),
+                dg,
+                cost(),
+                Flags::tdo_gp(),
+                "stream-p",
+                QueryShard::new,
+            );
+            let hot = hot_source_order(&engine.meta().out_deg);
+            generate_mutations(mcfg(4), &g, &hot, 23)
+        })
+        .collect();
+    assert_eq!(streams[0], streams[1], "stream depends on P");
+    // Threaded deployments see the same meta, hence the same stream.
+    let thr = SpmdEngine::from_ingested(
+        ThreadedCluster::new(8),
+        ingest_once(&g, 8, cost(), Placement::Spread),
+        cost(),
+        Flags::tdo_gp(),
+        "stream-thr",
+        QueryShard::new,
+    );
+    let hot = hot_source_order(&thr.meta().out_deg);
+    assert_eq!(
+        streams[0],
+        generate_mutations(mcfg(4), &g, &hot, 23),
+        "stream depends on the backend"
+    );
+}
+
+#[test]
+fn apply_delta_keeps_catalog_in_sync_with_replay_and_fresh_trees() {
+    let g = gen::barabasi_albert(500, 5, 7);
+    let p = 4;
+    let before = ingestions();
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut replay: DistGraph = dg.clone();
+    let mut engine = SpmdEngine::from_ingested(
+        Cluster::new(p, cost()),
+        dg,
+        cost(),
+        Flags::tdo_gp(),
+        "delta-sync",
+        QueryShard::new,
+    );
+    let batches = batches_for(&g, 3, 17);
+    for (i, b) in batches.iter().enumerate() {
+        let applied_engine = engine.apply_delta(b);
+        let applied_replay = replay.apply_batch(b);
+        assert_eq!(applied_engine, applied_replay, "batch {i}: applied counts diverged");
+        assert_eq!(engine.graph_epoch(), i as u64 + 1);
+    }
+    assert_eq!(
+        ingestions() - before,
+        1,
+        "apply_delta must patch in place, never re-ingest"
+    );
+
+    let meta = engine.meta();
+    assert_eq!(meta.m, replay.m, "arc count diverged");
+    assert_eq!(meta.out_deg, replay.out_deg, "degree vector diverged");
+    assert_eq!(meta.src_leaves, replay.src_leaves, "src leaves diverged");
+    assert_eq!(meta.dst_leaves, replay.dst_leaves, "dst leaves diverged");
+    // Leaf sets must also match the ground truth recomputed from the
+    // replayed blocks (catches leaves drifting from block contents).
+    let (src_truth, dst_truth) = recompute_leaves(&replay);
+    assert_eq!(meta.src_leaves, src_truth, "src leaves != block ground truth");
+    assert_eq!(meta.dst_leaves, dst_truth, "dst leaves != block ground truth");
+
+    // Every relay tree — rebuilt-dirty or untouched — equals the
+    // from-scratch computation on the mutated leaf sets, with the
+    // construction-time keys.
+    for u in 0..meta.n {
+        assert_eq!(
+            meta.src_tree[u],
+            relay_tree_levels(u as u64, &meta.src_leaves[u], meta.part.owner(u as Vid), meta.c, p),
+            "src tree of {u} != from-scratch tree on the mutated graph"
+        );
+        assert_eq!(
+            meta.dst_tree[u],
+            relay_tree_levels(
+                u as u64 ^ 0xD5,
+                &meta.dst_leaves[u],
+                meta.part.owner(u as Vid),
+                meta.c,
+                p
+            ),
+            "dst tree of {u} != from-scratch tree on the mutated graph"
+        );
+    }
+}
+
+#[test]
+fn queries_after_delta_match_fresh_engine_on_replayed_placement() {
+    let g = gen::barabasi_albert(500, 5, 13);
+    let p = 4;
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut replay = dg.clone();
+    let mut engine = SpmdEngine::from_ingested(
+        Cluster::new(p, cost()),
+        dg,
+        cost(),
+        Flags::tdo_gp(),
+        "delta-query",
+        QueryShard::new,
+    );
+    for b in &batches_for(&g, 3, 29) {
+        engine.apply_delta(b);
+        replay.apply_batch(b);
+    }
+    // In-place deltas preserve block layout, so the replayed placement
+    // is bit-exact for every kind — including the f64-fold ones.
+    let mut mutated = Server::new(engine, cfg());
+    let mut reference = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost()),
+            replay,
+            cost(),
+            Flags::tdo_gp(),
+            "delta-query-ref",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    for (id, kind) in QueryKind::ALL.into_iter().enumerate() {
+        let q = Query { id: id as u64, kind, source: 0, arrival: 0 };
+        assert_eq!(
+            mutated.run_query(&q),
+            reference.run_query(&q),
+            "{kind:?}: mutated engine != fresh engine on the replayed placement"
+        );
+    }
+}
+
+#[test]
+fn mutating_serve_is_bit_identical_across_backends() {
+    let g = gen::barabasi_albert(600, 5, 3);
+    let p = 8;
+    let before = ingestions();
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let hot_deg: Vec<u32> = (0..g.n as Vid).map(|u| g.out_degree(u) as u32).collect();
+    let hot = hot_source_order(&hot_deg);
+    let stream = generate_stream(
+        StreamConfig { queries: 12, per_tick: 2, every_ticks: 1, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        5,
+    );
+    let batches = generate_mutations(mcfg(3), &g, &hot, 31);
+
+    let mut sim = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost()),
+            dg.clone(),
+            cost(),
+            Flags::tdo_gp(),
+            "mutate-sim",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let rep_sim = sim.run_source_mutating(
+        &mut OpenLoopSource::new(&stream),
+        &mut MutationFeed::new(batches.clone()),
+        |_, _| {},
+    );
+    let mut thr = Server::new(
+        SpmdEngine::from_ingested(
+            ThreadedCluster::new(p),
+            dg,
+            cost(),
+            Flags::tdo_gp(),
+            "mutate-thr",
+            QueryShard::new,
+        ),
+        cfg(),
+    );
+    let rep_thr = thr.run_source_mutating(
+        &mut OpenLoopSource::new(&stream),
+        &mut MutationFeed::new(batches.clone()),
+        |_, _| {},
+    );
+    assert_eq!(
+        ingestions() - before,
+        1,
+        "a mutating deployment on both backends still ingests exactly once"
+    );
+
+    assert_eq!(rep_sim.served(), rep_thr.served());
+    assert_eq!(rep_sim.rejected, rep_thr.rejected);
+    assert_eq!(rep_sim.batches, rep_thr.batches);
+    assert_eq!(rep_sim.ticks, rep_thr.ticks);
+    assert_eq!(rep_sim.graph_epoch, rep_thr.graph_epoch, "final epoch diverged");
+    assert_eq!(
+        rep_sim.graph_epoch,
+        batches.len() as u64,
+        "the post-stream drain must absorb every batch"
+    );
+    assert_eq!(rep_sim.mutations.len(), rep_thr.mutations.len());
+    for (a, b) in rep_sim.mutations.iter().zip(&rep_thr.mutations) {
+        assert_eq!(a.batch_id, b.batch_id);
+        assert_eq!(a.applied_tick, b.applied_tick, "batch {}: applied tick diverged", a.batch_id);
+        assert_eq!(a.epoch_after, b.epoch_after, "batch {}: epoch diverged", a.batch_id);
+        assert_eq!(a.ops, b.ops, "batch {}: applied op count diverged", a.batch_id);
+        assert_eq!(
+            a.service_ticks, b.service_ticks,
+            "batch {}: mutation service cost diverged",
+            a.batch_id
+        );
+    }
+    let mut prev_epoch = 0;
+    for (a, b) in rep_sim.results.iter().zip(&rep_thr.results) {
+        assert_eq!(a.id, b.id, "dispatch order diverged");
+        assert_eq!(a.wait_ticks, b.wait_ticks, "query {}: wait diverged", a.id);
+        assert_eq!(a.service_ticks, b.service_ticks, "query {}: service diverged", a.id);
+        assert_eq!(a.graph_epoch, b.graph_epoch, "query {}: epoch diverged", a.id);
+        assert_eq!(a.bits, b.bits, "query {}: result bits diverged", a.id);
+        assert!(a.graph_epoch >= prev_epoch, "epochs must be nondecreasing in dispatch order");
+        prev_epoch = a.graph_epoch;
+    }
+    assert!(
+        rep_sim.results.iter().any(|r| r.graph_epoch > 0),
+        "the schedule must land queries after at least one mutation"
+    );
+}
+
+#[test]
+fn exact_kinds_match_true_fresh_ingest_of_mutated_edges() {
+    let g = gen::barabasi_albert(500, 5, 19);
+    let p = 4;
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut engine = SpmdEngine::from_ingested(
+        Cluster::new(p, cost()),
+        dg,
+        cost(),
+        Flags::tdo_gp(),
+        "delta-exact",
+        QueryShard::new,
+    );
+    // Evolve the flat arc set alongside the engine.
+    let mut arcs = det_map::<u64, f32>();
+    for u in 0..g.n as Vid {
+        for &(v, w) in g.neighbors(u) {
+            arcs.insert(((u as u64) << 32) | v as u64, w);
+        }
+    }
+    for b in &batches_for(&g, 3, 41) {
+        engine.apply_delta(b);
+        for op in &b.ops {
+            match *op {
+                EdgeOp::Insert { u, v, w } => {
+                    arcs.insert(((u as u64) << 32) | v as u64, w);
+                }
+                EdgeOp::Delete { u, v } => {
+                    arcs.remove(&(((u as u64) << 32) | v as u64));
+                }
+            }
+        }
+    }
+    let mutated_g = Graph::from_arcs(
+        g.n,
+        arcs.iter()
+            .map(|(&k, &w)| ((k >> 32) as Vid, (k & 0xFFFF_FFFF) as Vid, w))
+            .collect(),
+    );
+    assert_eq!(mutated_g.m(), engine.meta().m, "mutated edge sets disagree");
+
+    // A genuinely fresh ingestion places blocks differently, so only the
+    // min/first-writer merges are comparable — and they must agree.
+    let mut mutated = Server::new(engine, cfg());
+    let mut fresh = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(p, cost()), &mutated_g, cost(), QueryShard::new),
+        cfg(),
+    );
+    for (id, kind) in [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Cc].into_iter().enumerate() {
+        let q = Query { id: id as u64, kind, source: 0, arrival: 0 };
+        assert_eq!(
+            mutated.run_query(&q),
+            fresh.run_query(&q),
+            "{kind:?}: delta-mutated engine != true fresh ingest of the mutated graph"
+        );
+    }
+}

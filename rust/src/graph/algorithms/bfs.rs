@@ -6,7 +6,7 @@ use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::Vid;
 use crate::MachineId;
 
-use super::ShardAccess;
+use super::{FusedShard, ShardAccess};
 
 /// Machine-local BFS state: hop distances for the owned vertex range.
 pub struct BfsShard {
@@ -79,4 +79,55 @@ pub fn bfs<B: Substrate, AS: Send + ShardAccess<BfsShard>>(
         );
     }
     engine.gather(|_m, st| st.shard().dist.clone())
+}
+
+/// Fused multi-source BFS: one [`SpmdEngine::edge_map_lanes`] wave runs
+/// every source as its own lane.  Returns one distance vector per source,
+/// in input order — each bit-identical to [`bfs`] run alone on the same
+/// engine (first-writer merge is order-insensitive, and the shared round
+/// counter assigns lane `l`'s level-k vertices the same round number its
+/// solo run would).  The runner sizes/fills the fused shard itself; the
+/// caller only needs a reset engine.
+pub fn bfs_fused<B: Substrate, AS: Send + ShardAccess<FusedShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    sources: &[Vid],
+) -> Vec<Vec<i64>> {
+    let lanes = sources.len();
+    let meta = engine.meta();
+    engine.for_each_algo(|m, st| {
+        st.shard_mut().reset_lanes_with(m, &meta, lanes, |_lane, _v| -1.0)
+    });
+    let mut seeds = Vec::with_capacity(lanes);
+    for (l, &src) in sources.iter().enumerate() {
+        let lane = l as u32;
+        let owner = meta.part.owner(src);
+        engine.algo_mut(owner).shard_mut().set(lane, src, 0.0);
+        seeds.push((src, lane));
+    }
+    engine.set_frontier_lanes(&seeds);
+    let mut round = 0i64;
+    while engine.lane_frontier_len() > 0 {
+        round += 1;
+        let r = round as f64;
+        engine.edge_map_lanes(
+            &move |_m, _st: &AS, _u, _lane| Some(r),
+            &|sv, _u, _v, _w| Some(sv),
+            &|a, _b| a,
+            &|st: &mut AS, v, lane, val| {
+                let s = st.shard_mut();
+                let i = s.idx(lane, v);
+                if s.val[i] < 0.0 {
+                    s.val[i] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    (0..lanes as u32)
+        .map(|lane| {
+            engine.gather(|_m, st| st.shard().lane(lane).iter().map(|&d| d as i64).collect())
+        })
+        .collect()
 }

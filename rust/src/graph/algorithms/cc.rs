@@ -5,7 +5,7 @@ use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::Vid;
 use crate::MachineId;
 
-use super::ShardAccess;
+use super::{FusedShard, ShardAccess};
 
 /// Machine-local CC state: component labels for the owned range.
 pub struct CcShard {
@@ -69,4 +69,47 @@ pub fn cc<B: Substrate, AS: Send + ShardAccess<CcShard>>(
         );
     }
     engine.gather(|_m, st| st.shard().label.iter().map(|l| *l as u32).collect())
+}
+
+/// Fused CC: `lanes` copies of min-label propagation in one wave.  CC is
+/// source-independent, so every lane runs the identical everywhere-active
+/// sweep and returns the identical labels — fusing it exists so a batch
+/// of CC queries still costs one engine pass without special-casing the
+/// dispatch (the serving cache makes the duplicate lanes moot in
+/// practice).  The init sweep is charged once per lane.
+pub fn cc_fused<B: Substrate, AS: Send + ShardAccess<FusedShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    lanes: usize,
+) -> Vec<Vec<u32>> {
+    let meta = engine.meta();
+    engine.for_each_algo(|m, st| {
+        st.shard_mut().reset_lanes_with(m, &meta, lanes, |_lane, v| v as f64)
+    });
+    engine.charge_local(((meta.n / meta.p.max(1)) * lanes) as u64); // init sweep
+    engine.set_frontier_all_lanes(lanes as u32);
+    while engine.lane_frontier_len() > 0 {
+        engine.edge_map_lanes(
+            &|_m, st: &AS, u, lane| {
+                let s = st.shard();
+                Some(s.val[s.idx(lane, u)])
+            },
+            &|sv, _u, _v, _w| Some(sv),
+            &|a, b| a.min(b),
+            &|st: &mut AS, v, lane, val| {
+                let s = st.shard_mut();
+                let i = s.idx(lane, v);
+                if val < s.val[i] {
+                    s.val[i] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    (0..lanes as u32)
+        .map(|lane| {
+            engine.gather(|_m, st| st.shard().lane(lane).iter().map(|&x| x as u32).collect())
+        })
+        .collect()
 }

@@ -1,0 +1,91 @@
+//! Shared per-lane vertex state for **fused multi-source waves**.
+//!
+//! A fused wave runs a whole batch of same-kind exact queries (BFS /
+//! SSSP / CC — the merge operators that are order-insensitive and exact
+//! in f64) as ONE sequence of [`crate::graph::spmd::SpmdEngine::edge_map_lanes`]
+//! rounds: query `l` of the batch becomes *lane* `l`, messages carry a
+//! lane id, and this shard holds one value row per lane over the
+//! machine's owned vertex range.  Because lanes evolve independently
+//! (the engine routes a lane's contributions only from its own active
+//! pairs) and the merges are exact, each lane's final row is
+//! bit-identical to the corresponding single-source run — the contract
+//! `tests/serve_fusion.rs` pins at every P on both backends.
+
+use crate::graph::spmd::GraphMeta;
+use crate::graph::Vid;
+use crate::MachineId;
+
+/// Machine-local fused state: `lanes` rows of per-vertex f64 values over
+/// the owned range, lane-major (`val[lane * width + (v - base)]`).  The
+/// f64 cell is the same representation the single-source shards use
+/// (BFS distances are exact small integers, SSSP distances are the
+/// engine's native message payload, CC labels are exact vertex ids), so
+/// fused write-backs are bit-compatible with the single runners.
+pub struct FusedShard {
+    pub base: Vid,
+    /// Owned-range width (cells per lane).
+    pub width: usize,
+    /// Configured lane count (0 = unconfigured; runners size it).
+    pub lanes: usize,
+    pub val: Vec<f64>,
+}
+
+impl FusedShard {
+    pub fn new(m: MachineId, meta: &GraphMeta) -> Self {
+        let mut s = FusedShard { base: 0, width: 0, lanes: 0, val: Vec::new() };
+        s.reset(m, meta);
+        s
+    }
+
+    /// Re-init hook for `SpmdEngine::reset_for_query`: back to the
+    /// unconfigured state (allocation kept for reuse across waves).
+    pub fn reset(&mut self, m: MachineId, meta: &GraphMeta) {
+        let r = meta.part.range(m);
+        self.base = r.start;
+        self.width = (r.end - r.start) as usize;
+        self.lanes = 0;
+        self.val.clear();
+    }
+
+    /// Size the shard for a wave of `lanes` queries and fill every cell
+    /// from `init(lane, vertex)` (e.g. `-1.0` for BFS, `INFINITY` for
+    /// SSSP, `v as f64` for CC).  Runners call this driver-side before
+    /// seeding the lane frontier.
+    pub fn reset_lanes_with(
+        &mut self,
+        m: MachineId,
+        meta: &GraphMeta,
+        lanes: usize,
+        init: impl Fn(u32, Vid) -> f64,
+    ) {
+        let r = meta.part.range(m);
+        self.base = r.start;
+        self.width = (r.end - r.start) as usize;
+        self.lanes = lanes;
+        self.val.clear();
+        self.val.reserve(lanes * self.width);
+        for lane in 0..lanes as u32 {
+            for v in r.clone() {
+                self.val.push(init(lane, v));
+            }
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, lane: u32, v: Vid) -> usize {
+        lane as usize * self.width + (v - self.base) as usize
+    }
+
+    #[inline]
+    pub fn set(&mut self, lane: u32, v: Vid, val: f64) {
+        let i = self.idx(lane, v);
+        self.val[i] = val;
+    }
+
+    /// One lane's owned-range row (gathered per lane into the global
+    /// result vector, exactly like a single shard's slice).
+    pub fn lane(&self, lane: u32) -> &[f64] {
+        let s = lane as usize * self.width;
+        &self.val[s..s + self.width]
+    }
+}

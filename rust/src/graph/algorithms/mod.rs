@@ -11,14 +11,16 @@
 mod bc;
 mod bfs;
 mod cc;
+mod fused;
 mod pagerank;
 mod sssp;
 
 pub use bc::{bc, BcShard};
-pub use bfs::{bfs, BfsShard};
-pub use cc::{cc, CcShard};
+pub use bfs::{bfs, bfs_fused, BfsShard};
+pub use cc::{cc, cc_fused, CcShard};
+pub use fused::FusedShard;
 pub use pagerank::{pagerank, PrShard, DAMPING};
-pub use sssp::{sssp, SsspShard};
+pub use sssp::{sssp, sssp_fused, SsspShard};
 
 /// Projection from an engine's machine-local algorithm state to one
 /// algorithm's shard.  The runners are generic over this, so they serve

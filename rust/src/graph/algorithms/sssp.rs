@@ -8,7 +8,7 @@ use crate::graph::spmd::{GraphMeta, SpmdEngine};
 use crate::graph::Vid;
 use crate::MachineId;
 
-use super::ShardAccess;
+use super::{FusedShard, ShardAccess};
 
 /// Machine-local SSSP state: tentative distances for the owned range.
 pub struct SsspShard {
@@ -87,4 +87,57 @@ pub fn sssp<B: Substrate, AS: Send + ShardAccess<SsspShard>>(
         );
     }
     engine.gather(|_m, st| st.shard().dist.clone())
+}
+
+/// Fused multi-source SSSP: each source relaxes in its own lane of one
+/// [`SpmdEngine::edge_map_lanes`] wave.  Returns one distance vector per
+/// source, in input order, each bit-identical to [`sssp`] run alone —
+/// `min` over a lane's own candidate set is exact in f64 and
+/// order-insensitive, and a lane's candidates depend only on its own
+/// frontier values, which evolve exactly as in the solo run.
+pub fn sssp_fused<B: Substrate, AS: Send + ShardAccess<FusedShard>>(
+    engine: &mut SpmdEngine<B, AS>,
+    sources: &[Vid],
+) -> Vec<Vec<f64>> {
+    let lanes = sources.len();
+    let meta = engine.meta();
+    engine.for_each_algo(|m, st| {
+        st.shard_mut().reset_lanes_with(m, &meta, lanes, |_lane, _v| f64::INFINITY)
+    });
+    let mut seeds = Vec::with_capacity(lanes);
+    for (l, &src) in sources.iter().enumerate() {
+        let lane = l as u32;
+        let owner = meta.part.owner(src);
+        engine.algo_mut(owner).shard_mut().set(lane, src, 0.0);
+        seeds.push((src, lane));
+    }
+    engine.set_frontier_lanes(&seeds);
+    // Same settling bound as the solo runner; every lane is settled by
+    // then, so the shared wave never runs longer than the slowest member.
+    let max_rounds = meta.n as u64 + 1;
+    let mut rounds = 0u64;
+    while engine.lane_frontier_len() > 0 && rounds < max_rounds {
+        rounds += 1;
+        engine.edge_map_lanes(
+            &|_m, st: &AS, u, lane| {
+                let s = st.shard();
+                Some(s.val[s.idx(lane, u)])
+            },
+            &|sv, _u, _v, w| Some(sv + w as f64),
+            &|a, b| a.min(b),
+            &|st: &mut AS, v, lane, val| {
+                let s = st.shard_mut();
+                let i = s.idx(lane, v);
+                if val < s.val[i] {
+                    s.val[i] = val;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+    }
+    (0..lanes as u32)
+        .map(|lane| engine.gather(|_m, st| st.shard().lane(lane).to_vec()))
+        .collect()
 }

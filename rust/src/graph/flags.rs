@@ -14,7 +14,12 @@ use crate::CostModel;
 
 /// Policy flags distinguishing TDO-GP from the baseline families, plus
 /// the T1–T3 ablation knobs (paper §5.2, Table 4).
-#[derive(Clone, Copy, Debug)]
+///
+/// `Eq`/`Hash` exist because the serving layer's result cache keys on
+/// the full flag block: two engines with equal flags (and equal graph
+/// epoch) produce bit-identical results, so flag equality is result
+/// identity ([`crate::serve::cache`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Flags {
     /// Source/destination communication trees (TD-Orch layout).  Off =
     /// direct fan-out/fan-in (mirror-style).

@@ -142,6 +142,16 @@ pub struct MachineState<AS> {
     pending: DetMap<Vid, f64>,
     /// Destination-tree depth this machine's contributions need.
     depth_needed: usize,
+    /// Fused-wave frontier: active (vertex, lane) pairs, ascending.
+    /// `frontier` always holds its vertex projection so the mode
+    /// heuristic and tree sizing read one field in both round shapes.
+    lane_frontier: Vec<(Vid, u32)>,
+    /// Lane-keyed mirrors of the round scratch above, used by
+    /// [`SpmdEngine::edge_map_lanes`] (fused multi-source waves).
+    relay_l: DetMap<(Vid, u32), f64>,
+    agg_l: DetMap<(Vid, u32), f64>,
+    raw_l: Vec<(Vid, u32, f64)>,
+    pending_l: DetMap<(Vid, u32), f64>,
 }
 
 /// Block placement policy (the two ingestion passes of §5.1 / §6.1).
@@ -257,6 +267,11 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 raw: Vec::new(),
                 pending: det_map(),
                 depth_needed: 0,
+                lane_frontier: Vec::new(),
+                relay_l: det_map(),
+                agg_l: det_map(),
+                raw_l: Vec::new(),
+                pending_l: det_map(),
             })
             .collect();
         SpmdEngine {
@@ -352,6 +367,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     pub fn clear_frontier(&mut self) {
         for st in self.machines.iter_mut() {
             st.frontier.clear();
+            st.lane_frontier.clear();
         }
     }
 
@@ -386,6 +402,58 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         }
     }
 
+    /// Total active (vertex, lane) pairs in the fused frontier.
+    pub fn lane_frontier_len(&self) -> usize {
+        self.machines.iter().map(|s| s.lane_frontier.len()).sum()
+    }
+
+    /// Rebuild the single-frontier vertex projection from
+    /// `lane_frontier` (which is kept ascending by (vertex, lane), so
+    /// pushing on vertex change yields a sorted, deduped projection).
+    fn project_lane_union(st: &mut MachineState<AS>) {
+        st.frontier.clear();
+        for &(v, _lane) in &st.lane_frontier {
+            if st.frontier.last() != Some(&v) {
+                st.frontier.push(v);
+            }
+        }
+    }
+
+    /// Seed a fused multi-source wave: activate each (vertex, lane) pair
+    /// at the vertex's owner.  Lane ids are dense indices into the batch
+    /// being fused (lane `l` is query `l`'s traversal).
+    pub fn set_frontier_lanes(&mut self, seeds: &[(Vid, u32)]) {
+        let meta = Arc::clone(&self.meta);
+        for st in self.machines.iter_mut() {
+            st.frontier.clear();
+            st.lane_frontier.clear();
+        }
+        for &(v, lane) in seeds {
+            let owner = meta.part.owner(v);
+            self.machines[owner].lane_frontier.push((v, lane));
+        }
+        for st in self.machines.iter_mut() {
+            st.lane_frontier.sort_unstable();
+            st.lane_frontier.dedup();
+            Self::project_lane_union(st);
+        }
+    }
+
+    /// Activate every owned vertex in every lane (the CC-style start,
+    /// fused: all lanes run the same everywhere-active sweep).
+    pub fn set_frontier_all_lanes(&mut self, lanes: u32) {
+        let meta = Arc::clone(&self.meta);
+        for (m, st) in self.machines.iter_mut().enumerate() {
+            st.frontier = meta.part.range(m).collect();
+            st.lane_frontier.clear();
+            for &v in &st.frontier {
+                for lane in 0..lanes {
+                    st.lane_frontier.push((v, lane));
+                }
+            }
+        }
+    }
+
     /// Re-initialize the engine for the next query, KEEPING ingestion
     /// (block placement), the precomputed relay trees, and the substrate
     /// — on the threaded backend, the parked worker pool.  `reinit` runs
@@ -413,6 +481,11 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 st.raw.clear();
                 st.pending.clear();
                 st.depth_needed = 0;
+                st.lane_frontier.clear();
+                st.relay_l.clear();
+                st.agg_l.clear();
+                st.raw_l.clear();
+                st.pending_l.clear();
                 reinit(m, meta_ref, &mut st.algo);
                 Vec::new()
             },
@@ -948,6 +1021,359 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
 
         self.machines.iter().map(|s| s.frontier.len()).sum()
     }
+
+    /// DISTEDGEMAP over a **fused multi-source wave**: the same four
+    /// phases as [`SpmdEngine::edge_map`], with a lane id riding in
+    /// every message — `(vertex, lane, value)` — and per-(vertex, lane)
+    /// round scratch, so one engine pass advances a whole batch of
+    /// same-kind traversals at once (paper-style batch amortization:
+    /// the ROADMAP's "multi-source fusion").
+    ///
+    /// Determinism: lanes evolve independently — a lane only receives
+    /// contributions generated from its own active pairs, and every
+    /// fold iterates sorted `(vertex, lane)` keys or delivery order —
+    /// so for the exact merge operators (min / first-writer) each
+    /// lane's bits equal the single-source [`SpmdEngine::edge_map`] run
+    /// at every P and on both backends.  Mode selection (dense/sparse)
+    /// is computed over the *union* of active pairs, which can differ
+    /// from any member's solo run; like the single path, the mode only
+    /// moves routing and cost, never the per-lane candidate sets.
+    ///
+    /// Cost: one fused round prices the block scan once for all lanes
+    /// (the work saving), charges per-(edge, lane) application, and
+    /// ships lane-tagged payloads one word wider than the single-run
+    /// wire shapes ([`VAL_WORDS`]/[`CONTRIB_WORDS`] + 1).
+    pub fn edge_map_lanes(
+        &mut self,
+        src_value: &(dyn Fn(MachineId, &AS, Vid, u32) -> Option<f64> + Sync),
+        edge_fn: &(dyn Fn(f64, Vid, Vid, f32) -> Option<f64> + Sync),
+        merge: &(dyn Fn(f64, f64) -> f64 + Sync),
+        write_back: &(dyn Fn(&mut AS, Vid, u32, f64) -> bool + Sync),
+    ) -> usize {
+        let p = self.meta.p;
+        let flags = self.flags;
+        let eff = self.eff_work_pct;
+        let meta = Arc::clone(&self.meta);
+
+        // ---- driver: mode decision over active (vertex, lane) pairs —
+        // per-lane traffic scales with pairs, so pairs are the honest
+        // analog of the single-run frontier stats ----
+        let active_total: usize = self.machines.iter().map(|s| s.lane_frontier.len()).sum();
+        if active_total == 0 {
+            return 0;
+        }
+        let sum_deg: u64 = self
+            .machines
+            .iter()
+            .flat_map(|s| s.lane_frontier.iter())
+            .map(|&(u, _lane)| meta.out_deg[u as usize] as u64)
+            .sum();
+        let dense = !flags.sparse_mode
+            || (sum_deg + active_total as u64) > meta.m as u64 / DENSE_DIV;
+        let tree_bcast = !dense && flags.use_trees;
+        let scan = dense || flags.full_scan;
+
+        // Tree depth is per-vertex: size the broadcast over the union.
+        let d_src = if tree_bcast {
+            self.machines
+                .iter()
+                .flat_map(|s| s.frontier.iter())
+                .map(|&u| meta.src_tree[u as usize].len())
+                .max()
+                .unwrap_or(0)
+        } else {
+            0
+        };
+
+        // ---- Phase 1a: owners emit lane-tagged source values ----
+        let meta1 = Arc::clone(&meta);
+        let mut val_msgs: Vec<Vec<(Vid, u32, f64)>> = self.sub.superstep(
+            &mut self.machines,
+            no_messages(p),
+            move |m, st: &mut MachineState<AS>, _in: Vec<Nothing>, _acct: &mut MachineAcct| {
+                st.relay_l.clear();
+                st.agg_l.clear();
+                st.raw_l.clear();
+                st.pending_l.clear();
+                st.depth_needed = 0;
+                let mut out: Vec<(MachineId, (Vid, u32, f64))> = Vec::new();
+                for &(u, lane) in &st.lane_frontier {
+                    let Some(val) = src_value(m, &st.algo, u, lane) else { continue };
+                    if dense {
+                        if flags.dest_aware {
+                            for &leaf in &meta1.src_leaves[u as usize] {
+                                out.push((leaf, (u, lane, val)));
+                            }
+                        } else {
+                            for t in 0..p {
+                                out.push((t, (u, lane, val)));
+                            }
+                        }
+                    } else if flags.use_trees {
+                        st.relay_l.insert((u, lane), val);
+                        let levels = &meta1.src_tree[u as usize];
+                        if let Some(level) = levels.last() {
+                            for &(child, parent) in level {
+                                if parent == m {
+                                    out.push((child, (u, lane, val)));
+                                }
+                            }
+                        }
+                    } else {
+                        for &leaf in &meta1.src_leaves[u as usize] {
+                            out.push((leaf, (u, lane, val)));
+                        }
+                    }
+                }
+                out
+            },
+            |_: &(Vid, u32, f64)| VAL_WORDS + 1,
+        );
+
+        // ---- Phase 1b: remaining top-down tree levels ----
+        if tree_bcast {
+            for d in 1..d_src {
+                let meta_d = Arc::clone(&meta);
+                val_msgs = self.sub.superstep(
+                    &mut self.machines,
+                    val_msgs,
+                    move |m,
+                          st: &mut MachineState<AS>,
+                          inbox: Vec<(Vid, u32, f64)>,
+                          _acct: &mut MachineAcct| {
+                        for (u, lane, val) in inbox {
+                            st.relay_l.entry((u, lane)).or_insert(val);
+                        }
+                        let mut keys: Vec<(Vid, u32)> = st.relay_l.keys().copied().collect();
+                        keys.sort_unstable();
+                        let mut out = Vec::new();
+                        for (u, lane) in keys {
+                            let val = st.relay_l[&(u, lane)];
+                            let levels = &meta_d.src_tree[u as usize];
+                            let k = levels.len();
+                            if k <= d {
+                                continue; // this vertex's tree is shallower
+                            }
+                            for &(child, parent) in &levels[k - 1 - d] {
+                                if parent == m {
+                                    out.push((child, (u, lane, val)));
+                                }
+                            }
+                        }
+                        out
+                    },
+                    |_: &(Vid, u32, f64)| VAL_WORDS + 1,
+                );
+            }
+        }
+
+        // ---- Phase 2: execute f at block machines, all lanes in one
+        // block walk (a scan pays the walk once, however many lanes) ----
+        if !flags.premerge {
+            self.sub.set_msg_factor(RPC_MSG_FACTOR);
+        }
+        let meta2 = Arc::clone(&meta);
+        let mut contrib_msgs: Vec<Vec<(Vid, u32, f64)>> = self.sub.superstep(
+            &mut self.machines,
+            val_msgs,
+            move |m,
+                  st: &mut MachineState<AS>,
+                  inbox: Vec<(Vid, u32, f64)>,
+                  acct: &mut MachineAcct| {
+                for (u, lane, val) in inbox {
+                    st.relay_l.entry((u, lane)).or_insert(val);
+                }
+                let MachineState {
+                    blocks, block_of, relay_l, agg_l, raw_l, pending_l, depth_needed, ..
+                } = st;
+                // Group delivered lane values by source so one block walk
+                // serves every lane; sorted keys ⇒ lane-ascending groups.
+                let mut by_src: DetMap<Vid, Vec<(u32, f64)>> = det_map();
+                {
+                    let mut keys: Vec<(Vid, u32)> = relay_l.keys().copied().collect();
+                    keys.sort_unstable();
+                    for (u, lane) in keys {
+                        by_src.entry(u).or_default().push((lane, relay_l[&(u, lane)]));
+                    }
+                }
+                let emit = |v: Vid,
+                            lane: u32,
+                            cv: f64,
+                            agg_l: &mut DetMap<(Vid, u32), f64>,
+                            raw_l: &mut Vec<(Vid, u32, f64)>| {
+                    if flags.premerge {
+                        agg_l
+                            .entry((v, lane))
+                            .and_modify(|acc| *acc = merge(*acc, cv))
+                            .or_insert(cv);
+                    } else {
+                        raw_l.push((v, lane, cv));
+                    }
+                };
+                let mut work = 0u64;
+                if scan {
+                    for block in blocks.iter() {
+                        work += block.targets.len() as u64;
+                        let Some(lanes) = by_src.get(&block.src) else { continue };
+                        for &(v, w) in &block.targets {
+                            for &(lane, val) in lanes {
+                                if let Some(cv) = edge_fn(val, block.src, v, w) {
+                                    work += 1;
+                                    emit(v, lane, cv, agg_l, raw_l);
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    let mut keys: Vec<Vid> = by_src.keys().copied().collect();
+                    keys.sort_unstable();
+                    for u in keys {
+                        let lanes = &by_src[&u];
+                        let Some(idxs) = block_of.get(&u) else { continue };
+                        for &idx in idxs {
+                            let block = &blocks[idx as usize];
+                            for &(v, w) in &block.targets {
+                                for &(lane, val) in lanes {
+                                    work += 1;
+                                    if let Some(cv) = edge_fn(val, u, v, w) {
+                                        emit(v, lane, cv, agg_l, raw_l);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let mut units = work * eff / 100;
+                if flags.round_overhead_n {
+                    units += meta2.part.count_on(m) as u64;
+                }
+                acct.work(units);
+
+                // Emit this machine's contributions toward the owners.
+                let mut out: Vec<(MachineId, (Vid, u32, f64))> = Vec::new();
+                if flags.premerge {
+                    let mut keys: Vec<(Vid, u32)> = agg_l.keys().copied().collect();
+                    keys.sort_unstable();
+                    if flags.use_trees {
+                        let mut max_d = 0usize;
+                        for (v, lane) in keys {
+                            let val = agg_l[&(v, lane)];
+                            let levels = &meta2.dst_tree[v as usize];
+                            max_d = max_d.max(levels.len());
+                            let edge = levels
+                                .first()
+                                .and_then(|lvl| lvl.iter().find(|&&(c, _)| c == m));
+                            match edge {
+                                Some(&(_, parent)) => out.push((parent, (v, lane, val))),
+                                // No level-0 edge ⟺ this machine is the
+                                // root: hold the partial locally.
+                                None => {
+                                    pending_l.insert((v, lane), val);
+                                }
+                            }
+                        }
+                        *depth_needed = max_d;
+                    } else {
+                        for (v, lane) in keys {
+                            out.push((meta2.part.owner(v), (v, lane, agg_l[&(v, lane)])));
+                        }
+                    }
+                } else {
+                    for &(v, lane, cv) in raw_l.iter() {
+                        out.push((meta2.part.owner(v), (v, lane, cv)));
+                    }
+                }
+                out
+            },
+            |_: &(Vid, u32, f64)| CONTRIB_WORDS + 1,
+        );
+        if !flags.premerge {
+            self.sub.set_msg_factor(1);
+        }
+
+        // ---- Phase 3: remaining destination-tree merge levels ----
+        let d_dst = if flags.premerge && flags.use_trees {
+            self.machines.iter().map(|s| s.depth_needed).max().unwrap_or(0)
+        } else {
+            0
+        };
+        for d in 1..d_dst {
+            let meta_d = Arc::clone(&meta);
+            contrib_msgs = self.sub.superstep(
+                &mut self.machines,
+                contrib_msgs,
+                move |m,
+                      st: &mut MachineState<AS>,
+                      inbox: Vec<(Vid, u32, f64)>,
+                      _acct: &mut MachineAcct| {
+                    for (v, lane, val) in inbox {
+                        st.pending_l
+                            .entry((v, lane))
+                            .and_modify(|acc| *acc = merge(*acc, val))
+                            .or_insert(val);
+                    }
+                    let mut keys: Vec<(Vid, u32)> = st.pending_l.keys().copied().collect();
+                    keys.sort_unstable();
+                    let mut out = Vec::new();
+                    for (v, lane) in keys {
+                        let levels = &meta_d.dst_tree[v as usize];
+                        if levels.len() <= d {
+                            continue; // merged out already / root holds it
+                        }
+                        let Some(&(_, parent)) =
+                            levels[d].iter().find(|&&(c, _)| c == m)
+                        else {
+                            continue; // root (or not yet at this level)
+                        };
+                        let val = st.pending_l.remove(&(v, lane)).unwrap();
+                        out.push((parent, (v, lane, val)));
+                    }
+                    out
+                },
+                |_: &(Vid, u32, f64)| CONTRIB_WORDS + 1,
+            );
+        }
+
+        // ---- Phase 4: per-lane write-backs at destination owners ----
+        let meta4 = Arc::clone(&meta);
+        let _: Vec<Vec<Nothing>> = self.sub.superstep(
+            &mut self.machines,
+            contrib_msgs,
+            move |m,
+                  st: &mut MachineState<AS>,
+                  inbox: Vec<(Vid, u32, f64)>,
+                  acct: &mut MachineAcct| {
+                for (v, lane, val) in inbox {
+                    st.pending_l
+                        .entry((v, lane))
+                        .and_modify(|acc| *acc = merge(*acc, val))
+                        .or_insert(val);
+                }
+                let mut keys: Vec<(Vid, u32)> = st.pending_l.keys().copied().collect();
+                keys.sort_unstable();
+                st.lane_frontier.clear();
+                let mut wb = 0u64;
+                for (v, lane) in keys {
+                    let val = st.pending_l.remove(&(v, lane)).unwrap();
+                    debug_assert_eq!(
+                        meta4.part.owner(v),
+                        m,
+                        "contribution for {v} lane {lane} landed on non-owner {m}"
+                    );
+                    wb += 1;
+                    if write_back(&mut st.algo, v, lane, val) {
+                        st.lane_frontier.push((v, lane));
+                    }
+                }
+                Self::project_lane_union(st);
+                acct.work(wb * eff / 100);
+                Vec::new()
+            },
+            nothing_words,
+        );
+
+        self.machines.iter().map(|s| s.lane_frontier.len()).sum()
+    }
 }
 
 // End-to-end algorithm coverage (all flags × placements × P on both
@@ -988,6 +1414,51 @@ mod tests {
         let mut all: Vec<(Vid, f64)> = Vec::new();
         engine.for_each_algo(|_m, seen| all.append(seen));
         assert_eq!(all, vec![(2, 2.0)]);
+    }
+
+    #[test]
+    fn fused_lanes_evolve_independently() {
+        // Two lanes seeded at different sources feeding one destination:
+        // each lane's write-back must see ONLY its own contribution —
+        // lane isolation is what makes fused bits equal single-run bits.
+        let g = Graph::from_arcs(
+            3,
+            vec![(0, 2, 1.0), (1, 2, 1.0), (2, 0, 1.0), (2, 1, 1.0)],
+        );
+        let sub = Cluster::new(2, CostModel::paper_cluster());
+        let mut engine = SpmdEngine::tdo_gp(sub, &g, CostModel::paper_cluster(), |_m, _meta| {
+            Vec::<(Vid, u32, f64)>::new()
+        });
+        engine.set_frontier_lanes(&[(0, 0), (1, 1)]);
+        assert_eq!(engine.lane_frontier_len(), 2);
+        engine.edge_map_lanes(
+            &|_m, _st, _u, lane| Some(if lane == 0 { 1.0 } else { 5.0 }),
+            &|sv, _u, _v, _w| Some(sv),
+            &|a, b| a + b,
+            &|seen: &mut Vec<(Vid, u32, f64)>, v, lane, val| {
+                seen.push((v, lane, val));
+                false
+            },
+        );
+        let mut all: Vec<(Vid, u32, f64)> = Vec::new();
+        engine.for_each_algo(|_m, seen| all.append(seen));
+        all.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        assert_eq!(all, vec![(2, 0, 1.0), (2, 1, 5.0)]);
+    }
+
+    #[test]
+    fn lane_frontier_seed_projection_and_reset() {
+        let g = gen::erdos_renyi(40, 160, 3);
+        let sub = Cluster::new(4, CostModel::paper_cluster());
+        let mut e = SpmdEngine::tdo_gp(sub, &g, CostModel::paper_cluster(), |_m, _meta| ());
+        // Duplicate pair + two lanes on one vertex: pairs dedup, the
+        // vertex projection dedups further.
+        e.set_frontier_lanes(&[(3, 1), (3, 0), (7, 2), (3, 1)]);
+        assert_eq!(e.lane_frontier_len(), 3, "pairs must dedup");
+        assert_eq!(e.frontier_len(), 2, "projection must dedup vertices");
+        e.reset_for_query(|_m, _meta, _st| {});
+        assert_eq!(e.lane_frontier_len(), 0, "reset must clear lane frontier");
+        assert_eq!(e.frontier_len(), 0);
     }
 
     #[test]

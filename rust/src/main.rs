@@ -23,15 +23,18 @@
 //! repro graph   [--backend sim|threaded] [--threads P | --machines P]
 //!               [--seed S]                     TDO-GP edge_map on the pool
 //! repro serve   [--backend sim|threaded] [--threads P] [--queries N]
-//!               [--zipf S] [--batch B] [--seed S]
-//!                                              online Zipf query stream
+//!               [--zipf S] [--batch B] [--fuse] [--cache] [--seed S]
+//!                                              online Zipf query stream;
+//!                                              --fuse = multi-source
+//!                                              batch waves, --cache =
+//!                                              epoch-keyed memoization
 //! repro loadcurve [--quick] [--backend sim|threaded] [--threads P]
 //!               [--seed S] [--out PATH]        latency vs offered load:
 //!                                              open-loop rate + closed-
 //!                                              loop client sweeps, JSON
 //!                                              report; --quick = CI gate
 //! repro mutate  [--quick] [--backend sim|threaded] [--threads P]
-//!               [--seed S]                     live edge mutations under
+//!               [--fuse] [--cache] [--seed S]  live edge mutations under
 //!                                              serving traffic, every
 //!                                              result cross-checked at
 //!                                              its epoch; CI gate
@@ -88,6 +91,8 @@ struct Args {
     zipf: f64,
     batch: usize,
     quick: bool,
+    fuse: bool,
+    cache: bool,
     /// `--out` target; `None` = the subcommand's own default
     /// (loadcurve: `target/loadcurve/loadcurve.json`; bench-snapshot:
     /// `target/bench-snapshot`).
@@ -123,6 +128,8 @@ fn parse_args() -> Args {
         zipf: 1.5,
         batch: 8,
         quick: false,
+        fuse: false,
+        cache: false,
         out: None,
         check: false,
         baseline: "..".to_string(),
@@ -142,6 +149,8 @@ fn parse_args() -> Args {
             "--zipf" => args.zipf = parse_flag(&argv, &mut i, "--zipf"),
             "--batch" => args.batch = parse_flag(&argv, &mut i, "--batch"),
             "--quick" => args.quick = true,
+            "--fuse" => args.fuse = true,
+            "--cache" => args.cache = true,
             "--out" => args.out = Some(parse_flag(&argv, &mut i, "--out")),
             "--check" => args.check = true,
             "--baseline" => args.baseline = parse_flag(&argv, &mut i, "--baseline"),
@@ -319,6 +328,8 @@ fn main() {
                 args.batch,
                 args.seed,
                 &args.backend,
+                args.fuse,
+                args.cache,
             );
             if !summary.all_valid {
                 std::process::exit(1);
@@ -352,7 +363,14 @@ fn main() {
                     std::process::exit(2);
                 }
             }
-            let summary = repro::mutate::run_mutate(p, args.seed, &args.backend, args.quick);
+            let summary = repro::mutate::run_mutate(
+                p,
+                args.seed,
+                &args.backend,
+                args.quick,
+                args.fuse,
+                args.cache,
+            );
             if !summary.all_valid {
                 std::process::exit(1);
             }
@@ -388,8 +406,8 @@ fn main() {
             eprintln!(
                 "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|bench-snapshot|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
-                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--quick] [--out PATH] \
-                 [--check] [--baseline DIR]"
+                 [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--fuse] [--cache] \
+                 [--quick] [--out PATH] [--check] [--baseline DIR]"
             );
             std::process::exit(2);
         }

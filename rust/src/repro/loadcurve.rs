@@ -29,12 +29,24 @@
 //! backends and hosts; wall-clock columns (ms percentiles, goodput/sec,
 //! pool busy fraction) annotate the run and vary with the machine.
 //!
+//! After the sweeps, a **fusion A/B stage** replays the top open-loop
+//! rate twice on the same server — fusion+cache OFF, then ON
+//! ([`crate::serve::Server::set_policy`]; the ON run starts with a cold
+//! cache) — with both runs bit-checked against the reference.  In
+//! `--quick` the ON run must *strictly* beat the OFF run's goodput per
+//! tick and hit the cache at least once, which is how "a served batch
+//! costs about one engine pass" becomes a CI-enforced claim rather than
+//! a narrative.  The main sweeps themselves keep both knobs off, so
+//! their dynamics (and the rejection-monotonicity gate) stay comparable
+//! across releases.
+//!
 //! The per-point results are written as a machine-readable JSON report
 //! (`--out`, default `target/loadcurve/loadcurve.json`; schema
-//! `tdorch.loadcurve.v2`, which added the per-point `graph_epoch` —
-//! constant 0 for these mutation-free sweeps) that the CI release legs
-//! upload as a build artifact — the perf trajectory of every commit is
-//! downloadable.
+//! `tdorch.loadcurve.v3`, which added per-point `cache_hits` /
+//! `cache_misses` / `hit_rate` and the top-level `fusion_compare`
+//! object; v2 added the per-point `graph_epoch` — constant 0 for these
+//! mutation-free sweeps) that the CI release legs upload as a build
+//! artifact — the perf trajectory of every commit is downloadable.
 
 use crate::exec::{PoolSnapshot, Substrate, ThreadedCluster};
 use crate::graph::flags::Flags;
@@ -84,6 +96,7 @@ fn serve_cfg() -> ServeConfig {
 }
 
 /// One sweep point, fully evaluated.
+#[derive(Clone)]
 pub struct CurvePoint {
     pub label: String,
     /// Configured offered rate, queries/tick (NaN for closed-loop
@@ -124,6 +137,45 @@ pub struct CurvePoint {
     /// sweeps are mutation-free), present so downstream tooling keys on
     /// the same field `repro mutate` runs populate.
     pub graph_epoch: u64,
+    /// Queries served from the result cache (0 on the off-policy sweeps).
+    pub cache_hits: u64,
+    /// Queries served by engine execution (== served on the off-policy
+    /// sweeps).
+    pub cache_misses: u64,
+}
+
+impl CurvePoint {
+    /// Fraction of served queries that were cache hits (NaN when the
+    /// point served nothing).
+    pub fn hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            return f64::NAN;
+        }
+        self.cache_hits as f64 / self.served as f64
+    }
+}
+
+/// The fusion A/B stage: the top open-loop rate served twice on one
+/// server — policies off, then on (cold cache).
+pub struct FusionCompare {
+    pub off: CurvePoint,
+    pub on: CurvePoint,
+}
+
+impl FusionCompare {
+    /// Goodput-per-tick ratio ON/OFF (the amortization factor the
+    /// tentpole claims; > 1 means fusion+memoization paid off).
+    pub fn goodput_gain(&self) -> f64 {
+        self.on.goodput_per_tick / self.off.goodput_per_tick
+    }
+
+    pub fn strictly_faster(&self) -> bool {
+        self.on.goodput_per_tick > self.off.goodput_per_tick
+    }
+
+    pub fn nonzero_hits(&self) -> bool {
+        self.on.cache_hits > 0
+    }
 }
 
 /// Result of one `repro loadcurve` invocation (consumed by main/tests).
@@ -134,6 +186,8 @@ pub struct LoadCurveSummary {
     pub ingestions: u64,
     /// Open-loop rejection rate nondecreasing in offered load.
     pub monotone: bool,
+    /// The fusion A/B stage at the top open-loop rate.
+    pub fusion: FusionCompare,
     pub all_valid: bool,
     pub json_path: Option<String>,
 }
@@ -217,7 +271,53 @@ fn fold_point(
         pool_busy_fraction,
         mismatches,
         graph_epoch: report.graph_epoch,
+        cache_hits: report.cache_hits,
+        cache_misses: report.cache_misses,
     }
+}
+
+/// A/B the serving policies on ONE server at the top open-loop rate:
+/// the same stream served with fusion+cache off, then on
+/// ([`Server::set_policy`] clears the cache, so the ON run starts
+/// cold).  Both runs are bit-checked against the single-shot reference;
+/// the policies are restored to off afterwards.
+fn fusion_compare<B: Substrate>(
+    server: &mut Server<B>,
+    reference: &mut Server<Cluster>,
+    hot: &[Vid],
+    seed: u64,
+    quick: bool,
+    snap: &dyn Fn(&B) -> Option<PoolSnapshot>,
+) -> FusionCompare {
+    let rates: &[(usize, u64)] = if quick { &QUICK_RATES } else { &FULL_RATES };
+    let &(per_tick, every_ticks) = rates.last().expect("nonempty rate table");
+    let cfg = StreamConfig {
+        queries: if quick { QUICK_QUERIES } else { FULL_QUERIES },
+        per_tick,
+        every_ticks,
+        zipf_s: 1.5,
+        mix: QueryMix::balanced(),
+    };
+    let stream = generate_stream(cfg, hot, seed);
+    let mut run = |fuse: bool, cache: bool, tag: &str| {
+        server.set_policy(fuse, cache);
+        let label = format!("fusion:{tag}@{:.4}/tick", cfg.offered_per_tick());
+        let (report, busy) = run_point(server, &mut OpenLoopSource::new(&stream), snap);
+        let mismatches = cross_check(reference, &report, &|id| stream[id as usize], &label);
+        fold_point(
+            label,
+            cfg.offered_per_tick(),
+            None,
+            stream.len() as u64,
+            &report,
+            busy,
+            mismatches,
+        )
+    };
+    let off = run(false, false, "off");
+    let on = run(true, true, "on");
+    server.set_policy(false, false);
+    FusionCompare { off, on }
 }
 
 /// Run both sweeps on `server` (generic over backend; `snap` extracts a
@@ -320,7 +420,8 @@ fn jpoint(pt: &CurvePoint) -> String {
         "{{\"label\":\"{}\",\"offered_rate_cfg\":{},\"offered_rate_achieved\":{},\
          \"clients\":{},\"expected_offered\":{},\"offered\":{},\
          \"served\":{},\"rejected\":{},\"rejection_rate\":{},\"goodput_per_tick\":{},\
-         \"ticks\":{},\"graph_epoch\":{},\"wait_ticks\":{},\"service_ticks\":{},\
+         \"ticks\":{},\"graph_epoch\":{},\"cache_hits\":{},\"cache_misses\":{},\
+         \"hit_rate\":{},\"wait_ticks\":{},\"service_ticks\":{},\
          \"sojourn_ticks\":{},\"service_ms\":{},\
          \"wall_ms\":{},\"goodput_qps\":{},\"pool_busy_fraction\":{},\"mismatches\":{}}}",
         pt.label,
@@ -335,6 +436,9 @@ fn jpoint(pt: &CurvePoint) -> String {
         jnum(pt.goodput_per_tick),
         pt.ticks,
         pt.graph_epoch,
+        pt.cache_hits,
+        pt.cache_misses,
+        jnum(pt.hit_rate()),
         jlat(&pt.wait_ticks),
         jlat(&pt.service_ticks),
         jlat(&pt.sojourn_ticks),
@@ -354,18 +458,26 @@ fn json_report(
     quick: bool,
     open: &[CurvePoint],
     closed: &[CurvePoint],
+    fusion: &FusionCompare,
 ) -> String {
     let open_json: Vec<String> = open.iter().map(jpoint).collect();
     let closed_json: Vec<String> = closed.iter().map(jpoint).collect();
     format!(
-        "{{\"schema\":\"tdorch.loadcurve.v2\",\"graph\":{{\"n\":{},\"m\":{},\
+        "{{\"schema\":\"tdorch.loadcurve.v3\",\"graph\":{{\"n\":{},\"m\":{},\
          \"seed\":{seed}}},\"p\":{p},\"backend\":\"{backend}\",\"quick\":{quick},\
-         \"supersteps_per_tick\":{},\"open_loop\":[{}],\"closed_loop\":[{}]}}\n",
+         \"supersteps_per_tick\":{},\"open_loop\":[{}],\"closed_loop\":[{}],\
+         \"fusion_compare\":{{\"off\":{},\"on\":{},\"goodput_gain\":{},\
+         \"strictly_faster\":{},\"nonzero_hits\":{}}}}}\n",
         g.n,
         g.m(),
         serve_cfg().supersteps_per_tick,
         open_json.join(","),
         closed_json.join(","),
+        jpoint(&fusion.off),
+        jpoint(&fusion.on),
+        jnum(fusion.goodput_gain()),
+        fusion.strictly_faster(),
+        fusion.nonzero_hits(),
     )
 }
 
@@ -442,7 +554,7 @@ pub fn run_loadcurve(
     );
     let hot = hot_source_order(&reference.engine().meta().out_deg);
 
-    let (open, closed) = if backend == "threaded" {
+    let (open, closed, fusion) = if backend == "threaded" {
         let mut server = Server::new(
             SpmdEngine::from_ingested(
                 ThreadedCluster::new(p),
@@ -454,9 +566,10 @@ pub fn run_loadcurve(
             ),
             serve_cfg(),
         );
-        sweep(&mut server, &mut reference, &hot, seed, quick, &|tc: &ThreadedCluster| {
-            Some(tc.snapshot())
-        })
+        let snap = |tc: &ThreadedCluster| Some(tc.snapshot());
+        let (open, closed) = sweep(&mut server, &mut reference, &hot, seed, quick, &snap);
+        let fusion = fusion_compare(&mut server, &mut reference, &hot, seed, quick, &snap);
+        (open, closed, fusion)
     } else {
         let mut server = Server::new(
             SpmdEngine::from_ingested(
@@ -469,13 +582,36 @@ pub fn run_loadcurve(
             ),
             serve_cfg(),
         );
-        sweep(&mut server, &mut reference, &hot, seed, quick, &|_| None)
+        let snap = |_: &Cluster| None;
+        let (open, closed) = sweep(&mut server, &mut reference, &hot, seed, quick, &snap);
+        let fusion = fusion_compare(&mut server, &mut reference, &hot, seed, quick, &snap);
+        (open, closed, fusion)
     };
 
     print_curve("open loop (offered rate sweep)", &open);
     print_curve("closed loop (client population sweep)", &closed);
+    print_curve(
+        "fusion A/B (same stream, same server, policies off vs on)",
+        &[fusion.off.clone(), fusion.on.clone()],
+    );
+    println!(
+        "\nfusion A/B at the top rate: goodput {:.4} -> {:.4} queries/tick \
+         (gain {:.2}x), ticks {} -> {}, {} cache hits / {} misses on the ON run",
+        fusion.off.goodput_per_tick,
+        fusion.on.goodput_per_tick,
+        fusion.goodput_gain(),
+        fusion.off.ticks,
+        fusion.on.ticks,
+        fusion.on.cache_hits,
+        fusion.on.cache_misses,
+    );
 
-    let mismatches: u64 = open.iter().chain(&closed).map(|pt| pt.mismatches).sum();
+    let mismatches: u64 = open
+        .iter()
+        .chain(&closed)
+        .chain([&fusion.off, &fusion.on])
+        .map(|pt| pt.mismatches)
+        .sum();
     let monotone = open
         .windows(2)
         .all(|w| w[0].rejection_rate <= w[1].rejection_rate);
@@ -485,11 +621,12 @@ pub fn run_loadcurve(
     let accounted = open
         .iter()
         .chain(&closed)
+        .chain([&fusion.off, &fusion.on])
         .all(|pt| pt.served + pt.rejected == pt.expected_offered);
     let ingested = ingestions() - ing0;
 
     // ---- JSON artifact ----
-    let json = json_report(&g, p, seed, backend, quick, &open, &closed);
+    let json = json_report(&g, p, seed, backend, quick, &open, &closed, &fusion);
     let json_path = match write_report(out, &json) {
         Ok(()) => {
             println!("\nJSON report written to {out}");
@@ -503,17 +640,20 @@ pub fn run_loadcurve(
 
     // The quick sweep is the CI gate: rejection must be nondecreasing in
     // offered load (a server that sheds LESS when offered MORE is
-    // broken); the full sweep reports the curve without gating on it.
+    // broken), and the fusion+cache run must strictly out-serve the
+    // plain run at the top rate with a nonzero hit rate; the full sweep
+    // reports the curves without gating on them.
     let all_valid = mismatches == 0
         && ingested == 1
         && accounted
         && json_path.is_some()
-        && (!quick || monotone);
+        && (!quick || (monotone && fusion.strictly_faster() && fusion.nonzero_hits()));
     println!(
         "\nloadcurve {}",
         if all_valid {
             "OK (every served query bit-identical to the single-shot sim reference; \
-             graph ingested once; rejection nondecreasing in offered load)"
+             graph ingested once; rejection nondecreasing in offered load; fusion+cache \
+             strictly out-serves the plain policy at the top rate)"
         } else {
             "FAILED"
         }
@@ -524,6 +664,16 @@ pub fn run_loadcurve(
             open.iter().map(|pt| pt.rejection_rate).collect::<Vec<_>>()
         );
     }
+    if !fusion.strictly_faster() {
+        eprintln!(
+            "fusion+cache did NOT strictly raise goodput/tick at the top rate: \
+             off {:.4} vs on {:.4}",
+            fusion.off.goodput_per_tick, fusion.on.goodput_per_tick
+        );
+    }
+    if !fusion.nonzero_hits() {
+        eprintln!("the Zipf stream produced zero cache hits — memoization never engaged");
+    }
     if ingested != 1 {
         eprintln!("expected exactly one ingestion, counted {ingested}");
     }
@@ -533,6 +683,7 @@ pub fn run_loadcurve(
         mismatches,
         ingestions: ingested,
         monotone,
+        fusion,
         all_valid,
         json_path,
     }
@@ -567,9 +718,22 @@ mod tests {
             s.open.last().unwrap().rejected > 0,
             "4 q/tick against a cap-8 queue must reject"
         );
+        // The fusion A/B gate: strictly better goodput with hits, bits
+        // still clean on both runs.
+        assert!(s.fusion.strictly_faster(), "fusion+cache must out-serve the plain policy");
+        assert!(s.fusion.nonzero_hits(), "the Zipf stream must repeat at least one key");
+        assert_eq!(s.fusion.off.cache_hits, 0, "the OFF run must not touch the cache");
+        assert_eq!(
+            s.fusion.on.served,
+            s.fusion.on.cache_hits + s.fusion.on.cache_misses,
+            "every served query is a hit or a miss"
+        );
         let json = std::fs::read_to_string(&out).expect("report written");
-        assert!(json.starts_with("{\"schema\":\"tdorch.loadcurve.v2\""));
+        assert!(json.starts_with("{\"schema\":\"tdorch.loadcurve.v3\""));
         assert!(json.contains("\"open_loop\":["));
+        assert!(json.contains("\"fusion_compare\":{\"off\":{"));
+        assert!(json.contains("\"strictly_faster\":true"));
+        assert!(json.contains("\"cache_hits\":"));
         assert!(
             json.contains("\"graph_epoch\":0"),
             "mutation-free sweeps report epoch 0 on every point"

@@ -78,6 +78,8 @@ pub struct MutateSummary {
     pub final_epoch: u64,
     /// Queries that executed against a mutated graph (epoch > 0).
     pub post_mutation_queries: usize,
+    /// Cache hits on the serving side (0 with `--cache` off).
+    pub cache_hits: u64,
     pub all_valid: bool,
 }
 
@@ -85,7 +87,14 @@ fn arc_key(u: Vid, v: Vid) -> u64 {
     ((u as u64) << 32) | v as u64
 }
 
-pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSummary {
+pub fn run_mutate(
+    p: usize,
+    seed: u64,
+    backend: &str,
+    quick: bool,
+    fuse: bool,
+    cache: bool,
+) -> MutateSummary {
     assert!(p >= 1, "need at least one machine");
     let ing0 = ingestions();
     let cost = CostModel::paper_cluster();
@@ -123,7 +132,14 @@ pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSumm
     let batches = generate_mutations(mcfg, &g, &hot, seed.wrapping_add(1));
     let scheduled = batches.len() as u64;
 
-    let serve_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig { batch: 4, fuse, cache, ..ServeConfig::default() };
+    // The references below MUST keep both knobs off: the reverse-order
+    // walk re-executes served queries through `run_query`, and a cached
+    // reference would "verify" a result against a stored copy of itself
+    // (run_query never consults the cache either — dispatch-only — but
+    // the reference config pins the intent; tests/serve_cache.rs holds
+    // both lines).
+    let reference_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
     let (report, final_meta, engine_epoch): (ServeReport, std::sync::Arc<GraphMeta>, u64) =
         if backend == "threaded" {
         let mut server = Server::new(
@@ -223,7 +239,7 @@ pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSumm
                             "mutate-replay-ref",
                             QueryShard::new,
                         ),
-                        serve_cfg,
+                        reference_cfg,
                     ),
                 ));
             }
@@ -294,7 +310,7 @@ pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSumm
                         "mutate-fresh-ref",
                         QueryShard::new,
                     ),
-                    serve_cfg,
+                    reference_cfg,
                 ));
             }
             let srv = fresh[e].as_mut().expect("just built");
@@ -359,12 +375,21 @@ pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSumm
          apply_delta supersteps — never by re-ingestion; the fresh-ingest reference's \
          own passes are read separately)"
     );
+    println!(
+        "dispatch: {} engine passes ({} fused waves), {} cache hits / {} misses \
+         (fuse {fuse}, cache {cache}; every hit's epoch matched the live graph by key)",
+        report.waves.len(),
+        report.waves.iter().filter(|w| w.lanes >= 2).count(),
+        report.cache_hits,
+        report.cache_misses,
+    );
 
     let all_valid = mismatches_replay == 0
         && mismatches_fresh == 0
         && checked_fresh > 0
         && ingestions_serving == 1
         && report.served() as u64 + report.rejected == queries as u64
+        && report.served() as u64 == report.cache_hits + report.cache_misses
         && epochs_ok
         && structure_ok
         && arc_counts_ok
@@ -387,6 +412,7 @@ pub fn run_mutate(p: usize, seed: u64, backend: &str, quick: bool) -> MutateSumm
         ingestions_serving,
         final_epoch: report.graph_epoch,
         post_mutation_queries,
+        cache_hits: report.cache_hits,
         all_valid,
     }
 }
@@ -397,13 +423,14 @@ mod tests {
 
     #[test]
     fn run_mutate_sim_quick_is_valid() {
-        let s = run_mutate(2, 7, "sim", true);
+        let s = run_mutate(2, 7, "sim", true, false, false);
         assert_eq!(s.mismatches_replay, 0);
         assert_eq!(s.mismatches_fresh, 0);
         assert!(s.checked_fresh > 0);
         assert_eq!(s.ingestions_serving, 1);
         assert_eq!(s.final_epoch, 4);
         assert!(s.post_mutation_queries > 0, "mutations must land mid-stream");
+        assert_eq!(s.cache_hits, 0);
         assert!(s.all_valid);
     }
 }

@@ -45,9 +45,16 @@ pub struct ServeSummary {
     pub mismatches: usize,
     /// Ingestion passes this run performed (must be exactly 1).
     pub ingestions: u64,
+    /// Queries served from the result cache (0 with `--cache` off).
+    pub cache_hits: u64,
+    /// Queries served by engine execution.
+    pub cache_misses: u64,
+    /// Engine passes with >= 2 lanes (0 with `--fuse` off).
+    pub fused_waves: usize,
     pub all_valid: bool,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn run_serve(
     p: usize,
     queries: usize,
@@ -55,6 +62,8 @@ pub fn run_serve(
     batch: usize,
     seed: u64,
     backend: &str,
+    fuse: bool,
+    cache: bool,
 ) -> ServeSummary {
     assert!(p >= 1, "need at least one machine");
     assert!(queries >= 1, "need at least one query");
@@ -64,7 +73,7 @@ pub fn run_serve(
     println!(
         "\n## repro serve — online {{BFS,SSSP,PR,CC,BC}} Zipf stream on the reused engine: \
          BA graph n={} m={}, P={p}, {queries} queries, zipf {zipf_s}, batch {batch}, \
-         seed {seed}, backend {backend}\n",
+         seed {seed}, backend {backend}, fuse {fuse}, cache {cache}\n",
         g.n,
         g.m()
     );
@@ -72,7 +81,11 @@ pub fn run_serve(
     // ONE ingestion for the whole process; both engines (serving +
     // cross-check reference) are built from clones of this placement.
     let dg = ingest_once(&g, p, cost, Placement::Spread);
-    let cfg = ServeConfig { batch, ..ServeConfig::default() };
+    let cfg = ServeConfig { batch, fuse, cache, ..ServeConfig::default() };
+    // The reference stays fusion- and cache-free: it re-executes every
+    // query single-shot, so a served result is always compared against a
+    // fresh computation, never against a stored copy of itself.
+    let ref_cfg = ServeConfig { batch, ..ServeConfig::default() };
     let mut reference = Server::new(
         SpmdEngine::from_ingested(
             Cluster::new(p, cost),
@@ -82,7 +95,7 @@ pub fn run_serve(
             "serve-sim-ref",
             QueryShard::new,
         ),
-        cfg,
+        ref_cfg,
     );
     let hot = hot_source_order(&reference.engine().meta().out_deg);
     let stream = generate_stream(
@@ -225,6 +238,18 @@ pub fn run_serve(
     if let Some(note) = pool_note {
         println!("{note}");
     }
+    let fused_waves = report.waves.iter().filter(|w| w.lanes >= 2).count();
+    let max_lanes = report.waves.iter().map(|w| w.lanes).max().unwrap_or(0);
+    println!(
+        "dispatch: {} engine passes for {} served queries — {} fused waves (max {} lanes), \
+         {} cache hits / {} misses",
+        report.waves.len(),
+        report.served(),
+        fused_waves,
+        max_lanes,
+        report.cache_hits,
+        report.cache_misses,
+    );
     let ingested = ingestions() - ing0;
     println!(
         "ingestions this run: {ingested} (one shared placement; engines cloned from it, \
@@ -233,7 +258,8 @@ pub fn run_serve(
 
     let all_valid = mismatches == 0
         && ingested == 1
-        && report.served() as u64 + report.rejected == queries as u64;
+        && report.served() as u64 + report.rejected == queries as u64
+        && report.served() as u64 == report.cache_hits + report.cache_misses;
     println!(
         "\nserve {}",
         if all_valid {
@@ -247,6 +273,9 @@ pub fn run_serve(
         rejected: report.rejected,
         mismatches,
         ingestions: ingested,
+        cache_hits: report.cache_hits,
+        cache_misses: report.cache_misses,
+        fused_waves,
         all_valid,
     }
 }
@@ -257,10 +286,23 @@ mod tests {
 
     #[test]
     fn run_serve_sim_smoke_is_valid() {
-        let s = run_serve(2, 6, 1.5, 4, 7, "sim");
+        let s = run_serve(2, 6, 1.5, 4, 7, "sim", false, false);
         assert_eq!(s.mismatches, 0);
         assert_eq!(s.ingestions, 1);
         assert!(s.all_valid);
         assert_eq!(s.served as u64 + s.rejected, 6);
+        assert_eq!(s.cache_hits, 0, "cache off: every served query is a miss");
+        assert_eq!(s.fused_waves, 0, "fusion off: every wave is a single query");
+    }
+
+    #[test]
+    fn run_serve_sim_fused_cached_smoke_is_valid() {
+        // Same stream served through fusion + memoization must still
+        // cross-check bit-for-bit against the single-shot reference.
+        let s = run_serve(2, 12, 1.5, 4, 7, "sim", true, true);
+        assert_eq!(s.mismatches, 0);
+        assert_eq!(s.ingestions, 1);
+        assert!(s.all_valid);
+        assert_eq!(s.served as u64, s.cache_hits + s.cache_misses);
     }
 }

@@ -1,0 +1,145 @@
+//! Epoch-keyed result memoization for the serving layer.
+//!
+//! Zipf-skewed streams repeat hot sources constantly; because every
+//! query on this engine is bit-deterministic given (kind, source, flags,
+//! PR iteration count, graph epoch), a result computed once can be
+//! replayed for every later identical query at **zero** engine cost —
+//! the ROADMAP's "memoized serving" attack.  The key design points:
+//!
+//! * **Epoch in the key** ([`CacheKey::epoch`], PR 6's `graph_epoch`):
+//!   a stale entry can never match a post-mutation probe, so serving a
+//!   pre-mutation result after an epoch bump is *structurally*
+//!   impossible, not merely avoided.  [`ResultCache::retain_epoch`]
+//!   additionally evicts non-current entries — a mutated graph never
+//!   comes back, so stale rows are pure memory waste.
+//! * **Canonical sources** ([`canonical_source`]): CC and PR ignore the
+//!   query source, so all their queries share one entry per epoch.
+//! * **Dispatch-only** consultation: the server probes the cache when a
+//!   batch member comes up for dispatch; [`super::Server::run_query`]
+//!   itself never touches it, so the single-shot path the reverse-order
+//!   cross-checks re-execute can never validate a result against a
+//!   cached copy of itself (`tests/serve_cache.rs` pins this).
+
+use crate::det::{det_map, DetMap};
+use crate::graph::flags::Flags;
+use crate::graph::Vid;
+use crate::workload::QueryKind;
+
+/// Full result identity of one served query.  Two queries with equal
+/// keys produce bit-identical results, so replaying the stored bits is
+/// exact, not approximate.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct CacheKey {
+    pub kind: QueryKind,
+    /// Canonicalized via [`canonical_source`] (0 for source-independent
+    /// kinds), so equivalent queries share an entry.
+    pub source: Vid,
+    /// The engine's whole policy block: results are a function of it.
+    pub flags: Flags,
+    /// PR iteration count — part of result identity for PR (harmless
+    /// constant in the key for every other kind).
+    pub pr_iters: usize,
+    /// Graph epoch the result was computed against — the invalidation
+    /// hook: a mutation bumps the epoch, and no pre-bump key can match
+    /// a post-bump probe.
+    pub epoch: u64,
+}
+
+/// The source a result actually depends on: CC labels and PageRank
+/// scores are global (source-free) computations, so every source maps
+/// to one shared entry; the traversal kinds keep their real source.
+pub fn canonical_source(kind: QueryKind, source: Vid) -> Vid {
+    match kind {
+        QueryKind::Cc | QueryKind::Pr => 0,
+        QueryKind::Bfs | QueryKind::Sssp | QueryKind::Bc => source,
+    }
+}
+
+/// Deterministic result store (fixed-seed hashing like every map in
+/// this crate, though nothing iterates it — lookups only).
+pub struct ResultCache {
+    entries: DetMap<CacheKey, Vec<u64>>,
+}
+
+impl ResultCache {
+    pub fn new() -> Self {
+        ResultCache { entries: det_map() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &CacheKey) -> Option<&Vec<u64>> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: CacheKey, bits: Vec<u64>) {
+        self.entries.insert(key, bits);
+    }
+
+    /// Evict everything not at `epoch` — called on every epoch bump, so
+    /// an invalidation drops *exactly* the stale entries (hot current
+    /// entries survive untouched).
+    pub fn retain_epoch(&mut self, epoch: u64) {
+        self.entries.retain(|k, _| k.epoch == epoch);
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(kind: QueryKind, source: Vid, epoch: u64) -> CacheKey {
+        CacheKey {
+            kind,
+            source: canonical_source(kind, source),
+            flags: Flags::tdo_gp(),
+            pr_iters: 5,
+            epoch,
+        }
+    }
+
+    #[test]
+    fn source_independent_kinds_share_one_entry() {
+        assert_eq!(key(QueryKind::Cc, 7, 0), key(QueryKind::Cc, 123, 0));
+        assert_eq!(key(QueryKind::Pr, 7, 0), key(QueryKind::Pr, 123, 0));
+        assert_ne!(key(QueryKind::Bfs, 7, 0), key(QueryKind::Bfs, 123, 0));
+        assert_ne!(key(QueryKind::Bc, 7, 0), key(QueryKind::Bc, 123, 0));
+    }
+
+    #[test]
+    fn epoch_and_flags_split_entries() {
+        assert_ne!(key(QueryKind::Bfs, 7, 0), key(QueryKind::Bfs, 7, 1));
+        let mut ablated = key(QueryKind::Bfs, 7, 0);
+        ablated.flags = Flags::gemini_like();
+        assert_ne!(key(QueryKind::Bfs, 7, 0), ablated);
+    }
+
+    #[test]
+    fn retain_epoch_drops_exactly_the_stale_entries() {
+        let mut c = ResultCache::new();
+        c.insert(key(QueryKind::Bfs, 1, 0), vec![1]);
+        c.insert(key(QueryKind::Bfs, 2, 0), vec![2]);
+        c.insert(key(QueryKind::Bfs, 1, 1), vec![3]);
+        assert_eq!(c.len(), 3);
+        c.retain_epoch(1);
+        assert_eq!(c.len(), 1, "both epoch-0 entries must go, the epoch-1 one stays");
+        assert_eq!(c.get(&key(QueryKind::Bfs, 1, 1)), Some(&vec![3]));
+        assert_eq!(c.get(&key(QueryKind::Bfs, 1, 0)), None);
+    }
+}

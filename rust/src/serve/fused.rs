@@ -1,0 +1,54 @@
+//! Fused batch dispatch: run a closed batch's same-kind exact queries
+//! as ONE multi-source engine wave instead of B back-to-back passes —
+//! the paper's batch-amortization idea applied to serving (ROADMAP's
+//! "multi-source fusion").  Query `l` of the wave becomes lane `l` of
+//! [`crate::graph::spmd::SpmdEngine::edge_map_lanes`]; the wave is
+//! priced once on the ledger-superstep clock, so a fused batch's
+//! `service_ticks` is the max-shaped cost of its slowest member rather
+//! than the sum of all members.
+
+use crate::exec::Substrate;
+use crate::graph::algorithms::{bfs_fused, cc_fused, sssp_fused};
+use crate::graph::spmd::SpmdEngine;
+use crate::graph::Vid;
+use crate::workload::QueryKind;
+
+use super::QueryShard;
+
+/// Kinds eligible for multi-source fusion: the exact-merge traversals
+/// (first-writer / `min`), whose fused bits provably equal their solo
+/// bits at every P on both backends.  PR and BC fold f64 sums, where
+/// lane sharing could regroup rounding — they dispatch singly (and
+/// still memoize, since their solo runs are bit-deterministic).
+pub fn fusable(kind: QueryKind) -> bool {
+    matches!(kind, QueryKind::Bfs | QueryKind::Sssp | QueryKind::Cc)
+}
+
+/// One fused wave on the serving engine: reset once, run every source
+/// as a lane, return canonically-encoded bits per member in input order
+/// — the exact encodings [`super::Server::run_query`] produces for the
+/// same kind, so fused results drop into the same cross-check and cache
+/// paths bit-for-bit.
+pub fn run_fused_wave<B: Substrate>(
+    engine: &mut SpmdEngine<B, QueryShard>,
+    kind: QueryKind,
+    sources: &[Vid],
+) -> Vec<Vec<u64>> {
+    assert!(fusable(kind), "{kind:?} queries cannot join a fused wave");
+    engine.reset_for_query(|m, meta, st: &mut QueryShard| st.fused.reset(m, meta));
+    match kind {
+        QueryKind::Bfs => bfs_fused(engine, sources)
+            .into_iter()
+            .map(|lane| lane.into_iter().map(|d| d as u64).collect())
+            .collect(),
+        QueryKind::Sssp => sssp_fused(engine, sources)
+            .into_iter()
+            .map(|lane| lane.into_iter().map(f64::to_bits).collect())
+            .collect(),
+        QueryKind::Cc => cc_fused(engine, sources.len())
+            .into_iter()
+            .map(|lane| lane.into_iter().map(|l| l as u64).collect())
+            .collect(),
+        QueryKind::Pr | QueryKind::Bc => unreachable!("gated by fusable() above"),
+    }
+}

@@ -52,6 +52,24 @@
 //! host — which is why the `repro loadcurve` sweeps plot *logical*
 //! goodput and latency and treat wall-clock as annotation.
 //!
+//! ## Fused waves and the result cache
+//!
+//! With [`ServeConfig::fuse`] on, a closed batch's same-kind **exact**
+//! queries (BFS/SSSP/CC — order-insensitive merges) dispatch as ONE
+//! multi-source `edge_map_lanes` wave ([`run_fused_wave`]): query `l`
+//! becomes lane `l`, the wave is priced once on the ledger clock, and
+//! each member's bits equal its solo single-shot run.  With
+//! [`ServeConfig::cache`] on, results memoize in a [`ResultCache`]
+//! keyed by `(kind, canonical source, flags, pr_iters, graph_epoch)`;
+//! the cache is consulted at **dispatch only** — never inside
+//! [`Server::run_query`], which stays the pure single-shot path every
+//! cross-check re-executes — and hits are served at zero service ticks.
+//! The epoch in the key makes stale hits structurally impossible under
+//! a mutating feed; an epoch bump also evicts the stale entries.  Both
+//! knobs default **off**, and the off-off dispatch loop is the exact
+//! per-query loop of PR 5 — schedules bit-identical.  Hit/miss counts
+//! and per-wave records surface in [`ServeReport`].
+//!
 //! ## Live mutation
 //!
 //! [`Server::run_source_mutating`] interleaves a
@@ -68,14 +86,20 @@
 //! graph, P) the full interleaving — epochs, waits, rejections, bits —
 //! is identical across runs and across substrates.
 
+pub mod cache;
+mod fused;
 mod server;
 
+pub use cache::{canonical_source, CacheKey, ResultCache};
+pub use fused::{fusable, run_fused_wave};
 pub use server::{
-    MutationRecord, QueryResult, ServeConfig, ServeReport, Server, DEFAULT_PR_ITERS,
+    MutationRecord, QueryResult, ServeConfig, ServeReport, Server, WaveRecord, DEFAULT_PR_ITERS,
 };
 
 use crate::bsp::MachineId;
-use crate::graph::algorithms::{BcShard, BfsShard, CcShard, PrShard, ShardAccess, SsspShard};
+use crate::graph::algorithms::{
+    BcShard, BfsShard, CcShard, FusedShard, PrShard, ShardAccess, SsspShard,
+};
 use crate::graph::spmd::GraphMeta;
 use crate::workload::QueryKind;
 
@@ -91,6 +115,9 @@ pub struct QueryShard {
     pub cc: CcShard,
     pub pr: PrShard,
     pub bc: BcShard,
+    /// Per-lane state for fused multi-source waves ([`run_fused_wave`]);
+    /// unconfigured (zero lanes) outside a fused dispatch.
+    pub fused: FusedShard,
 }
 
 impl QueryShard {
@@ -101,6 +128,7 @@ impl QueryShard {
             cc: CcShard::new(m, meta),
             pr: PrShard::new(m, meta),
             bc: BcShard::new(m, meta),
+            fused: FusedShard::new(m, meta),
         }
     }
 
@@ -113,6 +141,7 @@ impl QueryShard {
         self.cc.reset(m, meta);
         self.pr.reset(m, meta);
         self.bc.reset(m, meta);
+        self.fused.reset(m, meta);
     }
 
     /// Restore only the shard `kind` is about to run on.  Sufficient —
@@ -178,5 +207,15 @@ impl ShardAccess<BcShard> for QueryShard {
 
     fn shard_mut(&mut self) -> &mut BcShard {
         &mut self.bc
+    }
+}
+
+impl ShardAccess<FusedShard> for QueryShard {
+    fn shard(&self) -> &FusedShard {
+        &self.fused
+    }
+
+    fn shard_mut(&mut self) -> &mut FusedShard {
+        &mut self.fused
     }
 }

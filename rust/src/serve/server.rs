@@ -14,6 +14,8 @@ use crate::metrics::p50_p95_p99;
 use crate::mutate::MutationFeed;
 use crate::workload::{ArrivalSource, OpenLoopSource, Query, QueryKind};
 
+use super::cache::{canonical_source, CacheKey, ResultCache};
+use super::fused::{fusable, run_fused_wave};
 use super::QueryShard;
 
 /// PageRank iterations per PR query on the serving path (matches the
@@ -45,6 +47,15 @@ pub struct ServeConfig {
     /// deterministically, because ledger supersteps are a pure function
     /// of (graph, flags, P), never of the backend or the host.
     pub supersteps_per_tick: u64,
+    /// Fuse a closed batch's same-kind exact queries (BFS/SSSP/CC) into
+    /// one multi-source engine wave ([`super::run_fused_wave`]).  Off
+    /// (the default) dispatches every query singly — the exact pre-fusion
+    /// loop, schedule-bit-identical.
+    pub fuse: bool,
+    /// Memoize results in a [`ResultCache`] keyed by `(kind, canonical
+    /// source, flags, pr_iters, graph_epoch)` and serve repeats at zero
+    /// service ticks.  Off by default.
+    pub cache: bool,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +66,8 @@ impl Default for ServeConfig {
             queue_cap: 64,
             pr_iters: DEFAULT_PR_ITERS,
             supersteps_per_tick: 8,
+            fuse: false,
+            cache: false,
         }
     }
 }
@@ -84,6 +97,9 @@ pub struct QueryResult {
     /// graph; mutations apply only *between* dispatches, so one epoch
     /// fully identifies the snapshot this result was computed on).
     pub graph_epoch: u64,
+    /// Served from the result cache (zero service ticks, no engine
+    /// pass).  Always false with [`ServeConfig::cache`] off.
+    pub cached: bool,
 }
 
 impl QueryResult {
@@ -110,6 +126,24 @@ pub struct MutationRecord {
     pub service_ticks: u64,
 }
 
+/// One engine pass of a batch dispatch: a fused multi-source wave
+/// (`lanes >= 2`) or a single-query dispatch (`lanes == 1`).  Cache
+/// hits never appear here — they cost no engine pass.
+#[derive(Clone, Debug)]
+pub struct WaveRecord {
+    /// Batch sequence number the wave served members of.
+    pub batch: u64,
+    pub kind: QueryKind,
+    /// Member count (1 = unfused single dispatch).
+    pub lanes: usize,
+    /// Member query ids, in dispatch order.
+    pub query_ids: Vec<u64>,
+    /// Logical ticks the pass occupied the server — charged ONCE for
+    /// the whole wave and stamped on every member, so a fused batch's
+    /// total service is the max-shaped wave cost, not a member sum.
+    pub service_ticks: u64,
+}
+
 /// Outcome of a whole serving run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -126,6 +160,14 @@ pub struct ServeReport {
     pub graph_epoch: u64,
     /// Timeline of absorbed mutation batches (empty without a feed).
     pub mutations: Vec<MutationRecord>,
+    /// Queries served from the result cache (0 with the cache off).
+    pub cache_hits: u64,
+    /// Queries served by engine execution.  Invariant:
+    /// `served() == cache_hits + cache_misses` — with the cache off,
+    /// every served query counts as a miss.
+    pub cache_misses: u64,
+    /// One record per engine pass (fused or single), in dispatch order.
+    pub waves: Vec<WaveRecord>,
 }
 
 impl ServeReport {
@@ -211,6 +253,7 @@ impl ServeReport {
 pub struct Server<B: Substrate> {
     engine: SpmdEngine<B, QueryShard>,
     cfg: ServeConfig,
+    cache: ResultCache,
 }
 
 impl<B: Substrate> Server<B> {
@@ -219,7 +262,11 @@ impl<B: Substrate> Server<B> {
         assert!(cfg.queue_cap >= 1, "queue capacity must be >= 1");
         assert!(cfg.pr_iters >= 1, "PR needs at least one iteration");
         assert!(cfg.supersteps_per_tick >= 1, "the service clock needs a positive rate");
-        Server { engine, cfg }
+        Server {
+            engine,
+            cfg,
+            cache: ResultCache::new(),
+        }
     }
 
     pub fn engine(&self) -> &SpmdEngine<B, QueryShard> {
@@ -232,12 +279,48 @@ impl<B: Substrate> Server<B> {
         self.engine
     }
 
+    /// Current result-cache population (test/diagnostic surface).
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Flip the fusion/memoization knobs between runs on one long-lived
+    /// server.  Clears the cache, so an ON run after an OFF run starts
+    /// cold and A/B comparisons on the same server are fair.
+    pub fn set_policy(&mut self, fuse: bool, cache: bool) {
+        self.cfg.fuse = fuse;
+        self.cfg.cache = cache;
+        self.cache.clear();
+    }
+
+    /// Result identity of a query on THIS server at `epoch`: the key
+    /// canonicalizes the source and folds in the engine's whole flag
+    /// block plus the PR iteration budget.
+    fn cache_key(&self, kind: QueryKind, source: Vid, epoch: u64) -> CacheKey {
+        CacheKey {
+            kind,
+            source: canonical_source(kind, source),
+            flags: self.engine.flags,
+            pr_iters: self.cfg.pr_iters,
+            epoch,
+        }
+    }
+
+    /// One fused multi-source wave on the serving engine (the dispatch
+    /// loop's fused path, exposed for the bit-equality test wall).
+    pub fn run_fused(&mut self, kind: QueryKind, sources: &[Vid]) -> Vec<Vec<u64>> {
+        run_fused_wave(&mut self.engine, kind, sources)
+    }
+
     /// Execute one query on the reused engine: reset the shard its
     /// algorithm runs on (`QueryShard::reset_kind` — ingestion, relay
     /// trees and the worker pool stay), run the algorithm, encode the
     /// result canonically.  This is also the "single-shot" path the
     /// cross-checks use — a reset engine is bit-equivalent to a fresh
-    /// one.
+    /// one.  It NEVER consults the result cache (memoization lives at
+    /// dispatch, in [`Server::run_source_mutating`]), so a reference
+    /// re-execution through this path can never be satisfied by a cached
+    /// copy of the very result it is meant to verify.
     pub fn run_query(&mut self, q: &Query) -> Vec<u64> {
         let kind = q.kind;
         self.engine
@@ -377,8 +460,11 @@ impl<B: Substrate> Server<B> {
         let mut pending: VecDeque<Query> = VecDeque::new();
         let mut results: Vec<QueryResult> = Vec::new();
         let mut mutations: Vec<MutationRecord> = Vec::new();
+        let mut waves: Vec<WaveRecord> = Vec::new();
         let mut rejected = 0u64;
         let mut batches = 0u64;
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
         let mut tick = 0u64;
         let t0 = Instant::now();
         loop {
@@ -395,41 +481,123 @@ impl<B: Substrate> Server<B> {
             let draining = source.done() && !pending.is_empty();
             if full || overdue || draining {
                 // ---- close a batch (composition fixed now) and serve
-                //      its queries one by one on the logical clock ----
+                //      it wave by wave on the logical clock.  With both
+                //      knobs off every wave is a single query, and this
+                //      loop is the per-query dispatch loop verbatim ----
                 let take = pending.len().min(cfg.batch);
                 let batch_seq = batches;
                 batches += 1;
-                for _ in 0..take {
+                let mut members: VecDeque<Query> = pending.drain(..take).collect();
+                while !members.is_empty() {
                     // Epoch barrier: deltas that fell due during the
-                    // previous query's service window apply here,
+                    // previous wave's service window apply here,
                     // BETWEEN dispatches — never inside one.
                     self.apply_due_mutations(feed, &mut tick, &mut mutations);
-                    let q = pending.pop_front().expect("batch drew from an empty queue");
-                    let wait_ticks = tick - q.arrival;
-                    let graph_epoch = self.engine.graph_epoch();
+                    let epoch = self.engine.graph_epoch();
+                    if cfg.cache {
+                        // Mutations never un-apply, so entries from any
+                        // earlier epoch can never hit again — evict.
+                        self.cache.retain_epoch(epoch);
+                        // Serve every remaining member with a memoized
+                        // result NOW, at zero service ticks: replaying
+                        // stored bits costs no engine pass and the
+                        // logical clock does not move.
+                        let mut missed: VecDeque<Query> = VecDeque::new();
+                        while let Some(q) = members.pop_front() {
+                            let key = self.cache_key(q.kind, q.source, epoch);
+                            let Some(bits) = self.cache.get(&key) else {
+                                missed.push_back(q);
+                                continue;
+                            };
+                            cache_hits += 1;
+                            let res = QueryResult {
+                                id: q.id,
+                                kind: q.kind,
+                                source: q.source,
+                                bits: bits.clone(),
+                                wait_ticks: tick - q.arrival,
+                                service_ticks: 0,
+                                service_ms: 0.0,
+                                batch: batch_seq,
+                                graph_epoch: epoch,
+                                cached: true,
+                            };
+                            source.on_complete(q.id, tick);
+                            observe(&res, &self.engine);
+                            results.push(res);
+                        }
+                        members = missed;
+                        if members.is_empty() {
+                            break;
+                        }
+                    }
+                    // ---- form one engine wave: the head member alone,
+                    //      or (fusion on, exact kind) every same-kind
+                    //      member of the batch as lanes ----
+                    let kind = members.front().expect("checked nonempty").kind;
+                    let wave: Vec<Query> = if cfg.fuse && fusable(kind) {
+                        let mut wave = Vec::new();
+                        let mut rest = VecDeque::new();
+                        for q in members.drain(..) {
+                            if q.kind == kind {
+                                wave.push(q);
+                            } else {
+                                rest.push_back(q);
+                            }
+                        }
+                        members = rest;
+                        wave
+                    } else {
+                        vec![members.pop_front().expect("checked nonempty")]
+                    };
+                    let dispatch_tick = tick;
                     let s0 = self.engine.sub().ledger_supersteps();
                     let ts = Instant::now();
-                    let bits = self.run_query(&q);
+                    let bits_per: Vec<Vec<u64>> = if wave.len() >= 2 {
+                        let sources: Vec<Vid> = wave.iter().map(|q| q.source).collect();
+                        run_fused_wave(&mut self.engine, kind, &sources)
+                    } else {
+                        vec![self.run_query(&wave[0])]
+                    };
                     let service_ms = ts.elapsed().as_secs_f64() * 1e3;
                     let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
-                    let service_ticks = steps.div_ceil(cfg.supersteps_per_tick).max(1);
-                    tick += service_ticks;
-                    let res = QueryResult {
-                        id: q.id,
-                        kind: q.kind,
-                        source: q.source,
-                        bits,
-                        wait_ticks,
-                        service_ticks,
-                        service_ms,
+                    // The whole wave is priced ONCE — this is the
+                    // amortization: lanes share every superstep, so a
+                    // fused batch costs its max-shaped wave, not the sum
+                    // of B solo runs.
+                    let wave_ticks = steps.div_ceil(cfg.supersteps_per_tick).max(1);
+                    tick += wave_ticks;
+                    waves.push(WaveRecord {
                         batch: batch_seq,
-                        graph_epoch,
-                    };
-                    source.on_complete(q.id, tick);
-                    observe(&res, &self.engine);
-                    results.push(res);
+                        kind,
+                        lanes: wave.len(),
+                        query_ids: wave.iter().map(|q| q.id).collect(),
+                        service_ticks: wave_ticks,
+                    });
+                    for (q, bits) in wave.into_iter().zip(bits_per) {
+                        cache_misses += 1;
+                        if cfg.cache {
+                            let key = self.cache_key(q.kind, q.source, epoch);
+                            self.cache.insert(key, bits.clone());
+                        }
+                        let res = QueryResult {
+                            id: q.id,
+                            kind: q.kind,
+                            source: q.source,
+                            bits,
+                            wait_ticks: dispatch_tick - q.arrival,
+                            service_ticks: wave_ticks,
+                            service_ms,
+                            batch: batch_seq,
+                            graph_epoch: epoch,
+                            cached: false,
+                        };
+                        source.on_complete(q.id, tick);
+                        observe(&res, &self.engine);
+                        results.push(res);
+                    }
                     // ---- pipelined admission: arrivals that landed
-                    //      during this query's service window ----
+                    //      during this wave's service window ----
                     Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
                 }
                 // Re-evaluate immediately: the queue may already hold a
@@ -485,6 +653,9 @@ impl<B: Substrate> Server<B> {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             graph_epoch: self.engine.graph_epoch(),
             mutations,
+            cache_hits,
+            cache_misses,
+            waves,
         }
     }
 }

@@ -1,0 +1,250 @@
+//! The result-memoization wall (PR 7 tentpole, part b):
+//!
+//! 1. Repeated hot queries hit: the hit count equals the stream's repeat
+//!    count (total minus distinct cache keys — CC/PR collapse onto one
+//!    canonical key each), hits carry `cached` and zero service ticks.
+//! 2. Cache-on and cache-off runs of the same stream serve bit-identical
+//!    results.
+//! 3. Under a mutating feed ([`Server::run_source_mutating`]), an epoch
+//!    bump invalidates exactly the stale entries: every hit is backed by
+//!    a same-epoch miss with identical bits (a pre-mutation result can
+//!    never be served post-epoch), every result — hit or miss — matches
+//!    a reference engine built at exactly its epoch, and repeats that
+//!    span a bump are re-executed, then hit again at the new epoch.
+//! 4. Regression (the `repro mutate` reference-walk fix):
+//!    [`Server::run_query`] NEVER consults or fills the cache, so a
+//!    reverse-order reference walk can never validate a result against a
+//!    cached copy of itself.
+
+use tdorch::graph::gen;
+use tdorch::graph::ingest::DistGraph;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::graph::{Graph, Vid};
+use tdorch::mutate::{generate_mutations, MutationConfig, MutationFeed};
+use tdorch::serve::{canonical_source, QueryShard, ServeConfig, Server};
+use tdorch::workload::{hot_source_order, OpenLoopSource, Query, QueryKind};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+fn query(id: u64, kind: QueryKind, source: Vid, arrival: u64) -> Query {
+    Query { id, kind, source, arrival }
+}
+
+fn server(g: &Graph, cache: bool) -> Server<Cluster> {
+    Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(2, cost()), g, cost(), QueryShard::new),
+        ServeConfig { batch: 4, cache, ..ServeConfig::default() },
+    )
+}
+
+/// A burst stream with known repeats: 5 distinct cache keys in 10
+/// queries (CC and PR queries share one canonical key each regardless of
+/// their nominal source).
+fn repeat_stream() -> Vec<Query> {
+    vec![
+        query(0, QueryKind::Bfs, 3, 0),
+        query(1, QueryKind::Bfs, 3, 0),
+        query(2, QueryKind::Cc, 1, 0),
+        query(3, QueryKind::Sssp, 7, 0),
+        query(4, QueryKind::Cc, 200, 0),
+        query(5, QueryKind::Bfs, 3, 0),
+        query(6, QueryKind::Pr, 0, 0),
+        query(7, QueryKind::Sssp, 7, 0),
+        query(8, QueryKind::Pr, 150, 0),
+        query(9, QueryKind::Bc, 5, 0),
+    ]
+}
+
+#[test]
+fn repeated_queries_hit_exactly_repeat_count_times() {
+    let g = gen::barabasi_albert(400, 5, 11);
+    let mut srv = server(&g, true);
+    let rep = srv.run(&repeat_stream());
+    assert_eq!(rep.served(), 10, "queue cap 64 sheds nothing here");
+    // 10 queries, 5 distinct keys {BFS@3, CC, SSSP@7, PR, BC@5}: ids
+    // 1, 4, 5, 7, 8 are repeats and must ALL hit — 4 and 8 via source
+    // canonicalization (CC/PR ignore their nominal source).
+    assert_eq!(rep.cache_hits, 5, "hit count must equal the stream's repeat count");
+    assert_eq!(rep.cache_misses, 5, "one miss per distinct key");
+    assert_eq!(srv.cache_len(), 5, "one entry per distinct key");
+    for r in &rep.results {
+        let expect_hit = matches!(r.id, 1 | 4 | 5 | 7 | 8);
+        assert_eq!(r.cached, expect_hit, "query {}: wrong cache outcome", r.id);
+        if r.cached {
+            assert_eq!(r.service_ticks, 0, "query {}: hits cost no service", r.id);
+            assert_eq!(r.service_ms, 0.0, "query {}: hits run no engine pass", r.id);
+        }
+    }
+}
+
+#[test]
+fn cache_on_and_off_serve_identical_bits() {
+    let g = gen::barabasi_albert(400, 5, 13);
+    let rep_on = server(&g, true).run(&repeat_stream());
+    let rep_off = server(&g, false).run(&repeat_stream());
+    assert_eq!(rep_off.cache_hits, 0);
+    assert_eq!(rep_on.served(), rep_off.served());
+    for (a, b) in rep_on.results.iter().zip(&rep_off.results) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.bits, b.bits, "query {}: memoization changed the bits", a.id);
+    }
+}
+
+#[test]
+fn epoch_bump_invalidates_stale_entries_and_never_serves_old_bits() {
+    let g = gen::barabasi_albert(400, 5, 17);
+    let p = 2;
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    // Repeats of three hot keys, one arrival per tick, spanning both
+    // mutation arrivals (ticks 4 and 14) — so the same key is cached,
+    // invalidated, recomputed and re-hit.
+    let kinds: [(QueryKind, Vid); 5] = [
+        (QueryKind::Bfs, 3),
+        (QueryKind::Sssp, 7),
+        (QueryKind::Cc, 1),
+        (QueryKind::Bfs, 3),
+        (QueryKind::Sssp, 7),
+    ];
+    let stream: Vec<Query> = (0..20)
+        .map(|i| {
+            let (kind, src) = kinds[i % kinds.len()];
+            query(i as u64, kind, src, i as u64)
+        })
+        .collect();
+    let batches = generate_mutations(
+        MutationConfig {
+            batches: 2,
+            ops_per_batch: 8,
+            insert_pct: 60,
+            zipf_s: 1.2,
+            start_tick: 4,
+            every_ticks: 10,
+        },
+        &g,
+        &hot,
+        23,
+    );
+    let mut srv = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost()),
+            dg.clone(),
+            cost(),
+            tdorch::graph::flags::Flags::tdo_gp(),
+            "cache-mutating",
+            QueryShard::new,
+        ),
+        ServeConfig { batch: 4, cache: true, ..ServeConfig::default() },
+    );
+    let rep = srv.run_source_mutating(
+        &mut OpenLoopSource::new(&stream),
+        &mut MutationFeed::new(batches.clone()),
+        |_r, _e| {},
+    );
+    assert_eq!(rep.graph_epoch, 2, "both delta batches must absorb");
+    assert_eq!(rep.served() as u64, rep.cache_hits + rep.cache_misses);
+
+    // (a) No hit ever crosses an epoch: every cached result must be
+    // backed by an EARLIER engine-executed result with the same key at
+    // the SAME epoch and identical bits.
+    for (i, r) in rep.results.iter().enumerate() {
+        if !r.cached {
+            continue;
+        }
+        let donor = rep.results[..i].iter().rev().find(|d| {
+            !d.cached
+                && d.kind == r.kind
+                && canonical_source(d.kind, d.source) == canonical_source(r.kind, r.source)
+                && d.graph_epoch == r.graph_epoch
+        });
+        let donor = donor.unwrap_or_else(|| {
+            panic!(
+                "query {}: hit at epoch {} with no same-epoch miss before it — \
+                 a stale entry was served",
+                r.id, r.graph_epoch
+            )
+        });
+        assert_eq!(donor.bits, r.bits, "query {}: hit bits differ from the donor's", r.id);
+    }
+
+    // (b) Ground truth: every result — hit or miss — matches a
+    // reference engine built at exactly its epoch (replayed placement,
+    // cache off; reverse walk as everywhere).
+    let mut dgs: Vec<DistGraph> = vec![dg];
+    for b in &batches {
+        let mut next = dgs.last().unwrap().clone();
+        next.apply_batch(b);
+        dgs.push(next);
+    }
+    let mut refs: Vec<Option<Server<Cluster>>> = (0..dgs.len()).map(|_| None).collect();
+    for r in rep.results.iter().rev() {
+        let e = r.graph_epoch as usize;
+        let srv = refs[e].get_or_insert_with(|| {
+            Server::new(
+                SpmdEngine::from_ingested(
+                    Cluster::new(p, cost()),
+                    dgs[e].clone(),
+                    cost(),
+                    tdorch::graph::flags::Flags::tdo_gp(),
+                    "cache-epoch-ref",
+                    QueryShard::new,
+                ),
+                ServeConfig { batch: 4, ..ServeConfig::default() },
+            )
+        });
+        let q = query(r.id, r.kind, r.source, 0);
+        assert_eq!(
+            srv.run_query(&q),
+            r.bits,
+            "query {} (epoch {}): served bits differ from that epoch's reference",
+            r.id,
+            r.graph_epoch
+        );
+    }
+
+    // (c) The bump really invalidated: some key cached at an earlier
+    // epoch was re-EXECUTED (a miss) after the bump, and the cache kept
+    // paying off afterwards (a hit at epoch > 0).
+    let recomputed = rep.results.iter().any(|r| {
+        !r.cached
+            && r.graph_epoch > 0
+            && rep.results.iter().any(|d| {
+                !d.cached
+                    && d.kind == r.kind
+                    && canonical_source(d.kind, d.source) == canonical_source(r.kind, r.source)
+                    && d.graph_epoch < r.graph_epoch
+            })
+    });
+    assert!(recomputed, "no repeated key was re-executed after an epoch bump");
+    assert!(
+        rep.results.iter().any(|r| r.cached && r.graph_epoch > 0),
+        "the cache must engage again at the new epoch"
+    );
+}
+
+#[test]
+fn run_query_never_touches_the_cache() {
+    // The `repro mutate` regression: the reverse-order reference walk
+    // re-executes served queries through `run_query`; if that path read
+    // or filled the cache, verification could compare a result against
+    // a stored copy of itself.  Even on a cache-enabled server,
+    // `run_query` must execute every call and leave the cache empty.
+    let g = gen::barabasi_albert(400, 5, 19);
+    let mut srv = server(&g, true);
+    let q = query(0, QueryKind::Bfs, 3, 0);
+    let resets0 = srv.engine().resets();
+    let first = srv.run_query(&q);
+    let second = srv.run_query(&q);
+    let third = srv.run_query(&q);
+    assert_eq!(first, second);
+    assert_eq!(second, third);
+    assert_eq!(
+        srv.engine().resets(),
+        resets0 + 3,
+        "every run_query call must re-execute on the engine, repeats included"
+    );
+    assert_eq!(srv.cache_len(), 0, "run_query must not populate the cache");
+}

@@ -1,0 +1,169 @@
+//! The fused-wave bit-equality wall (PR 7 tentpole, part a):
+//!
+//! 1. For every fusable kind (BFS, SSSP, CC), a multi-source fused wave
+//!    returns, lane by lane, EXACTLY the bits of a per-query single-shot
+//!    run — across P ∈ {1, 2, 8} and on both substrates (sim and
+//!    threaded), duplicate sources included.
+//! 2. A one-lane wave degenerates to today's single-shot path
+//!    bit-for-bit.
+//! 3. Through the serving loop, a mixed-kind batch splits into
+//!    single-kind waves: fusable kinds group, PR/BC stay solo, every
+//!    member's bits still match the reference.
+
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::flags::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::graph::{Graph, Vid};
+use tdorch::serve::{fusable, QueryShard, ServeConfig, Server};
+use tdorch::workload::{Query, QueryKind};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+fn query(id: u64, kind: QueryKind, source: Vid) -> Query {
+    Query { id, kind, source, arrival: 0 }
+}
+
+fn sim_server(g: &Graph, p: usize) -> Server<Cluster> {
+    Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(p, cost()), g, cost(), QueryShard::new),
+        ServeConfig::default(),
+    )
+}
+
+const EXACT_KINDS: [QueryKind; 3] = [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Cc];
+
+#[test]
+fn fused_lanes_bit_equal_single_shot_across_p_and_backends() {
+    let g = gen::barabasi_albert(500, 5, 11);
+    // A duplicate source (3 twice) on purpose: with the cache off the
+    // dispatch loop runs duplicates as duplicate lanes, so the engine
+    // path must make them bit-equal, not the memoization.
+    let sources: [Vid; 4] = [3, 41, 3, 199];
+    for p in [1usize, 2, 8] {
+        let dg = ingest_once(&g, p, cost(), Placement::Spread);
+        let mut sim = Server::new(
+            SpmdEngine::from_ingested(
+                Cluster::new(p, cost()),
+                dg.clone(),
+                cost(),
+                Flags::tdo_gp(),
+                "fusion-sim",
+                QueryShard::new,
+            ),
+            ServeConfig::default(),
+        );
+        let mut thr = Server::new(
+            SpmdEngine::from_ingested(
+                ThreadedCluster::new(p),
+                dg,
+                cost(),
+                Flags::tdo_gp(),
+                "fusion-threaded",
+                QueryShard::new,
+            ),
+            ServeConfig::default(),
+        );
+        let mut reference = sim_server(&g, p);
+        for kind in EXACT_KINDS {
+            assert!(fusable(kind));
+            let lanes_sim = sim.run_fused(kind, &sources);
+            let lanes_thr = thr.run_fused(kind, &sources);
+            assert_eq!(lanes_sim.len(), sources.len(), "one lane per source");
+            assert_eq!(
+                lanes_sim, lanes_thr,
+                "P={p} {kind:?}: fused bits diverged between backends"
+            );
+            for (lane, &src) in lanes_sim.iter().zip(&sources) {
+                let solo = reference.run_query(&query(0, kind, src));
+                assert_eq!(
+                    lane, &solo,
+                    "P={p} {kind:?} source {src}: fused lane != single-shot bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn one_lane_wave_degenerates_to_the_single_shot_path() {
+    let g = gen::barabasi_albert(400, 5, 13);
+    let mut server = sim_server(&g, 2);
+    let mut reference = sim_server(&g, 2);
+    for kind in EXACT_KINDS {
+        let fused = server.run_fused(kind, &[17]);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(
+            fused[0],
+            reference.run_query(&query(0, kind, 17)),
+            "{kind:?}: a single-lane wave must reproduce the solo path bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn mixed_kind_batch_splits_into_single_kind_waves() {
+    let g = gen::barabasi_albert(400, 5, 17);
+    let mut server = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
+        ServeConfig { batch: 8, queue_cap: 16, fuse: true, ..ServeConfig::default() },
+    );
+    let mut reference = sim_server(&g, 2);
+    // One burst batch mixing all five kinds, with repeats of the
+    // fusable ones scattered between other kinds.
+    let stream = vec![
+        query(0, QueryKind::Bfs, 3),
+        query(1, QueryKind::Pr, 0),
+        query(2, QueryKind::Bfs, 41),
+        query(3, QueryKind::Sssp, 7),
+        query(4, QueryKind::Bc, 11),
+        query(5, QueryKind::Cc, 0),
+        query(6, QueryKind::Sssp, 99),
+        query(7, QueryKind::Bfs, 120),
+    ];
+    let rep = server.run(&stream);
+    assert_eq!(rep.served(), 8);
+    assert_eq!(rep.batches, 1, "one burst, one batch");
+    // Head-of-line grouping: BFS gathers its three members, then the
+    // non-fusable PR runs solo, then SSSP gathers two, BC solo, and the
+    // lone CC is a one-lane wave.
+    let shape: Vec<(QueryKind, usize)> = rep.waves.iter().map(|w| (w.kind, w.lanes)).collect();
+    assert_eq!(
+        shape,
+        vec![
+            (QueryKind::Bfs, 3),
+            (QueryKind::Pr, 1),
+            (QueryKind::Sssp, 2),
+            (QueryKind::Bc, 1),
+            (QueryKind::Cc, 1),
+        ],
+        "mixed batch must split into single-kind waves in head order"
+    );
+    for w in &rep.waves {
+        for id in &w.query_ids {
+            assert_eq!(
+                stream[*id as usize].kind, w.kind,
+                "wave of kind {:?} holds query {id} of another kind",
+                w.kind
+            );
+        }
+        assert!(
+            fusable(w.kind) || w.lanes == 1,
+            "{:?} is not fusable and must never share a wave",
+            w.kind
+        );
+    }
+    // And the split changed no bits: every member still equals its
+    // single-shot reference (reverse order, as everywhere).
+    for r in rep.results.iter().rev() {
+        assert_eq!(
+            r.bits,
+            reference.run_query(&stream[r.id as usize]),
+            "query {} diverged through the mixed-batch split",
+            r.id
+        );
+    }
+}

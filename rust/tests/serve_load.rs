@@ -17,7 +17,7 @@
 //! 4. The closed loop rides the same clock: sim == threaded schedules,
 //!    and a population no larger than the queue cap is never shed.
 
-use tdorch::exec::ThreadedCluster;
+use tdorch::exec::{Substrate, ThreadedCluster};
 use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
@@ -296,4 +296,125 @@ fn service_clock_is_ledger_supersteps_over_rate() {
         assert!(a.service_ticks > 1, "query {} consumed no ledger supersteps?", a.id);
     }
     assert!(slow.ticks > fast.ticks, "total span scales with the service clock");
+}
+
+// ---- ServeReport accounting under fusion + memoization (PR 7) ----
+
+#[test]
+fn served_is_exactly_hits_plus_misses_and_waves_cover_every_miss() {
+    let g = gen::barabasi_albert(500, 5, 7);
+    let mut server = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
+        ServeConfig { fuse: true, cache: true, ..cfg() },
+    );
+    let hot = hot_source_order(&server.engine().meta().out_deg);
+    // A hot Zipf stream so the cache actually engages.
+    let stream = generate_stream(stream_cfg(32, 2, 1), &hot, 5);
+    let rep = server.run(&stream);
+    assert_eq!(
+        rep.served() as u64,
+        rep.cache_hits + rep.cache_misses,
+        "every served query is exactly one of hit or miss"
+    );
+    assert!(rep.cache_hits > 0, "a Zipf stream with CC/PR in the mix must repeat a key");
+    let cached = rep.results.iter().filter(|r| r.cached).count() as u64;
+    assert_eq!(cached, rep.cache_hits, "the cached flag and the hit counter must agree");
+    for r in &rep.results {
+        if r.cached {
+            assert_eq!(r.service_ticks, 0, "query {}: a hit costs no service", r.id);
+        } else {
+            assert!(r.service_ticks >= 1, "query {}: a miss occupies the engine", r.id);
+        }
+    }
+    // Waves partition the misses: every engine-executed query sits in
+    // exactly one wave, and hits sit in none.
+    let lanes_total: usize = rep.waves.iter().map(|w| w.lanes).sum();
+    assert_eq!(lanes_total as u64, rep.cache_misses);
+    let mut ids: Vec<u64> = rep.waves.iter().flat_map(|w| w.query_ids.clone()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, rep.cache_misses, "no query appears in two waves");
+    // And with both knobs off, the same stream is all misses, no waves
+    // wider than one lane.
+    let mut plain = sim_server(&g, 2);
+    let rep0 = plain.run(&stream);
+    assert_eq!(rep0.cache_hits, 0);
+    assert_eq!(rep0.cache_misses, rep0.served() as u64);
+    assert!(rep0.waves.iter().all(|w| w.lanes == 1));
+}
+
+#[test]
+fn rejection_monotonicity_survives_fusion() {
+    // The overload ramp of `overload_rejections_grow...`, served with
+    // fusion ON (cache off, to isolate fusion's effect on the schedule):
+    // shedding must still be nondecreasing in offered load.
+    let g = gen::barabasi_albert(500, 5, 7);
+    let mut server = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
+        ServeConfig { fuse: true, ..cfg() },
+    );
+    let hot = hot_source_order(&server.engine().meta().out_deg);
+    let mut rejected = Vec::new();
+    for (per_tick, every_ticks) in [(1usize, 16u64), (1, 1), (4, 1)] {
+        let stream = generate_stream(stream_cfg(32, per_tick, every_ticks), &hot, 5);
+        let rep = server.run(&stream);
+        assert_eq!(rep.served() as u64 + rep.rejected, 32);
+        rejected.push(rep.rejected);
+    }
+    assert!(
+        rejected.windows(2).all(|w| w[0] <= w[1]),
+        "fused rejections must be nondecreasing in offered load: {rejected:?}"
+    );
+    assert!(rejected[2] > 0, "4 q/tick against a cap-8 queue must still shed");
+}
+
+#[test]
+fn fused_wave_ticks_never_exceed_sum_of_single_shot_ticks() {
+    // The amortization inequality: a fused wave's service_ticks is at
+    // most the sum its members would have cost dispatched one by one
+    // (lanes share every superstep, so per-round cost is the max over
+    // lanes, not the sum).  Measured, not assumed: each member is
+    // re-run single-shot on a reference engine and priced by the same
+    // ledger-delta formula.
+    let g = gen::barabasi_albert(500, 5, 23);
+    let p = 2;
+    let scfg = ServeConfig { fuse: true, ..cfg() };
+    let mut server = Server::new(
+        SpmdEngine::tdo_gp(Cluster::new(p, cost()), &g, cost(), QueryShard::new),
+        scfg,
+    );
+    let mut reference = sim_server(&g, p);
+    let hot = hot_source_order(&server.engine().meta().out_deg);
+    // Single-kind streams guarantee max-width waves for every fusable
+    // kind; the deadline burst pattern closes full batches.
+    for (kind_mix, label) in [
+        (QueryMix { bfs: 1, sssp: 0, pr: 0, cc: 0, bc: 0 }, "bfs"),
+        (QueryMix { bfs: 0, sssp: 1, pr: 0, cc: 0, bc: 0 }, "sssp"),
+        (QueryMix { bfs: 0, sssp: 0, pr: 0, cc: 1, bc: 0 }, "cc"),
+    ] {
+        let stream = generate_stream(
+            StreamConfig { queries: 8, per_tick: 4, every_ticks: 1, zipf_s: 1.5, mix: kind_mix },
+            &hot,
+            31,
+        );
+        let rep = server.run(&stream);
+        let fused: Vec<_> = rep.waves.iter().filter(|w| w.lanes >= 2).collect();
+        assert!(!fused.is_empty(), "{label}: a single-kind burst must form a fused wave");
+        for w in &fused {
+            let mut single_sum = 0u64;
+            for id in &w.query_ids {
+                let s0 = reference.engine().sub().ledger_supersteps();
+                reference.run_query(&stream[*id as usize]);
+                let steps = reference.engine().sub().ledger_supersteps() - s0;
+                single_sum += steps.div_ceil(scfg.supersteps_per_tick).max(1);
+            }
+            assert!(
+                w.service_ticks <= single_sum,
+                "{label}: a {}-lane wave cost {} ticks but its members cost {} solo",
+                w.lanes,
+                w.service_ticks,
+                single_sum
+            );
+        }
+    }
 }

@@ -32,6 +32,11 @@ struct StepAccum {
     recv: Vec<u64>,
     work: Vec<u64>,
     msgs: Vec<u64>,
+    /// Cross-machine messages *sent* per machine, unfactored — the ledger
+    /// message count the flight recorder reports.  Kept separate from
+    /// `msgs`, which is an overhead-*time* quantity (both endpoints pay,
+    /// scaled by `msg_factor`) and therefore not backend-comparable.
+    sent_msgs: Vec<u64>,
     dirty: bool,
 }
 
@@ -42,6 +47,7 @@ impl StepAccum {
             recv: vec![0; p],
             work: vec![0; p],
             msgs: vec![0; p],
+            sent_msgs: vec![0; p],
             dirty: false,
         }
     }
@@ -51,6 +57,7 @@ impl StepAccum {
         self.recv.fill(0);
         self.work.fill(0);
         self.msgs.fill(0);
+        self.sent_msgs.fill(0);
         self.dirty = false;
     }
 }
@@ -65,6 +72,9 @@ pub struct Cluster {
     /// Per-message overhead units charged to both endpoints of each
     /// accounted message (1 = packed item; [`RPC_MSG_FACTOR`] = RPC).
     msg_factor: u64,
+    /// Attached flight recorder, if any.  `None` (the default) skips all
+    /// event work — the observer is zero-cost when disabled.
+    observer: Option<crate::obs::ObserverHandle>,
 }
 
 impl Cluster {
@@ -76,6 +86,7 @@ impl Cluster {
             metrics: Metrics::new(p),
             step: StepAccum::new(p),
             msg_factor: 1,
+            observer: None,
         }
     }
 
@@ -88,6 +99,16 @@ impl Cluster {
     /// threaded backend whatever the factor.
     pub fn set_msg_factor(&mut self, factor: u64) {
         self.msg_factor = factor.max(1);
+    }
+
+    /// Attach (or detach) a flight recorder.  While attached, every
+    /// *ledger* superstep (the `dirty` ones — empty barriers still record
+    /// nothing, on either backend) emits one
+    /// [`crate::obs::EventKind::Superstep`] carrying this step's
+    /// per-machine work, sent/received words, and unfactored sent-message
+    /// counts, with no wall annotation (the simulator has no wall).
+    pub fn set_observer(&mut self, obs: Option<crate::obs::ObserverHandle>) {
+        self.observer = obs;
     }
 
     /// Charge `units` of local work to machine `m` in the current superstep.
@@ -118,6 +139,7 @@ impl Cluster {
         // scales it for unbatchable RPCs (see `set_msg_factor`).
         self.step.msgs[from] += self.msg_factor;
         self.step.msgs[to] += self.msg_factor;
+        self.step.sent_msgs[from] += 1;
         self.metrics.total_words += words;
         self.metrics.total_msgs += 1;
         self.step.dirty = true;
@@ -148,6 +170,20 @@ impl Cluster {
             self.metrics.sent_by_machine[m] += self.step.sent[m];
             self.metrics.recv_by_machine[m] += self.step.recv[m];
             self.metrics.work_by_machine[m] += self.step.work[m];
+        }
+        if let Some(obs) = &self.observer {
+            // Emitted per ledger step only (the early-return above skips
+            // empty barriers), with the step's per-machine ledger slice —
+            // the exact quantities the threaded backend's driver fold
+            // records, so the streams compare bit for bit.
+            obs.lock().unwrap().record_superstep(
+                self.metrics.supersteps,
+                self.step.work.clone(),
+                self.step.sent.clone(),
+                self.step.recv.clone(),
+                self.step.sent_msgs.clone(),
+                None,
+            );
         }
         self.step.reset();
     }
@@ -274,6 +310,33 @@ mod tests {
         b.account_msg(1, 0, 3);
         b.barrier();
         assert!((b.metrics.time.overhead - (RPC_MSG_FACTOR as f64 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observer_records_ledger_steps_only_with_unfactored_counts() {
+        use crate::obs::{EventKind, FlightRecorder};
+        let mut c = Cluster::new(2, unit_cost());
+        let rec = FlightRecorder::shared(64);
+        c.set_observer(Some(rec.clone()));
+        c.barrier(); // empty: no ledger step, no event
+        c.set_msg_factor(RPC_MSG_FACTOR); // must not leak into the event
+        c.account_msg(0, 1, 3);
+        c.work(1, 5);
+        c.barrier();
+        let r = rec.lock().unwrap();
+        assert_eq!(r.len(), 1, "one event per ledger superstep");
+        let e = r.events().next().unwrap();
+        match &e.kind {
+            EventKind::Superstep { step, work, sent_words, recv_words, sent_msgs } => {
+                assert_eq!(*step, 1);
+                assert_eq!(work, &vec![0, 5]);
+                assert_eq!(sent_words, &vec![3, 0]);
+                assert_eq!(recv_words, &vec![0, 3]);
+                assert_eq!(sent_msgs, &vec![1, 0], "unfactored, from-side only");
+            }
+            other => panic!("expected Superstep, got {:?}", other),
+        }
+        assert!(e.wall.is_none(), "the simulator never annotates wall time");
     }
 
     #[test]

@@ -91,6 +91,20 @@ pub trait Substrate {
     /// cross-backend bit-equality is unaffected.
     fn set_msg_factor(&mut self, _factor: u64) {}
 
+    /// Attach (or detach, with `None`) a flight recorder.  While one is
+    /// attached, the substrate records one
+    /// [`crate::obs::EventKind::Superstep`] per **ledger** superstep —
+    /// same dirty condition, same per-machine ledger quantities, same
+    /// call-site semantics on both backends — so the deterministic event
+    /// stream is bit-identical between the simulator and the threaded
+    /// pool.  The threaded backend additionally annotates each event
+    /// with measured per-machine busy nanoseconds (never compared).
+    ///
+    /// Default is a no-op: a substrate that doesn't observe ignores the
+    /// handle, and with no recorder attached both implementations skip
+    /// all event work (zero cost when disabled).
+    fn set_observer(&mut self, _obs: Option<crate::obs::ObserverHandle>) {}
+
     /// Ledger supersteps completed so far — supersteps in which at least
     /// one machine charged work or sent a cross-machine message (both
     /// backends skip empty ones under exactly this condition).  The
@@ -135,6 +149,10 @@ impl Substrate for Cluster {
 
     fn set_msg_factor(&mut self, factor: u64) {
         Cluster::set_msg_factor(self, factor);
+    }
+
+    fn set_observer(&mut self, obs: Option<crate::obs::ObserverHandle>) {
+        Cluster::set_observer(self, obs);
     }
 
     fn ledger_supersteps(&self) -> u64 {

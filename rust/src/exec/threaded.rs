@@ -164,11 +164,15 @@ pub struct PoolSnapshot {
 }
 
 impl PoolSnapshot {
-    /// Counters accumulated between `earlier` and `self`.  Saturating:
-    /// `epochs` is monotone for the pool's lifetime, but `busy_ns`
-    /// derives from the busy clocks, which
+    /// Counters accumulated between `earlier` and `self`.  Saturating on
+    /// BOTH fields: `epochs` is monotone for the pool's lifetime, but
+    /// `busy_ns` derives from the busy clocks, which
     /// [`ThreadedCluster::reset_metrics`] zeroes — a snapshot taken
-    /// before a reset would otherwise underflow the diff.
+    /// before a reset would otherwise underflow the diff.  An `earlier`
+    /// argument that is actually *ahead* of `self` (snapshots swapped, or
+    /// taken across a reset) therefore yields zeros, never a wrapped
+    /// garbage delta — pinned by
+    /// `snapshot_since_saturates_when_earlier_is_ahead`.
     pub fn since(&self, earlier: PoolSnapshot) -> PoolSnapshot {
         PoolSnapshot {
             epochs: self.epochs.saturating_sub(earlier.epochs),
@@ -180,13 +184,19 @@ impl PoolSnapshot {
     /// `wall_ns` nanoseconds: `busy_ns / (wall_ns * p)`.  1.0 means every
     /// worker computed or communicated for the whole window; the serving
     /// load curves report it per sweep point to show where the pool — as
-    /// opposed to the admission queue — saturates.  NaN when the window
-    /// is empty (nothing to attribute).
+    /// opposed to the admission queue — saturates.
+    ///
+    /// Edge cases (pinned by `busy_fraction_bounds`): a zero-width window
+    /// (`wall_ns == 0`), zero machines, or a `wall_ns * p` product that
+    /// saturates `u64::MAX` all make the denominator degenerate and
+    /// return NaN — there is no window to attribute busy time to, and a
+    /// saturated denominator would silently *understate* utilization if
+    /// it were divided through.
     pub fn busy_fraction(&self, wall_ns: u64, p: usize) -> f64 {
-        let denom = wall_ns.saturating_mul(p as u64);
-        if denom == 0 {
-            return f64::NAN;
-        }
+        let denom = match wall_ns.checked_mul(p as u64) {
+            Some(0) | None => return f64::NAN,
+            Some(d) => d,
+        };
         self.busy_ns as f64 / denom as f64
     }
 }
@@ -216,6 +226,11 @@ pub struct ThreadedCluster {
     worker_epochs: Arc<Vec<AtomicU64>>,
     /// Driver-side count of completed epochs.
     epochs: u64,
+    /// Attached flight recorder, if any.  Emission happens on the DRIVER
+    /// thread only (in the report fold below), so the lock is never
+    /// contended and workers stay observer-free; `None` (the default)
+    /// skips all event work.
+    observer: Option<crate::obs::ObserverHandle>,
 }
 
 impl ThreadedCluster {
@@ -292,7 +307,19 @@ impl ThreadedCluster {
             panics,
             worker_epochs,
             epochs: 0,
+            observer: None,
         })
+    }
+
+    /// Attach (or detach) a flight recorder.  While attached, every
+    /// *ledger* superstep (same dirty condition as the simulator: work or
+    /// a cross-machine send) emits one
+    /// [`crate::obs::EventKind::Superstep`] whose deterministic core
+    /// carries the identical per-machine ledger slice the simulator
+    /// records, annotated here with measured per-machine busy
+    /// nanoseconds (compute + comm — never compared across backends).
+    pub fn set_observer(&mut self, obs: Option<crate::obs::ObserverHandle>) {
+        self.observer = obs;
     }
 
     /// Number of OS threads this cluster has ever spawned — exactly P for
@@ -384,6 +411,10 @@ struct CellIn<'a, St, Tin, Tout> {
 impl Substrate for ThreadedCluster {
     fn machines(&self) -> usize {
         self.p
+    }
+
+    fn set_observer(&mut self, obs: Option<crate::obs::ObserverHandle>) {
+        ThreadedCluster::set_observer(self, obs);
     }
 
     fn ledger_supersteps(&self) -> u64 {
@@ -549,6 +580,14 @@ impl Substrate for ThreadedCluster {
         let mut dirty = false;
         let mut max_compute_ns = 0u64;
         let mut max_comm_ns = 0u64;
+        // Per-machine slices for the flight recorder, collected only
+        // while observing — the unobserved fold does no extra work.
+        let observing = self.observer.is_some();
+        let mut step_work = Vec::with_capacity(if observing { p } else { 0 });
+        let mut step_sent = Vec::with_capacity(if observing { p } else { 0 });
+        let mut step_recv = Vec::with_capacity(if observing { p } else { 0 });
+        let mut step_msgs = Vec::with_capacity(if observing { p } else { 0 });
+        let mut step_busy = Vec::with_capacity(if observing { p } else { 0 });
         for (m, cell) in cells.into_iter().enumerate() {
             let WorkerReport {
                 acct,
@@ -574,12 +613,32 @@ impl Substrate for ThreadedCluster {
             max_compute_ns = max_compute_ns.max(compute_ns);
             max_comm_ns = max_comm_ns.max(comm_ns);
             dirty |= acct.work_units > 0 || sent_msgs > 0;
+            if observing {
+                step_work.push(acct.work_units);
+                step_sent.push(sent_words);
+                step_recv.push(recv_words);
+                step_msgs.push(sent_msgs);
+                step_busy.push(compute_ns + comm_ns);
+            }
             next.push(inbox);
         }
         if dirty {
             self.metrics.supersteps += 1;
             self.metrics.time.computation += max_compute_ns as f64 / 1e9;
             self.metrics.time.communication += max_comm_ns as f64 / 1e9;
+            if let Some(obs) = &self.observer {
+                // Ledger steps only — non-dirty epochs (the pool runs an
+                // epoch either way) emit nothing on BOTH backends, which
+                // is what keeps the event streams aligned.
+                obs.lock().unwrap().record_superstep(
+                    self.metrics.supersteps,
+                    step_work,
+                    step_sent,
+                    step_recv,
+                    step_msgs,
+                    Some(step_busy),
+                );
+            }
         }
         next
     }
@@ -828,6 +887,63 @@ mod tests {
         assert!((s.busy_fraction(1000, 1) - 0.5).abs() < 1e-12);
         assert!((s.busy_fraction(1000, 2) - 0.25).abs() < 1e-12);
         assert!(s.busy_fraction(0, 2).is_nan(), "empty window has no fraction");
+        assert!(s.busy_fraction(1000, 0).is_nan(), "zero machines has no fraction");
+        // A denominator that would overflow u64 is degenerate, not a
+        // silently tiny utilization: NaN, same as the empty window.
+        assert!(
+            s.busy_fraction(u64::MAX, 2).is_nan(),
+            "overflowing wall_ns * p must not understate utilization"
+        );
+    }
+
+    #[test]
+    fn snapshot_since_saturates_when_earlier_is_ahead() {
+        // Snapshots taken across a reset_metrics (or simply swapped by
+        // the caller) put `earlier` ahead of `self`: the diff saturates
+        // to zero on both fields instead of wrapping.
+        let behind = PoolSnapshot { epochs: 2, busy_ns: 100 };
+        let ahead = PoolSnapshot { epochs: 5, busy_ns: 900 };
+        assert_eq!(behind.since(ahead), PoolSnapshot { epochs: 0, busy_ns: 0 });
+        // The well-ordered direction still diffs exactly.
+        assert_eq!(ahead.since(behind), PoolSnapshot { epochs: 3, busy_ns: 800 });
+    }
+
+    #[test]
+    fn observer_streams_match_the_simulator_bit_for_bit() {
+        use crate::obs::FlightRecorder;
+        // The same three-superstep program as the ledger test above, with
+        // a recorder on each backend: the deterministic core streams must
+        // be identical, and only the threaded one carries wall notes.
+        let cost = crate::bsp::CostModel::paper_cluster();
+        let mut tc = ThreadedCluster::new(2);
+        let mut sim = crate::bsp::Cluster::new(2, cost);
+        let rec_t = FlightRecorder::shared(64);
+        let rec_s = FlightRecorder::shared(64);
+        Substrate::set_observer(&mut tc, Some(rec_t.clone()));
+        Substrate::set_observer(&mut sim, Some(rec_s.clone()));
+        let self_send = |m: usize, _st: &mut (), _in: Vec<u32>, _acct: &mut MachineAcct| {
+            vec![(m, 7u32)]
+        };
+        let work_only = |_m: usize, _st: &mut (), _in: Vec<u32>, acct: &mut MachineAcct| {
+            acct.work(3);
+            Vec::<(usize, u32)>::new()
+        };
+        let cross_send = |m: usize, _st: &mut (), _in: Vec<u32>, _acct: &mut MachineAcct| {
+            vec![((m + 1) % 2, 9u32)]
+        };
+        let mut st_t = vec![(); 2];
+        let mut st_s = vec![(); 2];
+        let _ = tc.superstep(&mut st_t, no_messages(2), self_send, |_| 2);
+        let _ = tc.superstep(&mut st_t, no_messages(2), work_only, |_| 2);
+        let _ = tc.superstep(&mut st_t, no_messages(2), cross_send, |_| 2);
+        let _ = sim.superstep(&mut st_s, no_messages(2), self_send, |_| 2);
+        let _ = sim.superstep(&mut st_s, no_messages(2), work_only, |_| 2);
+        let _ = sim.superstep(&mut st_s, no_messages(2), cross_send, |_| 2);
+        let (rt, rs) = (rec_t.lock().unwrap(), rec_s.lock().unwrap());
+        assert_eq!(rt.len(), 2, "self-send-only epoch records nothing");
+        assert_eq!(rt.det_stream(), rs.det_stream());
+        assert!(rt.events().all(|e| e.wall.is_some()), "threaded events carry busy ns");
+        assert!(rs.events().all(|e| e.wall.is_none()), "sim events never do");
     }
 
     #[test]

@@ -326,6 +326,15 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         &mut self.sub
     }
 
+    /// Attach (or detach) a flight recorder on the underlying substrate:
+    /// while attached, every ledger superstep this engine drives — query
+    /// passes and absorbed mutation batches alike — emits one
+    /// [`crate::obs::EventKind::Superstep`] with the per-machine ledger
+    /// slice (see [`crate::exec::Substrate::set_observer`]).
+    pub fn set_observer(&mut self, obs: Option<crate::obs::ObserverHandle>) {
+        self.sub.set_observer(obs);
+    }
+
     /// Consume the engine, returning the substrate (to read final
     /// metrics/wall-clock after the shards are no longer needed).
     pub fn into_sub(self) -> B {

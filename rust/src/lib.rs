@@ -42,6 +42,7 @@ pub mod graph;
 pub mod metatask;
 pub mod metrics;
 pub mod mutate;
+pub mod obs;
 pub mod orchestration;
 pub mod repro;
 pub mod rng;

@@ -38,6 +38,16 @@
 //!                                              serving traffic, every
 //!                                              result cross-checked at
 //!                                              its epoch; CI gate
+//! repro trace   [--quick] [--backend sim|threaded] [--threads P]
+//!               [--seed S] [--out DIR]         deterministic flight
+//!                                              recorder: replays the
+//!                                              mutating serve workload
+//!                                              on sim AND the requested
+//!                                              backend at P and P=1,
+//!                                              exit 1 unless the event
+//!                                              streams are bit-identical;
+//!                                              writes Chrome trace JSON +
+//!                                              work/words heatmap
 //! repro bench-snapshot [--out DIR] [--check] [--baseline DIR]
 //!                                              regenerate the committed
 //!                                              perf snapshots; --check
@@ -375,6 +385,21 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "trace" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            let out = args.out.clone().unwrap_or_else(|| "target/trace".to_string());
+            let summary = repro::trace::run_trace(p, args.seed, &args.backend, args.quick, &out);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
         "bench-snapshot" => {
             let out = args
                 .out
@@ -404,7 +429,7 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|bench-snapshot|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|trace|bench-snapshot|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
                  [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--fuse] [--cache] \
                  [--quick] [--out PATH] [--check] [--baseline DIR]"

@@ -84,6 +84,16 @@ impl Metrics {
         Self::imbalance(&self.work_by_machine)
     }
 
+    /// Per-superstep companion to the cumulative [`Metrics::imbalance`]
+    /// accessors: the max/mean factor of ONE superstep's per-machine
+    /// loads (the cumulative vectors above fold all steps together and
+    /// can hide a single hot step behind a balanced tail).  The flight
+    /// recorder's heatmap export reuses this for its per-step imbalance
+    /// column.
+    pub fn step_imbalance(step_loads: &[u64]) -> f64 {
+        Self::imbalance(step_loads)
+    }
+
     pub fn comm_imbalance(&self) -> f64 {
         let combined: Vec<u64> = self
             .sent_by_machine
@@ -220,6 +230,15 @@ mod tests {
     #[test]
     fn imbalance_of_empty_is_one() {
         assert_eq!(Metrics::imbalance(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn step_imbalance_is_per_step_max_over_mean() {
+        // One superstep where machine 0 does all 8 units: factor P.
+        assert!((Metrics::step_imbalance(&[8, 0, 0, 0]) - 4.0).abs() < 1e-12);
+        // An idle (all-zero) step is balanced by convention, like the
+        // cumulative accessor.
+        assert_eq!(Metrics::step_imbalance(&[0, 0, 0]), 1.0);
     }
 
     #[test]

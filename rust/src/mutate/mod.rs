@@ -40,6 +40,14 @@
 //! at that epoch (replayed placement for all five kinds; a true fresh
 //! ingest of the mutated graph for the placement-independent exact
 //! kinds BFS/SSSP/CC).
+//!
+//! **Observability.**  With a flight recorder attached
+//! (`Server::set_recorder`), every absorbed batch also records a
+//! deterministic [`crate::obs::EventKind::MutationApply`] event — the
+//! applied tick, op count, service ticks, and the epoch it bumped the
+//! engine to — interleaved in causal order with the queries' admission /
+//! wave / superstep events, so epoch bumps are visible in the same
+//! per-run trace the `repro trace` gate compares across backends.
 
 pub mod delta;
 pub mod stream;

@@ -1,0 +1,289 @@
+//! Exports for the flight recorder: Chrome trace-event JSON (load the
+//! file in `chrome://tracing` or <https://ui.perfetto.dev>), a
+//! per-(superstep, machine) work/words heatmap table, and the
+//! divergence probe `repro trace` gates on.
+//!
+//! JSON is hand-rolled like every other report in this crate — the
+//! trace-event format is flat arrays of small objects, well within
+//! `format!` territory.
+
+use std::fmt::Write as _;
+
+use crate::metrics::Metrics;
+use crate::obs::trace::{EventKind, FlightRecorder};
+
+/// Synthesized timeline unit for simulator runs, where a superstep has
+/// no wall width: each ledger step gets at least this many "µs" of lane
+/// width so the track stays readable.
+const MIN_STEP_US: u64 = 1;
+
+fn push_args_u64s(out: &mut String, pairs: &[(&str, u64)]) {
+    out.push('{');
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\":{}", k, v);
+    }
+    out.push('}');
+}
+
+/// Render the recorder as Chrome trace-event JSON:
+///
+/// * **pid 0** — one track (tid) per machine; every ledger superstep is
+///   a complete (`"ph":"X"`) slice.  On threaded runs the slice width is
+///   the machine's measured busy time for the step (ns → µs); simulator
+///   runs synthesize width from ledger work units so the deterministic
+///   trace still has visual shape.  Slice `args` carry the deterministic
+///   per-machine ledger quantities.
+/// * **pid 1** — the query-span track: one slice per query from
+///   admission tick to completion tick (logical-clock units), with kind,
+///   batch, queue depth at admission, and cache status in `args`.
+///
+/// Machine slices advance on a common cursor (steps are globally ordered
+/// barriers), so skew within a step shows up as ragged slice widths
+/// under one aligned start — exactly the hotspot picture the ROADMAP's
+/// adaptive-placement work needs.
+pub fn chrome_trace_json(rec: &FlightRecorder) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut emit = |line: String, out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&line);
+    };
+
+    let mut machines = 0usize;
+    let mut cursor: u64 = 0;
+    for e in rec.events() {
+        if let EventKind::Superstep { step, work, sent_words, recv_words, sent_msgs } = &e.kind {
+            machines = machines.max(work.len());
+            let busy = e.wall.as_ref().map(|w| &w.busy_ns);
+            let mut widest = MIN_STEP_US;
+            for m in 0..work.len() {
+                let dur = match busy {
+                    Some(b) => (b.get(m).copied().unwrap_or(0) / 1_000).max(MIN_STEP_US),
+                    None => work[m].max(MIN_STEP_US),
+                };
+                widest = widest.max(dur);
+                let mut line = format!(
+                    "{{\"name\":\"step {}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":",
+                    step, m, cursor, dur
+                );
+                push_args_u64s(
+                    &mut line,
+                    &[
+                        ("work", work[m]),
+                        ("sent_words", sent_words[m]),
+                        ("recv_words", recv_words[m]),
+                        ("sent_msgs", sent_msgs[m]),
+                    ],
+                );
+                line.push('}');
+                emit(line, &mut out, &mut first);
+            }
+            cursor += widest;
+        }
+    }
+
+    for s in rec.query_spans() {
+        let (Some(adm), Some(done)) = (s.admitted_tick, s.completed_tick) else {
+            continue; // overflowed ring: a partial span has no slice.
+        };
+        let mut line = format!(
+            "{{\"name\":\"{} q{}\",\"ph\":\"X\",\"pid\":1,\"tid\":0,\"ts\":{},\"dur\":{},\"args\":",
+            s.kind.label(),
+            s.query,
+            adm,
+            done.saturating_sub(adm).max(1)
+        );
+        push_args_u64s(
+            &mut line,
+            &[
+                ("query", s.query),
+                ("batch", s.batch.unwrap_or(0)),
+                ("queue_depth_at_admission", s.queue_depth_at_admission.unwrap_or(0) as u64),
+                ("wait_ticks", s.wait_ticks.unwrap_or(0)),
+                ("service_ticks", s.service_ticks.unwrap_or(0)),
+                ("cached", u64::from(s.cached)),
+            ],
+        );
+        line.push('}');
+        emit(line, &mut out, &mut first);
+    }
+
+    emit(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"args\":{\"name\":\"machines\"}}"
+            .to_string(),
+        &mut out,
+        &mut first,
+    );
+    emit(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"queries\"}}"
+            .to_string(),
+        &mut out,
+        &mut first,
+    );
+    for m in 0..machines {
+        emit(
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"machine {}\"}}}}",
+                m, m
+            ),
+            &mut out,
+            &mut first,
+        );
+    }
+    emit(
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\"args\":{\"name\":\"query spans\"}}"
+            .to_string(),
+        &mut out,
+        &mut first,
+    );
+
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Render the per-(superstep, machine) heatmap: one row per recorded
+/// ledger superstep, one `work/sent_words` cell per machine, and the
+/// step's work-imbalance factor (max/mean — [`Metrics::step_imbalance`])
+/// in the last column.  This is the table `repro trace` writes next to
+/// the Chrome JSON and previews on stdout.
+pub fn heatmap_table(rec: &FlightRecorder) -> String {
+    let machines = rec
+        .events()
+        .filter_map(|e| match &e.kind {
+            EventKind::Superstep { work, .. } => Some(work.len()),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(0);
+    let mut out = String::new();
+    let _ = write!(out, "{:>6}", "step");
+    for m in 0..machines {
+        let _ = write!(out, "  {:>14}", format!("m{} work/words", m));
+    }
+    let _ = writeln!(out, "  {:>9}", "imbalance");
+    for e in rec.events() {
+        if let EventKind::Superstep { step, work, sent_words, .. } = &e.kind {
+            let _ = write!(out, "{:>6}", step);
+            for m in 0..machines {
+                let cell = format!(
+                    "{}/{}",
+                    work.get(m).copied().unwrap_or(0),
+                    sent_words.get(m).copied().unwrap_or(0)
+                );
+                let _ = write!(out, "  {:>14}", cell);
+            }
+            let _ = writeln!(out, "  {:>9.3}", Metrics::step_imbalance(work));
+        }
+    }
+    out
+}
+
+/// First index where the two deterministic streams disagree, with both
+/// sides' lines (`"<end>"` for an exhausted stream).  `None` means the
+/// streams are bit-identical — the property `repro trace` gates on.
+pub fn first_divergence(a: &[String], b: &[String]) -> Option<(usize, String, String)> {
+    let n = a.len().max(b.len());
+    for i in 0..n {
+        let la = a.get(i).map(String::as_str).unwrap_or("<end>");
+        let lb = b.get(i).map(String::as_str).unwrap_or("<end>");
+        if la != lb {
+            return Some((i, la.to_string(), lb.to_string()));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{CloseReason, EventKind, FlightRecorder};
+    use crate::workload::QueryKind;
+
+    fn sample_recorder() -> FlightRecorder {
+        let mut rec = FlightRecorder::new();
+        rec.record(EventKind::Admit { tick: 0, query: 0, kind: QueryKind::Bfs, queue_depth: 1 });
+        rec.record(EventKind::BatchClose { tick: 1, batch: 0, size: 1, reason: CloseReason::Drain });
+        rec.record_superstep(1, vec![5, 2], vec![8, 0], vec![0, 8], vec![2, 0], None);
+        rec.record(EventKind::WaveDispatch {
+            tick: 1,
+            batch: 0,
+            kind: QueryKind::Bfs,
+            lanes: 1,
+            query_ids: vec![0],
+            service_ticks: 1,
+            epoch: 0,
+        });
+        rec.record(EventKind::QueryComplete {
+            tick: 2,
+            query: 0,
+            wait_ticks: 1,
+            service_ticks: 1,
+            cached: false,
+        });
+        rec
+    }
+
+    #[test]
+    fn chrome_trace_has_machine_and_span_tracks() {
+        let json = chrome_trace_json(&sample_recorder());
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("]}"));
+        assert!(json.contains("\"name\":\"step 1\""));
+        assert!(json.contains("\"pid\":0,\"tid\":1"), "one track per machine");
+        assert!(json.contains("\"name\":\"BFS q0\""), "query-span slice present");
+        assert!(json.contains("\"name\":\"machine 0\""));
+        assert!(json.contains("\"name\":\"query spans\""));
+        assert!(json.contains("\"work\":5"));
+    }
+
+    #[test]
+    fn sim_slices_synthesize_width_from_work_units() {
+        let json = chrome_trace_json(&sample_recorder());
+        // machine 0 did 5 work units → dur 5; machine 1 did 2 → dur 2.
+        assert!(json.contains("\"tid\":0,\"ts\":0,\"dur\":5"));
+        assert!(json.contains("\"tid\":1,\"ts\":0,\"dur\":2"));
+    }
+
+    #[test]
+    fn threaded_slices_use_busy_ns() {
+        let mut rec = FlightRecorder::new();
+        rec.record_superstep(1, vec![5, 2], vec![0, 0], vec![0, 0], vec![0, 0], Some(vec![9_000, 4_000]));
+        let json = chrome_trace_json(&rec);
+        assert!(json.contains("\"tid\":0,\"ts\":0,\"dur\":9"));
+        assert!(json.contains("\"tid\":1,\"ts\":0,\"dur\":4"));
+    }
+
+    #[test]
+    fn heatmap_rows_carry_work_words_and_imbalance() {
+        let table = heatmap_table(&sample_recorder());
+        let mut lines = table.lines();
+        let header = lines.next().unwrap();
+        assert!(header.contains("m0 work/words"));
+        assert!(header.contains("imbalance"));
+        let row = lines.next().unwrap();
+        assert!(row.contains("5/8"));
+        assert!(row.contains("2/0"));
+        // max 5 over mean 3.5 = 1.429 (work imbalance for the step).
+        assert!(row.contains("1.429"));
+    }
+
+    #[test]
+    fn first_divergence_reports_index_and_both_sides() {
+        let a: Vec<String> = ["x", "y", "z"].iter().map(|s| s.to_string()).collect();
+        let same = a.clone();
+        assert!(first_divergence(&a, &same).is_none());
+        let b: Vec<String> = ["x", "q", "z"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(first_divergence(&a, &b), Some((1, "y".to_string(), "q".to_string())));
+        let short: Vec<String> = ["x"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(
+            first_divergence(&a, &short),
+            Some((1, "y".to_string(), "<end>".to_string()))
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! `obs/` — the deterministic flight recorder.
+//!
+//! Observability here is another *enforceable* correctness surface, not
+//! best-effort logging: every recorded event splits into a deterministic
+//! core (logical clocks + ledger quantities, bit-identical between the
+//! simulator and the threaded pool at every P) and an optional
+//! wall-clock annotation (threaded only, never compared).  See
+//! [`trace`] for the event model and ring-buffer recorder, [`export`]
+//! for Chrome-trace JSON / heatmap rendering and the divergence probe
+//! the `repro trace` CI gate is built on.
+
+pub mod export;
+pub mod trace;
+
+pub use export::{chrome_trace_json, first_divergence, heatmap_table};
+pub use trace::{CloseReason, Event, EventKind, FlightRecorder, ObserverHandle, Span, WallNote};

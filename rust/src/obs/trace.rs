@@ -1,0 +1,498 @@
+//! The flight recorder: a bounded ring buffer of structured [`Event`]s
+//! covering both substrates and the whole serving pipeline.
+//!
+//! ## Determinism split
+//!
+//! Every event is two parts:
+//!
+//! * the **deterministic core** — [`Event::kind`], an [`EventKind`] of
+//!   logical-clock stamps and ledger quantities only (ticks, ledger
+//!   superstep indices, per-machine work/words/message counts, query
+//!   ids, epochs).  By the repo's determinism contract these are pure
+//!   functions of (graph, flags, config, P) — never of the backend or
+//!   the host — so the rendered core stream ([`FlightRecorder::det_stream`])
+//!   is **bit-identical** between the simulator and the threaded pool,
+//!   which `repro trace` enforces as an exit-1 gate.
+//! * an optional **wall-clock annotation** — [`Event::wall`], per-machine
+//!   busy nanoseconds.  Only the threaded backend produces it, and it is
+//!   *never* part of any comparison: it is carried alongside for the
+//!   Chrome-trace export, exactly like the `service_ms` field on a
+//!   `QueryResult`.
+//!
+//! ## Clock stamps
+//!
+//! Serving events carry the **logical service tick** they happened at.
+//! [`EventKind::Superstep`] events come from below the serving layer (the
+//! substrate's barrier) and carry the **ledger superstep index** instead —
+//! the very counter whose deltas *define* the service clock
+//! (`ServeConfig::supersteps_per_tick`), so the two stamp domains are two
+//! gears of the same deterministic clockwork.
+//!
+//! ## Ring buffer
+//!
+//! The recorder is bounded: when full, the **oldest** event is dropped
+//! (the newest tail of a run is what a post-mortem needs) and
+//! [`FlightRecorder::dropped`] counts the loss explicitly — truncation is
+//! visible, never silent.  Sequence numbers keep counting across drops,
+//! so surviving events still say where they sat in the full stream.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::workload::QueryKind;
+
+/// How a shared recorder travels: the driver thread of either substrate,
+/// the server, and the exporter all hold clones of one handle.  The lock
+/// is uncontended by construction — both backends emit from the driver
+/// thread only (the simulator at `barrier()`, the pool in the driver's
+/// report fold), never from workers.
+pub type ObserverHandle = Arc<Mutex<FlightRecorder>>;
+
+/// Default ring capacity — roomy enough that the CI trace workloads
+/// record loss-free, small enough to bound memory on long serving runs.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Why the server closed a batch ([`EventKind::BatchClose`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseReason {
+    /// `batch` pending queries accumulated.
+    Full,
+    /// The oldest pending query aged past `deadline_ticks`.
+    Overdue,
+    /// The source is exhausted; the partial batch drains.
+    Drain,
+}
+
+/// Wall-clock annotation (threaded backend only — see the module docs;
+/// never part of the deterministic core, never compared).
+#[derive(Clone, Debug)]
+pub struct WallNote {
+    /// Per-machine busy nanoseconds: for a [`EventKind::Superstep`], that
+    /// step's compute+comm window per machine; for a
+    /// [`EventKind::WaveDispatch`], the per-machine busy *delta* since the
+    /// previous dispatch (mutation-absorption supersteps included).
+    pub busy_ns: Vec<u64>,
+}
+
+/// The deterministic core of one recorded event.  `Debug` is the stable
+/// rendering [`FlightRecorder::det_stream`] compares across backends —
+/// every field is an integer or an integer vector, so the rendering has
+/// no float-formatting hazards.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// One ledger-counted superstep closed on the substrate.  `step` is
+    /// the ledger index *after* the step (1-based); the per-machine
+    /// vectors are that step's ledger contributions — work units, words
+    /// sent/received (self-sends excluded, as in the ledger), and
+    /// cross-machine messages sent (unfactored counts, never the
+    /// simulator's RPC-factored overhead units).
+    Superstep {
+        step: u64,
+        work: Vec<u64>,
+        sent_words: Vec<u64>,
+        recv_words: Vec<u64>,
+        sent_msgs: Vec<u64>,
+    },
+    /// A query entered the bounded admission queue; `queue_depth` is the
+    /// depth **after** the push (the span's queue-depth-at-admission).
+    Admit { tick: u64, query: u64, kind: QueryKind, queue_depth: usize },
+    /// A query was shed at the admission cap.
+    Reject { tick: u64, query: u64, kind: QueryKind },
+    /// A batch's composition was fixed (size-or-deadline policy).
+    BatchClose { tick: u64, batch: u64, size: usize, reason: CloseReason },
+    /// A member was served from the epoch-keyed result cache at zero
+    /// service ticks.
+    CacheHit { tick: u64, query: u64, batch: u64, epoch: u64 },
+    /// A member missed the cache (or ran with the cache off) and is about
+    /// to pay an engine pass at `tick`.
+    CacheMiss { tick: u64, query: u64, batch: u64, epoch: u64 },
+    /// One engine pass served `lanes` member(s) of `batch` — a fused
+    /// multi-source wave when `lanes >= 2`.  `tick` is the dispatch tick;
+    /// `service_ticks` the wave's ledger-priced cost.
+    WaveDispatch {
+        tick: u64,
+        batch: u64,
+        kind: QueryKind,
+        lanes: usize,
+        query_ids: Vec<u64>,
+        service_ticks: u64,
+        epoch: u64,
+    },
+    /// A query finished (cache hit or wave member) at `tick`.
+    QueryComplete { tick: u64, query: u64, wait_ticks: u64, service_ticks: u64, cached: bool },
+    /// A mutation batch was absorbed in place, bumping the graph epoch to
+    /// `epoch_after` — the epoch-bump event of the stream.
+    MutationApply { tick: u64, batch: u64, ops: usize, epoch_after: u64, service_ticks: u64 },
+}
+
+/// One recorded event: a monotone sequence number (counted across drops),
+/// the deterministic core, and the optional wall annotation.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: EventKind,
+    pub wall: Option<WallNote>,
+}
+
+/// A per-query lifecycle derived from the event stream: admitted →
+/// batch-closed → wave-dispatched (or cache-hit) → completed.  Stages an
+/// overflowed ring no longer holds are `None` — a partial span is honest
+/// about what survived.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub query: u64,
+    pub kind: QueryKind,
+    pub admitted_tick: Option<u64>,
+    /// Queue depth right after this query's admission.
+    pub queue_depth_at_admission: Option<usize>,
+    /// Batch the query was dispatched in.
+    pub batch: Option<u64>,
+    pub batch_closed_tick: Option<u64>,
+    /// Tick of the wave dispatch (for a cache hit: the hit tick).
+    pub dispatched_tick: Option<u64>,
+    pub completed_tick: Option<u64>,
+    pub wait_ticks: Option<u64>,
+    pub service_ticks: Option<u64>,
+    pub cached: bool,
+    /// Per-machine busy-ns delta of the wave that served this query
+    /// (threaded runs only; empty on the simulator and for cache hits).
+    pub wave_busy_ns: Vec<u64>,
+}
+
+impl Span {
+    fn blank(query: u64, kind: QueryKind) -> Self {
+        Span {
+            query,
+            kind,
+            admitted_tick: None,
+            queue_depth_at_admission: None,
+            batch: None,
+            batch_closed_tick: None,
+            dispatched_tick: None,
+            completed_tick: None,
+            wait_ticks: None,
+            service_ticks: None,
+            cached: false,
+            wave_busy_ns: Vec::new(),
+        }
+    }
+}
+
+/// The bounded ring-buffer recorder (see the module docs).
+pub struct FlightRecorder {
+    cap: usize,
+    events: VecDeque<Event>,
+    /// Next sequence number == total events ever recorded.
+    next_seq: u64,
+    /// Events evicted by the ring bound (oldest-first).
+    dropped: u64,
+    /// Per-machine busy ns accumulated from `Superstep` wall annotations
+    /// since the last `WaveDispatch` — drained onto that event as its
+    /// per-wave busy delta.  Stays empty on the simulator.
+    wave_busy: Vec<u64>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap >= 1, "the recorder needs room for at least one event");
+        FlightRecorder {
+            cap,
+            events: VecDeque::with_capacity(cap.min(1024)),
+            next_seq: 0,
+            dropped: 0,
+            wave_busy: Vec::new(),
+        }
+    }
+
+    /// A fresh recorder behind the shared handle both the substrate hook
+    /// ([`crate::exec::Substrate::set_observer`]) and the server
+    /// (`Server::set_recorder`) take.
+    pub fn shared(cap: usize) -> ObserverHandle {
+        Arc::new(Mutex::new(Self::with_capacity(cap)))
+    }
+
+    fn push(&mut self, kind: EventKind, wall: Option<WallNote>) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(Event { seq: self.next_seq, kind, wall });
+        self.next_seq += 1;
+    }
+
+    /// Record a serving-layer event.  A `WaveDispatch` drains the busy
+    /// accumulator onto its wall annotation (per-wave busy delta).
+    pub fn record(&mut self, kind: EventKind) {
+        let wall = match kind {
+            EventKind::WaveDispatch { .. } if !self.wave_busy.is_empty() => {
+                Some(WallNote { busy_ns: std::mem::take(&mut self.wave_busy) })
+            }
+            _ => None,
+        };
+        self.push(kind, wall);
+    }
+
+    /// Record one closed ledger superstep — the substrate-side emission
+    /// point (`Cluster::barrier`, the pool driver's report fold).
+    /// `busy_ns` is the threaded backend's per-machine wall window for
+    /// the step; the simulator passes `None`.
+    pub fn record_superstep(
+        &mut self,
+        step: u64,
+        work: Vec<u64>,
+        sent_words: Vec<u64>,
+        recv_words: Vec<u64>,
+        sent_msgs: Vec<u64>,
+        busy_ns: Option<Vec<u64>>,
+    ) {
+        if let Some(b) = &busy_ns {
+            if self.wave_busy.len() != b.len() {
+                self.wave_busy = vec![0; b.len()];
+            }
+            for (acc, x) in self.wave_busy.iter_mut().zip(b) {
+                *acc += *x;
+            }
+        }
+        self.push(
+            EventKind::Superstep { step, work, sent_words, recv_words, sent_msgs },
+            busy_ns.map(|b| WallNote { busy_ns: b }),
+        );
+    }
+
+    /// Events currently held (oldest surviving first).
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded, evicted ones included.
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Events evicted by the ring bound — the explicit loss counter.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The deterministic core stream, one stable line per surviving
+    /// event (wall annotations and sequence numbers excluded).  This is
+    /// the quantity `repro trace` and `tests/obs_trace.rs` compare
+    /// bit-for-bit between backends.
+    pub fn det_stream(&self) -> Vec<String> {
+        self.events.iter().map(|e| format!("{:?}", e.kind)).collect()
+    }
+
+    /// Fold the surviving events into per-query [`Span`]s, in order of
+    /// first appearance.
+    pub fn query_spans(&self) -> Vec<Span> {
+        let mut spans: Vec<Span> = Vec::new();
+        let mut by_id: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut close_ticks: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut slot = |spans: &mut Vec<Span>,
+                        by_id: &mut BTreeMap<u64, usize>,
+                        query: u64,
+                        kind: QueryKind|
+         -> usize {
+            *by_id.entry(query).or_insert_with(|| {
+                spans.push(Span::blank(query, kind));
+                spans.len() - 1
+            })
+        };
+        for e in &self.events {
+            match &e.kind {
+                EventKind::Admit { tick, query, kind, queue_depth } => {
+                    let i = slot(&mut spans, &mut by_id, *query, *kind);
+                    spans[i].admitted_tick = Some(*tick);
+                    spans[i].queue_depth_at_admission = Some(*queue_depth);
+                }
+                EventKind::BatchClose { tick, batch, .. } => {
+                    close_ticks.insert(*batch, *tick);
+                }
+                EventKind::CacheHit { tick, query, batch, .. } => {
+                    // Kind is unknown from the hit alone; the Admit (or
+                    // Complete) event for the same id supplies it — a
+                    // blank slot here defaults and is overwritten never,
+                    // so seed with Bfs only when the id was never seen.
+                    let i = slot(&mut spans, &mut by_id, *query, QueryKind::Bfs);
+                    spans[i].batch = Some(*batch);
+                    spans[i].dispatched_tick = Some(*tick);
+                    spans[i].cached = true;
+                }
+                EventKind::WaveDispatch { tick, batch, kind, query_ids, service_ticks, .. } => {
+                    let busy = e.wall.as_ref().map(|w| w.busy_ns.clone()).unwrap_or_default();
+                    for id in query_ids {
+                        let i = slot(&mut spans, &mut by_id, *id, *kind);
+                        spans[i].batch = Some(*batch);
+                        spans[i].dispatched_tick = Some(*tick);
+                        spans[i].service_ticks = Some(*service_ticks);
+                        spans[i].wave_busy_ns = busy.clone();
+                    }
+                }
+                EventKind::QueryComplete { tick, query, wait_ticks, service_ticks, cached } => {
+                    let i = slot(&mut spans, &mut by_id, *query, QueryKind::Bfs);
+                    spans[i].completed_tick = Some(*tick);
+                    spans[i].wait_ticks = Some(*wait_ticks);
+                    spans[i].service_ticks = Some(*service_ticks);
+                    spans[i].cached = *cached;
+                }
+                EventKind::Superstep { .. }
+                | EventKind::Reject { .. }
+                | EventKind::MutationApply { .. } => {}
+            }
+        }
+        for s in &mut spans {
+            s.batch_closed_tick = s.batch.and_then(|b| close_ticks.get(&b).copied());
+        }
+        spans
+    }
+
+    /// Discard every event and counter (capacity stays).
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.next_seq = 0;
+        self.dropped = 0;
+        self.wave_busy.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admit(tick: u64, query: u64) -> EventKind {
+        EventKind::Admit { tick, query, kind: QueryKind::Bfs, queue_depth: 1 }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_and_counts_drops() {
+        let mut rec = FlightRecorder::with_capacity(4);
+        for i in 0..10 {
+            rec.record(admit(i, i));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        assert_eq!(rec.recorded(), 10);
+        let seqs: Vec<u64> = rec.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "newest events survive, seq counted across drops");
+    }
+
+    #[test]
+    fn det_stream_excludes_wall_annotations() {
+        let mut a = FlightRecorder::new();
+        let mut b = FlightRecorder::new();
+        // Same deterministic core, one with a wall note (threaded), one
+        // without (sim): the rendered streams must still match.
+        a.record_superstep(1, vec![3, 0], vec![4, 0], vec![0, 4], vec![1, 0], None);
+        b.record_superstep(1, vec![3, 0], vec![4, 0], vec![0, 4], vec![1, 0], Some(vec![9, 7]));
+        assert_eq!(a.det_stream(), b.det_stream());
+        assert!(a.events().next().unwrap().wall.is_none());
+        assert_eq!(b.events().next().unwrap().wall.as_ref().unwrap().busy_ns, vec![9, 7]);
+    }
+
+    #[test]
+    fn wave_dispatch_drains_busy_deltas_since_last_dispatch() {
+        let mut rec = FlightRecorder::new();
+        rec.record_superstep(1, vec![1, 1], vec![0, 0], vec![0, 0], vec![0, 0], Some(vec![5, 2]));
+        rec.record_superstep(2, vec![1, 1], vec![0, 0], vec![0, 0], vec![0, 0], Some(vec![1, 3]));
+        rec.record(EventKind::WaveDispatch {
+            tick: 0,
+            batch: 0,
+            kind: QueryKind::Bfs,
+            lanes: 1,
+            query_ids: vec![0],
+            service_ticks: 1,
+            epoch: 0,
+        });
+        let wave = rec.events().last().unwrap();
+        assert_eq!(wave.wall.as_ref().unwrap().busy_ns, vec![6, 5]);
+        // The accumulator was drained: a second dispatch with no steps
+        // in between carries no annotation.
+        rec.record(EventKind::WaveDispatch {
+            tick: 1,
+            batch: 0,
+            kind: QueryKind::Bfs,
+            lanes: 1,
+            query_ids: vec![1],
+            service_ticks: 1,
+            epoch: 0,
+        });
+        assert!(rec.events().last().unwrap().wall.is_none());
+    }
+
+    #[test]
+    fn spans_assemble_the_lifecycle() {
+        let mut rec = FlightRecorder::new();
+        rec.record(EventKind::Admit { tick: 2, query: 7, kind: QueryKind::Sssp, queue_depth: 3 });
+        rec.record(EventKind::BatchClose {
+            tick: 4,
+            batch: 1,
+            size: 1,
+            reason: CloseReason::Overdue,
+        });
+        rec.record(EventKind::WaveDispatch {
+            tick: 5,
+            batch: 1,
+            kind: QueryKind::Sssp,
+            lanes: 1,
+            query_ids: vec![7],
+            service_ticks: 2,
+            epoch: 0,
+        });
+        rec.record(EventKind::QueryComplete {
+            tick: 7,
+            query: 7,
+            wait_ticks: 3,
+            service_ticks: 2,
+            cached: false,
+        });
+        let spans = rec.query_spans();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.query, 7);
+        assert_eq!(s.kind, QueryKind::Sssp);
+        assert_eq!(s.admitted_tick, Some(2));
+        assert_eq!(s.queue_depth_at_admission, Some(3));
+        assert_eq!(s.batch, Some(1));
+        assert_eq!(s.batch_closed_tick, Some(4));
+        assert_eq!(s.dispatched_tick, Some(5));
+        assert_eq!(s.completed_tick, Some(7));
+        assert_eq!((s.wait_ticks, s.service_ticks), (Some(3), Some(2)));
+        assert!(!s.cached);
+    }
+
+    #[test]
+    fn clear_resets_everything_but_capacity() {
+        let mut rec = FlightRecorder::with_capacity(2);
+        rec.record(admit(0, 0));
+        rec.record(admit(1, 1));
+        rec.record(admit(2, 2));
+        assert_eq!(rec.dropped(), 1);
+        rec.clear();
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+        assert_eq!(rec.recorded(), 0);
+        assert_eq!(rec.capacity(), 2);
+    }
+}

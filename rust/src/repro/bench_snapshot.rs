@@ -10,6 +10,13 @@
 //!   (per-point offered/served/rejected, tick-domain wait percentiles,
 //!   logical goodput).
 //!
+//! Both snapshots (schema v2) also pin flight-recorder counters: every
+//! graph key point carries its deterministic `trace_events` count (=
+//! dirty ledger supersteps), and the load-curve snapshot embeds a
+//! `trace` object of per-P event / wave / epoch-bump totals from
+//! [`super::trace::trace_det_json`] — all pure functions of (graph,
+//! config, seed, P), so they diff like every other deterministic field.
+//!
 //! Only **machine-normalized** quantities go into the `deterministic`
 //! object: everything in it is a pure function of (graph, flags, P,
 //! seed, config) in the cost/tick domain — never host wall-clock, which
@@ -38,11 +45,13 @@
 use crate::graph::gen;
 use crate::graph::algorithms::Algorithm;
 use crate::graph::spmd::SpmdEngine;
+use crate::obs::FlightRecorder;
 use crate::serve::QueryShard;
 use crate::{Cluster, CostModel};
 
 use super::graphs::run_alg;
 use super::loadcurve::{run_loadcurve, CurvePoint};
+use super::trace::trace_det_json;
 
 /// Repo-root snapshot file names (also the names written under `--out`).
 pub const GRAPH_FILE: &str = "BENCH_graph_wallclock.json";
@@ -104,13 +113,24 @@ fn graph_det_json() -> String {
     let g = gen::barabasi_albert(GRAPH_N, GRAPH_K, SEED);
     let mut points = Vec::new();
     for p in MACHINES {
+        // A flight recorder rides along so every key point also pins its
+        // deterministic event count (= dirty ledger supersteps, a pure
+        // function of (graph, flags, P)).  `recorded()` counts every
+        // record ever made, so the per-point delta is exact even if the
+        // ring were to wrap.
+        let rec = FlightRecorder::shared(crate::obs::trace::DEFAULT_CAPACITY);
         let mut engine = SpmdEngine::tdo_gp(Cluster::new(p, cost), &g, cost, QueryShard::new);
+        engine.set_observer(Some(rec.clone()));
+        let mut seen = 0u64;
         for alg in Algorithm::ALL {
             let (s, _) = run_alg(&mut engine, alg);
             let m = &engine.sub().metrics;
+            let recorded = rec.lock().unwrap().recorded();
+            let trace_events = recorded - seen;
+            seen = recorded;
             points.push(format!(
                 "{{\"label\":\"p{p}-{}\",\"sim_seconds\":{},\"supersteps\":{},\
-                 \"total_words\":{}}}",
+                 \"total_words\":{},\"trace_events\":{trace_events}}}",
                 alg.label().to_lowercase(),
                 jnum(s),
                 m.supersteps,
@@ -151,10 +171,13 @@ fn loadcurve_det_json(lc_out: &str) -> (String, bool) {
     let lc = run_loadcurve(2, SEED, "sim", true, lc_out);
     let open: Vec<String> = lc.open.iter().map(lc_point).collect();
     let closed: Vec<String> = lc.closed.iter().map(lc_point).collect();
+    // Trace summary counters (events / waves / epoch bumps per key
+    // point) are deterministic too, so they join the compared object.
     let det = format!(
-        "{{\"open\":[{}],\"closed\":[{}]}}",
+        "{{\"open\":[{}],\"closed\":[{}],\"trace\":{}}}",
         open.join(","),
-        closed.join(",")
+        closed.join(","),
+        trace_det_json(),
     );
     (det, lc.all_valid)
 }
@@ -175,8 +198,8 @@ pub fn run_bench_snapshot(out_dir: &str, baseline: Option<&str>) -> BenchSnapsho
     let graph_det = graph_det_json();
     let (lc_det, lc_valid) = loadcurve_det_json(&format!("{out_dir}/loadcurve-quick-sim.json"));
     let files = [
-        (GRAPH_FILE, "tdorch.bench.graph.v1", &graph_det),
-        (LOADCURVE_FILE, "tdorch.bench.loadcurve.v1", &lc_det),
+        (GRAPH_FILE, "tdorch.bench.graph.v2", &graph_det),
+        (LOADCURVE_FILE, "tdorch.bench.loadcurve.v2", &lc_det),
     ];
 
     let mut wrote = Vec::new();
@@ -272,6 +295,10 @@ mod tests {
         for p in MACHINES {
             assert!(a.contains(&format!("\"label\":\"p{p}-bfs\"")));
         }
+        assert!(
+            a.contains("\"trace_events\":"),
+            "every key point must pin its deterministic event count"
+        );
         assert!(!a.contains("null"), "every point must be finite");
     }
 

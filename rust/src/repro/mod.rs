@@ -10,6 +10,7 @@ pub mod kv;
 pub mod loadcurve;
 pub mod mutate;
 pub mod serve;
+pub mod trace;
 
 /// Geometric mean of positive values.
 pub fn geomean(xs: &[f64]) -> f64 {

@@ -1,0 +1,498 @@
+//! `repro trace` — the flight-recorder divergence gate and Chrome-trace
+//! exporter.
+//!
+//! Replays the `repro mutate` serving workload (a {BFS,SSSP,PR,CC,BC}
+//! Zipf stream interleaved with edge delta batches, fusion and the
+//! epoch-keyed cache both ON so every event kind is exercised) with a
+//! [`FlightRecorder`] attached, at the requested machine count AND at
+//! P=1, and on each leg runs the workload twice — once on the simulator,
+//! once on the requested backend — asserting the **deterministic event
+//! streams are bit-identical** line for line.  `--backend sim` compares
+//! two independent sim runs, pinning run-to-run determinism instead.
+//!
+//! On top of the stream equality, the recorder is cross-checked against
+//! the `ServeReport` it narrates: admit events == served queries, reject
+//! events == the rejection total AND the per-kind split, the deepest
+//! recorded admission depth == `max_queue_depth`, cache hit/miss events
+//! == the report counters, wave events == wave records (with total lanes
+//! == cache misses), mutation events == mutation records, and zero ring
+//! drops.  Any failure exits 1 (the CI gate).
+//!
+//! Artifacts (requested backend, requested P): `trace.json` — Chrome
+//! trace-event JSON for `chrome://tracing` / <https://ui.perfetto.dev> —
+//! and `heatmap.txt`, the per-(superstep, machine) work/words table.
+
+use std::fs;
+use std::path::Path;
+
+use crate::exec::{Substrate, ThreadedCluster};
+use crate::graph::flags::Flags;
+use crate::graph::gen;
+use crate::graph::ingest::{ingestions, DistGraph};
+use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use crate::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
+use crate::obs::{chrome_trace_json, first_divergence, heatmap_table, EventKind, FlightRecorder, ObserverHandle};
+use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryMix, StreamConfig,
+};
+use crate::{Cluster, CostModel};
+
+use super::TablePrinter;
+
+const FULL_N: usize = 8_000;
+const QUICK_N: usize = 2_000;
+const GRAPH_K: usize = 6;
+const FULL_QUERIES: usize = 64;
+const QUICK_QUERIES: usize = 24;
+const ARRIVALS_PER_TICK: usize = 2;
+const ZIPF_S: f64 = 1.5;
+
+fn mutation_cfg(quick: bool) -> MutationConfig {
+    MutationConfig {
+        batches: if quick { 4 } else { 8 },
+        ops_per_batch: if quick { 8 } else { 16 },
+        insert_pct: 60,
+        zipf_s: 1.2,
+        start_tick: 2,
+        every_ticks: 6,
+    }
+}
+
+/// Result of one `repro trace` invocation (consumed by main/tests).
+pub struct TraceSummary {
+    /// Machine counts compared (the requested P, plus 1 when distinct).
+    pub legs: Vec<usize>,
+    /// Events recorded on the requested backend at the requested P.
+    pub events: u64,
+    pub superstep_events: u64,
+    pub waves: u64,
+    /// Mutation-apply (epoch bump) events.
+    pub epoch_bumps: u64,
+    pub served: usize,
+    pub rejected: u64,
+    /// Legs whose sim/backend deterministic streams diverged.
+    pub divergences: usize,
+    /// Legs whose served result bits differed between the two runs.
+    pub bit_mismatches: usize,
+    /// Recorder-vs-report consistency failures across all legs.
+    pub consistency_failures: usize,
+    /// Ring-buffer drops across all recorders (must be 0).
+    pub dropped: u64,
+    /// Ingestion passes (must equal the number of legs — one per P).
+    pub ingestions: u64,
+    pub all_valid: bool,
+}
+
+/// Deterministic-stream side counts, folded from one recorder.
+#[derive(Default)]
+struct StreamStats {
+    events: u64,
+    supersteps: u64,
+    admits: u64,
+    rejects: u64,
+    rejects_by_kind: [u64; 5],
+    max_admit_depth: usize,
+    hits: u64,
+    misses: u64,
+    waves: u64,
+    wave_lanes: u64,
+    mutation_applies: u64,
+    last_epoch_after: u64,
+    completes: u64,
+}
+
+fn stats_of(rec: &FlightRecorder) -> StreamStats {
+    let mut s = StreamStats { events: rec.recorded(), ..StreamStats::default() };
+    for e in rec.events() {
+        match &e.kind {
+            EventKind::Superstep { .. } => s.supersteps += 1,
+            EventKind::Admit { queue_depth, .. } => {
+                s.admits += 1;
+                s.max_admit_depth = s.max_admit_depth.max(*queue_depth);
+            }
+            EventKind::Reject { kind, .. } => {
+                s.rejects += 1;
+                s.rejects_by_kind[kind.index()] += 1;
+            }
+            EventKind::CacheHit { .. } => s.hits += 1,
+            EventKind::CacheMiss { .. } => s.misses += 1,
+            EventKind::WaveDispatch { lanes, .. } => {
+                s.waves += 1;
+                s.wave_lanes += *lanes as u64;
+            }
+            EventKind::MutationApply { epoch_after, .. } => {
+                s.mutation_applies += 1;
+                s.last_epoch_after = *epoch_after;
+            }
+            EventKind::QueryComplete { .. } => s.completes += 1,
+            EventKind::BatchClose { .. } => {}
+        }
+    }
+    s
+}
+
+/// The recorder must narrate exactly the run the report summarizes.
+/// Returns the number of violated invariants (0 = consistent).
+fn consistency_failures(leg: usize, rec: &FlightRecorder, report: &ServeReport) -> usize {
+    let s = stats_of(rec);
+    let mut failures = 0usize;
+    let mut check = |ok: bool, what: &str| {
+        if !ok {
+            failures += 1;
+            eprintln!("INCONSISTENT (P={leg}): {what}");
+        }
+    };
+    check(s.admits == report.served() as u64, "admit events != served queries");
+    check(s.completes == report.served() as u64, "complete events != served queries");
+    check(s.rejects == report.rejected, "reject events != rejected total");
+    check(
+        s.rejects_by_kind == report.rejected_by_kind,
+        "per-kind reject events != rejected_by_kind",
+    );
+    check(
+        s.max_admit_depth == report.max_queue_depth,
+        "deepest recorded admission != max_queue_depth",
+    );
+    check(s.hits == report.cache_hits, "cache-hit events != cache_hits");
+    check(s.misses == report.cache_misses, "cache-miss events != cache_misses");
+    check(s.waves == report.waves.len() as u64, "wave events != wave records");
+    check(s.wave_lanes == report.cache_misses, "total wave lanes != cache_misses");
+    check(
+        s.mutation_applies == report.mutations.len() as u64,
+        "mutation events != mutation records",
+    );
+    check(
+        s.mutation_applies == 0 || s.last_epoch_after == report.graph_epoch,
+        "last epoch bump != final graph_epoch",
+    );
+    check(rec.dropped() == 0, "ring buffer dropped events (capacity too small)");
+    failures
+}
+
+/// One recorded serving run on one substrate: build the engine from the
+/// shared ingestion, attach a fresh recorder to both layers, serve the
+/// mutating workload.
+fn run_leg<B: Substrate>(
+    sub: B,
+    dg: DistGraph,
+    cost: CostModel,
+    label: &str,
+    serve_cfg: ServeConfig,
+    stream: &[Query],
+    batches: &[MutationBatch],
+) -> (ServeReport, ObserverHandle) {
+    let rec = FlightRecorder::shared(crate::obs::trace::DEFAULT_CAPACITY);
+    let mut server = Server::new(
+        SpmdEngine::from_ingested(sub, dg, cost, Flags::tdo_gp(), label, QueryShard::new),
+        serve_cfg,
+    );
+    server.set_recorder(Some(rec.clone()));
+    let report = server.run_source_mutating(
+        &mut OpenLoopSource::new(stream),
+        &mut MutationFeed::new(batches.to_vec()),
+        |_r, _e| {},
+    );
+    (report, rec)
+}
+
+/// Served results must be bit-identical between the two runs of a leg
+/// (same ids, same bits, same deterministic stamps).
+fn report_bits_match(a: &ServeReport, b: &ServeReport) -> bool {
+    a.results.len() == b.results.len()
+        && a.results.iter().zip(&b.results).all(|(x, y)| {
+            x.id == y.id
+                && x.bits == y.bits
+                && x.wait_ticks == y.wait_ticks
+                && x.service_ticks == y.service_ticks
+                && x.batch == y.batch
+                && x.graph_epoch == y.graph_epoch
+                && x.cached == y.cached
+        })
+}
+
+pub fn run_trace(p: usize, seed: u64, backend: &str, quick: bool, out_dir: &str) -> TraceSummary {
+    assert!(p >= 1, "need at least one machine");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
+    let n = if quick { QUICK_N } else { FULL_N };
+    let queries = if quick { QUICK_QUERIES } else { FULL_QUERIES };
+    let g = gen::barabasi_albert(n, GRAPH_K, seed);
+    let mcfg = mutation_cfg(quick);
+    let legs: Vec<usize> = if p == 1 { vec![1] } else { vec![p, 1] };
+    println!(
+        "\n## repro trace — deterministic flight recorder, sim vs {backend}: BA graph n={} \
+         m={}, P∈{legs:?}, {queries} queries (fuse+cache ON), {} delta batches × {} ops, \
+         seed {seed}\n",
+        g.n,
+        g.m(),
+        mcfg.batches,
+        mcfg.ops_per_batch,
+    );
+
+    let serve_cfg =
+        ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() };
+    let mut stream: Vec<Query> = Vec::new();
+    let mut batches: Vec<MutationBatch> = Vec::new();
+
+    let mut divergences = 0usize;
+    let mut bit_mismatches = 0usize;
+    let mut consistency = 0usize;
+    let mut dropped = 0u64;
+    let mut headline: Option<(StreamStats, ServeReport, ObserverHandle)> = None;
+
+    let t = TablePrinter::new(
+        &["P", "events", "supersteps", "waves", "epoch bumps", "served", "rejected", "stream"],
+        &[3, 7, 10, 5, 11, 6, 8, 10],
+    );
+    for (i, &pp) in legs.iter().enumerate() {
+        let dg = ingest_once(&g, pp, cost, Placement::Spread);
+        if i == 0 {
+            // The stream/feed are P-independent (hot order is a degree
+            // property of the graph); built once from the first leg.
+            let hot = hot_source_order(&dg.out_deg);
+            stream = generate_stream(
+                StreamConfig {
+                    queries,
+                    per_tick: ARRIVALS_PER_TICK,
+                    every_ticks: 1,
+                    zipf_s: ZIPF_S,
+                    mix: QueryMix::balanced(),
+                },
+                &hot,
+                seed,
+            );
+            batches = generate_mutations(mcfg, &g, &hot, seed.wrapping_add(1));
+        }
+        // Leg reference: always the simulator.  The comparison run is
+        // the requested backend — or a second, independent sim run when
+        // `--backend sim`, which pins run-to-run determinism.
+        let (report_a, rec_a) = run_leg(
+            Cluster::new(pp, cost),
+            dg.clone(),
+            cost,
+            "trace-sim",
+            serve_cfg,
+            &stream,
+            &batches,
+        );
+        let (report_b, rec_b) = if backend == "threaded" {
+            run_leg(
+                ThreadedCluster::new(pp),
+                dg,
+                cost,
+                "trace-threaded",
+                serve_cfg,
+                &stream,
+                &batches,
+            )
+        } else {
+            run_leg(Cluster::new(pp, cost), dg, cost, "trace-sim-2", serve_cfg, &stream, &batches)
+        };
+
+        let (stream_a, stream_b) = {
+            let (ra, rb) = (rec_a.lock().unwrap(), rec_b.lock().unwrap());
+            dropped += ra.dropped() + rb.dropped();
+            (ra.det_stream(), rb.det_stream())
+        };
+        let verdict = match first_divergence(&stream_a, &stream_b) {
+            None => "identical".to_string(),
+            Some((i, la, lb)) => {
+                divergences += 1;
+                eprintln!("DIVERGENCE (P={pp}) at event {i}:\n  sim:      {la}\n  {backend}: {lb}");
+                format!("DIVERGED@{i}")
+            }
+        };
+        if !report_bits_match(&report_a, &report_b) {
+            bit_mismatches += 1;
+            eprintln!("MISMATCH (P={pp}): served results differ between the two runs");
+        }
+        {
+            let rb = rec_b.lock().unwrap();
+            consistency += consistency_failures(pp, &rb, &report_b);
+        }
+        let s = stats_of(&rec_b.lock().unwrap());
+        t.row(&[
+            pp.to_string(),
+            s.events.to_string(),
+            s.supersteps.to_string(),
+            s.waves.to_string(),
+            s.mutation_applies.to_string(),
+            report_b.served().to_string(),
+            report_b.rejected.to_string(),
+            verdict,
+        ]);
+        if i == 0 {
+            headline = Some((s, report_b, rec_b));
+        }
+    }
+    let ingestions_used = ingestions() - ing0;
+    let (stats, report, recorder) = headline.expect("at least one leg ran");
+
+    // ---- artifacts: Chrome trace + heatmap from the requested-P run
+    //      on the requested backend ----
+    let mut artifacts_ok = true;
+    let trace_path = Path::new(out_dir).join("trace.json");
+    let heatmap_path = Path::new(out_dir).join("heatmap.txt");
+    let heatmap = {
+        let rec = recorder.lock().unwrap();
+        let json = chrome_trace_json(&rec);
+        let heatmap = heatmap_table(&rec);
+        if let Err(e) = fs::create_dir_all(out_dir)
+            .and_then(|_| fs::write(&trace_path, &json))
+            .and_then(|_| fs::write(&heatmap_path, &heatmap))
+        {
+            artifacts_ok = false;
+            eprintln!("FAILED to write trace artifacts under {out_dir}: {e}");
+        }
+        heatmap
+    };
+    println!("\nper-(superstep, machine) work/words heatmap (head):");
+    for line in heatmap.lines().take(10) {
+        println!("  {line}");
+    }
+    println!(
+        "\nartifacts: {} (load in chrome://tracing or ui.perfetto.dev) and {}",
+        trace_path.display(),
+        heatmap_path.display(),
+    );
+    println!(
+        "overall: {} events on the headline leg ({} supersteps, {} waves, {} cache hits / \
+         {} misses, {} epoch bumps); max queue depth {}; {} ingestions for {} legs",
+        stats.events,
+        stats.supersteps,
+        stats.waves,
+        report.cache_hits,
+        report.cache_misses,
+        stats.mutation_applies,
+        report.max_queue_depth,
+        ingestions_used,
+        legs.len(),
+    );
+
+    let all_valid = divergences == 0
+        && bit_mismatches == 0
+        && consistency == 0
+        && dropped == 0
+        && ingestions_used == legs.len() as u64
+        && artifacts_ok;
+    println!(
+        "\ntrace {}",
+        if all_valid {
+            "OK (deterministic event streams bit-identical across backends at every P)"
+        } else {
+            "FAILED"
+        }
+    );
+    TraceSummary {
+        legs,
+        events: stats.events,
+        superstep_events: stats.supersteps,
+        waves: stats.waves,
+        epoch_bumps: stats.mutation_applies,
+        served: report.served(),
+        rejected: report.rejected,
+        divergences,
+        bit_mismatches,
+        consistency_failures: consistency,
+        dropped,
+        ingestions: ingestions_used,
+        all_valid,
+    }
+}
+
+/// Backend-independent trace summary counters for the bench snapshot's
+/// deterministic objects: tiny sim-only key points (events / superstep
+/// events / waves / epoch bumps / served / rejected per P), checkable
+/// today without a toolchain refresh because every quantity is a pure
+/// function of (graph, config, seed, P).
+pub fn trace_det_json() -> String {
+    const N: usize = 1_000;
+    const QUERIES: usize = 16;
+    const SEED: u64 = 7;
+    let cost = CostModel::paper_cluster();
+    let g = gen::barabasi_albert(N, GRAPH_K, SEED);
+    let mcfg = MutationConfig {
+        batches: 2,
+        ops_per_batch: 8,
+        insert_pct: 60,
+        zipf_s: 1.2,
+        start_tick: 2,
+        every_ticks: 6,
+    };
+    let serve_cfg =
+        ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() };
+    let mut points = Vec::new();
+    for p in [2usize, 8] {
+        let dg = ingest_once(&g, p, cost, Placement::Spread);
+        let hot = hot_source_order(&dg.out_deg);
+        let stream = generate_stream(
+            StreamConfig {
+                queries: QUERIES,
+                per_tick: ARRIVALS_PER_TICK,
+                every_ticks: 1,
+                zipf_s: ZIPF_S,
+                mix: QueryMix::balanced(),
+            },
+            &hot,
+            SEED,
+        );
+        let batches = generate_mutations(mcfg, &g, &hot, SEED.wrapping_add(1));
+        let (report, rec) = run_leg(
+            Cluster::new(p, cost),
+            dg,
+            cost,
+            "trace-bench",
+            serve_cfg,
+            &stream,
+            &batches,
+        );
+        let s = stats_of(&rec.lock().unwrap());
+        points.push(format!(
+            "{{\"label\":\"trace-p{p}\",\"events\":{},\"superstep_events\":{},\"waves\":{},\
+             \"epoch_bumps\":{},\"served\":{},\"rejected\":{}}}",
+            s.events,
+            s.supersteps,
+            s.waves,
+            s.mutation_applies,
+            report.served(),
+            report.rejected,
+        ));
+    }
+    format!("{{\"points\":[{}]}}", points.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_trace_sim_quick_is_valid() {
+        let dir = std::env::temp_dir().join("tdorch-repro-trace-test");
+        let s = run_trace(2, 7, "sim", true, dir.to_str().expect("utf8 temp path"));
+        assert_eq!(s.divergences, 0, "two sim runs must produce one stream");
+        assert_eq!(s.bit_mismatches, 0);
+        assert_eq!(s.consistency_failures, 0);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.legs, vec![2, 1]);
+        assert_eq!(s.ingestions, 2, "one ingestion per leg");
+        assert!(s.superstep_events > 0, "substrate events must flow");
+        assert!(s.waves > 0, "serving events must flow");
+        assert!(s.epoch_bumps > 0, "mutation events must flow");
+        assert!(s.all_valid);
+        let trace = std::fs::read_to_string(dir.join("trace.json")).expect("artifact written");
+        assert!(trace.starts_with("{\"traceEvents\":["));
+        let heatmap = std::fs::read_to_string(dir.join("heatmap.txt")).expect("artifact written");
+        assert!(heatmap.contains("imbalance"));
+    }
+
+    #[test]
+    fn trace_det_points_are_stable_across_runs() {
+        let a = trace_det_json();
+        let b = trace_det_json();
+        assert_eq!(a, b, "trace det points must be a pure function of the inputs");
+        assert!(a.contains("\"label\":\"trace-p2\""));
+        assert!(a.contains("\"label\":\"trace-p8\""));
+        assert!(!a.contains("null"));
+    }
+}

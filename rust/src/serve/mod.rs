@@ -85,6 +85,18 @@
 //! contract above extends verbatim: for a fixed (source, feed, config,
 //! graph, P) the full interleaving — epochs, waits, rejections, bits —
 //! is identical across runs and across substrates.
+//!
+//! ## Observability
+//!
+//! [`Server::set_recorder`] attaches a [`crate::obs::FlightRecorder`] to
+//! both layers at once: the serving loop records admission / rejection /
+//! batch-close / cache / wave / completion / mutation events, the
+//! engine's substrate records one event per ledger superstep (per-machine
+//! work/words/messages), all into one ring in causal order.  The
+//! deterministic event cores obey the same contract as the schedule —
+//! bit-identical across runs and substrates (`repro trace` gates on it)
+//! — and recording never perturbs the run: a recorded report equals an
+//! unrecorded one field for field (`tests/obs_trace.rs`).
 
 pub mod cache;
 mod fused;

@@ -12,6 +12,7 @@ use crate::graph::spmd::SpmdEngine;
 use crate::graph::Vid;
 use crate::metrics::p50_p95_p99;
 use crate::mutate::MutationFeed;
+use crate::obs::{CloseReason, EventKind, ObserverHandle};
 use crate::workload::{ArrivalSource, OpenLoopSource, Query, QueryKind};
 
 use super::cache::{canonical_source, CacheKey, ResultCache};
@@ -150,6 +151,13 @@ pub struct ServeReport {
     pub results: Vec<QueryResult>,
     /// Arrivals dropped at admission (queue full).
     pub rejected: u64,
+    /// Rejections split by query kind, indexed by [`QueryKind::index`].
+    /// Invariant: the entries sum to `rejected` (asserted consistent
+    /// with the recorder's `Reject` events in `tests/obs_trace.rs`).
+    pub rejected_by_kind: [u64; 5],
+    /// Deepest the bounded admission queue ever got (measured right
+    /// after each admission round — the deterministic backlog peak).
+    pub max_queue_depth: usize,
     pub batches: u64,
     /// Logical ticks the run spanned.
     pub ticks: u64,
@@ -173,6 +181,11 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn served(&self) -> usize {
         self.results.len()
+    }
+
+    /// Arrivals of `kind` shed at admission.
+    pub fn rejected_of(&self, kind: QueryKind) -> u64 {
+        self.rejected_by_kind[kind.index()]
     }
 
     /// Total arrivals the run *offered*: served + rejected.  The old
@@ -248,12 +261,76 @@ impl ServeReport {
     }
 }
 
+/// The admission state of one serving run: the bounded queue plus the
+/// shed/backlog counters `ServeReport` carries.  One struct so the two
+/// admission call sites (loop head + mid-wave pipelined admission) stay
+/// a single code path.
+struct Admission {
+    pending: VecDeque<Query>,
+    rejected: u64,
+    rejected_by_kind: [u64; 5],
+    max_queue_depth: usize,
+}
+
+impl Admission {
+    fn new() -> Self {
+        Admission {
+            pending: VecDeque::new(),
+            rejected: 0,
+            rejected_by_kind: [0; 5],
+            max_queue_depth: 0,
+        }
+    }
+
+    /// Admit every arrival `source` has scheduled at or before `tick`
+    /// into the bounded queue; shed (and notify) the overflow.  With a
+    /// recorder attached, each admission records its post-push queue
+    /// depth and each shed arrival records a `Reject`.
+    fn admit(
+        &mut self,
+        source: &mut dyn ArrivalSource,
+        tick: u64,
+        queue_cap: usize,
+        rec: Option<&ObserverHandle>,
+    ) {
+        for q in source.poll(tick) {
+            if self.pending.len() < queue_cap {
+                self.pending.push_back(q);
+                if let Some(rec) = rec {
+                    rec.lock().unwrap().record(EventKind::Admit {
+                        tick,
+                        query: q.id,
+                        kind: q.kind,
+                        queue_depth: self.pending.len(),
+                    });
+                }
+            } else {
+                self.rejected += 1;
+                self.rejected_by_kind[q.kind.index()] += 1;
+                if let Some(rec) = rec {
+                    rec.lock().unwrap().record(EventKind::Reject {
+                        tick,
+                        query: q.id,
+                        kind: q.kind,
+                    });
+                }
+                source.on_reject(q.id, tick);
+            }
+        }
+        self.max_queue_depth = self.max_queue_depth.max(self.pending.len());
+    }
+}
+
 /// The online server: admits a stream, forms batches, dispatches each
 /// batch back-to-back on one long-lived engine.
 pub struct Server<B: Substrate> {
     engine: SpmdEngine<B, QueryShard>,
     cfg: ServeConfig,
     cache: ResultCache,
+    /// Attached flight recorder, if any — shared with the engine's
+    /// substrate (see [`Server::set_recorder`]).  `None` skips all
+    /// event work; the serving schedule is identical either way.
+    recorder: Option<ObserverHandle>,
 }
 
 impl<B: Substrate> Server<B> {
@@ -266,6 +343,26 @@ impl<B: Substrate> Server<B> {
             engine,
             cfg,
             cache: ResultCache::new(),
+            recorder: None,
+        }
+    }
+
+    /// Attach (or detach, with `None`) a flight recorder to BOTH layers
+    /// at once: the serving loop records admission / rejection /
+    /// batch-close / cache / wave / completion / mutation events, and the
+    /// engine's substrate records one event per ledger superstep — into
+    /// the same ring, interleaved in causal order.  The recorder never
+    /// influences the schedule: a recorded run's report is identical to
+    /// an unrecorded one (pinned by `tests/obs_trace.rs`).
+    pub fn set_recorder(&mut self, rec: Option<ObserverHandle>) {
+        self.engine.set_observer(rec.clone());
+        self.recorder = rec;
+    }
+
+    /// Record one serving-layer event, if a recorder is attached.
+    fn record_event(&self, kind: EventKind) {
+        if let Some(rec) = &self.recorder {
+            rec.lock().unwrap().record(kind);
         }
     }
 
@@ -367,25 +464,6 @@ impl<B: Substrate> Server<B> {
         self.run_source(&mut OpenLoopSource::new(stream), observe)
     }
 
-    /// Admit every arrival `source` has scheduled at or before `tick`
-    /// into the bounded queue; shed (and notify) the overflow.
-    fn admit(
-        source: &mut dyn ArrivalSource,
-        tick: u64,
-        pending: &mut VecDeque<Query>,
-        queue_cap: usize,
-        rejected: &mut u64,
-    ) {
-        for q in source.poll(tick) {
-            if pending.len() < queue_cap {
-                pending.push_back(q);
-            } else {
-                *rejected += 1;
-                source.on_reject(q.id, tick);
-            }
-        }
-    }
-
     /// The full **pipelined** admission → batch → dispatch loop over any
     /// [`ArrivalSource`] (open-loop slice or closed-loop clients) — the
     /// mutation-free entry point: [`Server::run_source_mutating`] with
@@ -414,12 +492,20 @@ impl<B: Substrate> Server<B> {
             let service_ticks = steps.div_ceil(self.cfg.supersteps_per_tick).max(1);
             let applied_tick = *tick;
             *tick += service_ticks;
+            let epoch_after = self.engine.graph_epoch();
             records.push(MutationRecord {
                 batch_id: batch.id,
                 arrival: batch.arrival,
                 applied_tick,
-                epoch_after: self.engine.graph_epoch(),
+                epoch_after,
                 ops: applied,
+                service_ticks,
+            });
+            self.record_event(EventKind::MutationApply {
+                tick: applied_tick,
+                batch: batch.id,
+                ops: applied,
+                epoch_after,
                 service_ticks,
             });
         }
@@ -457,11 +543,10 @@ impl<B: Substrate> Server<B> {
         mut observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
     ) -> ServeReport {
         let cfg = self.cfg;
-        let mut pending: VecDeque<Query> = VecDeque::new();
+        let mut adm = Admission::new();
         let mut results: Vec<QueryResult> = Vec::new();
         let mut mutations: Vec<MutationRecord> = Vec::new();
         let mut waves: Vec<WaveRecord> = Vec::new();
-        let mut rejected = 0u64;
         let mut batches = 0u64;
         let mut cache_hits = 0u64;
         let mut cache_misses = 0u64;
@@ -471,23 +556,36 @@ impl<B: Substrate> Server<B> {
             // ---- deltas due at the current logical time apply first,
             //      then admission sees the post-mutation clock ----
             self.apply_due_mutations(feed, &mut tick, &mut mutations);
-            Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
-            let full = pending.len() >= cfg.batch;
-            let overdue = pending
+            adm.admit(source, tick, cfg.queue_cap, self.recorder.as_ref());
+            let full = adm.pending.len() >= cfg.batch;
+            let overdue = adm
+                .pending
                 .front()
                 .is_some_and(|q| tick - q.arrival >= cfg.deadline_ticks);
             // Source exhausted: nothing will ever top the batch up, so
             // drain instead of waiting out the deadline.
-            let draining = source.done() && !pending.is_empty();
+            let draining = source.done() && !adm.pending.is_empty();
             if full || overdue || draining {
                 // ---- close a batch (composition fixed now) and serve
                 //      it wave by wave on the logical clock.  With both
                 //      knobs off every wave is a single query, and this
                 //      loop is the per-query dispatch loop verbatim ----
-                let take = pending.len().min(cfg.batch);
+                let take = adm.pending.len().min(cfg.batch);
                 let batch_seq = batches;
                 batches += 1;
-                let mut members: VecDeque<Query> = pending.drain(..take).collect();
+                self.record_event(EventKind::BatchClose {
+                    tick,
+                    batch: batch_seq,
+                    size: take,
+                    reason: if full {
+                        CloseReason::Full
+                    } else if overdue {
+                        CloseReason::Overdue
+                    } else {
+                        CloseReason::Drain
+                    },
+                });
+                let mut members: VecDeque<Query> = adm.pending.drain(..take).collect();
                 while !members.is_empty() {
                     // Epoch barrier: deltas that fell due during the
                     // previous wave's service window apply here,
@@ -510,6 +608,12 @@ impl<B: Substrate> Server<B> {
                                 continue;
                             };
                             cache_hits += 1;
+                            self.record_event(EventKind::CacheHit {
+                                tick,
+                                query: q.id,
+                                batch: batch_seq,
+                                epoch,
+                            });
                             let res = QueryResult {
                                 id: q.id,
                                 kind: q.kind,
@@ -523,6 +627,13 @@ impl<B: Substrate> Server<B> {
                                 cached: true,
                             };
                             source.on_complete(q.id, tick);
+                            self.record_event(EventKind::QueryComplete {
+                                tick,
+                                query: q.id,
+                                wait_ticks: res.wait_ticks,
+                                service_ticks: 0,
+                                cached: true,
+                            });
                             observe(&res, &self.engine);
                             results.push(res);
                         }
@@ -551,6 +662,21 @@ impl<B: Substrate> Server<B> {
                         vec![members.pop_front().expect("checked nonempty")]
                     };
                     let dispatch_tick = tick;
+                    // Every wave member is a cache miss by construction
+                    // (the hit loop above already filtered): record each
+                    // at the dispatch tick, BEFORE the engine pass, so
+                    // misses precede their wave's superstep events.
+                    if let Some(rec) = &self.recorder {
+                        let mut r = rec.lock().unwrap();
+                        for q in &wave {
+                            r.record(EventKind::CacheMiss {
+                                tick: dispatch_tick,
+                                query: q.id,
+                                batch: batch_seq,
+                                epoch,
+                            });
+                        }
+                    }
                     let s0 = self.engine.sub().ledger_supersteps();
                     let ts = Instant::now();
                     let bits_per: Vec<Vec<u64>> = if wave.len() >= 2 {
@@ -574,6 +700,18 @@ impl<B: Substrate> Server<B> {
                         query_ids: wave.iter().map(|q| q.id).collect(),
                         service_ticks: wave_ticks,
                     });
+                    // Recorded AFTER the pass so the recorder can stamp
+                    // the event with the per-machine busy deltas its
+                    // supersteps accumulated (threaded runs only).
+                    self.record_event(EventKind::WaveDispatch {
+                        tick: dispatch_tick,
+                        batch: batch_seq,
+                        kind,
+                        lanes: wave.len(),
+                        query_ids: wave.iter().map(|q| q.id).collect(),
+                        service_ticks: wave_ticks,
+                        epoch,
+                    });
                     for (q, bits) in wave.into_iter().zip(bits_per) {
                         cache_misses += 1;
                         if cfg.cache {
@@ -593,18 +731,25 @@ impl<B: Substrate> Server<B> {
                             cached: false,
                         };
                         source.on_complete(q.id, tick);
+                        self.record_event(EventKind::QueryComplete {
+                            tick,
+                            query: res.id,
+                            wait_ticks: res.wait_ticks,
+                            service_ticks: wave_ticks,
+                            cached: false,
+                        });
                         observe(&res, &self.engine);
                         results.push(res);
                     }
                     // ---- pipelined admission: arrivals that landed
                     //      during this wave's service window ----
-                    Self::admit(source, tick, &mut pending, cfg.queue_cap, &mut rejected);
+                    adm.admit(source, tick, cfg.queue_cap, self.recorder.as_ref());
                 }
                 // Re-evaluate immediately: the queue may already hold a
                 // full (or overdue) next batch at the post-service tick.
                 continue;
             }
-            if pending.is_empty() {
+            if adm.pending.is_empty() {
                 if source.done() {
                     break;
                 }
@@ -647,7 +792,9 @@ impl<B: Substrate> Server<B> {
         }
         ServeReport {
             results,
-            rejected,
+            rejected: adm.rejected,
+            rejected_by_kind: adm.rejected_by_kind,
+            max_queue_depth: adm.max_queue_depth,
             batches,
             ticks: tick,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,

@@ -47,6 +47,18 @@ impl QueryKind {
             QueryKind::Bc => "BC",
         }
     }
+
+    /// Position of this kind in [`QueryKind::ALL`] — the index for
+    /// per-kind counter arrays (`ServeReport::rejected_by_kind`).
+    pub fn index(self) -> usize {
+        match self {
+            QueryKind::Bfs => 0,
+            QueryKind::Sssp => 1,
+            QueryKind::Pr => 2,
+            QueryKind::Cc => 3,
+            QueryKind::Bc => 4,
+        }
+    }
 }
 
 /// One query in the stream.

@@ -1,0 +1,261 @@
+//! The flight recorder's three contracts (PR 8 tentpole):
+//!
+//! 1. **One stream, two substrates.** The deterministic event cores —
+//!    superstep ledger slices, admissions, rejections, batch closes,
+//!    cache hits/misses, wave dispatches, completions, mutation applies
+//!    — render bit-identically on the simulator and the threaded pool,
+//!    at P=1 and P=8, for plain and mutating serving runs.  Wall-clock
+//!    stays where it belongs: `Event::wall` is `None` everywhere on the
+//!    simulator and an annotation-only side channel on the pool.
+//! 2. **Zero perturbation.** Attaching a recorder changes nothing the
+//!    run reports: a recorded `ServeReport` equals an unrecorded one
+//!    field for field (bits, ticks, epochs, cache and rejection
+//!    counters) — observability must never be a schedule input.
+//! 3. **Honest truncation.** The bounded ring drops oldest-first with an
+//!    explicit counter, and the recorder's counters stay mutually
+//!    consistent with the report it narrates (satellite: per-kind
+//!    rejection counts and `max_queue_depth` agree with the Reject /
+//!    Admit events they were derived alongside).
+
+use tdorch::exec::{Substrate, ThreadedCluster};
+use tdorch::graph::flags::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::DistGraph;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
+use tdorch::obs::{EventKind, FlightRecorder, ObserverHandle};
+use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
+};
+use tdorch::{Cluster, CostModel};
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+/// Fusion and the cache both ON so every event kind is exercised.
+fn serve_cfg() -> ServeConfig {
+    ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() }
+}
+
+fn stream_for(dg: &DistGraph, queries: usize, per_tick: usize, seed: u64) -> Vec<Query> {
+    let hot = hot_source_order(&dg.out_deg);
+    generate_stream(
+        StreamConfig { queries, per_tick, every_ticks: 1, zipf_s: 1.5, mix: QueryMix::balanced() },
+        &hot,
+        seed,
+    )
+}
+
+fn mutation_cfg() -> MutationConfig {
+    MutationConfig {
+        batches: 2,
+        ops_per_batch: 6,
+        insert_pct: 60,
+        zipf_s: 1.2,
+        start_tick: 2,
+        every_ticks: 4,
+    }
+}
+
+/// One recorded serving run on the given substrate, from a shared
+/// placement.
+fn run_recorded<B: Substrate>(
+    sub: B,
+    dg: DistGraph,
+    cfg: ServeConfig,
+    stream: &[Query],
+    batches: Vec<MutationBatch>,
+) -> (ServeReport, ObserverHandle) {
+    let rec = FlightRecorder::shared(1 << 16);
+    let mut server = Server::new(
+        SpmdEngine::from_ingested(sub, dg, cost(), Flags::tdo_gp(), "obs-test", QueryShard::new),
+        cfg,
+    );
+    server.set_recorder(Some(rec.clone()));
+    let report = server.run_source_mutating(
+        &mut OpenLoopSource::new(stream),
+        &mut MutationFeed::new(batches),
+        |_r, _e| {},
+    );
+    (report, rec)
+}
+
+#[test]
+fn det_streams_are_bit_identical_across_backends() {
+    let g = gen::barabasi_albert(400, 4, 11);
+    for p in [1usize, 8] {
+        let dg = ingest_once(&g, p, cost(), Placement::Spread);
+        let stream = stream_for(&dg, 12, 2, 21);
+        let (rep_s, rec_s) =
+            run_recorded(Cluster::new(p, cost()), dg.clone(), serve_cfg(), &stream, Vec::new());
+        let (rep_t, rec_t) =
+            run_recorded(ThreadedCluster::new(p), dg, serve_cfg(), &stream, Vec::new());
+        let (ss, st) =
+            (rec_s.lock().unwrap().det_stream(), rec_t.lock().unwrap().det_stream());
+        assert!(!ss.is_empty(), "P={p}: the recorder must see the run");
+        assert_eq!(ss, st, "P={p}: deterministic streams must be bit-identical");
+        // Both layers actually emitted into the one stream.
+        assert!(ss.iter().any(|l| l.starts_with("Superstep")), "P={p}: substrate events");
+        assert!(ss.iter().any(|l| l.starts_with("Admit")), "P={p}: admission events");
+        assert!(ss.iter().any(|l| l.starts_with("BatchClose")), "P={p}: batch events");
+        assert!(ss.iter().any(|l| l.starts_with("WaveDispatch")), "P={p}: wave events");
+        assert!(ss.iter().any(|l| l.starts_with("QueryComplete")), "P={p}: completions");
+        assert_eq!(rep_s.served(), rep_t.served(), "P={p}");
+        assert_eq!(rep_s.served(), stream.len(), "default queue cap sheds nothing here");
+    }
+}
+
+#[test]
+fn mutating_streams_match_and_wall_stays_an_annotation() {
+    let g = gen::barabasi_albert(400, 4, 13);
+    for p in [1usize, 8] {
+        let dg = ingest_once(&g, p, cost(), Placement::Spread);
+        let stream = stream_for(&dg, 12, 2, 23);
+        let hot = hot_source_order(&dg.out_deg);
+        let batches = generate_mutations(mutation_cfg(), &g, &hot, 99);
+        let (rep_s, rec_s) = run_recorded(
+            Cluster::new(p, cost()),
+            dg.clone(),
+            serve_cfg(),
+            &stream,
+            batches.clone(),
+        );
+        let (rep_t, rec_t) =
+            run_recorded(ThreadedCluster::new(p), dg, serve_cfg(), &stream, batches);
+        let (rec_s, rec_t) = (rec_s.lock().unwrap(), rec_t.lock().unwrap());
+        let ss = rec_s.det_stream();
+        assert_eq!(ss, rec_t.det_stream(), "P={p}: mutating streams must match");
+        assert!(ss.iter().any(|l| l.starts_with("MutationApply")), "P={p}: epoch bumps");
+        assert_eq!(rep_s.graph_epoch, rep_t.graph_epoch, "P={p}");
+        assert!(rep_s.graph_epoch >= 1, "P={p}: at least one batch must apply");
+        // The simulator never annotates wall-clock...
+        assert!(rec_s.events().all(|e| e.wall.is_none()), "P={p}: sim is wall-free");
+        // ...while every threaded wave that follows engine supersteps
+        // carries the per-machine busy delta since the last dispatch.
+        let busy: Vec<_> = rec_t
+            .events()
+            .filter(|e| matches!(e.kind, EventKind::WaveDispatch { .. }))
+            .filter_map(|e| e.wall.as_ref())
+            .collect();
+        assert!(!busy.is_empty(), "P={p}: threaded waves must carry busy annotations");
+        assert!(busy.iter().all(|w| w.busy_ns.len() == p), "P={p}: one delta per machine");
+    }
+}
+
+#[test]
+fn recorder_off_and_on_serve_identical_reports() {
+    let g = gen::barabasi_albert(400, 4, 17);
+    let dg = ingest_once(&g, 2, cost(), Placement::Spread);
+    let stream = stream_for(&dg, 12, 2, 29);
+    let hot = hot_source_order(&dg.out_deg);
+    let batches = generate_mutations(mutation_cfg(), &g, &hot, 31);
+
+    let mut plain = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(2, cost()),
+            dg.clone(),
+            cost(),
+            Flags::tdo_gp(),
+            "obs-off",
+            QueryShard::new,
+        ),
+        serve_cfg(),
+    );
+    let off = plain.run_source_mutating(
+        &mut OpenLoopSource::new(&stream),
+        &mut MutationFeed::new(batches.clone()),
+        |_r, _e| {},
+    );
+    let (on, _rec) = run_recorded(Cluster::new(2, cost()), dg, serve_cfg(), &stream, batches);
+
+    // Every deterministic report field must be untouched by recording.
+    assert_eq!(off.served(), on.served());
+    assert_eq!(off.rejected, on.rejected);
+    assert_eq!(off.rejected_by_kind, on.rejected_by_kind);
+    assert_eq!(off.max_queue_depth, on.max_queue_depth);
+    assert_eq!(off.batches, on.batches);
+    assert_eq!(off.ticks, on.ticks);
+    assert_eq!(off.graph_epoch, on.graph_epoch);
+    assert_eq!(off.cache_hits, on.cache_hits);
+    assert_eq!(off.cache_misses, on.cache_misses);
+    assert_eq!(off.waves.len(), on.waves.len());
+    assert_eq!(off.mutations.len(), on.mutations.len());
+    for (a, b) in off.results.iter().zip(&on.results) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.bits, b.bits, "query {}: recording must not touch results", a.id);
+        assert_eq!(a.wait_ticks, b.wait_ticks);
+        assert_eq!(a.service_ticks, b.service_ticks);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.graph_epoch, b.graph_epoch);
+        assert_eq!(a.cached, b.cached);
+    }
+}
+
+#[test]
+fn rejection_events_agree_with_the_report_counters() {
+    let g = gen::barabasi_albert(400, 4, 19);
+    let dg = ingest_once(&g, 2, cost(), Placement::Spread);
+    // 6 arrivals/tick against a 2-deep queue forces shedding.
+    let stream = stream_for(&dg, 24, 6, 37);
+    let cfg = ServeConfig { queue_cap: 2, ..serve_cfg() };
+    let (rep, rec) = run_recorded(Cluster::new(2, cost()), dg, cfg, &stream, Vec::new());
+    assert!(rep.rejected > 0, "the overload must actually shed");
+    assert_eq!(
+        rep.rejected_by_kind.iter().sum::<u64>(),
+        rep.rejected,
+        "per-kind counts must partition the total"
+    );
+
+    let rec = rec.lock().unwrap();
+    let mut rejects = 0u64;
+    let mut by_kind = [0u64; 5];
+    let mut max_depth = 0usize;
+    for e in rec.events() {
+        match &e.kind {
+            EventKind::Reject { kind, .. } => {
+                rejects += 1;
+                by_kind[kind.index()] += 1;
+            }
+            EventKind::Admit { queue_depth, .. } => max_depth = max_depth.max(*queue_depth),
+            _ => {}
+        }
+    }
+    assert_eq!(rejects, rep.rejected, "one Reject event per shed query");
+    assert_eq!(by_kind, rep.rejected_by_kind, "events and counters split alike");
+    assert_eq!(max_depth, rep.max_queue_depth, "deepest Admit == max_queue_depth");
+
+    // Spans reassemble the served lifecycles consistently with the report.
+    let spans = rec.query_spans();
+    for r in &rep.results {
+        let s = spans
+            .iter()
+            .find(|s| s.query == r.id)
+            .unwrap_or_else(|| panic!("served query {} must have a span", r.id));
+        assert_eq!(s.wait_ticks, Some(r.wait_ticks), "query {}", r.id);
+        assert_eq!(s.service_ticks, Some(r.service_ticks), "query {}", r.id);
+        assert_eq!(s.cached, r.cached, "query {}", r.id);
+        assert_eq!(s.batch, Some(r.batch), "query {}", r.id);
+        assert!(s.queue_depth_at_admission.unwrap() <= cfg.queue_cap, "query {}", r.id);
+    }
+}
+
+#[test]
+fn ring_overflow_keeps_the_newest_with_an_explicit_counter() {
+    let mut rec = FlightRecorder::with_capacity(3);
+    for i in 0..8u64 {
+        rec.record(EventKind::Admit { tick: i, query: i, kind: QueryKind::Bfs, queue_depth: 1 });
+    }
+    assert_eq!(rec.len(), 3, "the ring stays bounded");
+    assert_eq!(rec.dropped(), 5, "loss is counted, never silent");
+    assert_eq!(rec.recorded(), 8, "recorded() counts evicted events too");
+    let queries: Vec<u64> = rec
+        .events()
+        .map(|e| match e.kind {
+            EventKind::Admit { query, .. } => query,
+            _ => unreachable!(),
+        })
+        .collect();
+    assert_eq!(queries, vec![5, 6, 7], "oldest-first eviction keeps the newest tail");
+}

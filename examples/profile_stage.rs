@@ -1,29 +1,16 @@
-//! Profiling driver for the §Perf pass: runs TD-Orch stages in a loop.
-use tdorch::orchestration::tdorch::TdOrch;
-use tdorch::orchestration::{spread_tasks, Scheduler, Task};
-use tdorch::{Cluster, CostModel, DistStore};
-
-struct CounterApp;
-impl tdorch::OrchApp for CounterApp {
-    type Ctx = i64; type Val = i64; type Out = i64;
-    fn sigma(&self) -> u64 { 2 }
-    fn chunk_words(&self) -> u64 { 16 }
-    fn out_words(&self) -> u64 { 1 }
-    fn execute(&self, c: &i64, _v: &i64) -> Option<i64> { Some(*c) }
-    fn combine(&self, a: i64, b: i64) -> i64 { a + b }
-    fn apply(&self, v: &mut i64, o: i64) { *v += o; }
-}
+//! Profiling driver for the §Perf pass: the per-stage wallclock A/Bs
+//! behind the flat shard memory layout (scheduler stage, DetMap vs
+//! slab scratch, sparse vs dense frontier, per-message vs batched
+//! sends).  Same code path as `repro profile`; pass a rep count:
+//!
+//! ```sh
+//! cargo run --release --example profile_stage -- 20
+//! ```
 
 fn main() {
-    let tasks: Vec<Task<i64>> = (0..200_000).map(|i| {
-        let addr = if i % 4 == 0 { (i % 16) as u64 } else { (i as u64).wrapping_mul(0x9E3779B9) % 1_000_000 };
-        Task::inplace(addr, 1)
-    }).collect();
     let reps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
-    for _ in 0..reps {
-        let mut c = Cluster::new(16, CostModel::paper_cluster());
-        let mut s: DistStore<i64> = DistStore::new(16);
-        let o = TdOrch::new().run_stage(&mut c, &CounterApp, spread_tasks(tasks.clone(), 16), &mut s);
-        std::hint::black_box(o.total_executed);
-    }
+    let report = tdorch::repro::profile::run_profile(reps);
+    // Keep the measured numbers alive past the prints so a future
+    // harness can diff the JSON shape.
+    std::hint::black_box(report.json());
 }

@@ -1,12 +1,17 @@
 //! Bench: hot-path microbenchmarks used by the §Perf pass — meta-task
 //! merging, forest mapping, Zipf sampling, cluster exchange, a full
-//! TD-Orch stage (host wall time), and the PJRT `fma` artifact
-//! throughput.  `cargo bench --bench microbench`.
+//! TD-Orch stage (host wall time), the flat-layout A/Bs (DetMap scratch
+//! vs slab, sparse vs dense frontier, per-message vs batched mpsc), and
+//! the PJRT `fma` artifact throughput.  `cargo bench --bench microbench`.
 
 mod bench_util;
 
+use std::sync::mpsc;
+
 use bench_util::Bench;
+use tdorch::det::{det_map, DetMap};
 use tdorch::forest::Forest;
+use tdorch::graph::layout::{Frontier, Slab};
 use tdorch::metatask::{MetaTaskSet, SlotStore};
 use tdorch::orchestration::tdorch::TdOrch;
 use tdorch::orchestration::{spread_tasks, Scheduler, Task};
@@ -100,6 +105,105 @@ fn main() {
         let mut s: DistStore<i64> = DistStore::new(16);
         let o = TdOrch::new().run_stage(&mut c, &CounterApp, spread_tasks(tasks.clone(), 16), &mut s);
         o.total_executed
+    });
+
+    // --- Flat-layout A/Bs (shard memory-layout PR) ---
+
+    // (a) DetMap scratch vs flat slab: the edge_map message fold — merge
+    // 300k (vertex, value) contributions keyed by 100k vertices, then
+    // walk the touched set in ascending order, exactly the shape of the
+    // old (hash + keys().collect() + sort) and new (array store +
+    // normalize + dirty walk) Phase-2 inner loops.
+    let n = 100_000usize;
+    let contribs: Vec<(u32, f64)> = (0..300_000u64)
+        .map(|i| ((i.wrapping_mul(0x9E37_79B9) % n as u64) as u32, i as f64))
+        .collect();
+    b.run("scratch-detmap-merge-walk-300k", 5, || {
+        let mut m: DetMap<u32, f64> = det_map();
+        for &(v, x) in &contribs {
+            m.entry(v).and_modify(|a| *a = a.min(x)).or_insert(x);
+        }
+        let mut keys: Vec<u32> = m.keys().copied().collect();
+        keys.sort_unstable();
+        let mut acc = 0.0;
+        for k in keys {
+            acc += m[&k];
+        }
+        acc
+    });
+    let mut slab = Slab::new();
+    slab.ensure(n);
+    b.run("scratch-flat-slab-merge-walk-300k", 5, || {
+        slab.clear();
+        for &(v, x) in &contribs {
+            slab.merge_with(v, x, f64::min);
+        }
+        slab.normalize();
+        let mut acc = 0.0;
+        for &v in slab.dirty() {
+            acc += slab.get(v).unwrap();
+        }
+        acc
+    });
+
+    // (b) Sparse vec vs dense bitset frontier iteration over a 1M-vertex
+    // owned range, at the two occupancies that bracket the engine's
+    // seal threshold (1/16): dense should win high, sparse should win
+    // low — the numbers justify the deterministic switch.
+    let span = 1_000_000usize;
+    for (tag, stride) in [("hi-occ-1of2", 2usize), ("lo-occ-1of64", 64)] {
+        let mut sparse_f = Frontier::new(0, span);
+        let mut dense_f = Frontier::new(0, span);
+        for v in (0..span as u32).step_by(stride) {
+            sparse_f.push(v);
+            dense_f.push(v);
+        }
+        dense_f.force_dense();
+        b.run(&format!("frontier-sparse-iter-{tag}"), 5, || {
+            let mut acc = 0u64;
+            for v in sparse_f.iter() {
+                acc = acc.wrapping_add(v as u64);
+            }
+            acc
+        });
+        b.run(&format!("frontier-dense-iter-{tag}"), 5, || {
+            let mut acc = 0u64;
+            for v in dense_f.iter() {
+                acc = acc.wrapping_add(v as u64);
+            }
+            acc
+        });
+    }
+
+    // (c) Per-message vs batched channel discipline: 100k u64 payloads
+    // through one mpsc channel — one send per payload (the threaded
+    // substrate's old wire shape) vs one send carrying the whole batch
+    // (the new persistent-mesh shape; the clone stands in for the
+    // grouping pass that fills a recycled batch buffer).
+    let msgs: Vec<u64> = (0..100_000u64).collect();
+    b.run("mpsc-per-message-100k", 5, || {
+        let (tx, rx) = mpsc::channel::<u64>();
+        for &x in &msgs {
+            tx.send(x).unwrap();
+        }
+        drop(tx);
+        let mut acc = 0u64;
+        while let Ok(x) = rx.recv() {
+            acc = acc.wrapping_add(x);
+        }
+        acc
+    });
+    b.run("mpsc-batched-100k", 5, || {
+        let (tx, rx) = mpsc::channel::<Vec<u64>>();
+        tx.send(msgs.clone()).unwrap();
+        drop(tx);
+        let mut acc = 0u64;
+        while let Ok(batch) = rx.recv() {
+            for x in batch {
+                acc = acc.wrapping_add(x);
+            }
+        }
+        acc
     });
 
     // PJRT artifact execution (the L1/L2 hot path) — skipped without

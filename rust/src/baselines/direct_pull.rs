@@ -21,9 +21,9 @@ pub struct DirectPull;
 impl<A, S> Scheduler<A, S> for DirectPull
 where
     A: OrchApp + Sync,
-    A::Ctx: Send,
-    A::Val: Send,
-    A::Out: Send,
+    A::Ctx: Send + 'static,
+    A::Val: Send + 'static,
+    A::Out: Send + 'static,
     S: Substrate,
 {
     fn name(&self) -> &'static str {

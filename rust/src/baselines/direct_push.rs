@@ -17,9 +17,9 @@ pub struct DirectPush;
 impl<A, S> Scheduler<A, S> for DirectPush
 where
     A: OrchApp + Sync,
-    A::Ctx: Send,
-    A::Val: Send,
-    A::Out: Send,
+    A::Ctx: Send + 'static,
+    A::Val: Send + 'static,
+    A::Out: Send + 'static,
     S: Substrate,
 {
     fn name(&self) -> &'static str {

@@ -43,9 +43,9 @@ struct MState<A: OrchApp> {
 impl<A, S> Scheduler<A, S> for SortingBased
 where
     A: OrchApp + Sync,
-    A::Ctx: Send,
-    A::Val: Send,
-    A::Out: Send,
+    A::Ctx: Send + 'static,
+    A::Val: Send + 'static,
+    A::Out: Send + 'static,
     S: Substrate,
 {
     fn name(&self) -> &'static str {

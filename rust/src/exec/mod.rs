@@ -124,6 +124,10 @@ pub trait Substrate {
     /// as `(destination, payload)` pairs; `words` gives each payload's
     /// wire size for communication accounting.  Returns next inboxes,
     /// delivered in deterministic (sender, emission-index) order.
+    ///
+    /// (`Tout: 'static` because the threaded backend ships batches over a
+    /// type-erased persistent mesh — payloads are plain data, never
+    /// borrows.)
     fn superstep<St, Tin, Tout, F, W>(
         &mut self,
         state: &mut [St],
@@ -134,7 +138,7 @@ pub trait Substrate {
     where
         St: Send,
         Tin: Send,
-        Tout: Send,
+        Tout: Send + 'static,
         F: Fn(MachineId, &mut St, Vec<Tin>, &mut MachineAcct) -> Vec<(MachineId, Tout)> + Sync,
         W: Fn(&Tout) -> u64 + Sync;
 }
@@ -169,7 +173,7 @@ impl Substrate for Cluster {
     where
         St: Send,
         Tin: Send,
-        Tout: Send,
+        Tout: Send + 'static,
         F: Fn(MachineId, &mut St, Vec<Tin>, &mut MachineAcct) -> Vec<(MachineId, Tout)> + Sync,
         W: Fn(&Tout) -> u64 + Sync,
     {

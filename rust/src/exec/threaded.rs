@@ -41,27 +41,35 @@
 //!    slot store, pull-tree nodes etc. through here, so no two threads
 //!    ever touch the same data (shared-nothing by construction, enforced
 //!    by `&mut`);
-//! 3. each worker pushes its outbox payloads into per-destination
-//!    channels (the per-pair edges of the paper's Fig 2 machine model)
-//!    and drops its senders — mpsc sends never block, so the payloads
-//!    are fully buffered before anyone starts reading;
+//! 3. each worker groups its outbox into **one batch per destination**
+//!    (a recycled `Vec` of payloads, in emission order) and performs
+//!    exactly P channel sends over the **persistent mesh** — P channels
+//!    created once at pool construction, one receiver per machine, every
+//!    worker holding a clone of every sender.  One send per *destination*
+//!    per superstep, not one per message: the mesh channels and the batch
+//!    buffers amortize across the whole superstep, and across supersteps
+//!    via each worker's recycling pool;
 //! 4. all workers rendezvous on `comm_barrier` again (the communication
-//!    barrier), then drain their receivers — which never block, because
-//!    every sender hung up before the barrier.  Time spent *waiting* at
-//!    either barrier is deliberately excluded from the per-machine busy
-//!    clocks: `compute_ns` is the superstep closure, `comm_ns` is
-//!    send + drain, and barrier wait is idle — so a machine that
-//!    finishes early does not absorb the slowest machine's window and
-//!    load imbalance stays visible in the busy table;
-//! 5. the received payloads are sorted by (sender, emission index),
-//!    restoring exactly the delivery order the simulator uses, so a
-//!    threaded run is bit-identical to a simulated one.
+//!    barrier), then receive exactly P batches each — which never blocks,
+//!    because every peer completed its sends before the barrier.  Time
+//!    spent *waiting* at either barrier is deliberately excluded from the
+//!    per-machine busy clocks: `compute_ns` is the superstep closure,
+//!    `comm_ns` is group + send + drain, and barrier wait is idle — so a
+//!    machine that finishes early does not absorb the slowest machine's
+//!    window and load imbalance stays visible in the busy table;
+//! 5. the received batches are sorted by sender id (each batch is
+//!    internally in emission order already), restoring exactly the
+//!    (sender, emission-index) delivery order the simulator uses, so a
+//!    threaded run is bit-identical to a simulated one.  Emptied batch
+//!    buffers go back into the worker's recycling pool.
 //!
-//! A panic inside a superstep closure is caught on the worker, the P-party
-//! communication barrier is released for the peers (see
-//! [`BarrierOnUnwind`]), the worker still reaches `epoch_done`, and the
-//! driver re-raises the payload — so a poisoned superstep neither
-//! deadlocks the pool nor hides the panic.
+//! A panic inside the superstep closure (or in the user `words` function)
+//! is caught on the worker, which still completes the full protocol —
+//! sends P (empty) batches, passes the communication barrier, drains its
+//! P incoming batches (a persistent receiver MUST be drained, or the
+//! leftovers would poison the next epoch), reaches `epoch_done` — and
+//! only then re-raises; the driver rethrows the payload.  A poisoned
+//! superstep neither deadlocks the pool nor hides the panic.
 //!
 //! Metrics: the [`Metrics`] mirror is filled with the same ledger the
 //! simulator keeps (per-machine work units, words sent/received, executed
@@ -75,7 +83,8 @@
 //! oversubscription of workers to cores; only the nanosecond clocks vary
 //! with the host.
 
-use std::any::Any;
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -99,22 +108,45 @@ struct WorkerReport<T> {
     comm_ns: u64,
 }
 
-/// Releases the communication barrier if a worker unwinds before
-/// reaching it, so a panic in one superstep closure propagates (via the
-/// epoch protocol) instead of deadlocking the other P-1 workers.  By drop
-/// order, the panicking worker's sender clones (closure captures) drop
-/// right after this guard fires, so the released peers' drains still
-/// terminate.
-struct BarrierOnUnwind<'a> {
-    barrier: &'a Barrier,
-    armed: bool,
+/// One batch on the persistent mesh: `(sender id, boxed `Vec<Tout>`)`.
+/// The payload type changes per superstep, so the wire type is erased;
+/// each epoch's workers downcast with the epoch's `Tout`.
+type MeshBatch = (u32, Box<dyn Any + Send>);
+
+/// Per-worker persistent communication state, owned by the worker thread
+/// for the pool's whole lifetime and lent to each epoch's job.  This is
+/// what makes superstep communication allocation-free in steady state:
+/// the mesh channels are built once at pool construction, and the batch
+/// buffers + drain staging circulate through [`WorkerLocal::take_buf`] /
+/// [`WorkerLocal::put_buf`] instead of being reallocated per superstep.
+struct WorkerLocal {
+    /// One sender per destination machine (the P×P mesh, built once).
+    batch_txs: Vec<mpsc::Sender<MeshBatch>>,
+    /// This machine's mesh receiver.
+    batch_rx: mpsc::Receiver<MeshBatch>,
+    /// Recycled drain staging (exactly P entries per superstep).
+    staging: Vec<MeshBatch>,
+    /// Recycled outbox batch buffers keyed by `TypeId::of::<Vec<T>>()` —
+    /// supersteps alternate payload types (values, contributions, delta
+    /// notes…), and each type's buffers circulate independently.
+    pool: HashMap<TypeId, Vec<Box<dyn Any + Send>>>,
 }
 
-impl Drop for BarrierOnUnwind<'_> {
-    fn drop(&mut self) {
-        if self.armed {
-            self.barrier.wait();
-        }
+impl WorkerLocal {
+    /// Pop a recycled buffer of the requested payload type (or allocate
+    /// an empty one on first use).
+    fn take_buf<T: Send + 'static>(&mut self) -> Box<Vec<T>> {
+        self.pool
+            .get_mut(&TypeId::of::<Vec<T>>())
+            .and_then(|bufs| bufs.pop())
+            .map(|b| b.downcast::<Vec<T>>().expect("pool is keyed by TypeId"))
+            .unwrap_or_default()
+    }
+
+    /// Return an emptied buffer to the pool (capacity kept).
+    fn put_buf<T: Send + 'static>(&mut self, mut buf: Box<Vec<T>>) {
+        buf.clear();
+        self.pool.entry(TypeId::of::<Vec<T>>()).or_default().push(buf);
     }
 }
 
@@ -123,7 +155,7 @@ impl Drop for BarrierOnUnwind<'_> {
 /// keeps the closure alive until every worker has passed `epoch_done`,
 /// and workers never dereference the pointer after passing it.
 #[derive(Clone, Copy)]
-struct Job(*const (dyn Fn(usize) + Sync));
+struct Job(*const (dyn Fn(usize, &mut WorkerLocal) + Sync));
 
 // SAFETY: the pointee is `Sync` (callable from any thread by shared ref)
 // and the epoch protocol bounds its lifetime as described above.
@@ -135,6 +167,7 @@ fn worker_loop(
     epoch_done: Arc<Barrier>,
     panics: Arc<Vec<Mutex<Option<Box<dyn Any + Send>>>>>,
     epochs: Arc<Vec<AtomicU64>>,
+    mut local: WorkerLocal,
 ) {
     // A disconnected channel is the shutdown signal (pool dropped, or the
     // constructor tearing down a partially-spawned pool).
@@ -142,7 +175,7 @@ fn worker_loop(
         // SAFETY: see `Job` — the driver guarantees the closure outlives
         // this dereference (it blocks on `epoch_done` below).
         let f = unsafe { &*job.0 };
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(m))) {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(m, &mut local))) {
             *panics[m].lock().unwrap() = Some(payload);
         }
         epochs[m].fetch_add(1, Ordering::Relaxed);
@@ -262,6 +295,19 @@ impl ThreadedCluster {
             Arc::new((0..p).map(|_| Mutex::new(None)).collect());
         let worker_epochs: Arc<Vec<AtomicU64>> =
             Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
+        // The persistent P×P mesh: one channel per destination machine,
+        // built once here; worker m owns receiver m plus a clone of every
+        // sender.  Per-superstep communication reuses these channels (one
+        // batched send per destination) instead of building a fresh mesh
+        // each epoch.
+        let mut mesh_txs: Vec<mpsc::Sender<MeshBatch>> = Vec::with_capacity(p);
+        let mut mesh_rxs: Vec<mpsc::Receiver<MeshBatch>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel::<MeshBatch>();
+            mesh_txs.push(tx);
+            mesh_rxs.push(rx);
+        }
+        let mut mesh_rxs = mesh_rxs.into_iter();
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for m in 0..p {
@@ -273,7 +319,14 @@ impl ThreadedCluster {
             let epoch_done_w = Arc::clone(&epoch_done);
             let panics_w = Arc::clone(&panics);
             let epochs_w = Arc::clone(&worker_epochs);
-            match builder.spawn(move || worker_loop(m, rx, epoch_done_w, panics_w, epochs_w)) {
+            let local = WorkerLocal {
+                batch_txs: mesh_txs.clone(),
+                batch_rx: mesh_rxs.next().expect("one mesh receiver per worker"),
+                staging: Vec::with_capacity(p),
+                pool: HashMap::new(),
+            };
+            match builder.spawn(move || worker_loop(m, rx, epoch_done_w, panics_w, epochs_w, local))
+            {
                 Ok(h) => {
                     job_txs.push(tx);
                     handles.push(h);
@@ -395,17 +448,17 @@ impl Drop for ThreadedCluster {
 /// start, report stored at job end.  The `Mutex` exists only to make the
 /// shared cell vector `Sync` — each cell is touched by exactly one
 /// worker, then by the driver after `epoch_done`, so the lock is never
-/// contended.
+/// contended.  (Communication endpoints live in each worker's persistent
+/// [`WorkerLocal`], not here — the cell carries only epoch-specific
+/// state.)
 struct Cell<'a, St, Tin, Tout> {
-    input: Option<CellIn<'a, St, Tin, Tout>>,
+    input: Option<CellIn<'a, St, Tin>>,
     report: Option<WorkerReport<Tout>>,
 }
 
-struct CellIn<'a, St, Tin, Tout> {
+struct CellIn<'a, St, Tin> {
     st: &'a mut St,
     inbox: Vec<Tin>,
-    txs: Vec<mpsc::Sender<(u32, u32, Tout)>>,
-    rx: mpsc::Receiver<(u32, u32, Tout)>,
 }
 
 impl Substrate for ThreadedCluster {
@@ -431,7 +484,7 @@ impl Substrate for ThreadedCluster {
     where
         St: Send,
         Tin: Send,
-        Tout: Send,
+        Tout: Send + 'static,
         F: Fn(MachineId, &mut St, Vec<Tin>, &mut MachineAcct) -> Vec<(MachineId, Tout)> + Sync,
         W: Fn(&Tout) -> u64 + Sync,
     {
@@ -439,28 +492,12 @@ impl Substrate for ThreadedCluster {
         assert_eq!(state.len(), p, "state must have one entry per machine");
         assert_eq!(inboxes.len(), p, "inboxes must have one entry per machine");
 
-        // One channel per destination machine; every worker holds a clone
-        // of every sender, giving P*P logical point-to-point edges.  The
-        // channels are per-epoch because the payload type is; the worker
-        // threads are not — that is the persistent-pool contract.
-        let mut txs = Vec::with_capacity(p);
-        let mut rxs = Vec::with_capacity(p);
-        for _ in 0..p {
-            let (tx, rx) = mpsc::channel::<(u32, u32, Tout)>();
-            txs.push(tx);
-            rxs.push(rx);
-        }
-        let worker_txs: Vec<Vec<mpsc::Sender<(u32, u32, Tout)>>> =
-            (0..p).map(|_| txs.clone()).collect();
-        drop(txs); // workers' clones are now the only senders
-
         let cells: Vec<Mutex<Cell<'_, St, Tin, Tout>>> = state
             .iter_mut()
             .zip(inboxes)
-            .zip(worker_txs.into_iter().zip(rxs))
-            .map(|((st, inbox), (txs, rx))| {
+            .map(|(st, inbox)| {
                 Mutex::new(Cell {
-                    input: Some(CellIn { st, inbox, txs, rx }),
+                    input: Some(CellIn { st, inbox }),
                     report: None,
                 })
             })
@@ -471,67 +508,152 @@ impl Substrate for ThreadedCluster {
         let comm_barrier: &Barrier = &self.comm_barrier;
         let cells_ref = &cells;
 
-        // The per-epoch job: machine m's full superstep.  Runs on worker
-        // thread m; borrows this stack frame (cells, f, words) — sound
-        // because the driver blocks on `epoch_done` below before touching
-        // or dropping any of it.
-        let job = move |m: usize| {
+        // The per-epoch job: machine m's full superstep, communicating
+        // over the worker's persistent mesh endpoints (`wl`).  Runs on
+        // worker thread m; borrows this stack frame (cells, f, words) —
+        // sound because the driver blocks on `epoch_done` below before
+        // touching or dropping any of it.
+        //
+        // The protocol is unconditional: every worker sends exactly one
+        // batch to every destination and receives exactly P batches,
+        // every superstep, panic or no panic.  That is what keeps the
+        // persistent mesh clean across epochs — an unsent batch would
+        // block a peer's drain, and an undrained one would be delivered
+        // to the NEXT superstep (with the wrong payload type).
+        let job = move |m: usize, wl: &mut WorkerLocal| {
             let mut cell = cells_ref[m].lock().unwrap();
-            let CellIn { st, inbox, txs, rx } =
+            let CellIn { st, inbox } =
                 cell.input.take().expect("epoch cell already consumed");
             comm_barrier.wait(); // superstep start line
-            let mut comm_guard = BarrierOnUnwind { barrier: comm_barrier, armed: true };
             let t0 = Instant::now();
             let mut acct = MachineAcct::default();
-            let outbox = f(m, st, inbox, &mut acct);
+            let compute = catch_unwind(AssertUnwindSafe(|| f(m, st, inbox, &mut acct)));
             let compute_ns = t0.elapsed().as_nanos() as u64;
 
+            // Group the outbox into one recycled batch per destination,
+            // counting the ledger per *payload* (self-sends are free, as
+            // in the simulator).  `words` is user code: a panic in it is
+            // caught like one in `f`, and the protocol still completes
+            // with empty batches.
             let t1 = Instant::now();
+            let mut panicked: Option<Box<dyn Any + Send>> = None;
             let mut sent_words = 0u64;
             let mut sent_msgs = 0u64;
-            for (i, (to, payload)) in outbox.into_iter().enumerate() {
-                debug_assert!(to < p, "destination {to} out of range");
-                if to != m {
-                    // Self-sends are free, as in the simulator.
-                    sent_words += words(&payload);
-                    sent_msgs += 1;
+            let mut dests: Vec<Box<Vec<Tout>>> = (0..p).map(|_| wl.take_buf::<Tout>()).collect();
+            match compute {
+                Ok(outbox) => {
+                    let grouped = catch_unwind(AssertUnwindSafe(|| {
+                        for (to, payload) in outbox {
+                            debug_assert!(to < p, "destination {to} out of range");
+                            if to != m {
+                                sent_words += words(&payload);
+                                sent_msgs += 1;
+                            }
+                            dests[to].push(payload);
+                        }
+                    }));
+                    if let Err(payload) = grouped {
+                        panicked = Some(payload);
+                    }
                 }
-                txs[to]
-                    .send((m as u32, i as u32, payload))
-                    .expect("peer receiver dropped mid-superstep");
+                Err(payload) => panicked = Some(payload),
             }
-            drop(txs);
+            if panicked.is_some() {
+                for d in dests.iter_mut() {
+                    d.clear();
+                }
+                sent_words = 0;
+                sent_msgs = 0;
+            }
+            for (to, buf) in dests.into_iter().enumerate() {
+                if wl.batch_txs[to].send((m as u32, buf)).is_err() {
+                    // A mesh receiver can only be gone if its worker
+                    // thread died — the pool invariant is already broken
+                    // and peers may be blocked on their drains forever.
+                    eprintln!("fatal: mesh peer {to} of {p} hung up mid-superstep");
+                    std::process::abort();
+                }
+            }
             let send_ns = t1.elapsed().as_nanos() as u64;
             // Communication barrier: once every worker passes this line,
-            // every sender clone has been dropped, so the drain below
-            // never blocks.  The wait itself is idle time and stays OFF
-            // the busy clocks — an early finisher must not absorb the
-            // slowest machine's window, or load imbalance would vanish
-            // from the per-machine busy table.
-            comm_guard.armed = false;
+            // all P batches addressed to this machine have been sent, so
+            // the blocking drain below never actually waits.  The wait
+            // itself is idle time and stays OFF the busy clocks — an
+            // early finisher must not absorb the slowest machine's
+            // window, or load imbalance would vanish from the per-machine
+            // busy table.
             comm_barrier.wait();
             let t2 = Instant::now();
-            let mut inbox: Vec<(u32, u32, Tout)> = rx.iter().collect();
-            inbox.sort_unstable_by_key(|&(sender, idx, _)| (sender, idx));
-            let mut recv_words = 0u64;
-            for (sender, _, payload) in &inbox {
-                if *sender as usize != m {
-                    recv_words += words(payload);
+            let mut staging = std::mem::take(&mut wl.staging);
+            for _ in 0..p {
+                match wl.batch_rx.recv() {
+                    Ok(batch) => staging.push(batch),
+                    Err(_) => {
+                        // All senders gone mid-epoch: every peer (each
+                        // holding a sender clone) died.  Unrecoverable.
+                        eprintln!("fatal: mesh senders disconnected mid-superstep on {m}");
+                        std::process::abort();
+                    }
                 }
             }
+            // One batch per sender, already in emission order internally:
+            // sorting by sender id restores the simulator's (sender,
+            // emission-index) delivery order.
+            staging.sort_unstable_by_key(|&(sender, _)| sender);
+            let mut recv_words = 0u64;
+            let unpacked = catch_unwind(AssertUnwindSafe(|| {
+                let total: usize = staging
+                    .iter()
+                    .map(|(_, b)| b.downcast_ref::<Vec<Tout>>().map_or(0, |v| v.len()))
+                    .sum();
+                // The merged inbox leaves the substrate (it is returned to
+                // the caller), so it cannot come from the recycling pool:
+                // one exact-capacity allocation per machine per superstep.
+                let mut inbox: Vec<Tout> = Vec::with_capacity(total);
+                for (sender, anybox) in staging.drain(..) {
+                    let mut batch = anybox
+                        .downcast::<Vec<Tout>>()
+                        .expect("mesh batch carries the epoch's payload type");
+                    if sender as usize != m {
+                        for payload in batch.iter() {
+                            recv_words += words(payload);
+                        }
+                    }
+                    inbox.append(&mut batch);
+                    wl.put_buf(batch);
+                }
+                inbox
+            }));
+            // Even on a panic, `staging.drain`'s drop has emptied the
+            // staging vec, so nothing leaks into the next epoch.
+            wl.staging = staging;
+            let inbox = match unpacked {
+                Ok(inbox) => inbox,
+                Err(payload) => {
+                    panicked.get_or_insert(payload);
+                    Vec::new()
+                }
+            };
             let comm_ns = send_ns + t2.elapsed().as_nanos() as u64;
             cell.report = Some(WorkerReport {
                 acct,
-                inbox: inbox.into_iter().map(|(_, _, payload)| payload).collect(),
+                inbox,
                 sent_words,
                 recv_words,
                 sent_msgs,
                 compute_ns,
                 comm_ns,
             });
+            drop(cell);
+            if let Some(payload) = panicked {
+                // Protocol complete (batches sent, barrier passed, mesh
+                // drained): now the panic may surface.  worker_loop's
+                // catch stores it for the driver to rethrow.
+                std::panic::resume_unwind(payload);
+            }
         };
 
-        let job_ref: &(dyn Fn(usize) + Sync) = &job;
+        let job_ref: &(dyn Fn(usize, &mut WorkerLocal) + Sync) = &job;
         // SAFETY: erases the stack lifetime of `job`.  Sound because (a)
         // every worker dereferences the pointer only between `recv()` and
         // its `epoch_done.wait()`, and (b) on every path below the driver
@@ -540,8 +662,8 @@ impl Substrate for ThreadedCluster {
         // without unwinding past them.
         let raw = Job(unsafe {
             std::mem::transmute::<
-                *const (dyn Fn(usize) + Sync + '_),
-                *const (dyn Fn(usize) + Sync + 'static),
+                *const (dyn Fn(usize, &mut WorkerLocal) + Sync + '_),
+                *const (dyn Fn(usize, &mut WorkerLocal) + Sync + 'static),
             >(job_ref)
         });
         for (m, tx) in self.job_txs.iter().enumerate() {

@@ -12,9 +12,9 @@
 use std::cell::Cell;
 
 use crate::bsp::{Cluster, MachineId};
-use crate::det::{det_map, DetMap};
 use crate::rng::{hash2, hash64};
 
+use super::layout::BlockIndex;
 use super::{Graph, VertexPart, Vid};
 
 thread_local! {
@@ -62,8 +62,8 @@ pub struct DistGraph {
     pub part: VertexPart,
     /// Per-machine edge blocks.
     pub blocks: Vec<Vec<EdgeBlock>>,
-    /// Per-machine: source vertex -> indices into `blocks[m]`.
-    pub block_of: Vec<DetMap<Vid, Vec<u32>>>,
+    /// Per-machine CSR index: source vertex -> indices into `blocks[m]`.
+    pub block_of: Vec<BlockIndex>,
     /// Source-tree leaves: machines holding out-edge blocks of u.
     pub src_leaves: Vec<Vec<MachineId>>,
     /// Destination-tree leaves: machines holding in-edges of v.
@@ -141,7 +141,10 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
     let block_cap = hot_threshold as usize;
 
     let mut blocks: Vec<Vec<EdgeBlock>> = (0..p).map(|_| Vec::new()).collect();
-    let mut block_of: Vec<DetMap<Vid, Vec<u32>>> = (0..p).map(|_| det_map()).collect();
+    // Per-machine (src, block idx) entries; the outer vertex loop below
+    // runs ascending, so each machine's list is sorted by source — ready
+    // for the CSR finalize without another sort.
+    let mut index_entries: Vec<Vec<(Vid, u32)>> = (0..p).map(|_| Vec::new()).collect();
     let mut src_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
     let mut dst_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
     let mut out_deg = vec![0u32; n];
@@ -152,12 +155,12 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
                            targets: Vec<(Vid, f32)>,
                            machine: MachineId,
                            blocks: &mut Vec<Vec<EdgeBlock>>,
-                           block_of: &mut Vec<DetMap<Vid, Vec<u32>>>,
+                           index_entries: &mut Vec<Vec<(Vid, u32)>>,
                            load: &mut Vec<u64>| {
         load[machine] += targets.len() as u64;
         let idx = blocks[machine].len() as u32;
         blocks[machine].push(EdgeBlock { src: u, targets });
-        block_of[machine].entry(u).or_default().push(idx);
+        index_entries[machine].push((u, idx));
     };
 
     for u in 0..n as Vid {
@@ -170,7 +173,7 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
         let neigh = g.neighbors(u);
         if deg <= hot_threshold {
             // Stage-1 push: the whole block co-locates with its source.
-            place_block(u, neigh.to_vec(), owner, &mut blocks, &mut block_of, &mut load);
+            place_block(u, neigh.to_vec(), owner, &mut blocks, &mut index_entries, &mut load);
             src_leaves[u as usize].push(owner);
         } else {
             // Hot source: blocks park on transit machines (TD-Orch would
@@ -194,7 +197,7 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
                     }
                 };
                 stats.moved_edges += if machine == owner { 0 } else { chunk.len() as u64 };
-                place_block(u, chunk.to_vec(), machine, &mut blocks, &mut block_of, &mut load);
+                place_block(u, chunk.to_vec(), machine, &mut blocks, &mut index_entries, &mut load);
                 leaves.push(machine);
             }
             leaves.sort_unstable();
@@ -242,6 +245,10 @@ pub fn ingest(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph {
     }
     let _ = cluster.exchange(probe2, |_| 1);
 
+    let block_of = index_entries
+        .into_iter()
+        .map(|e| BlockIndex::from_entries(n, &e))
+        .collect();
     DistGraph {
         n,
         m,
@@ -266,7 +273,7 @@ pub fn ingest_at_owner(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph 
     let part = VertexPart::degree_balanced(g, p);
     let n = g.n;
     let mut blocks: Vec<Vec<EdgeBlock>> = (0..p).map(|_| Vec::new()).collect();
-    let mut block_of: Vec<DetMap<Vid, Vec<u32>>> = (0..p).map(|_| det_map()).collect();
+    let mut index_entries: Vec<Vec<(Vid, u32)>> = (0..p).map(|_| Vec::new()).collect();
     let mut src_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
     let mut dst_leaves: Vec<Vec<MachineId>> = vec![Vec::new(); n];
     let mut out_deg = vec![0u32; n];
@@ -279,7 +286,7 @@ pub fn ingest_at_owner(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph 
         let owner = part.owner(u);
         let idx = blocks[owner].len() as u32;
         blocks[owner].push(EdgeBlock { src: u, targets: g.neighbors(u).to_vec() });
-        block_of[owner].entry(u).or_default().push(idx);
+        index_entries[owner].push((u, idx));
         src_leaves[u as usize].push(owner);
         cluster.work(owner, deg);
         for (v, _) in g.neighbors(u) {
@@ -291,6 +298,10 @@ pub fn ingest_at_owner(cluster: &mut Cluster, g: &Graph, c: usize) -> DistGraph 
         leaves.dedup();
     }
     cluster.barrier();
+    let block_of = index_entries
+        .into_iter()
+        .map(|e| BlockIndex::from_entries(n, &e))
+        .collect();
     DistGraph {
         n,
         m: g.m(),

@@ -1,0 +1,758 @@
+//! Flat machine-local storage for the SPMD engine's hot paths.
+//!
+//! The engine's inner loops used to live in `DetMap` scratch
+//! (relay/agg/pending and their lane variants), a `DetMap<Vid, Vec<u32>>`
+//! block index, and a plain `Vec<Vid>` frontier — every superstep paid
+//! hashing on each message fold plus a `keys().copied().collect()` +
+//! sort re-materialization per phase.  This module replaces all three
+//! with flat, index-addressed structures:
+//!
+//! * [`Slab`] / [`LaneSlab`] — dense `Vec<f64>` value slabs with a
+//!   `present` bitmap and an explicit **dirty-list** of touched keys.
+//!   Inserts/merges are O(1) array stores; per-phase iteration is one
+//!   `normalize()` (retain-present + sort + dedup of the dirty-list —
+//!   the same ascending-unique order the old collect-and-sort produced,
+//!   over a list proportional to the *touched* set, not the map) and a
+//!   linear walk.
+//! * [`BlockIndex`] — the per-machine source→edge-block index in CSR
+//!   form (offsets + data) instead of a hash map of Vecs.
+//! * [`Frontier`] — the per-machine active-vertex set over the owned
+//!   range, sparse `Vec<Vid>` at low occupancy and a dense bitset at
+//!   high occupancy, switched by a **deterministic** threshold at
+//!   [`Frontier::seal`].  Both representations iterate in ascending
+//!   vertex order and report the same length, so the switch is
+//!   observationally invisible to the engine — which is what keeps the
+//!   threaded==sim bit-equality contract (the license for this surgery)
+//!   intact.
+//!
+//! Determinism note: nothing here iterates in hash order.  Every
+//! iteration surface (`Slab::dirty` after `normalize`, `BlockIndex::get`,
+//! `Frontier::iter`) is ascending and a pure function of the inserted
+//! key set, exactly matching the sorted-key iteration the DetMap code
+//! performed — so the swap changes constants, not bits.
+
+use super::Vid;
+
+/// Dense f64 scratch keyed by vertex id with an explicit dirty-list.
+///
+/// Semantics mirror the `DetMap<Vid, f64>` it replaces:
+/// * [`Slab::insert`]        == `map.insert(k, v)` (overwrite)
+/// * [`Slab::insert_first`]  == `map.entry(k).or_insert(v)` (first write wins)
+/// * [`Slab::merge_with`]    == `map.entry(k).and_modify(f).or_insert(v)`
+/// * [`Slab::take`]          == `map.remove(&k)`
+/// * [`Slab::normalize`] + [`Slab::dirty`] == sorted `map.keys()`
+///
+/// `take` leaves a stale entry on the dirty-list (cleaned by the next
+/// `normalize`/`clear`), and re-inserting a taken key pushes it again —
+/// `normalize` dedups, so the iteration set is always exactly the live
+/// key set in ascending order.
+#[derive(Clone, Debug, Default)]
+pub struct Slab {
+    vals: Vec<f64>,
+    present: Vec<bool>,
+    dirty: Vec<Vid>,
+}
+
+impl Slab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the slab for keys in `0..n`.  Idempotent; call once at
+    /// machine construction.
+    pub fn ensure(&mut self, n: usize) {
+        if self.vals.len() < n {
+            self.vals.resize(n, 0.0);
+            self.present.resize(n, false);
+        }
+    }
+
+    /// Remove every entry (O(touched), not O(n)).
+    pub fn clear(&mut self) {
+        for &v in &self.dirty {
+            self.present[v as usize] = false;
+        }
+        self.dirty.clear();
+    }
+
+    #[inline]
+    pub fn get(&self, v: Vid) -> Option<f64> {
+        if self.present[v as usize] {
+            Some(self.vals[v as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Overwriting insert.
+    #[inline]
+    pub fn insert(&mut self, v: Vid, val: f64) {
+        let i = v as usize;
+        if !self.present[i] {
+            self.present[i] = true;
+            self.dirty.push(v);
+        }
+        self.vals[i] = val;
+    }
+
+    /// First write wins (`entry().or_insert()`).
+    #[inline]
+    pub fn insert_first(&mut self, v: Vid, val: f64) {
+        let i = v as usize;
+        if !self.present[i] {
+            self.present[i] = true;
+            self.dirty.push(v);
+            self.vals[i] = val;
+        }
+    }
+
+    /// `entry().and_modify(|a| *a = f(*a, val)).or_insert(val)`.
+    #[inline]
+    pub fn merge_with(&mut self, v: Vid, val: f64, f: impl Fn(f64, f64) -> f64) {
+        let i = v as usize;
+        if self.present[i] {
+            self.vals[i] = f(self.vals[i], val);
+        } else {
+            self.present[i] = true;
+            self.dirty.push(v);
+            self.vals[i] = val;
+        }
+    }
+
+    /// `map.remove(&v)` — the dirty-list keeps a stale entry until the
+    /// next `normalize`/`clear`.
+    #[inline]
+    pub fn take(&mut self, v: Vid) -> Option<f64> {
+        let i = v as usize;
+        if self.present[i] {
+            self.present[i] = false;
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    /// Sort + dedup the dirty-list and drop stale (taken) entries, so
+    /// [`Slab::dirty`] is exactly the live key set, ascending — the same
+    /// order the old `keys().collect()` + `sort_unstable()` produced.
+    pub fn normalize(&mut self) {
+        let present = &self.present;
+        self.dirty.retain(|&v| present[v as usize]);
+        self.dirty.sort_unstable();
+        self.dirty.dedup();
+    }
+
+    /// The touched key list.  Ascending and duplicate-free only after
+    /// [`Slab::normalize`].
+    #[inline]
+    pub fn dirty(&self) -> &[Vid] {
+        &self.dirty
+    }
+
+    #[inline]
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Indexed access into the dirty-list, for loops that `take` from
+    /// the slab while walking it (taking flips `present` but never
+    /// touches the dirty-list, so indices stay stable).
+    #[inline]
+    pub fn key_at(&self, i: usize) -> Vid {
+        self.dirty[i]
+    }
+}
+
+/// [`Slab`] keyed by `(vertex, lane)` — the fused multi-source scratch.
+/// Values live at flat index `v * lanes + lane`; the dirty-list holds
+/// `(Vid, u32)` pairs whose sorted order equals the old `DetMap`
+/// sorted-key order (tuple order: vertex-major, lane-minor).
+#[derive(Clone, Debug, Default)]
+pub struct LaneSlab {
+    vals: Vec<f64>,
+    present: Vec<bool>,
+    dirty: Vec<(Vid, u32)>,
+    lanes: u32,
+}
+
+impl LaneSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare for a fused pass over keys in `0..n` × `0..lanes`.
+    /// Clears any previous contents; storage is retained when the
+    /// geometry shrinks, grown when it doesn't fit.
+    pub fn configure(&mut self, n: usize, lanes: u32) {
+        self.clear();
+        self.lanes = lanes;
+        let need = n * lanes as usize;
+        if self.vals.len() < need {
+            self.vals.resize(need, 0.0);
+            self.present.resize(need, false);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for &(v, l) in &self.dirty {
+            let i = self.idx(v, l);
+            self.present[i] = false;
+        }
+        self.dirty.clear();
+    }
+
+    #[inline]
+    fn idx(&self, v: Vid, lane: u32) -> usize {
+        v as usize * self.lanes as usize + lane as usize
+    }
+
+    #[inline]
+    pub fn get(&self, key: (Vid, u32)) -> Option<f64> {
+        let i = self.idx(key.0, key.1);
+        if self.present[i] {
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: (Vid, u32), val: f64) {
+        let i = self.idx(key.0, key.1);
+        if !self.present[i] {
+            self.present[i] = true;
+            self.dirty.push(key);
+        }
+        self.vals[i] = val;
+    }
+
+    #[inline]
+    pub fn insert_first(&mut self, key: (Vid, u32), val: f64) {
+        let i = self.idx(key.0, key.1);
+        if !self.present[i] {
+            self.present[i] = true;
+            self.dirty.push(key);
+            self.vals[i] = val;
+        }
+    }
+
+    #[inline]
+    pub fn merge_with(&mut self, key: (Vid, u32), val: f64, f: impl Fn(f64, f64) -> f64) {
+        let i = self.idx(key.0, key.1);
+        if self.present[i] {
+            self.vals[i] = f(self.vals[i], val);
+        } else {
+            self.present[i] = true;
+            self.dirty.push(key);
+            self.vals[i] = val;
+        }
+    }
+
+    #[inline]
+    pub fn take(&mut self, key: (Vid, u32)) -> Option<f64> {
+        let i = self.idx(key.0, key.1);
+        if self.present[i] {
+            self.present[i] = false;
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    pub fn normalize(&mut self) {
+        let present = &self.present;
+        let lanes = self.lanes as usize;
+        self.dirty
+            .retain(|&(v, l)| present[v as usize * lanes + l as usize]);
+        self.dirty.sort_unstable();
+        self.dirty.dedup();
+    }
+
+    #[inline]
+    pub fn dirty(&self) -> &[(Vid, u32)] {
+        &self.dirty
+    }
+
+    #[inline]
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    #[inline]
+    pub fn key_at(&self, i: usize) -> (Vid, u32) {
+        self.dirty[i]
+    }
+
+    /// The contiguous run of live `(v, lane)` keys for vertex `v`, lanes
+    /// ascending.  Requires a prior [`LaneSlab::normalize`] (the run is
+    /// found by binary search on the sorted dirty-list).  This replaces
+    /// the per-superstep `by_src: DetMap<Vid, Vec<_>>` regrouping the
+    /// fused scan path used to build.
+    pub fn pairs_for(&self, v: Vid) -> &[(Vid, u32)] {
+        let lo = self.dirty.partition_point(|&(u, _)| u < v);
+        let hi = self.dirty.partition_point(|&(u, _)| u <= v);
+        &self.dirty[lo..hi]
+    }
+}
+
+/// CSR-style per-machine source→edge-block index: `data[offsets[u] ..
+/// offsets[u+1]]` are the indices into the machine's block vector whose
+/// `src == u`, ascending.  Replaces `DetMap<Vid, Vec<u32>>` — lookup is
+/// two array reads instead of a hash, and iteration order is inherent.
+#[derive(Clone, Debug)]
+pub struct BlockIndex {
+    offsets: Vec<u32>,
+    data: Vec<u32>,
+}
+
+impl BlockIndex {
+    pub fn empty(n: usize) -> Self {
+        BlockIndex {
+            offsets: vec![0; n + 1],
+            data: Vec::new(),
+        }
+    }
+
+    /// Build from `(src, block_idx)` entries sorted ascending by src
+    /// (ingestion emits them that way: its outer loop walks vertices in
+    /// order, appending each machine's entries ascending).
+    pub fn from_entries(n: usize, entries: &[(Vid, u32)]) -> Self {
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].0 <= w[1].0),
+            "BlockIndex entries must be sorted by source"
+        );
+        let mut offsets = vec![0u32; n + 1];
+        for &(u, _) in entries {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let data = entries.iter().map(|&(_, idx)| idx).collect();
+        BlockIndex { offsets, data }
+    }
+
+    /// Block indices for source `u` (empty slice when the machine holds
+    /// none of `u`'s blocks).
+    #[inline]
+    pub fn get(&self, u: Vid) -> &[u32] {
+        let lo = self.offsets[u as usize] as usize;
+        let hi = self.offsets[u as usize + 1] as usize;
+        &self.data[lo..hi]
+    }
+
+    /// First resident block of `u` — the accretion target for live edge
+    /// inserts.
+    #[inline]
+    pub fn first(&self, u: Vid) -> Option<u32> {
+        self.get(u).first().copied()
+    }
+
+    /// Register a new block index for `u`.  O(n) — used only by the live
+    /// -mutation path when a machine gains its first block for a source
+    /// (batches are small; the read paths stay O(1)).
+    pub fn insert(&mut self, u: Vid, idx: u32) {
+        let at = self.offsets[u as usize + 1] as usize;
+        self.data.insert(at, idx);
+        for off in self.offsets[u as usize + 1..].iter_mut() {
+            *off += 1;
+        }
+    }
+}
+
+/// Occupancy divisor for the sparse↔dense frontier switch: the dense
+/// bitset representation engages when at least `span / DENSE_OCCUPANCY_DIV`
+/// of a machine's owned range is active.  A pure function of (active
+/// count, span) — identical on every backend at every P, so the switch
+/// can never perturb results.
+pub const DENSE_OCCUPANCY_DIV: usize = 16;
+
+/// Spans below this stay sparse: a bitset over a handful of words saves
+/// nothing and the sparse path is simpler to reason about at tiny P.
+pub const DENSE_MIN_SPAN: usize = 64;
+
+/// The per-machine active-vertex set over the owned range
+/// `[base, base + span)`.
+///
+/// Accumulation (`push`/`insert`) goes into a recycled sparse vec;
+/// [`Frontier::seal`] converts to a dense bitset when occupancy crosses
+/// `span / DENSE_OCCUPANCY_DIV` (and the span is worth it) —
+/// deterministically, per round.  `fill_all` is the all-active fast path
+/// (O(span/64) instead of materializing the whole range).  Both
+/// representations iterate ascending and agree on `len`, so engine
+/// behavior — and therefore the cross-backend bit contract — cannot
+/// depend on which one is active.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    base: Vid,
+    span: usize,
+    sparse: Vec<Vid>,
+    bits: Vec<u64>,
+    count: usize,
+    dense: bool,
+}
+
+impl Frontier {
+    pub fn new(base: Vid, span: usize) -> Self {
+        Frontier {
+            base,
+            span,
+            sparse: Vec::new(),
+            bits: Vec::new(),
+            count: 0,
+            dense: false,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// Empty the set and return to sparse accumulation (capacity kept).
+    pub fn clear(&mut self) {
+        self.sparse.clear();
+        if self.dense {
+            self.bits.iter_mut().for_each(|w| *w = 0);
+        }
+        self.dense = false;
+        self.count = 0;
+    }
+
+    /// Append an owned vertex in ascending order (the engine's write-back
+    /// loop walks vertices ascending, so this is the hot path).
+    #[inline]
+    pub fn push(&mut self, v: Vid) {
+        debug_assert!(
+            v >= self.base && ((v - self.base) as usize) < self.span,
+            "frontier push outside owned range"
+        );
+        if self.dense {
+            let bit = (v - self.base) as usize;
+            let w = &mut self.bits[bit / 64];
+            let mask = 1u64 << (bit % 64);
+            if *w & mask == 0 {
+                *w |= mask;
+                self.count += 1;
+            }
+        } else {
+            debug_assert!(
+                self.sparse.last().is_none_or(|&last| last < v),
+                "sparse frontier pushes must be ascending"
+            );
+            self.sparse.push(v);
+            self.count += 1;
+        }
+    }
+
+    /// Insert an owned vertex in any order (seed paths, tests).
+    pub fn insert(&mut self, v: Vid) {
+        if self.dense {
+            self.push(v);
+            return;
+        }
+        match self.sparse.binary_search(&v) {
+            Ok(_) => {}
+            Err(pos) => {
+                self.sparse.insert(pos, v);
+                self.count += 1;
+            }
+        }
+    }
+
+    /// Mark the whole owned range active via the dense representation.
+    pub fn fill_all(&mut self) {
+        self.clear();
+        self.ensure_bits();
+        let full_words = self.span / 64;
+        for w in &mut self.bits[..full_words] {
+            *w = u64::MAX;
+        }
+        let rem = self.span % 64;
+        if rem > 0 {
+            self.bits[full_words] = (1u64 << rem) - 1;
+        }
+        self.dense = true;
+        self.count = self.span;
+    }
+
+    fn ensure_bits(&mut self) {
+        let words = self.span.div_ceil(64);
+        if self.bits.len() < words {
+            self.bits.resize(words, 0);
+        }
+    }
+
+    /// Finish a round of accumulation: switch to the dense bitset iff
+    /// occupancy ≥ span / [`DENSE_OCCUPANCY_DIV`] and the span clears
+    /// [`DENSE_MIN_SPAN`].  Pure function of (count, span) — same
+    /// decision on every backend.
+    pub fn seal(&mut self) {
+        if self.dense || self.span < DENSE_MIN_SPAN {
+            return;
+        }
+        if self.count * DENSE_OCCUPANCY_DIV >= self.span {
+            self.force_dense();
+        }
+    }
+
+    /// Densify regardless of the occupancy threshold.  A bench/test seam
+    /// — engine code only densifies through [`Frontier::seal`], which is
+    /// what keeps the switch deterministic.
+    pub fn force_dense(&mut self) {
+        if self.dense {
+            return;
+        }
+        self.ensure_bits();
+        for &v in &self.sparse {
+            let bit = (v - self.base) as usize;
+            self.bits[bit / 64] |= 1u64 << (bit % 64);
+        }
+        self.sparse.clear();
+        self.dense = true;
+    }
+
+    /// Ascending iteration over active vertices — identical order in
+    /// both representations.
+    pub fn iter(&self) -> FrontierIter<'_> {
+        if self.dense {
+            FrontierIter::Dense {
+                bits: &self.bits,
+                base: self.base,
+                word: 0,
+                cur: self.bits.first().copied().unwrap_or(0),
+            }
+        } else {
+            FrontierIter::Sparse(self.sparse.iter())
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<Vid> {
+        self.iter().collect()
+    }
+}
+
+pub enum FrontierIter<'a> {
+    Sparse(std::slice::Iter<'a, Vid>),
+    Dense {
+        bits: &'a [u64],
+        base: Vid,
+        word: usize,
+        cur: u64,
+    },
+}
+
+impl Iterator for FrontierIter<'_> {
+    type Item = Vid;
+
+    #[inline]
+    fn next(&mut self) -> Option<Vid> {
+        match self {
+            FrontierIter::Sparse(it) => it.next().copied(),
+            FrontierIter::Dense {
+                bits,
+                base,
+                word,
+                cur,
+            } => {
+                while *cur == 0 {
+                    *word += 1;
+                    if *word >= bits.len() {
+                        return None;
+                    }
+                    *cur = bits[*word];
+                }
+                let bit = cur.trailing_zeros() as usize;
+                *cur &= *cur - 1;
+                Some(*base + (*word * 64 + bit) as Vid)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_matches_map_semantics() {
+        let mut s = Slab::new();
+        s.ensure(16);
+        s.insert_first(3, 1.0);
+        s.insert_first(3, 9.0); // first write wins
+        assert_eq!(s.get(3), Some(1.0));
+        s.merge_with(3, 5.0, f64::min);
+        assert_eq!(s.get(3), Some(1.0));
+        s.merge_with(7, 2.0, f64::min); // or_insert arm
+        assert_eq!(s.get(7), Some(2.0));
+        s.insert(7, 4.0); // overwrite
+        assert_eq!(s.get(7), Some(4.0));
+        assert_eq!(s.take(3), Some(1.0));
+        assert_eq!(s.take(3), None);
+        assert_eq!(s.get(3), None);
+    }
+
+    #[test]
+    fn slab_normalize_yields_ascending_live_keys() {
+        let mut s = Slab::new();
+        s.ensure(32);
+        for v in [9u32, 2, 30, 2, 17] {
+            s.merge_with(v, 1.0, |a, b| a + b);
+        }
+        s.take(17);
+        s.insert(17, 3.0); // re-inserted after take → duplicate dirty entry
+        s.take(30); // stale entry
+        s.normalize();
+        assert_eq!(s.dirty(), &[2, 9, 17]);
+        // take during an indexed walk leaves indices stable
+        for i in 0..s.dirty_len() {
+            let v = s.key_at(i);
+            assert!(s.take(v).is_some());
+        }
+        s.normalize();
+        assert!(s.dirty().is_empty());
+    }
+
+    #[test]
+    fn slab_clear_is_o_touched_and_idempotent() {
+        let mut s = Slab::new();
+        s.ensure(8);
+        s.insert(1, 1.0);
+        s.insert(5, 2.0);
+        s.clear();
+        assert_eq!(s.get(1), None);
+        assert_eq!(s.get(5), None);
+        s.clear();
+        s.insert(5, 7.0);
+        assert_eq!(s.get(5), Some(7.0));
+        s.normalize();
+        assert_eq!(s.dirty(), &[5]);
+    }
+
+    #[test]
+    fn lane_slab_orders_vertex_major_lane_minor() {
+        let mut s = LaneSlab::new();
+        s.configure(8, 3);
+        s.insert_first((5, 2), 1.0);
+        s.insert_first((1, 1), 2.0);
+        s.insert_first((5, 0), 3.0);
+        s.insert_first((1, 1), 9.0); // first write wins
+        s.normalize();
+        assert_eq!(s.dirty(), &[(1, 1), (5, 0), (5, 2)]);
+        assert_eq!(s.pairs_for(5), &[(5, 0), (5, 2)]);
+        assert_eq!(s.pairs_for(1), &[(1, 1)]);
+        assert!(s.pairs_for(3).is_empty());
+        assert_eq!(s.get((1, 1)), Some(2.0));
+        // reconfigure resets contents, keeps storage
+        s.configure(8, 3);
+        assert_eq!(s.get((1, 1)), None);
+        assert_eq!(s.dirty_len(), 0);
+    }
+
+    #[test]
+    fn block_index_matches_map_of_vecs() {
+        // entries as ingestion emits them: ascending src, idx order kept
+        let entries = vec![(0u32, 0u32), (0, 1), (3, 2), (7, 3)];
+        let ix = BlockIndex::from_entries(8, &entries);
+        assert_eq!(ix.get(0), &[0, 1]);
+        assert_eq!(ix.get(3), &[2]);
+        assert_eq!(ix.get(7), &[3]);
+        assert!(ix.get(5).is_empty());
+        assert_eq!(ix.first(0), Some(0));
+        assert_eq!(ix.first(5), None);
+        let empty = BlockIndex::empty(4);
+        assert!(empty.get(2).is_empty());
+    }
+
+    #[test]
+    fn block_index_insert_registers_new_source() {
+        let mut ix = BlockIndex::from_entries(6, &[(1, 0), (4, 1)]);
+        ix.insert(2, 7);
+        assert_eq!(ix.get(1), &[0]);
+        assert_eq!(ix.get(2), &[7]);
+        assert_eq!(ix.get(4), &[1]);
+        ix.insert(2, 9); // second block for the same source appends
+        assert_eq!(ix.get(2), &[7, 9]);
+    }
+
+    #[test]
+    fn frontier_sparse_and_dense_iterate_identically() {
+        let base = 100u32;
+        let span = 256usize;
+        let mut f = Frontier::new(base, span);
+        let picks: Vec<Vid> = (0..span as Vid).step_by(3).map(|i| base + i).collect();
+        for &v in &picks {
+            f.push(v);
+        }
+        assert!(!f.is_dense());
+        let sparse_order = f.to_vec();
+        f.seal(); // 86/256 ≥ 256/16 → densify
+        assert!(f.is_dense());
+        assert_eq!(f.len(), picks.len());
+        assert_eq!(f.to_vec(), sparse_order);
+        assert_eq!(sparse_order, picks);
+    }
+
+    #[test]
+    fn frontier_switch_threshold_is_exact() {
+        let span = 160usize;
+        let threshold = span / DENSE_OCCUPANCY_DIV; // 10
+        let mut f = Frontier::new(0, span);
+        for v in 0..threshold as Vid - 1 {
+            f.push(v);
+        }
+        f.seal();
+        assert!(!f.is_dense(), "below threshold must stay sparse");
+        f.push(threshold as Vid - 1);
+        f.seal();
+        assert!(f.is_dense(), "at threshold must densify");
+        // tiny spans never densify
+        let mut tiny = Frontier::new(0, DENSE_MIN_SPAN - 1);
+        for v in 0..(DENSE_MIN_SPAN - 1) as Vid {
+            tiny.push(v);
+        }
+        tiny.seal();
+        assert!(!tiny.is_dense());
+    }
+
+    #[test]
+    fn frontier_fill_all_masks_the_last_word() {
+        let mut f = Frontier::new(64, 100);
+        f.fill_all();
+        assert!(f.is_dense());
+        assert_eq!(f.len(), 100);
+        let all = f.to_vec();
+        assert_eq!(all.len(), 100);
+        assert_eq!(all[0], 64);
+        assert_eq!(*all.last().unwrap(), 64 + 99);
+        // clear returns to sparse accumulation with no leftover bits
+        f.clear();
+        assert_eq!(f.len(), 0);
+        f.push(70);
+        f.seal();
+        assert_eq!(f.to_vec(), vec![70]);
+    }
+
+    #[test]
+    fn frontier_insert_is_order_insensitive_and_dedups() {
+        let mut f = Frontier::new(0, 128);
+        f.insert(9);
+        f.insert(4);
+        f.insert(9);
+        assert_eq!(f.to_vec(), vec![4, 9]);
+        assert_eq!(f.len(), 2);
+        f.fill_all();
+        f.insert(4); // dense-mode insert is idempotent too
+        assert_eq!(f.len(), 128);
+    }
+}

@@ -9,6 +9,10 @@
 //! * [`flags`] — the policy matrix: one [`flags::Flags`] block selects
 //!   TDO-GP vs each baseline family and carries the T1/T2/T3 ablation
 //!   knobs.
+//! * [`layout`] — flat machine-local storage for the engine's hot paths:
+//!   dirty-listed f64 slabs (plus the fused lane variant), the CSR-style
+//!   block index, and the sparse/dense frontier with its deterministic
+//!   occupancy switch.
 //! * [`spmd`] — THE engine: the `DistEdgeMap` round (paper §5.1, Fig 6)
 //!   in SPMD form over [`crate::exec::Substrate`] — machine-private
 //!   shards, real value-carrying messages, sparse-dense dual-mode
@@ -26,6 +30,7 @@ pub mod baselines;
 pub mod flags;
 pub mod gen;
 pub mod ingest;
+pub mod layout;
 pub mod spmd;
 
 use crate::bsp::MachineId;

@@ -65,13 +65,13 @@
 use std::sync::Arc;
 
 use crate::bsp::{Cluster, MachineId, RPC_MSG_FACTOR};
-use crate::det::{det_map, DetMap};
 use crate::exec::{no_messages, nothing_words, MachineAcct, Nothing, Substrate};
 use crate::mutate::{self, DeltaNote, EdgeOp, MutationBatch};
 use crate::CostModel;
 
 use super::flags::{Flags, CONTRIB_WORDS, DENSE_DIV, VAL_WORDS};
 use super::ingest::{ingest, ingest_at_owner, relay_tree_levels, DistGraph, EdgeBlock};
+use super::layout::{BlockIndex, Frontier, LaneSlab, Slab};
 use super::{Graph, VertexPart, Vid};
 
 /// Run the ingestion pass once for a P-machine deployment (on a scratch
@@ -126,20 +126,25 @@ pub struct GraphMeta {
 /// a superstep, the driver between supersteps.
 pub struct MachineState<AS> {
     blocks: Vec<EdgeBlock>,
-    block_of: DetMap<Vid, Vec<u32>>,
+    /// CSR-style source→block index ([`BlockIndex`]): two array reads
+    /// per lookup instead of a hash.
+    block_of: BlockIndex,
     /// Algorithm state for the owned vertex range (e.g. a distance
     /// slice); see the shard constructors in [`super::algorithms`].
     pub algo: AS,
-    /// Active owned vertices, ascending.
-    frontier: Vec<Vid>,
-    /// Phase-1 scratch: delivered (or self-seeded) source values.
-    relay: DetMap<Vid, f64>,
+    /// Active owned vertices over `[range.start, range.end)` — sparse
+    /// vec or dense bitset, switched deterministically at
+    /// [`Frontier::seal`]; both iterate ascending.
+    frontier: Frontier,
+    /// Phase-1 scratch: delivered (or self-seeded) source values
+    /// (flat dirty-listed slab; see [`super::layout`]).
+    relay: Slab,
     /// Phase-2 scratch: pre-merged contributions per destination.
-    agg: DetMap<Vid, f64>,
+    agg: Slab,
     /// Phase-2 scratch: raw per-edge contributions (premerge off).
     raw: Vec<(Vid, f64)>,
     /// Phase-3/4 scratch: partial aggregates currently held here.
-    pending: DetMap<Vid, f64>,
+    pending: Slab,
     /// Destination-tree depth this machine's contributions need.
     depth_needed: usize,
     /// Fused-wave frontier: active (vertex, lane) pairs, ascending.
@@ -147,11 +152,12 @@ pub struct MachineState<AS> {
     /// heuristic and tree sizing read one field in both round shapes.
     lane_frontier: Vec<(Vid, u32)>,
     /// Lane-keyed mirrors of the round scratch above, used by
-    /// [`SpmdEngine::edge_map_lanes`] (fused multi-source waves).
-    relay_l: DetMap<(Vid, u32), f64>,
-    agg_l: DetMap<(Vid, u32), f64>,
+    /// [`SpmdEngine::edge_map_lanes`] (fused multi-source waves);
+    /// geometry set per wave by the frontier seeding calls.
+    relay_l: LaneSlab,
+    agg_l: LaneSlab,
     raw_l: Vec<(Vid, u32, f64)>,
-    pending_l: DetMap<(Vid, u32), f64>,
+    pending_l: LaneSlab,
 }
 
 /// Block placement policy (the two ingestion passes of §5.1 / §6.1).
@@ -257,21 +263,30 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             .into_iter()
             .zip(dg.block_of)
             .enumerate()
-            .map(|(m, (blocks, block_of))| MachineState {
-                blocks,
-                block_of,
-                algo: init(m, &meta),
-                frontier: Vec::new(),
-                relay: det_map(),
-                agg: det_map(),
-                raw: Vec::new(),
-                pending: det_map(),
-                depth_needed: 0,
-                lane_frontier: Vec::new(),
-                relay_l: det_map(),
-                agg_l: det_map(),
-                raw_l: Vec::new(),
-                pending_l: det_map(),
+            .map(|(m, (blocks, block_of))| {
+                // The value slabs are keyed by global vertex id (relay /
+                // agg / pending hold non-owned vertices at block and
+                // relay machines); only the frontier is owned-range.
+                let mut st = MachineState {
+                    blocks,
+                    block_of,
+                    algo: init(m, &meta),
+                    frontier: Frontier::new(meta.part.range(m).start, meta.part.count_on(m)),
+                    relay: Slab::new(),
+                    agg: Slab::new(),
+                    raw: Vec::new(),
+                    pending: Slab::new(),
+                    depth_needed: 0,
+                    lane_frontier: Vec::new(),
+                    relay_l: LaneSlab::new(),
+                    agg_l: LaneSlab::new(),
+                    raw_l: Vec::new(),
+                    pending_l: LaneSlab::new(),
+                };
+                st.relay.ensure(meta.n);
+                st.agg.ensure(meta.n);
+                st.pending.ensure(meta.n);
+                st
             })
             .collect();
         SpmdEngine {
@@ -383,21 +398,27 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     pub fn set_frontier_single(&mut self, v: Vid) {
         self.clear_frontier();
         let owner = self.meta.part.owner(v);
-        self.machines[owner].frontier.push(v);
+        self.machines[owner].frontier.insert(v);
     }
 
     pub fn set_frontier_all(&mut self) {
-        let meta = Arc::clone(&self.meta);
-        for (m, st) in self.machines.iter_mut().enumerate() {
-            st.frontier = meta.part.range(m).collect();
+        for st in self.machines.iter_mut() {
+            st.frontier.fill_all();
         }
+    }
+
+    /// Number of machines whose frontier currently sits in the dense
+    /// bitset representation (pure observability — the regression tests
+    /// use it to pin that the sparse↔dense switch actually engages).
+    pub fn frontier_dense_machines(&self) -> usize {
+        self.machines.iter().filter(|s| s.frontier.is_dense()).count()
     }
 
     /// Per-machine snapshot of the current frontier (driver-side,
     /// between supersteps) — BC's forward pass records these to replay
     /// the levels backward.
     pub fn frontier_parts(&self) -> Vec<Vec<Vid>> {
-        self.machines.iter().map(|s| s.frontier.clone()).collect()
+        self.machines.iter().map(|s| s.frontier.to_vec()).collect()
     }
 
     /// Restore a frontier previously captured with
@@ -407,7 +428,10 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         assert_eq!(parts.len(), self.machines.len(), "frontier parts != machines");
         for (st, part) in self.machines.iter_mut().zip(parts) {
             st.frontier.clear();
-            st.frontier.extend_from_slice(part);
+            for &v in part {
+                st.frontier.push(v);
+            }
+            st.frontier.seal();
         }
     }
 
@@ -421,11 +445,14 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     /// pushing on vertex change yields a sorted, deduped projection).
     fn project_lane_union(st: &mut MachineState<AS>) {
         st.frontier.clear();
+        let mut last: Option<Vid> = None;
         for &(v, _lane) in &st.lane_frontier {
-            if st.frontier.last() != Some(&v) {
+            if last != Some(v) {
                 st.frontier.push(v);
+                last = Some(v);
             }
         }
+        st.frontier.seal();
     }
 
     /// Seed a fused multi-source wave: activate each (vertex, lane) pair
@@ -433,9 +460,13 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     /// being fused (lane `l` is query `l`'s traversal).
     pub fn set_frontier_lanes(&mut self, seeds: &[(Vid, u32)]) {
         let meta = Arc::clone(&self.meta);
+        let lanes = seeds.iter().map(|&(_, l)| l + 1).max().unwrap_or(0);
         for st in self.machines.iter_mut() {
             st.frontier.clear();
             st.lane_frontier.clear();
+            st.relay_l.configure(meta.n, lanes);
+            st.agg_l.configure(meta.n, lanes);
+            st.pending_l.configure(meta.n, lanes);
         }
         for &(v, lane) in seeds {
             let owner = meta.part.owner(v);
@@ -453,9 +484,12 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
     pub fn set_frontier_all_lanes(&mut self, lanes: u32) {
         let meta = Arc::clone(&self.meta);
         for (m, st) in self.machines.iter_mut().enumerate() {
-            st.frontier = meta.part.range(m).collect();
+            st.frontier.fill_all();
             st.lane_frontier.clear();
-            for &v in &st.frontier {
+            st.relay_l.configure(meta.n, lanes);
+            st.agg_l.configure(meta.n, lanes);
+            st.pending_l.configure(meta.n, lanes);
+            for v in meta.part.range(m) {
                 for lane in 0..lanes {
                     st.lane_frontier.push((v, lane));
                 }
@@ -734,7 +768,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             .machines
             .iter()
             .flat_map(|s| s.frontier.iter())
-            .map(|&u| meta.out_deg[u as usize] as u64)
+            .map(|u| meta.out_deg[u as usize] as u64)
             .sum();
         let dense = !flags.sparse_mode
             || (sum_deg + active_total as u64) > meta.m as u64 / DENSE_DIV;
@@ -746,7 +780,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             self.machines
                 .iter()
                 .flat_map(|s| s.frontier.iter())
-                .map(|&u| meta.src_tree[u as usize].len())
+                .map(|u| meta.src_tree[u as usize].len())
                 .max()
                 .unwrap_or(0)
         } else {
@@ -765,7 +799,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 st.pending.clear();
                 st.depth_needed = 0;
                 let mut out: Vec<(MachineId, (Vid, f64))> = Vec::new();
-                for &u in &st.frontier {
+                for u in st.frontier.iter() {
                     let Some(val) = src_value(m, &st.algo, u) else { continue };
                     if dense {
                         if flags.dest_aware {
@@ -813,13 +847,12 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                           inbox: Vec<(Vid, f64)>,
                           _acct: &mut MachineAcct| {
                         for (u, val) in inbox {
-                            st.relay.entry(u).or_insert(val);
+                            st.relay.insert_first(u, val);
                         }
-                        let mut keys: Vec<Vid> = st.relay.keys().copied().collect();
-                        keys.sort_unstable();
+                        st.relay.normalize();
                         let mut out = Vec::new();
-                        for u in keys {
-                            let val = st.relay[&u];
+                        for &u in st.relay.dirty() {
+                            let val = st.relay.get(u).unwrap();
                             let levels = &meta_d.src_tree[u as usize];
                             let k = levels.len();
                             if k <= d {
@@ -855,16 +888,13 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                   inbox: Vec<(Vid, f64)>,
                   acct: &mut MachineAcct| {
                 for (u, val) in inbox {
-                    st.relay.entry(u).or_insert(val);
+                    st.relay.insert_first(u, val);
                 }
                 let MachineState { blocks, block_of, relay, agg, raw, pending, depth_needed, .. } =
                     st;
-                let emit = |v: Vid,
-                            cv: f64,
-                            agg: &mut DetMap<Vid, f64>,
-                            raw: &mut Vec<(Vid, f64)>| {
+                let emit = |v: Vid, cv: f64, agg: &mut Slab, raw: &mut Vec<(Vid, f64)>| {
                     if flags.premerge {
-                        agg.entry(v).and_modify(|acc| *acc = merge(*acc, cv)).or_insert(cv);
+                        agg.merge_with(v, cv, merge);
                     } else {
                         raw.push((v, cv));
                     }
@@ -873,7 +903,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 if scan {
                     for block in blocks.iter() {
                         work += block.targets.len() as u64;
-                        let Some(&val) = relay.get(&block.src) else { continue };
+                        let Some(val) = relay.get(block.src) else { continue };
                         for &(v, w) in &block.targets {
                             if let Some(cv) = edge_fn(val, block.src, v, w) {
                                 work += 1;
@@ -882,12 +912,10 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         }
                     }
                 } else {
-                    let mut keys: Vec<Vid> = relay.keys().copied().collect();
-                    keys.sort_unstable();
-                    for u in keys {
-                        let val = relay[&u];
-                        let Some(idxs) = block_of.get(&u) else { continue };
-                        for &idx in idxs {
+                    relay.normalize();
+                    for &u in relay.dirty() {
+                        let val = relay.get(u).unwrap();
+                        for &idx in block_of.get(u) {
                             let block = &blocks[idx as usize];
                             for &(v, w) in &block.targets {
                                 work += 1;
@@ -907,12 +935,11 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 // Emit this machine's contributions toward the owners.
                 let mut out: Vec<(MachineId, (Vid, f64))> = Vec::new();
                 if flags.premerge {
-                    let mut keys: Vec<Vid> = agg.keys().copied().collect();
-                    keys.sort_unstable();
+                    agg.normalize();
                     if flags.use_trees {
                         let mut max_d = 0usize;
-                        for v in keys {
-                            let val = agg[&v];
+                        for &v in agg.dirty() {
+                            let val = agg.get(v).unwrap();
                             let levels = &meta2.dst_tree[v as usize];
                             max_d = max_d.max(levels.len());
                             let edge = levels
@@ -929,8 +956,8 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         }
                         *depth_needed = max_d;
                     } else {
-                        for v in keys {
-                            out.push((meta2.part.owner(v), (v, agg[&v])));
+                        for &v in agg.dirty() {
+                            out.push((meta2.part.owner(v), (v, agg.get(v).unwrap())));
                         }
                     }
                 } else {
@@ -964,15 +991,14 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                     // ⊗-merge arriving partials in (sender, emission)
                     // order — deterministic on both backends.
                     for (v, val) in inbox {
-                        st.pending
-                            .entry(v)
-                            .and_modify(|acc| *acc = merge(*acc, val))
-                            .or_insert(val);
+                        st.pending.merge_with(v, val, merge);
                     }
-                    let mut keys: Vec<Vid> = st.pending.keys().copied().collect();
-                    keys.sort_unstable();
+                    // Indexed walk: `take` flips presence without touching
+                    // the dirty-list, so indices stay stable mid-loop.
+                    st.pending.normalize();
                     let mut out = Vec::new();
-                    for v in keys {
+                    for i in 0..st.pending.dirty_len() {
+                        let v = st.pending.key_at(i);
                         let levels = &meta_d.dst_tree[v as usize];
                         if levels.len() <= d {
                             continue; // merged out already / root holds it
@@ -982,7 +1008,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         else {
                             continue; // root (or not yet at this level)
                         };
-                        let val = st.pending.remove(&v).unwrap();
+                        let val = st.pending.take(v).unwrap();
                         out.push((parent, (v, val)));
                     }
                     out
@@ -1001,17 +1027,14 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                   inbox: Vec<(Vid, f64)>,
                   acct: &mut MachineAcct| {
                 for (v, val) in inbox {
-                    st.pending
-                        .entry(v)
-                        .and_modify(|acc| *acc = merge(*acc, val))
-                        .or_insert(val);
+                    st.pending.merge_with(v, val, merge);
                 }
-                let mut keys: Vec<Vid> = st.pending.keys().copied().collect();
-                keys.sort_unstable();
+                st.pending.normalize();
                 st.frontier.clear();
                 let mut wb = 0u64;
-                for v in keys {
-                    let val = st.pending.remove(&v).unwrap();
+                for i in 0..st.pending.dirty_len() {
+                    let v = st.pending.key_at(i);
+                    let val = st.pending.take(v).unwrap();
                     debug_assert_eq!(
                         meta4.part.owner(v),
                         m,
@@ -1022,6 +1045,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         st.frontier.push(v);
                     }
                 }
+                st.frontier.seal();
                 acct.work(wb * eff / 100);
                 Vec::new()
             },
@@ -1087,7 +1111,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
             self.machines
                 .iter()
                 .flat_map(|s| s.frontier.iter())
-                .map(|&u| meta.src_tree[u as usize].len())
+                .map(|u| meta.src_tree[u as usize].len())
                 .max()
                 .unwrap_or(0)
         } else {
@@ -1151,13 +1175,12 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                           inbox: Vec<(Vid, u32, f64)>,
                           _acct: &mut MachineAcct| {
                         for (u, lane, val) in inbox {
-                            st.relay_l.entry((u, lane)).or_insert(val);
+                            st.relay_l.insert_first((u, lane), val);
                         }
-                        let mut keys: Vec<(Vid, u32)> = st.relay_l.keys().copied().collect();
-                        keys.sort_unstable();
+                        st.relay_l.normalize();
                         let mut out = Vec::new();
-                        for (u, lane) in keys {
-                            let val = st.relay_l[&(u, lane)];
+                        for &(u, lane) in st.relay_l.dirty() {
+                            let val = st.relay_l.get((u, lane)).unwrap();
                             let levels = &meta_d.src_tree[u as usize];
                             let k = levels.len();
                             if k <= d {
@@ -1190,31 +1213,23 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                   inbox: Vec<(Vid, u32, f64)>,
                   acct: &mut MachineAcct| {
                 for (u, lane, val) in inbox {
-                    st.relay_l.entry((u, lane)).or_insert(val);
+                    st.relay_l.insert_first((u, lane), val);
                 }
                 let MachineState {
                     blocks, block_of, relay_l, agg_l, raw_l, pending_l, depth_needed, ..
                 } = st;
-                // Group delivered lane values by source so one block walk
-                // serves every lane; sorted keys ⇒ lane-ascending groups.
-                let mut by_src: DetMap<Vid, Vec<(u32, f64)>> = det_map();
-                {
-                    let mut keys: Vec<(Vid, u32)> = relay_l.keys().copied().collect();
-                    keys.sort_unstable();
-                    for (u, lane) in keys {
-                        by_src.entry(u).or_default().push((lane, relay_l[&(u, lane)]));
-                    }
-                }
+                // The normalized dirty-list is sorted (vertex, lane), so
+                // each source's lanes are one contiguous run
+                // ([`LaneSlab::pairs_for`]) — no per-superstep regrouping
+                // map; one block walk still serves every lane.
+                relay_l.normalize();
                 let emit = |v: Vid,
                             lane: u32,
                             cv: f64,
-                            agg_l: &mut DetMap<(Vid, u32), f64>,
+                            agg_l: &mut LaneSlab,
                             raw_l: &mut Vec<(Vid, u32, f64)>| {
                     if flags.premerge {
-                        agg_l
-                            .entry((v, lane))
-                            .and_modify(|acc| *acc = merge(*acc, cv))
-                            .or_insert(cv);
+                        agg_l.merge_with((v, lane), cv, merge);
                     } else {
                         raw_l.push((v, lane, cv));
                     }
@@ -1223,9 +1238,13 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 if scan {
                     for block in blocks.iter() {
                         work += block.targets.len() as u64;
-                        let Some(lanes) = by_src.get(&block.src) else { continue };
+                        let lanes = relay_l.pairs_for(block.src);
+                        if lanes.is_empty() {
+                            continue;
+                        }
                         for &(v, w) in &block.targets {
-                            for &(lane, val) in lanes {
+                            for &(u, lane) in lanes {
+                                let val = relay_l.get((u, lane)).unwrap();
                                 if let Some(cv) = edge_fn(val, block.src, v, w) {
                                     work += 1;
                                     emit(v, lane, cv, agg_l, raw_l);
@@ -1234,15 +1253,20 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         }
                     }
                 } else {
-                    let mut keys: Vec<Vid> = by_src.keys().copied().collect();
-                    keys.sort_unstable();
-                    for u in keys {
-                        let lanes = &by_src[&u];
-                        let Some(idxs) = block_of.get(&u) else { continue };
-                        for &idx in idxs {
+                    // Walk the dirty-list in per-source runs.
+                    let keys = relay_l.dirty();
+                    let mut i = 0;
+                    while i < keys.len() {
+                        let u = keys[i].0;
+                        let mut j = i;
+                        while j < keys.len() && keys[j].0 == u {
+                            j += 1;
+                        }
+                        for &idx in block_of.get(u) {
                             let block = &blocks[idx as usize];
                             for &(v, w) in &block.targets {
-                                for &(lane, val) in lanes {
+                                for &(uu, lane) in &keys[i..j] {
+                                    let val = relay_l.get((uu, lane)).unwrap();
                                     work += 1;
                                     if let Some(cv) = edge_fn(val, u, v, w) {
                                         emit(v, lane, cv, agg_l, raw_l);
@@ -1250,6 +1274,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                                 }
                             }
                         }
+                        i = j;
                     }
                 }
                 let mut units = work * eff / 100;
@@ -1261,12 +1286,11 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                 // Emit this machine's contributions toward the owners.
                 let mut out: Vec<(MachineId, (Vid, u32, f64))> = Vec::new();
                 if flags.premerge {
-                    let mut keys: Vec<(Vid, u32)> = agg_l.keys().copied().collect();
-                    keys.sort_unstable();
+                    agg_l.normalize();
                     if flags.use_trees {
                         let mut max_d = 0usize;
-                        for (v, lane) in keys {
-                            let val = agg_l[&(v, lane)];
+                        for &(v, lane) in agg_l.dirty() {
+                            let val = agg_l.get((v, lane)).unwrap();
                             let levels = &meta2.dst_tree[v as usize];
                             max_d = max_d.max(levels.len());
                             let edge = levels
@@ -1283,8 +1307,11 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         }
                         *depth_needed = max_d;
                     } else {
-                        for (v, lane) in keys {
-                            out.push((meta2.part.owner(v), (v, lane, agg_l[&(v, lane)])));
+                        for &(v, lane) in agg_l.dirty() {
+                            out.push((
+                                meta2.part.owner(v),
+                                (v, lane, agg_l.get((v, lane)).unwrap()),
+                            ));
                         }
                     }
                 } else {
@@ -1316,15 +1343,13 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                       inbox: Vec<(Vid, u32, f64)>,
                       _acct: &mut MachineAcct| {
                     for (v, lane, val) in inbox {
-                        st.pending_l
-                            .entry((v, lane))
-                            .and_modify(|acc| *acc = merge(*acc, val))
-                            .or_insert(val);
+                        st.pending_l.merge_with((v, lane), val, merge);
                     }
-                    let mut keys: Vec<(Vid, u32)> = st.pending_l.keys().copied().collect();
-                    keys.sort_unstable();
+                    // Indexed walk (`take` leaves dirty indices stable).
+                    st.pending_l.normalize();
                     let mut out = Vec::new();
-                    for (v, lane) in keys {
+                    for i in 0..st.pending_l.dirty_len() {
+                        let (v, lane) = st.pending_l.key_at(i);
                         let levels = &meta_d.dst_tree[v as usize];
                         if levels.len() <= d {
                             continue; // merged out already / root holds it
@@ -1334,7 +1359,7 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                         else {
                             continue; // root (or not yet at this level)
                         };
-                        let val = st.pending_l.remove(&(v, lane)).unwrap();
+                        let val = st.pending_l.take((v, lane)).unwrap();
                         out.push((parent, (v, lane, val)));
                     }
                     out
@@ -1353,17 +1378,14 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
                   inbox: Vec<(Vid, u32, f64)>,
                   acct: &mut MachineAcct| {
                 for (v, lane, val) in inbox {
-                    st.pending_l
-                        .entry((v, lane))
-                        .and_modify(|acc| *acc = merge(*acc, val))
-                        .or_insert(val);
+                    st.pending_l.merge_with((v, lane), val, merge);
                 }
-                let mut keys: Vec<(Vid, u32)> = st.pending_l.keys().copied().collect();
-                keys.sort_unstable();
+                st.pending_l.normalize();
                 st.lane_frontier.clear();
                 let mut wb = 0u64;
-                for (v, lane) in keys {
-                    let val = st.pending_l.remove(&(v, lane)).unwrap();
+                for i in 0..st.pending_l.dirty_len() {
+                    let (v, lane) = st.pending_l.key_at(i);
+                    let val = st.pending_l.take((v, lane)).unwrap();
                     debug_assert_eq!(
                         meta4.part.owner(v),
                         m,
@@ -1409,8 +1431,7 @@ mod tests {
         engine.clear_frontier();
         engine.set_frontier_single(0);
         let owner1 = engine.meta().part.owner(1);
-        engine.machines[owner1].frontier.push(1);
-        engine.machines[owner1].frontier.sort_unstable();
+        engine.machines[owner1].frontier.insert(1);
         engine.edge_map(
             &|_m, _st, _u| Some(1.0),
             &|sv, _u, _v, _w| Some(sv),

@@ -53,6 +53,12 @@
 //!                                              perf snapshots; --check
 //!                                              diffs them against the
 //!                                              repo-root baselines
+//! repro profile [--reps N] [--out PATH]        per-stage wallclock A/Bs
+//!                                              (scheduler stage, DetMap
+//!                                              vs slab, sparse vs dense
+//!                                              frontier, per-message vs
+//!                                              batched sends); --out
+//!                                              writes the JSON blob
 //! repro all     [--seed S]                     every figure/table above
 //! repro smoke                                  tiny end-to-end sanity run
 //! ```
@@ -109,6 +115,7 @@ struct Args {
     out: Option<String>,
     check: bool,
     baseline: String,
+    reps: usize,
 }
 
 /// Parse the value following flag `name` at `argv[*i]`, advancing `i`.
@@ -143,6 +150,7 @@ fn parse_args() -> Args {
         out: None,
         check: false,
         baseline: "..".to_string(),
+        reps: 20,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -164,6 +172,7 @@ fn parse_args() -> Args {
             "--out" => args.out = Some(parse_flag(&argv, &mut i, "--out")),
             "--check" => args.check = true,
             "--baseline" => args.baseline = parse_flag(&argv, &mut i, "--baseline"),
+            "--reps" => args.reps = parse_flag(&argv, &mut i, "--reps"),
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -415,6 +424,22 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "profile" => {
+            if args.reps < 1 {
+                eprintln!("--reps must be >= 1");
+                std::process::exit(2);
+            }
+            let report = repro::profile::run_profile(args.reps);
+            if let Some(path) = &args.out {
+                match std::fs::write(path, report.json()) {
+                    Ok(()) => println!("wrote {path}"),
+                    Err(e) => {
+                        eprintln!("FAILED to write {path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
         "all" => {
             repro::kv::fig5(args.per_machine, args.seed);
             repro::graphs::table2(args.seed);
@@ -429,10 +454,10 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|trace|bench-snapshot|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|trace|bench-snapshot|profile|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
                  [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--fuse] [--cache] \
-                 [--quick] [--out PATH] [--check] [--baseline DIR]"
+                 [--quick] [--out PATH] [--check] [--baseline DIR] [--reps N]"
             );
             std::process::exit(2);
         }

@@ -18,8 +18,8 @@
 //! from-scratch ground truth the incremental path is tested against.
 
 use crate::bsp::MachineId;
-use crate::det::DetMap;
 use crate::graph::ingest::{DistGraph, EdgeBlock};
+use crate::graph::layout::BlockIndex;
 use crate::graph::Vid;
 
 use super::stream::{EdgeOp, MutationBatch};
@@ -42,20 +42,13 @@ pub struct DeltaNote {
 /// resident block, or a new block when the machine holds none (the
 /// owner-accretion path — deltas never spawn blocks on transit
 /// machines).
-pub fn insert_arc(
-    blocks: &mut Vec<EdgeBlock>,
-    block_of: &mut DetMap<Vid, Vec<u32>>,
-    u: Vid,
-    v: Vid,
-    w: f32,
-) {
-    let idxs = block_of.entry(u).or_default();
-    if let Some(&first) = idxs.first() {
+pub fn insert_arc(blocks: &mut Vec<EdgeBlock>, block_of: &mut BlockIndex, u: Vid, v: Vid, w: f32) {
+    if let Some(first) = block_of.first(u) {
         blocks[first as usize].targets.push((v, w));
     } else {
         let idx = blocks.len() as u32;
         blocks.push(EdgeBlock { src: u, targets: vec![(v, w)] });
-        idxs.push(idx);
+        block_of.insert(u, idx);
     }
 }
 
@@ -65,14 +58,8 @@ pub fn insert_arc(
 /// block — is a deterministic function of the op sequence.  Returns
 /// whether the arc was found here.  Emptied blocks are kept: block
 /// indices must stay stable.
-pub fn delete_arc(
-    blocks: &mut [EdgeBlock],
-    block_of: &DetMap<Vid, Vec<u32>>,
-    u: Vid,
-    v: Vid,
-) -> bool {
-    let Some(idxs) = block_of.get(&u) else { return false };
-    for &bi in idxs {
+pub fn delete_arc(blocks: &mut [EdgeBlock], block_of: &BlockIndex, u: Vid, v: Vid) -> bool {
+    for &bi in block_of.get(u) {
         let targets = &mut blocks[bi as usize].targets;
         if let Some(pos) = targets.iter().position(|(t, _)| *t == v) {
             targets.remove(pos);
@@ -84,10 +71,8 @@ pub fn delete_arc(
 
 /// Does this machine still hold any out-edge of `u`?  (Source-tree leaf
 /// membership after a delete.)
-pub fn holds_src(blocks: &[EdgeBlock], block_of: &DetMap<Vid, Vec<u32>>, u: Vid) -> bool {
-    block_of
-        .get(&u)
-        .is_some_and(|idxs| idxs.iter().any(|&bi| !blocks[bi as usize].targets.is_empty()))
+pub fn holds_src(blocks: &[EdgeBlock], block_of: &BlockIndex, u: Vid) -> bool {
+    block_of.get(u).iter().any(|&bi| !blocks[bi as usize].targets.is_empty())
 }
 
 /// Does this machine still hold any in-edge of `v`?  (Destination-tree

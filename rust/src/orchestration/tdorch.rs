@@ -252,9 +252,9 @@ fn emit_ready_acks<A: OrchApp>(
 impl<A, S> Scheduler<A, S> for TdOrch
 where
     A: OrchApp + Sync,
-    A::Ctx: Send,
-    A::Val: Send,
-    A::Out: Send,
+    A::Ctx: Send + 'static,
+    A::Val: Send + 'static,
+    A::Out: Send + 'static,
     S: Substrate,
 {
     fn name(&self) -> &'static str {

@@ -31,9 +31,10 @@
 //! file in `<dir>`:
 //!
 //! * committed file missing ............................ FAIL
-//! * committed file carries `"status":"pending"` ....... warn + pass
-//!   (the placeholder committed before the numbers first land, and the
-//!   escape hatch when an intentional perf change re-baselines)
+//! * committed file carries `"status":"pending"` ....... FAIL — the
+//!   placeholder is an IOU, not a baseline; the gate stays red until a
+//!   real snapshot is committed (run the refresh command below on a
+//!   machine with the toolchain and commit the two files)
 //! * committed file contains the fresh object .......... pass
 //! * anything else ..................................... FAIL — the
 //!   deterministic perf surface moved without a snapshot refresh.
@@ -67,7 +68,8 @@ pub struct BenchSnapshotSummary {
     pub wrote: Vec<String>,
     /// Baseline files that matched the fresh deterministic object.
     pub checked: usize,
-    /// Baseline files still carrying the `pending` placeholder.
+    /// Baseline files still carrying the `pending` placeholder (these
+    /// fail the check: a placeholder is not a baseline).
     pub pending: usize,
     /// Baseline files that exist but disagree (or could not be read).
     pub mismatches: usize,
@@ -222,6 +224,16 @@ pub fn run_bench_snapshot(out_dir: &str, baseline: Option<&str>) -> BenchSnapsho
         }
     }
 
+    // Per-stage wallclock A/Bs ride along as a side artifact next to
+    // the snapshots.  Annotation ONLY: host wall-clock never enters the
+    // compared deterministic objects, so a write failure here warns
+    // instead of failing the gate.
+    let profile_path = format!("{out_dir}/profile-stage.json");
+    match std::fs::write(&profile_path, crate::repro::profile::run_profile(3).json()) {
+        Ok(()) => println!("wrote {profile_path} (annotation only, never diffed)"),
+        Err(e) => println!("warning: could not write {profile_path}: {e}"),
+    }
+
     let (mut checked, mut pending, mut mismatches) = (0usize, 0usize, 0usize);
     if let Some(base) = baseline {
         for (name, _, det) in &files {
@@ -238,8 +250,9 @@ pub fn run_bench_snapshot(out_dir: &str, baseline: Option<&str>) -> BenchSnapsho
                     }
                     CheckOutcome::Pending => {
                         println!(
-                            "check PENDING: {path} is still the placeholder — \
-                             commit the freshly written file to arm the gate"
+                            "CHECK FAILED: {path} is still the placeholder — \
+                             a pending snapshot is an IOU, not a baseline; \
+                             commit the freshly written file to turn the gate green"
                         );
                         pending += 1;
                     }
@@ -256,7 +269,7 @@ pub fn run_bench_snapshot(out_dir: &str, baseline: Option<&str>) -> BenchSnapsho
         }
     }
 
-    let all_valid = lc_valid && mismatches == 0 && write_failures == 0;
+    let all_valid = lc_valid && mismatches == 0 && pending == 0 && write_failures == 0;
     println!(
         "\nbench-snapshot {}  (wrote {}, checked {checked}, pending {pending}, \
          mismatches {mismatches})",
@@ -315,5 +328,28 @@ mod tests {
         assert_eq!(s.pending, 0);
         assert_eq!(s.mismatches, 0);
         assert!(s.all_valid);
+    }
+
+    #[test]
+    fn pending_placeholder_fails_the_check() {
+        // A committed placeholder is an IOU, not a baseline: the gate
+        // must go red, not warn-and-pass.
+        let dir = std::env::temp_dir().join("tdorch-bench-snapshot-pending-test");
+        let base = dir.join("baseline");
+        std::fs::create_dir_all(&base).unwrap();
+        for name in [GRAPH_FILE, LOADCURVE_FILE] {
+            std::fs::write(
+                base.join(name),
+                "{\"schema\":\"x\",\"status\":\"pending\"}\n",
+            )
+            .unwrap();
+        }
+        let s = run_bench_snapshot(
+            dir.join("out").to_str().unwrap(),
+            Some(base.to_str().unwrap()),
+        );
+        assert_eq!(s.pending, 2);
+        assert_eq!(s.mismatches, 0);
+        assert!(!s.all_valid, "pending placeholders must fail the gate");
     }
 }

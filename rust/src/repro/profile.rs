@@ -1,0 +1,304 @@
+//! `repro profile` — per-stage wallclock A/Bs for the hot-path layouts.
+//!
+//! Times the concrete representation choices the flat shard memory
+//! layout is built on, side by side with the shapes they replaced:
+//!
+//! * the full TD-Orch scheduler stage (the L3 hot path the §Perf pass
+//!   optimizes — the old `examples/profile_stage.rs` loop body);
+//! * `DetMap` scratch vs the flat [`Slab`](crate::graph::layout::Slab)
+//!   for the edge_map merge-and-walk;
+//! * sorted-sparse vs dense-bitset
+//!   [`Frontier`](crate::graph::layout::Frontier) iteration at the two
+//!   occupancies bracketing the engine's seal threshold;
+//! * one mpsc send per payload vs one batched send (the threaded
+//!   substrate's old vs new wire discipline).
+//!
+//! Everything here is **measured host wall-clock** — annotation, never
+//! a comparison surface.  `repro bench-snapshot` echoes the numbers
+//! into `profile-stage.json` next to the snapshots, but the committed
+//! `BENCH_*.json` baselines never include them: the CI diff gate
+//! compares deterministic objects only.  The computed *checksums* are
+//! deterministic and asserted equal across each A/B pair, so the two
+//! sides provably do the same work.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::det::{det_map, DetMap};
+use crate::graph::layout::{Frontier, Slab};
+use crate::orchestration::tdorch::TdOrch;
+use crate::orchestration::{spread_tasks, Scheduler, Task};
+use crate::repro::TablePrinter;
+use crate::{Cluster, CostModel, DistStore, OrchApp};
+
+/// Minimal in-place counting app (same shape `benches/microbench.rs`
+/// and the retired profiling example used) — the scheduler stage cost
+/// is routing, not lambda work.
+struct CounterApp;
+impl OrchApp for CounterApp {
+    type Ctx = i64;
+    type Val = i64;
+    type Out = i64;
+    fn sigma(&self) -> u64 {
+        2
+    }
+    fn chunk_words(&self) -> u64 {
+        16
+    }
+    fn out_words(&self) -> u64 {
+        1
+    }
+    fn execute(&self, c: &i64, _v: &i64) -> Option<i64> {
+        Some(*c)
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+    fn apply(&self, v: &mut i64, o: i64) {
+        *v += o;
+    }
+}
+
+/// One timed stage: best-of-`reps` and mean, in nanoseconds.
+pub struct StageTime {
+    pub label: String,
+    pub reps: usize,
+    pub best_ns: u128,
+    pub mean_ns: u128,
+}
+
+pub struct ProfileReport {
+    pub stages: Vec<StageTime>,
+}
+
+impl ProfileReport {
+    fn stage(&self, label: &str) -> &StageTime {
+        self.stages
+            .iter()
+            .find(|s| s.label == label)
+            .unwrap_or_else(|| panic!("no stage {label:?}"))
+    }
+
+    /// best-of A-side ns / best-of B-side ns (how much faster B is).
+    pub fn speedup(&self, a: &str, b: &str) -> f64 {
+        self.stage(a).best_ns as f64 / self.stage(b).best_ns.max(1) as f64
+    }
+
+    /// JSON annotation blob (`tdorch.profile.v1`).  Host wall-clock —
+    /// written next to the bench snapshots, never diffed by the gate.
+    pub fn json(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"label\":\"{}\",\"reps\":{},\"best_ns\":{},\"mean_ns\":{}}}",
+                    s.label, s.reps, s.best_ns, s.mean_ns
+                )
+            })
+            .collect();
+        format!(
+            "{{\"schema\":\"tdorch.profile.v1\",\
+             \"note\":\"host wall-clock annotation — never a comparison surface\",\
+             \"host\":{{\"os\":\"{}\",\"arch\":\"{}\"}},\
+             \"stages\":[{}]}}\n",
+            std::env::consts::OS,
+            std::env::consts::ARCH,
+            stages.join(","),
+        )
+    }
+}
+
+fn time<T>(label: &str, reps: usize, mut f: impl FnMut() -> T) -> (StageTime, T) {
+    let mut best = u128::MAX;
+    let mut total = 0u128;
+    let mut out = None;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let r = std::hint::black_box(f());
+        let ns = t0.elapsed().as_nanos();
+        best = best.min(ns);
+        total += ns;
+        out = Some(r);
+    }
+    let st = StageTime {
+        label: label.to_string(),
+        reps: reps.max(1),
+        best_ns: best,
+        mean_ns: total / reps.max(1) as u128,
+    };
+    (st, out.expect("reps >= 1"))
+}
+
+fn fmt_ns(ns: u128) -> String {
+    if ns >= 10_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.1}us", ns as f64 / 1e3)
+    }
+}
+
+/// Run every stage `reps` times and print the table plus the A/B
+/// speedups.  Called by `repro profile`, the `profile_stage` example,
+/// and (with small reps) the bench-snapshot annotation writer.
+pub fn run_profile(reps: usize) -> ProfileReport {
+    println!("\n## repro profile — per-stage wallclock A/Bs ({reps} reps, best-of)\n");
+    let mut stages = Vec::new();
+
+    // --- TD-Orch scheduler stage (L3 hot path) ---
+    let tasks: Vec<Task<i64>> = (0..200_000)
+        .map(|i| {
+            let addr = if i % 4 == 0 {
+                (i % 16) as u64
+            } else {
+                (i as u64).wrapping_mul(0x9E3779B9) % 1_000_000
+            };
+            Task::inplace(addr, 1)
+        })
+        .collect();
+    let (st, executed) = time("tdorch-stage-200k-p16", reps, || {
+        let mut c = Cluster::new(16, CostModel::paper_cluster());
+        let mut s: DistStore<i64> = DistStore::new(16);
+        let o = TdOrch::new().run_stage(&mut c, &CounterApp, spread_tasks(tasks.clone(), 16), &mut s);
+        o.total_executed
+    });
+    assert_eq!(executed, 200_000, "scheduler stage dropped tasks");
+    stages.push(st);
+
+    // --- scratch: DetMap vs flat slab (merge 300k contribs over 100k
+    // keys, walk touched keys ascending — the edge_map fold shape) ---
+    let n = 100_000usize;
+    let contribs: Vec<(u32, f64)> = (0..300_000u64)
+        .map(|i| ((i.wrapping_mul(0x9E37_79B9) % n as u64) as u32, i as f64))
+        .collect();
+    let (st, sum_map) = time("scratch-detmap", reps, || {
+        let mut m: DetMap<u32, f64> = det_map();
+        for &(v, x) in &contribs {
+            m.entry(v).and_modify(|a| *a = a.min(x)).or_insert(x);
+        }
+        let mut keys: Vec<u32> = m.keys().copied().collect();
+        keys.sort_unstable();
+        let mut acc = 0.0;
+        for k in keys {
+            acc += m[&k];
+        }
+        acc
+    });
+    stages.push(st);
+    let mut slab = Slab::new();
+    slab.ensure(n);
+    let (st, sum_slab) = time("scratch-flat-slab", reps, || {
+        slab.clear();
+        for &(v, x) in &contribs {
+            slab.merge_with(v, x, f64::min);
+        }
+        slab.normalize();
+        let mut acc = 0.0;
+        for &v in slab.dirty() {
+            acc += slab.get(v).unwrap();
+        }
+        acc
+    });
+    stages.push(st);
+    assert_eq!(
+        sum_map.to_bits(),
+        sum_slab.to_bits(),
+        "scratch A/B sides disagree — the slab is not a drop-in fold"
+    );
+
+    // --- frontier: sparse vec vs dense bitset iteration, bracketing
+    // the 1/DENSE_OCCUPANCY_DIV seal threshold ---
+    let span = 1_000_000usize;
+    for (tag, stride) in [("hi-occ-1of2", 2usize), ("lo-occ-1of64", 64)] {
+        let mut sparse_f = Frontier::new(0, span);
+        let mut dense_f = Frontier::new(0, span);
+        for v in (0..span as u32).step_by(stride) {
+            sparse_f.push(v);
+            dense_f.push(v);
+        }
+        dense_f.force_dense();
+        let (st, a) = time(&format!("frontier-sparse-{tag}"), reps, || {
+            let mut acc = 0u64;
+            for v in sparse_f.iter() {
+                acc = acc.wrapping_add(v as u64);
+            }
+            acc
+        });
+        stages.push(st);
+        let (st, b) = time(&format!("frontier-dense-{tag}"), reps, || {
+            let mut acc = 0u64;
+            for v in dense_f.iter() {
+                acc = acc.wrapping_add(v as u64);
+            }
+            acc
+        });
+        stages.push(st);
+        assert_eq!(a, b, "frontier representations iterated different sets");
+    }
+
+    // --- channel discipline: per-message vs one batched send ---
+    let msgs: Vec<u64> = (0..100_000u64).collect();
+    let (st, a) = time("mpsc-per-message", reps, || {
+        let (tx, rx) = mpsc::channel::<u64>();
+        for &x in &msgs {
+            tx.send(x).unwrap();
+        }
+        drop(tx);
+        let mut acc = 0u64;
+        while let Ok(x) = rx.recv() {
+            acc = acc.wrapping_add(x);
+        }
+        acc
+    });
+    stages.push(st);
+    let (st, b) = time("mpsc-batched", reps, || {
+        let (tx, rx) = mpsc::channel::<Vec<u64>>();
+        tx.send(msgs.clone()).unwrap();
+        drop(tx);
+        let mut acc = 0u64;
+        while let Ok(batch) = rx.recv() {
+            for x in batch {
+                acc = acc.wrapping_add(x);
+            }
+        }
+        acc
+    });
+    stages.push(st);
+    assert_eq!(a, b, "channel A/B sides moved different payloads");
+
+    let report = ProfileReport { stages };
+    let t = TablePrinter::new(&["stage", "best", "mean"], &[26, 10, 10]);
+    for s in &report.stages {
+        t.row(&[s.label.clone(), fmt_ns(s.best_ns), fmt_ns(s.mean_ns)]);
+    }
+    println!();
+    for (a, b, what) in [
+        ("scratch-detmap", "scratch-flat-slab", "flat slab vs DetMap scratch"),
+        ("frontier-sparse-hi-occ-1of2", "frontier-dense-hi-occ-1of2", "dense vs sparse at 1/2 occupancy"),
+        ("frontier-dense-lo-occ-1of64", "frontier-sparse-lo-occ-1of64", "sparse vs dense at 1/64 occupancy"),
+        ("mpsc-per-message", "mpsc-batched", "batched vs per-message sends"),
+    ] {
+        println!("{what}: {:.2}x", report.speedup(a, b));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One rep through every stage: the A/B checksum asserts inside
+    /// `run_profile` are the real test (each pair provably does the
+    /// same work); the JSON must carry every stage.
+    #[test]
+    fn profile_runs_and_reports_every_stage() {
+        let r = run_profile(1);
+        assert_eq!(r.stages.len(), 9);
+        let j = r.json();
+        assert!(j.contains("\"schema\":\"tdorch.profile.v1\""));
+        for s in &r.stages {
+            assert!(j.contains(&format!("\"label\":\"{}\"", s.label)), "{} missing", s.label);
+        }
+        assert!(r.speedup("scratch-detmap", "scratch-flat-slab") > 0.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Regression suite for the flat shard memory layout: the sparse↔dense
+//! frontier switch must be a pure *representation* change.
+//!
+//! The engine's per-shard frontier starts as a sorted sparse vector and
+//! flips to a dense bitset at `seal()` when occupancy crosses
+//! 1/`DENSE_OCCUPANCY_DIV` of the owned span (spans under
+//! `DENSE_MIN_SPAN` never flip) — both representations iterate in
+//! ascending vertex order, so the switch may never change a single bit
+//! of any result, on either backend, at any machine count.  This suite
+//! pins that:
+//!
+//! * BFS and CC on a graph big enough that shards cross the threshold
+//!   mid-run are bit-identical between the simulator and the threaded
+//!   pool at P ∈ {1, 2, 8}, and match sequential references.
+//! * A manually-driven BFS observes the flip actually *happening*
+//!   (single seed → no dense shards; growth rounds → dense shards) and
+//!   still lands exactly on the reference distances — the assertion
+//!   would catch a threshold "fix" that silently stopped densifying.
+//! * The frontier-entry API pins the mode per seeding shape:
+//!   `set_frontier_all` is dense everywhere, a single seed is sparse.
+//! * With the flight recorder attached, the deterministic event streams
+//!   (per-superstep machine ledgers — work and *words*) are
+//!   bit-identical between backends, so the flat layout and the batched
+//!   mesh changed no accounted quantity.
+
+mod ref_util;
+
+use ref_util::bfs_ref;
+use tdorch::exec::ThreadedCluster;
+use tdorch::graph::algorithms::{bfs, cc, BfsShard, CcShard, ShardAccess};
+use tdorch::graph::gen;
+use tdorch::graph::layout::{DENSE_MIN_SPAN, DENSE_OCCUPANCY_DIV};
+use tdorch::graph::spmd::SpmdEngine;
+use tdorch::graph::Graph;
+use tdorch::obs::FlightRecorder;
+use tdorch::{Cluster, CostModel, Substrate};
+
+const PS: [usize; 3] = [1, 2, 8];
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+/// Large enough that every shard at P ≤ 8 has span ≥ `DENSE_MIN_SPAN`
+/// and BFS-from-0 pushes shard occupancy past 1/`DENSE_OCCUPANCY_DIV`
+/// in the middle rounds (preferential attachment reaches most of the
+/// graph within a few hops).
+fn switch_graph() -> Graph {
+    gen::barabasi_albert(2000, 6, 11)
+}
+
+/// Sequential min-label CC reference (exact in f64, so comparisons are
+/// plain `==`): iterate label lowering to fixpoint.
+fn cc_ref(g: &Graph) -> Vec<u32> {
+    let mut label: Vec<u32> = (0..g.n as u32).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for u in 0..g.n as u32 {
+            for (v, _) in g.neighbors(u) {
+                let m = label[u as usize].min(label[*v as usize]);
+                if label[u as usize] != m || label[*v as usize] != m {
+                    label[u as usize] = m;
+                    label[*v as usize] = m;
+                    changed = true;
+                }
+            }
+        }
+    }
+    label
+}
+
+fn run_bfs<B: Substrate>(sub: B, g: &Graph) -> Vec<i64> {
+    let mut e = SpmdEngine::tdo_gp(sub, g, cost(), BfsShard::new);
+    bfs(&mut e, 0)
+}
+
+fn run_cc<B: Substrate>(sub: B, g: &Graph) -> Vec<u32> {
+    let mut e = SpmdEngine::tdo_gp(sub, g, cost(), CcShard::new);
+    cc(&mut e)
+}
+
+#[test]
+fn bfs_across_the_switch_is_bitwise_stable_at_every_p() {
+    let g = switch_graph();
+    let expected = bfs_ref(&g, 0);
+    for p in PS {
+        let sim = run_bfs(Cluster::new(p, cost()), &g);
+        let thr = run_bfs(ThreadedCluster::new(p), &g);
+        assert_eq!(sim, expected, "bfs p={p}: simulator != reference");
+        assert_eq!(thr, sim, "bfs p={p}: threaded != simulator");
+    }
+}
+
+#[test]
+fn cc_across_the_switch_is_bitwise_stable_at_every_p() {
+    let g = switch_graph();
+    let expected = cc_ref(&g);
+    for p in PS {
+        let sim = run_cc(Cluster::new(p, cost()), &g);
+        let thr = run_cc(ThreadedCluster::new(p), &g);
+        assert_eq!(sim, expected, "cc p={p}: simulator != reference");
+        assert_eq!(thr, sim, "cc p={p}: threaded != simulator");
+    }
+}
+
+#[test]
+fn seeding_shape_pins_the_frontier_mode() {
+    let g = switch_graph();
+    let p = 8;
+    let mut e = SpmdEngine::tdo_gp(Cluster::new(p, cost()), &g, cost(), BfsShard::new);
+
+    // Spans at this size comfortably clear the never-densify floor, so
+    // the mode below is the occupancy rule speaking, not the span guard.
+    assert!(g.n / p >= DENSE_MIN_SPAN);
+
+    // Everything active: full occupancy is trivially ≥ 1/div — every
+    // shard must hold the dense bitset.
+    e.set_frontier_all();
+    assert_eq!(e.frontier_dense_machines(), p, "fill_all must densify every shard");
+    assert_eq!(e.frontier_len(), g.n, "fill_all must activate every vertex");
+
+    // One seed: 1/span < 1/div everywhere at this size — no shard may
+    // densify, including the seed's owner.
+    assert!(DENSE_OCCUPANCY_DIV < g.n / p, "graph too small for the sparse claim");
+    e.set_frontier_single(123);
+    assert_eq!(e.frontier_dense_machines(), 0, "a single seed must stay sparse");
+    assert_eq!(e.frontier_len(), 1);
+}
+
+/// Drive BFS round by round (the exact closures `algorithms::bfs` uses)
+/// so the test can watch the representation flip mid-run: sparse at the
+/// seed, dense once the wave widens, and the final distances still
+/// bit-equal to the queue reference.
+#[test]
+fn bfs_crosses_the_sparse_dense_threshold_mid_run() {
+    let g = switch_graph();
+    let expected = bfs_ref(&g, 0);
+    let mut e = SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), BfsShard::new);
+
+    // Seed src=0 by hand: vertex 0 lives at local index 0 of machine 0
+    // (ranges are contiguous from 0).
+    e.algo_mut(0).shard_mut().dist[0] = 0;
+    e.set_frontier_single(0);
+    assert_eq!(e.frontier_dense_machines(), 0, "seed round must start sparse");
+
+    let mut seen_dense = false;
+    let mut round = 0i64;
+    while e.frontier_len() > 0 {
+        round += 1;
+        assert!(round < 10_000, "BFS failed to terminate");
+        let r = round as f64;
+        e.edge_map(
+            &move |_m, _st: &BfsShard, _u| Some(r),
+            &|sv, _u, _v, _w| Some(sv),
+            &|a, _b| a,
+            &|st: &mut BfsShard, v, val| {
+                let st = st.shard_mut();
+                let i = (v - st.base) as usize;
+                if st.dist[i] < 0 {
+                    st.dist[i] = val as i64;
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+        seen_dense |= e.frontier_dense_machines() > 0;
+    }
+    assert!(
+        seen_dense,
+        "no shard ever densified: the occupancy switch is not engaging on a \
+         graph chosen to cross it"
+    );
+    let got = e.gather(|_m, st| st.shard().dist.clone());
+    assert_eq!(got, expected, "mid-run representation flips changed BFS results");
+}
+
+#[test]
+fn recorder_ledgers_are_bit_identical_across_backends() {
+    let g = switch_graph();
+    let p = 8;
+
+    let rec_sim = FlightRecorder::shared(tdorch::obs::trace::DEFAULT_CAPACITY);
+    let mut es = SpmdEngine::tdo_gp(Cluster::new(p, cost()), &g, cost(), CcShard::new);
+    es.set_observer(Some(rec_sim.clone()));
+    let sim = cc(&mut es);
+    drop(es);
+
+    let rec_thr = FlightRecorder::shared(tdorch::obs::trace::DEFAULT_CAPACITY);
+    let mut et = SpmdEngine::tdo_gp(ThreadedCluster::new(p), &g, cost(), CcShard::new);
+    et.set_observer(Some(rec_thr.clone()));
+    let thr = cc(&mut et);
+    drop(et); // joins the pool before the recorder is read
+
+    assert_eq!(thr, sim, "cc p={p}: threaded != simulator");
+    let (rs, rt) = (rec_sim.lock().unwrap(), rec_thr.lock().unwrap());
+    assert!(!rs.is_empty(), "simulator run recorded no events");
+    assert_eq!(
+        rs.det_stream(),
+        rt.det_stream(),
+        "per-superstep machine ledgers diverged: the flat layout or the \
+         batched mesh changed an accounted quantity (work/words)"
+    );
+}

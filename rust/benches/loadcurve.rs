@@ -15,9 +15,10 @@ use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
-use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, ServeReport, Server};
 use tdorch::workload::{
-    generate_stream, hot_source_order, ClosedLoop, ClosedLoopConfig, QueryMix, StreamConfig,
+    generate_stream, hot_source_order, ClosedLoop, ClosedLoopConfig, OpenLoopSource, QueryMix,
+    StreamConfig,
 };
 use tdorch::{Cluster, CostModel};
 
@@ -112,14 +113,14 @@ fn main() {
         let point = format!("open-{:.3}qpt", scfg.offered_per_tick());
         let mut rep_sim: Option<ServeReport> = None;
         b.run(&format!("{point}-sim"), 1, || {
-            let rep = sim.run(&stream);
+            let rep = sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
             let n = rep.served();
             rep_sim = Some(rep);
             n
         });
         let mut rep_thr: Option<ServeReport> = None;
         b.run(&format!("{point}-threaded"), 1, || {
-            let rep = thr.run(&stream);
+            let rep = thr.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
             let n = rep.served();
             rep_thr = Some(rep);
             n
@@ -143,7 +144,7 @@ fn main() {
         let mut rep_sim: Option<ServeReport> = None;
         b.run(&format!("{point}-sim"), 1, || {
             let mut src = ClosedLoop::new(ccfg, &hot, 42);
-            let rep = sim.run_source(&mut src, |_r, _e| {});
+            let rep = sim.serve(&mut src, RunOpts::default());
             let n = rep.served();
             rep_sim = Some(rep);
             n
@@ -151,7 +152,7 @@ fn main() {
         let mut rep_thr: Option<ServeReport> = None;
         b.run(&format!("{point}-threaded"), 1, || {
             let mut src = ClosedLoop::new(ccfg, &hot, 42);
-            let rep = thr.run_source(&mut src, |_r, _e| {});
+            let rep = thr.serve(&mut src, RunOpts::default());
             let n = rep.served();
             rep_thr = Some(rep);
             n

@@ -14,8 +14,8 @@ use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
-use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
-use tdorch::workload::{generate_stream, hot_source_order, QueryMix, StreamConfig};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, ServeReport, Server};
+use tdorch::workload::{generate_stream, hot_source_order, OpenLoopSource, QueryMix, StreamConfig};
 use tdorch::{Cluster, CostModel};
 
 const QUERIES: usize = 48;
@@ -72,7 +72,7 @@ fn main() {
         );
         let mut last_sim: Option<ServeReport> = None;
         b.run(&format!("serve-sim-P{p}"), ITERS, || {
-            let rep = sim.run(&stream);
+            let rep = sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
             let n = rep.served();
             last_sim = Some(rep);
             n
@@ -92,7 +92,7 @@ fn main() {
         );
         let mut last_thr: Option<ServeReport> = None;
         b.run(&format!("serve-threaded-P{p}"), ITERS, || {
-            let rep = thr.run(&stream);
+            let rep = thr.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
             let n = rep.served();
             last_thr = Some(rep);
             n

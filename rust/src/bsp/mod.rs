@@ -165,6 +165,7 @@ impl Cluster {
         self.metrics.time.computation += self.cost.work_seconds(max_work);
         self.metrics.time.overhead += self.cost.per_msg * max_msgs as f64 + self.cost.l;
         self.metrics.supersteps += 1;
+        self.metrics.makespan_work += max_work;
 
         for m in 0..self.p {
             self.metrics.sent_by_machine[m] += self.step.sent[m];

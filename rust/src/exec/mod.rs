@@ -114,6 +114,15 @@ pub trait Substrate {
     /// clock for per-query service cost ([`crate::serve`]).
     fn ledger_supersteps(&self) -> u64;
 
+    /// Cumulative work makespan: Σ over ledger supersteps of the
+    /// max-over-machines work units of that step
+    /// ([`crate::Metrics::makespan_work`]).  Like `ledger_supersteps`
+    /// this is a pure function of what ran — both backends fold the same
+    /// per-step work vectors — so *deltas* of it give the serving layer a
+    /// placement-*sensitive* logical cost: step counts barely move when a
+    /// hot machine is relieved, but the per-step maxima do.
+    fn ledger_makespan(&self) -> u64;
+
     /// Run one superstep.
     ///
     /// `state[m]` is machine `m`'s private state (on the threaded backend
@@ -161,6 +170,10 @@ impl Substrate for Cluster {
 
     fn ledger_supersteps(&self) -> u64 {
         self.metrics.supersteps
+    }
+
+    fn ledger_makespan(&self) -> u64 {
+        self.metrics.makespan_work
     }
 
     fn superstep<St, Tin, Tout, F, W>(

@@ -474,6 +474,10 @@ impl Substrate for ThreadedCluster {
         self.metrics.supersteps
     }
 
+    fn ledger_makespan(&self) -> u64 {
+        self.metrics.makespan_work
+    }
+
     fn superstep<St, Tin, Tout, F, W>(
         &mut self,
         state: &mut [St],
@@ -700,6 +704,7 @@ impl Substrate for ThreadedCluster {
         // Fold the reports into the metrics mirror (driver thread).
         let mut next = Vec::with_capacity(p);
         let mut dirty = false;
+        let mut max_work = 0u64;
         let mut max_compute_ns = 0u64;
         let mut max_comm_ns = 0u64;
         // Per-machine slices for the flight recorder, collected only
@@ -732,6 +737,7 @@ impl Substrate for ThreadedCluster {
             self.metrics.total_msgs += sent_msgs;
             self.compute_ns[m] += compute_ns;
             self.comm_ns[m] += comm_ns;
+            max_work = max_work.max(acct.work_units);
             max_compute_ns = max_compute_ns.max(compute_ns);
             max_comm_ns = max_comm_ns.max(comm_ns);
             dirty |= acct.work_units > 0 || sent_msgs > 0;
@@ -746,6 +752,7 @@ impl Substrate for ThreadedCluster {
         }
         if dirty {
             self.metrics.supersteps += 1;
+            self.metrics.makespan_work += max_work;
             self.metrics.time.computation += max_compute_ns as f64 / 1e9;
             self.metrics.time.communication += max_comm_ns as f64 / 1e9;
             if let Some(obs) = &self.observer {

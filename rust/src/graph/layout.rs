@@ -358,6 +358,24 @@ impl BlockIndex {
             *off += 1;
         }
     }
+
+    /// Unregister block index `idx` from `u`'s run; returns whether it
+    /// was present.  O(n), the mirror of [`BlockIndex::insert`] — used
+    /// only by the placement path when a block migrates off a machine
+    /// (the block vector slot stays, hollowed, so all *other* indices
+    /// remain valid).
+    pub fn remove(&mut self, u: Vid, idx: u32) -> bool {
+        let lo = self.offsets[u as usize] as usize;
+        let hi = self.offsets[u as usize + 1] as usize;
+        let Some(pos) = self.data[lo..hi].iter().position(|&b| b == idx) else {
+            return false;
+        };
+        self.data.remove(lo + pos);
+        for off in self.offsets[u as usize + 1..].iter_mut() {
+            *off -= 1;
+        }
+        true
+    }
 }
 
 /// Occupancy divisor for the sparse↔dense frontier switch: the dense

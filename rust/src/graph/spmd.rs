@@ -701,6 +701,115 @@ impl<B: Substrate, AS: Send> SpmdEngine<B, AS> {
         applied
     }
 
+    /// Driver-side snapshot of resident blocks: per machine, per block
+    /// slot, `(src, targets_len)` — hollowed slots report 0.  The
+    /// placement controller's decision input (deterministic: block order
+    /// is part of the engine's bit-level state).
+    pub fn block_catalog(&self) -> Vec<Vec<(Vid, u32)>> {
+        self.machines
+            .iter()
+            .map(|st| st.blocks.iter().map(|b| (b.src, b.targets.len() as u32)).collect())
+            .collect()
+    }
+
+    /// Apply one placement delta **in place**, inside a single superstep
+    /// on the substrate — the placement counterpart of
+    /// [`SpmdEngine::apply_delta`], same frozen-ownership discipline, no
+    /// re-ingestion (`ingest::ingestions()` stays the witness).
+    ///
+    /// The driver snapshots every shipped payload from the pre-delta
+    /// blocks and builds per-machine patch inboxes
+    /// ([`crate::place::PlacementDelta`] semantics: a `Move` hollows the
+    /// source slot and installs the block at the destination's tail; a
+    /// `Split` keeps the head half and installs the tail — hot-vertex
+    /// replication).  Workers apply their patches in inbox order and
+    /// ship per-(vertex, machine) [`DeltaNote`]s to machine 0; the
+    /// driver folds them into the shared catalog via `Arc::make_mut`
+    /// and rebuilds relay trees for exactly the dirty vertices, with
+    /// the construction-time keys.  `out_deg` and `m` never change —
+    /// placement moves arcs, it does not create or destroy them — and
+    /// `graph_epoch` advances by one per op, so every placement is a
+    /// distinct, cacheable snapshot.  Returns the number of ops applied
+    /// (a non-empty delta costs exactly one ledger superstep).
+    pub fn apply_placement(&mut self, delta: &crate::place::PlacementDelta) -> usize {
+        if delta.ops.is_empty() {
+            return 0;
+        }
+        let p = self.meta.p;
+        let inboxes = crate::place::build_patches(p, delta, |m, b| {
+            let blk = &self.machines[m].blocks[b as usize];
+            (blk.src, blk.targets.clone())
+        });
+
+        let notes_by_dest: Vec<Vec<DeltaNote>> = self.sub.superstep(
+            &mut self.machines,
+            inboxes,
+            move |m,
+                  st: &mut MachineState<AS>,
+                  inbox: Vec<crate::place::Patch>,
+                  acct: &mut MachineAcct| {
+                let MachineState { blocks, block_of, .. } = st;
+                let (notes, work) = crate::place::apply_patches(blocks, block_of, inbox);
+                acct.work(work);
+                notes
+                    .into_iter()
+                    .map(|(vertex, is_src, present)| {
+                        (0, DeltaNote {
+                            vertex,
+                            machine: m as u32,
+                            is_src,
+                            present,
+                            deg_delta: 0,
+                        })
+                    })
+                    .collect()
+            },
+            |_: &DeltaNote| 2,
+        );
+
+        // Fold the membership notes exactly like the mutation path:
+        // (sender, emission-index) delivery order, last-note-wins,
+        // idempotent splices — but no degree or arc-count changes.
+        let notes = &notes_by_dest[0];
+        let meta = Arc::make_mut(&mut self.meta);
+        let mut dirty_src: Vec<Vid> = Vec::new();
+        let mut dirty_dst: Vec<Vid> = Vec::new();
+        for note in notes {
+            let vid = note.vertex as usize;
+            if note.is_src {
+                mutate::set_membership(&mut meta.src_leaves[vid], note.machine as usize, note.present);
+                dirty_src.push(note.vertex);
+            } else {
+                mutate::set_membership(&mut meta.dst_leaves[vid], note.machine as usize, note.present);
+                dirty_dst.push(note.vertex);
+            }
+        }
+        dirty_src.sort_unstable();
+        dirty_src.dedup();
+        dirty_dst.sort_unstable();
+        dirty_dst.dedup();
+        for &u in &dirty_src {
+            meta.src_tree[u as usize] = relay_tree_levels(
+                u as u64,
+                &meta.src_leaves[u as usize],
+                meta.part.owner(u),
+                meta.c,
+                p,
+            );
+        }
+        for &v in &dirty_dst {
+            meta.dst_tree[v as usize] = relay_tree_levels(
+                v as u64 ^ 0xD5,
+                &meta.dst_leaves[v as usize],
+                meta.part.owner(v),
+                meta.c,
+                p,
+            );
+        }
+        self.graph_epoch += delta.ops.len() as u64;
+        delta.ops.len()
+    }
+
     #[inline]
     fn scaled(&self, units: u64) -> u64 {
         units * self.eff_work_pct / 100

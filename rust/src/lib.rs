@@ -30,7 +30,11 @@
 //! `SpmdEngine::reset_for_query`.  Live mutation ([`mutate`]): seeded
 //! edge delta batches absorbed in place between dispatches
 //! (`SpmdEngine::apply_delta`), each bumping an epoch stamped on every
-//! result — still one ingestion per process.
+//! result — still one ingestion per process.  Adaptive placement
+//! ([`place`]): a deterministic controller that watches the flight
+//! recorder's per-machine work signal and migrates/replicates hot edge
+//! blocks between dispatches (`SpmdEngine::apply_placement`) — the
+//! serve→observe→migrate→serve loop, bit-identical across backends.
 
 pub mod baselines;
 pub mod kvstore;
@@ -44,6 +48,7 @@ pub mod metrics;
 pub mod mutate;
 pub mod obs;
 pub mod orchestration;
+pub mod place;
 pub mod repro;
 pub mod rng;
 pub mod runtime;

@@ -23,11 +23,13 @@
 //! repro graph   [--backend sim|threaded] [--threads P | --machines P]
 //!               [--seed S]                     TDO-GP edge_map on the pool
 //! repro serve   [--backend sim|threaded] [--threads P] [--queries N]
-//!               [--zipf S] [--batch B] [--fuse] [--cache] [--seed S]
-//!                                              online Zipf query stream;
+//!               [--zipf S] [--batch B] [--fuse] [--cache] [--adapt]
+//!               [--seed S]                     online Zipf query stream;
 //!                                              --fuse = multi-source
 //!                                              batch waves, --cache =
-//!                                              epoch-keyed memoization
+//!                                              epoch-keyed memoization,
+//!                                              --adapt = hotspot-adaptive
+//!                                              placement
 //! repro loadcurve [--quick] [--backend sim|threaded] [--threads P]
 //!               [--seed S] [--out PATH]        latency vs offered load:
 //!                                              open-loop rate + closed-
@@ -48,6 +50,17 @@
 //!                                              streams are bit-identical;
 //!                                              writes Chrome trace JSON +
 //!                                              work/words heatmap
+//! repro placement [--quick] [--backend sim|threaded] [--threads P]
+//!               [--seed S] [--out PATH]        hotspot-adaptive placement
+//!                                              A/B: the same Zipf-hot
+//!                                              query stream + drifting
+//!                                              mutation feed served with
+//!                                              static and adaptive
+//!                                              placement, every result
+//!                                              cross-checked at its
+//!                                              placement epoch, adaptive
+//!                                              must win on goodput AND
+//!                                              imbalance; CI gate
 //! repro bench-snapshot [--out DIR] [--check] [--baseline DIR]
 //!                                              regenerate the committed
 //!                                              perf snapshots; --check
@@ -109,6 +122,7 @@ struct Args {
     quick: bool,
     fuse: bool,
     cache: bool,
+    adapt: bool,
     /// `--out` target; `None` = the subcommand's own default
     /// (loadcurve: `target/loadcurve/loadcurve.json`; bench-snapshot:
     /// `target/bench-snapshot`).
@@ -147,6 +161,7 @@ fn parse_args() -> Args {
         quick: false,
         fuse: false,
         cache: false,
+        adapt: false,
         out: None,
         check: false,
         baseline: "..".to_string(),
@@ -169,6 +184,7 @@ fn parse_args() -> Args {
             "--quick" => args.quick = true,
             "--fuse" => args.fuse = true,
             "--cache" => args.cache = true,
+            "--adapt" => args.adapt = true,
             "--out" => args.out = Some(parse_flag(&argv, &mut i, "--out")),
             "--check" => args.check = true,
             "--baseline" => args.baseline = parse_flag(&argv, &mut i, "--baseline"),
@@ -349,6 +365,7 @@ fn main() {
                 &args.backend,
                 args.fuse,
                 args.cache,
+                args.adapt,
             );
             if !summary.all_valid {
                 std::process::exit(1);
@@ -409,6 +426,25 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "placement" => {
+            let p = resolve_p(&args);
+            match args.backend.as_str() {
+                "sim" | "threaded" => {}
+                other => {
+                    eprintln!("--backend must be sim or threaded (got {other:?})");
+                    std::process::exit(2);
+                }
+            }
+            let out = args
+                .out
+                .clone()
+                .unwrap_or_else(|| "target/placement/placement.json".to_string());
+            let summary =
+                repro::placement::run_placement(p, args.seed, &args.backend, args.quick, &out);
+            if !summary.all_valid {
+                std::process::exit(1);
+            }
+        }
         "bench-snapshot" => {
             let out = args
                 .out
@@ -454,10 +490,10 @@ fn main() {
         "smoke" => smoke(),
         "" => {
             eprintln!(
-                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|trace|bench-snapshot|profile|all|smoke> \
+                "usage: repro <fig5|table2|fig8|fig9|fig10|table3|table4|table5|table6|graphs|exec|graph|serve|loadcurve|mutate|trace|placement|bench-snapshot|profile|all|smoke> \
                  [--seed S] [--per-machine N] [--edges N] [--gamma G] [--threads P] [--machines P] \
                  [--backend sim|threaded] [--queries N] [--zipf S] [--batch B] [--fuse] [--cache] \
-                 [--quick] [--out PATH] [--check] [--baseline DIR] [--reps N]"
+                 [--adapt] [--quick] [--out PATH] [--check] [--baseline DIR] [--reps N]"
             );
             std::process::exit(2);
         }

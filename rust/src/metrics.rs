@@ -47,6 +47,14 @@ pub struct Metrics {
     pub work_by_machine: Vec<u64>,
     /// Tasks executed, per machine (Theorem 1(ii)).
     pub executed_by_machine: Vec<u64>,
+    /// Cumulative work *makespan*: Σ over ledger supersteps of the
+    /// max-over-machines work units of that step.  Unlike the cumulative
+    /// per-machine vectors (which fold all steps together), this is what
+    /// the critical path actually pays — a placement that halves the
+    /// hottest machine's per-step load halves this even when total work
+    /// is unchanged.  Built from the same per-step ledger quantities the
+    /// flight recorder emits, so it is bit-identical across backends.
+    pub makespan_work: u64,
 }
 
 impl Metrics {
@@ -61,6 +69,7 @@ impl Metrics {
             recv_by_machine: vec![0; p],
             work_by_machine: vec![0; p],
             executed_by_machine: vec![0; p],
+            makespan_work: 0,
         }
     }
 

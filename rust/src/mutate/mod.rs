@@ -13,7 +13,7 @@
 //!   generate_mutations(cfg, g, hot, seed)          P-independent stream
 //!        │  Vec<MutationBatch>  (Zipf-by-hotness edge ops, valid in order)
 //!        ▼
-//!   MutationFeed ── pop_due(tick) ──► Server::run_source_mutating
+//!   MutationFeed ── pop_due(tick) ──► Server::serve (RunOpts::feed)
 //!        │   (logical service clock; epoch barrier: batches apply only
 //!        │    BETWEEN query dispatches, never inside one)
 //!        ▼

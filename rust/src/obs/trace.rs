@@ -123,6 +123,19 @@ pub enum EventKind {
     /// A mutation batch was absorbed in place, bumping the graph epoch to
     /// `epoch_after` — the epoch-bump event of the stream.
     MutationApply { tick: u64, batch: u64, ops: usize, epoch_after: u64, service_ticks: u64 },
+    /// A placement delta (controller round `round`: `moves` whole-block
+    /// migrations + `splits` hot-block replications) was applied in
+    /// place between dispatches, bumping the graph epoch to
+    /// `epoch_after` — one bump per op, so `epoch_after` advances by
+    /// `moves + splits` over the previous epoch.
+    PlacementApply {
+        tick: u64,
+        round: u64,
+        moves: usize,
+        splits: usize,
+        epoch_after: u64,
+        service_ticks: u64,
+    },
 }
 
 /// One recorded event: a monotone sequence number (counted across drops),
@@ -359,7 +372,8 @@ impl FlightRecorder {
                 }
                 EventKind::Superstep { .. }
                 | EventKind::Reject { .. }
-                | EventKind::MutationApply { .. } => {}
+                | EventKind::MutationApply { .. }
+                | EventKind::PlacementApply { .. } => {}
             }
         }
         for s in &mut spans {

@@ -1,0 +1,356 @@
+//! The placement controller: windowed skew signal → deterministic
+//! migration/replication decisions.
+//!
+//! Signal → decision → apply, all on deterministic quantities:
+//!
+//! ```text
+//!   FlightRecorder ── Superstep{work: Vec<u64>} events ──► observe_recorder
+//!        │   sliding window of per-machine work vectors (ledger, not wall)
+//!        ▼
+//!   decide(block_catalog, out_deg)        pure function of its arguments
+//!        │   windowed imbalance ≥ trigger?  hot = argmax, cold = argmin
+//!        │   split the hottest resident block (replication), move the
+//!        │   next-hottest whole blocks (migration), hot → cold
+//!        ▼
+//!   Some(PlacementDelta)  ──►  SpmdEngine::apply_placement  (the server
+//!                              calls it between dispatches only)
+//! ```
+//!
+//! Everything the decision reads is bit-identical across backends — the
+//! recorder's work vectors are the shared ledger, the block catalog is
+//! driver-side state, wall-clock never enters — so two controllers fed
+//! the same run produce the same deltas and the same [`decision
+//! log`](PlacementController::decision_log) on the simulator and the
+//! threaded pool at every P.
+
+use std::collections::VecDeque;
+
+use crate::graph::Vid;
+use crate::metrics::Metrics;
+use crate::obs::{EventKind, FlightRecorder};
+
+use super::delta::{PlaceOp, PlacementDelta};
+
+/// Tuning knobs for the placement controller (all deterministic
+/// quantities; `Default` is the serving default).
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementPolicy {
+    /// Sliding-window length, in ledger supersteps, of the per-machine
+    /// work signal a decision folds over.
+    pub window: usize,
+    /// Minimum window fill before a decision is attempted (a freshly
+    /// cleared window must re-observe the post-move behavior first).
+    pub min_steps: usize,
+    /// Trigger threshold on the windowed work imbalance (max/mean; 1.0
+    /// is perfect balance).  Below it, `decide` returns `None` — the
+    /// no-skew guarantee.
+    pub trigger: f64,
+    /// Whole-block migrations per round (beyond the one split).
+    pub max_moves: usize,
+    /// Minimum resident targets for a block to be split rather than
+    /// moved (replicating a tiny block buys nothing).
+    pub split_min_targets: usize,
+    /// Upper bound on placement rounds per serve (0 = unlimited) — a
+    /// deterministic brake against oscillation.
+    pub max_rounds: u64,
+}
+
+impl Default for PlacementPolicy {
+    fn default() -> Self {
+        PlacementPolicy {
+            window: 32,
+            min_steps: 8,
+            trigger: 1.25,
+            max_moves: 2,
+            split_min_targets: 16,
+            max_rounds: 8,
+        }
+    }
+}
+
+impl PlacementPolicy {
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    pub fn with_min_steps(mut self, min_steps: usize) -> Self {
+        self.min_steps = min_steps.max(1);
+        self
+    }
+
+    pub fn with_trigger(mut self, trigger: f64) -> Self {
+        self.trigger = trigger.max(1.0);
+        self
+    }
+
+    pub fn with_max_moves(mut self, max_moves: usize) -> Self {
+        self.max_moves = max_moves;
+        self
+    }
+
+    pub fn with_split_min_targets(mut self, t: usize) -> Self {
+        self.split_min_targets = t.max(2);
+        self
+    }
+
+    pub fn with_max_rounds(mut self, r: u64) -> Self {
+        self.max_rounds = r;
+        self
+    }
+}
+
+/// Windowed skew → placement decisions.  Create one per serve (its
+/// cursor tracks one recorder); the server drives it between dispatches.
+pub struct PlacementController {
+    policy: PlacementPolicy,
+    /// Recorder events already consumed (cursor on
+    /// `FlightRecorder::recorded()` — monotone, survives ring drops
+    /// because drops are oldest-first and deterministic).
+    consumed: u64,
+    /// Sliding window of per-machine work vectors, oldest first.
+    window: VecDeque<Vec<u64>>,
+    rounds: u64,
+    decision_log: Vec<String>,
+    applied: Vec<PlacementDelta>,
+}
+
+impl PlacementController {
+    pub fn new(policy: PlacementPolicy) -> Self {
+        PlacementController {
+            policy,
+            consumed: 0,
+            window: VecDeque::new(),
+            rounds: 0,
+            decision_log: Vec::new(),
+            applied: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Placement rounds decided so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// One line per decision — round, windowed per-machine sums,
+    /// imbalance, and the ops.  Deterministic, so cross-backend equality
+    /// of this log is the decision-equality gate.
+    pub fn decision_log(&self) -> &[String] {
+        &self.decision_log
+    }
+
+    /// Every delta this controller has emitted, in order.
+    pub fn applied(&self) -> &[PlacementDelta] {
+        &self.applied
+    }
+
+    /// Ingest the recorder events that arrived since the last call,
+    /// folding each ledger `Superstep`'s per-machine work vector into
+    /// the sliding window.  Only the deterministic core of each event is
+    /// read — wall annotations never reach the window.
+    pub fn observe_recorder(&mut self, rec: &FlightRecorder) {
+        let total = rec.recorded();
+        if total <= self.consumed {
+            return;
+        }
+        let fresh = (total - self.consumed) as usize;
+        // The ring retains the newest `len()` events; anything older
+        // than that was dropped oldest-first (deterministically — both
+        // backends record the same stream), so the last min(fresh, len)
+        // events are exactly the unconsumed survivors.
+        let len = rec.len();
+        let take = fresh.min(len);
+        for e in rec.events().skip(len - take) {
+            if let EventKind::Superstep { work, .. } = &e.kind {
+                self.window.push_back(work.clone());
+                while self.window.len() > self.policy.window {
+                    self.window.pop_front();
+                }
+            }
+        }
+        self.consumed = total;
+    }
+
+    /// Decide a placement round from the windowed signal and the current
+    /// block catalog (`catalog[m]` = the engine's per-slot `(src,
+    /// targets_len)` view; hollow slots report 0).  Pure function of its
+    /// inputs and the window — no clock, no randomness.  Returns `None`
+    /// when the window is under-filled, the imbalance sits below the
+    /// trigger, the round budget is spent, or the hot machine has no
+    /// eligible block; otherwise records the delta (and its log line)
+    /// and clears the window so the next decision re-observes the moved
+    /// system.
+    pub fn decide(
+        &mut self,
+        catalog: &[Vec<(Vid, u32)>],
+        out_deg: &[u32],
+    ) -> Option<PlacementDelta> {
+        if self.policy.max_rounds > 0 && self.rounds >= self.policy.max_rounds {
+            return None;
+        }
+        if self.window.len() < self.policy.min_steps {
+            return None;
+        }
+        let p = catalog.len();
+        let mut sums = vec![0u64; p];
+        for step in &self.window {
+            for (s, w) in sums.iter_mut().zip(step) {
+                *s += w;
+            }
+        }
+        let imb = Metrics::imbalance(&sums);
+        if imb < self.policy.trigger {
+            return None;
+        }
+        // Ties break to the lower machine id — deterministic at every P.
+        let hot = (0..p).max_by_key(|&m| (sums[m], std::cmp::Reverse(m)))?;
+        let cold = (0..p).min_by_key(|&m| (sums[m], m))?;
+        if hot == cold || sums[hot] == sums[cold] {
+            return None;
+        }
+        // Candidate blocks on the hot machine, hottest first: resident
+        // size, then source degree (the Zipf-rank proxy), then slot —
+        // all deterministic keys.
+        let mut cands: Vec<(u32, Vid, u32)> = catalog[hot]
+            .iter()
+            .enumerate()
+            .filter(|(_, &(_, len))| len > 0)
+            .map(|(i, &(src, len))| (i as u32, src, len))
+            .collect();
+        cands.sort_by_key(|&(i, src, len)| {
+            (std::cmp::Reverse(len), std::cmp::Reverse(out_deg[src as usize]), i)
+        });
+        let mut ops: Vec<PlaceOp> = Vec::new();
+        let mut iter = cands.into_iter();
+        // Replicate the hottest block when it is big enough to split;
+        // a small head block is just moved with the rest.
+        if let Some(&(i, _src, len)) = iter.as_slice().first() {
+            if len as usize >= self.policy.split_min_targets {
+                ops.push(PlaceOp::Split {
+                    from: hot,
+                    block: i,
+                    at: len as usize / 2,
+                    to: cold,
+                });
+                iter.next();
+            }
+        }
+        for (i, _src, _len) in iter.by_ref().take(self.policy.max_moves) {
+            ops.push(PlaceOp::Move { from: hot, block: i, to: cold });
+        }
+        if ops.is_empty() {
+            return None;
+        }
+        let delta = PlacementDelta { round: self.rounds, ops };
+        self.decision_log.push(format!(
+            "round {}: window {} steps, work sums {:?}, imbalance {:.4}, hot m{} -> cold m{}, ops {:?}",
+            self.rounds,
+            self.window.len(),
+            sums,
+            imb,
+            hot,
+            cold,
+            delta.ops,
+        ));
+        self.applied.push(delta.clone());
+        self.rounds += 1;
+        self.window.clear();
+        Some(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::FlightRecorder;
+
+    fn feed_steps(ctl: &mut PlacementController, rec: &mut FlightRecorder, steps: &[Vec<u64>]) {
+        for (i, w) in steps.iter().enumerate() {
+            let p = w.len();
+            rec.record_superstep(i as u64 + 1, w.clone(), vec![0; p], vec![0; p], vec![0; p], None);
+        }
+        ctl.observe_recorder(rec);
+    }
+
+    #[test]
+    fn balanced_window_triggers_nothing() {
+        let mut rec = FlightRecorder::with_capacity(64);
+        let mut ctl = PlacementController::new(PlacementPolicy::default().with_min_steps(4));
+        feed_steps(&mut ctl, &mut rec, &vec![vec![10, 10, 10, 10]; 8]);
+        let catalog = vec![vec![(0, 50u32)]; 4];
+        assert!(ctl.decide(&catalog, &[9]).is_none());
+        assert!(ctl.decision_log().is_empty());
+        assert_eq!(ctl.rounds(), 0);
+    }
+
+    #[test]
+    fn underfilled_window_defers() {
+        let mut rec = FlightRecorder::with_capacity(64);
+        let mut ctl = PlacementController::new(PlacementPolicy::default().with_min_steps(8));
+        feed_steps(&mut ctl, &mut rec, &vec![vec![100, 1, 1, 1]; 3]);
+        let catalog = vec![vec![(0, 50u32)]; 4];
+        assert!(ctl.decide(&catalog, &[9]).is_none());
+    }
+
+    #[test]
+    fn skewed_window_splits_then_moves_hot_blocks() {
+        let mut rec = FlightRecorder::with_capacity(64);
+        let mut ctl = PlacementController::new(
+            PlacementPolicy::default().with_min_steps(4).with_max_moves(1),
+        );
+        feed_steps(&mut ctl, &mut rec, &vec![vec![100, 10, 10, 10]; 6]);
+        // Machine 0 holds a big splittable block (slot 1) and a smaller
+        // movable one (slot 0).
+        let catalog = vec![
+            vec![(3, 20u32), (7, 40u32)],
+            vec![(1, 5u32)],
+            vec![(2, 5u32)],
+            vec![(4, 5u32)],
+        ];
+        let out_deg = vec![0u32; 8];
+        let delta = ctl.decide(&catalog, &out_deg).expect("skew must trigger");
+        assert_eq!(delta.round, 0);
+        assert_eq!(
+            delta.ops,
+            vec![
+                PlaceOp::Split { from: 0, block: 1, at: 20, to: 1 },
+                PlaceOp::Move { from: 0, block: 0, to: 1 },
+            ],
+        );
+        assert_eq!(ctl.applied(), &[delta]);
+        assert_eq!(ctl.decision_log().len(), 1);
+        // The window cleared: an immediate re-decide defers.
+        assert!(ctl.decide(&catalog, &out_deg).is_none());
+    }
+
+    #[test]
+    fn round_budget_is_a_hard_stop() {
+        let mut rec = FlightRecorder::with_capacity(256);
+        let mut ctl = PlacementController::new(
+            PlacementPolicy::default().with_min_steps(2).with_max_rounds(1),
+        );
+        let catalog = vec![vec![(0, 64u32), (1, 8u32)], vec![], vec![], vec![]];
+        let out_deg = vec![9u32; 2];
+        feed_steps(&mut ctl, &mut rec, &vec![vec![100, 1, 1, 1]; 4]);
+        assert!(ctl.decide(&catalog, &out_deg).is_some());
+        feed_steps(&mut ctl, &mut rec, &vec![vec![100, 1, 1, 1]; 4]);
+        assert!(ctl.decide(&catalog, &out_deg).is_none(), "budget spent");
+        assert_eq!(ctl.rounds(), 1);
+    }
+
+    #[test]
+    fn cursor_survives_ring_drops() {
+        let mut rec = FlightRecorder::with_capacity(4);
+        let mut ctl = PlacementController::new(PlacementPolicy::default().with_min_steps(1));
+        // 10 steps through a 4-slot ring: the controller sees the newest
+        // 4 it has not consumed, never double-counts.
+        feed_steps(&mut ctl, &mut rec, &vec![vec![5, 1]; 10]);
+        assert_eq!(ctl.window.len(), 4);
+        ctl.observe_recorder(&rec); // no new events: a no-op
+        assert_eq!(ctl.window.len(), 4);
+    }
+}

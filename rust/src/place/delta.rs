@@ -1,0 +1,284 @@
+//! Placement deltas: the structural edit language of adaptive placement,
+//! plus the single-address-space replay that keeps references buildable.
+//!
+//! A [`PlacementDelta`] is applied by
+//! [`crate::graph::spmd::SpmdEngine::apply_placement`] in one superstep:
+//! the driver snapshots the shipped payloads from the pre-delta blocks
+//! and hands each machine a patch inbox ([`build_patches`]); each worker
+//! applies its patches in inbox order ([`apply_patches`]) and reports
+//! which of its per-vertex holdings changed; the driver folds the
+//! reports into the shared catalog.  [`apply_to_distgraph`] replays the
+//! identical patch pipeline onto a plain [`DistGraph`] — same snapshot
+//! rule, same per-machine application order, same (machine, emission)
+//! membership fold — so `SpmdEngine::from_ingested` over the replayed
+//! graph reconstructs the live engine's post-delta state bit for bit
+//! (block order included, which the PR/BC f64 fold grouping depends on).
+//!
+//! Like the mutation path, placement is **frozen-ownership**: ops move
+//! *blocks* between machines, never vertex ownership — the partition map
+//! is immutable, hollowed block slots stay in place so indices remain
+//! stable, and `out_deg`/`m` never change (every arc still exists,
+//! somewhere).
+
+use crate::bsp::MachineId;
+use crate::graph::ingest::{DistGraph, EdgeBlock};
+use crate::graph::layout::BlockIndex;
+use crate::graph::Vid;
+use crate::mutate;
+
+/// One placement edit.  `block` is an absolute index into the source
+/// machine's block vector — stable across deltas because detached slots
+/// are hollowed, never removed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaceOp {
+    /// Migrate a whole block from `from` to `to` (the slot at `from` is
+    /// hollowed in place).
+    Move { from: MachineId, block: u32, to: MachineId },
+    /// Replicate a hot source: ship `targets[at..]` of the block to a
+    /// new block on `to`, keeping `targets[..at]` — the source vertex
+    /// now has a leaf on both machines, so its broadcast value fans out
+    /// and its pull contributions merge back at the owner through the
+    /// destination relay trees.
+    Split { from: MachineId, block: u32, at: usize, to: MachineId },
+}
+
+/// One placement decision: the ops of one controller round, applied
+/// atomically between dispatches.  `graph_epoch` advances by
+/// `ops.len()` when applied — one bump per move, so epoch-keyed caches
+/// and references see every placement distinctly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementDelta {
+    /// Controller round that produced this delta (0-based).
+    pub round: u64,
+    pub ops: Vec<PlaceOp>,
+}
+
+/// Worker-side patch: what one machine must do to its shard.  Payloads
+/// are snapshotted by the driver from the pre-delta blocks, so patch
+/// application is per-machine-local and order-independent *across*
+/// machines (within a machine, inbox order is the application order).
+#[derive(Clone, Debug)]
+pub(crate) enum Patch {
+    /// Hollow block `block` in place (targets emptied, index entry
+    /// removed, slot kept).
+    Detach { block: u32 },
+    /// Keep only `targets[..at]` of block `block`.
+    Truncate { block: u32, at: usize },
+    /// Append a new block holding `src`'s shipped targets.
+    Install { src: Vid, targets: Vec<(Vid, f32)> },
+}
+
+/// Build per-machine patch inboxes from a delta, snapshotting every
+/// shipped payload through `read_block(machine, block) -> (src, targets)`
+/// **before** any patch is applied.  Each `(from, block)` may appear in
+/// at most one op per delta (installs create fresh slots a same-delta op
+/// cannot reference), which is what makes the snapshot equal the
+/// at-application-time state on every machine.
+pub(crate) fn build_patches(
+    p: usize,
+    delta: &PlacementDelta,
+    read_block: impl Fn(MachineId, u32) -> (Vid, Vec<(Vid, f32)>),
+) -> Vec<Vec<Patch>> {
+    let mut inboxes: Vec<Vec<Patch>> = (0..p).map(|_| Vec::new()).collect();
+    #[cfg(debug_assertions)]
+    let mut touched = std::collections::HashSet::new();
+    for op in &delta.ops {
+        match *op {
+            PlaceOp::Move { from, block, to } => {
+                debug_assert!(from < p && to < p, "machine out of range");
+                debug_assert_ne!(from, to, "move must change machines");
+                #[cfg(debug_assertions)]
+                debug_assert!(touched.insert((from, block)), "block touched twice in one delta");
+                let (src, targets) = read_block(from, block);
+                debug_assert!(!targets.is_empty(), "moving a hollow block");
+                inboxes[from].push(Patch::Detach { block });
+                inboxes[to].push(Patch::Install { src, targets });
+            }
+            PlaceOp::Split { from, block, at, to } => {
+                debug_assert!(from < p && to < p, "machine out of range");
+                debug_assert_ne!(from, to, "split must change machines");
+                #[cfg(debug_assertions)]
+                debug_assert!(touched.insert((from, block)), "block touched twice in one delta");
+                let (src, targets) = read_block(from, block);
+                debug_assert!(at >= 1 && at < targets.len(), "split point must leave both halves");
+                inboxes[from].push(Patch::Truncate { block, at });
+                inboxes[to].push(Patch::Install { src, targets: targets[at..].to_vec() });
+            }
+        }
+    }
+    inboxes
+}
+
+/// Distinct destination vertices of a target slice, ascending — the
+/// vertices whose dst-leaf membership this edit may have changed.
+fn distinct_dsts(targets: &[(Vid, f32)]) -> Vec<Vid> {
+    let mut vs: Vec<Vid> = targets.iter().map(|(v, _)| *v).collect();
+    vs.sort_unstable();
+    vs.dedup();
+    vs
+}
+
+/// Apply one machine's patch inbox in order, returning
+/// `(vertex, is_src, present)` membership notes in emission order plus
+/// the work units charged (per patch: shipped/landed targets + 1).  The
+/// engine ships the notes to its driver as `DeltaNote`s; the replay
+/// folds them directly — same notes, same order, either way.
+pub(crate) fn apply_patches(
+    blocks: &mut Vec<EdgeBlock>,
+    block_of: &mut BlockIndex,
+    inbox: Vec<Patch>,
+) -> (Vec<(Vid, bool, bool)>, u64) {
+    let mut notes: Vec<(Vid, bool, bool)> = Vec::new();
+    let mut work = 0u64;
+    for patch in inbox {
+        match patch {
+            Patch::Detach { block } => {
+                let src = blocks[block as usize].src;
+                let removed = std::mem::take(&mut blocks[block as usize].targets);
+                let was_indexed = block_of.remove(src, block);
+                debug_assert!(was_indexed, "detached block was not indexed");
+                work += removed.len() as u64 + 1;
+                notes.push((src, true, mutate::holds_src(blocks, block_of, src)));
+                for v in distinct_dsts(&removed) {
+                    notes.push((v, false, mutate::holds_dst(blocks, v)));
+                }
+            }
+            Patch::Truncate { block, at } => {
+                let src = blocks[block as usize].src;
+                let shipped = blocks[block as usize].targets.split_off(at);
+                work += shipped.len() as u64 + 1;
+                notes.push((src, true, mutate::holds_src(blocks, block_of, src)));
+                for v in distinct_dsts(&shipped) {
+                    notes.push((v, false, mutate::holds_dst(blocks, v)));
+                }
+            }
+            Patch::Install { src, targets } => {
+                let idx = blocks.len() as u32;
+                work += targets.len() as u64 + 1;
+                let vs = distinct_dsts(&targets);
+                blocks.push(EdgeBlock { src, targets });
+                block_of.insert(src, idx);
+                notes.push((src, true, true));
+                for v in vs {
+                    notes.push((v, false, true));
+                }
+            }
+        }
+    }
+    (notes, work)
+}
+
+/// Replay a placement delta onto a plain [`DistGraph`] — the
+/// single-address-space reference for `SpmdEngine::apply_placement`,
+/// following the identical snapshot/patch/fold pipeline so the replayed
+/// graph's blocks, indices and leaf sets match the live engine's bit
+/// for bit.  `out_deg` and `m` are untouched by construction (placement
+/// moves arcs between machines, it never creates or destroys them).
+pub fn apply_to_distgraph(dg: &mut DistGraph, delta: &PlacementDelta) {
+    let inboxes = build_patches(dg.p, delta, |m, b| {
+        let blk = &dg.blocks[m][b as usize];
+        (blk.src, blk.targets.clone())
+    });
+    for (m, inbox) in inboxes.into_iter().enumerate() {
+        let (notes, _work) = apply_patches(&mut dg.blocks[m], &mut dg.block_of[m], inbox);
+        // Fold in (machine, emission) order — exactly the (sender,
+        // emission-index) delivery order of the engine's note superstep.
+        for (vertex, is_src, present) in notes {
+            if is_src {
+                mutate::set_membership(&mut dg.src_leaves[vertex as usize], m, present);
+            } else {
+                mutate::set_membership(&mut dg.dst_leaves[vertex as usize], m, present);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::ingest::ingest;
+    use crate::mutate::recompute_leaves;
+    use crate::{Cluster, CostModel};
+
+    fn ingested(n: usize, p: usize, seed: u64) -> DistGraph {
+        let g = gen::barabasi_albert(n, 5, seed);
+        let mut c = Cluster::new(p, CostModel::paper_cluster());
+        ingest(&mut c, &g, 8)
+    }
+
+    /// A (from, block, to) pick with a non-trivial block on `from`.
+    fn pick_block(dg: &DistGraph, min_len: usize) -> (usize, u32, usize) {
+        for (m, bs) in dg.blocks.iter().enumerate() {
+            for (i, b) in bs.iter().enumerate() {
+                if b.targets.len() >= min_len {
+                    let to = (m + 1) % dg.p;
+                    return (m, i as u32, to);
+                }
+            }
+        }
+        panic!("no block of len >= {min_len}");
+    }
+
+    #[test]
+    fn move_keeps_leaves_in_sync_with_ground_truth() {
+        let mut dg = ingested(600, 4, 3);
+        let (from, block, to) = pick_block(&dg, 2);
+        let src = dg.blocks[from][block as usize].src;
+        let len = dg.blocks[from][block as usize].targets.len();
+        let m0 = dg.m;
+        apply_to_distgraph(
+            &mut dg,
+            &PlacementDelta { round: 0, ops: vec![PlaceOp::Move { from, block, to }] },
+        );
+        // Hollowed in place, landed whole at the tail of `to`.
+        assert!(dg.blocks[from][block as usize].targets.is_empty());
+        assert_eq!(dg.blocks[to].last().unwrap().src, src);
+        assert_eq!(dg.blocks[to].last().unwrap().targets.len(), len);
+        assert_eq!(dg.m, m0, "placement never changes the arc count");
+        let (src_l, dst_l) = recompute_leaves(&dg);
+        assert_eq!(dg.src_leaves, src_l, "incremental src leaves drifted");
+        assert_eq!(dg.dst_leaves, dst_l, "incremental dst leaves drifted");
+    }
+
+    #[test]
+    fn split_replicates_the_source_on_both_machines() {
+        let mut dg = ingested(600, 4, 7);
+        let (from, block, to) = pick_block(&dg, 4);
+        let src = dg.blocks[from][block as usize].src;
+        let len = dg.blocks[from][block as usize].targets.len();
+        let at = len / 2;
+        apply_to_distgraph(
+            &mut dg,
+            &PlacementDelta { round: 0, ops: vec![PlaceOp::Split { from, block, at, to }] },
+        );
+        assert_eq!(dg.blocks[from][block as usize].targets.len(), at);
+        assert_eq!(dg.blocks[to].last().unwrap().targets.len(), len - at);
+        assert!(dg.src_leaves[src as usize].contains(&from), "kept half stays a leaf");
+        assert!(dg.src_leaves[src as usize].contains(&to), "replica is a leaf");
+        let (src_l, dst_l) = recompute_leaves(&dg);
+        assert_eq!(dg.src_leaves, src_l);
+        assert_eq!(dg.dst_leaves, dst_l);
+    }
+
+    #[test]
+    fn degrees_and_arc_count_survive_any_delta() {
+        let mut dg = ingested(500, 4, 11);
+        let deg0 = dg.out_deg.clone();
+        let m0 = dg.m;
+        let (from, block, to) = pick_block(&dg, 4);
+        let at = dg.blocks[from][block as usize].targets.len() / 2;
+        apply_to_distgraph(
+            &mut dg,
+            &PlacementDelta {
+                round: 0,
+                ops: vec![PlaceOp::Split { from, block, at, to }],
+            },
+        );
+        assert_eq!(dg.out_deg, deg0);
+        assert_eq!(dg.m, m0);
+        let placed: usize =
+            dg.blocks.iter().flat_map(|bs| bs.iter().map(|b| b.targets.len())).sum();
+        assert_eq!(placed, dg.m, "every arc still resides somewhere");
+    }
+}

@@ -1,0 +1,46 @@
+//! `place` — deterministic hotspot-adaptive placement.
+//!
+//! TD-Orch's push-pull balances each batch, but block *placement* is
+//! decided once at ingestion — persistent skew (the paper's data-hot-spot
+//! case, §2.3) pays the push-pull tax every round, and live mutation
+//! makes it worse: the frozen-placement insert rule accretes every new
+//! arc at its source's owner, so a Zipf-hot insert stream piles edges
+//! onto hub owners long after ingestion balanced them.  This module
+//! closes the loop: a [`PlacementController`] consumes the flight
+//! recorder's per-(superstep, machine) work totals over a sliding window
+//! and, when the windowed imbalance crosses its trigger, emits a
+//! [`PlacementDelta`] — whole-block **migrations** from the hottest to
+//! the coldest machine plus a **split** of the hottest resident block
+//! (hot-vertex replication: the split fans the hub's out-edges across
+//! machines, its broadcast value is replicated to the new leaf and the
+//! pull contributions still merge at the owner through the destination
+//! relay tree, which is the deterministic merge-at-owner write path).
+//!
+//! The server applies deltas at **epoch boundaries only** — between
+//! dispatches, under the same barrier mutation batches use — via
+//! [`crate::graph::spmd::SpmdEngine::apply_placement`], which patches
+//! blocks, `BlockIndex`, leaf sets and relay trees in place inside one
+//! superstep (no re-ingestion; `ingest::ingestions()` stays the witness;
+//! `graph_epoch` bumps once per op, so every query result names the
+//! placement snapshot it ran on).
+//!
+//! **Determinism contract.**  The decision function is a pure function
+//! of the deterministic event stream — windowed ledger work vectors,
+//! never wall-clock — and of the (deterministic) block catalog, so the
+//! decisions, the decision log, and the post-migration query bits are
+//! bit-identical between the simulator and the threaded pool at every P
+//! (`tests/placement_equivalence.rs`).  [`apply_to_distgraph`] replays a
+//! delta's structural edits onto a driverless [`DistGraph`] in the exact
+//! (machine, emission) order the engine applies them, so a reference
+//! engine built from the replayed graph is bit-identical to the live
+//! one — including the f64 fold grouping PR/BC depend on.
+//!
+//! [`DistGraph`]: crate::graph::ingest::DistGraph
+
+mod controller;
+mod delta;
+
+pub use controller::{PlacementController, PlacementPolicy};
+pub use delta::{apply_to_distgraph, PlaceOp, PlacementDelta};
+
+pub(crate) use delta::{apply_patches, build_patches, Patch};

@@ -4,7 +4,7 @@
 //! one picture (AutoFlow, arXiv:2103.08888; DPA, arXiv:2308.00938): sweep
 //! offered load, plot goodput / rejection / latency percentiles per
 //! point.  This driver produces that picture twice, on the pipelined
-//! server ([`crate::serve::Server::run_source`]):
+//! server ([`crate::serve::Server::serve`]):
 //!
 //! * **open-loop sweep** — fixed-rate Zipf streams at increasing
 //!   queries-per-tick ([`StreamConfig::every_ticks`] expresses the
@@ -31,8 +31,8 @@
 //!
 //! After the sweeps, a **fusion A/B stage** replays the top open-loop
 //! rate twice on the same server — fusion+cache OFF, then ON
-//! ([`crate::serve::Server::set_policy`]; the ON run starts with a cold
-//! cache) — with both runs bit-checked against the reference.  In
+//! ([`crate::serve::Server::set_serving_policy`]; the ON run starts
+//! with a cold cache) — with both runs bit-checked against the reference.  In
 //! `--quick` the ON run must *strictly* beat the OFF run's goodput per
 //! tick and hit the cache at least once, which is how "a served batch
 //! costs about one engine pass" becomes a CI-enforced claim rather than
@@ -55,7 +55,7 @@ use crate::graph::ingest::ingestions;
 use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use crate::graph::{Graph, Vid};
 use crate::metrics::LatencySummary;
-use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::serve::{QueryShard, RunOpts, ServeConfig, ServePolicy, ServeReport, Server};
 use crate::workload::{
     generate_stream, hot_source_order, ArrivalSource, ClosedLoop, ClosedLoopConfig,
     OpenLoopSource, Query, QueryMix, StreamConfig,
@@ -201,7 +201,7 @@ fn run_point<B: Substrate>(
     snap: &dyn Fn(&B) -> Option<PoolSnapshot>,
 ) -> (ServeReport, f64) {
     let before = snap(server.engine().sub());
-    let report = server.run_source(source, |_r, _e| {});
+    let report = server.serve(source, RunOpts::default());
     let after = snap(server.engine().sub());
     let busy = match (before, after) {
         (Some(b), Some(a)) => {
@@ -278,9 +278,9 @@ fn fold_point(
 
 /// A/B the serving policies on ONE server at the top open-loop rate:
 /// the same stream served with fusion+cache off, then on
-/// ([`Server::set_policy`] clears the cache, so the ON run starts
-/// cold).  Both runs are bit-checked against the single-shot reference;
-/// the policies are restored to off afterwards.
+/// ([`Server::set_serving_policy`] clears the cache, so the ON run
+/// starts cold).  Both runs are bit-checked against the single-shot
+/// reference; the policies are restored to off afterwards.
 fn fusion_compare<B: Substrate>(
     server: &mut Server<B>,
     reference: &mut Server<Cluster>,
@@ -300,7 +300,7 @@ fn fusion_compare<B: Substrate>(
     };
     let stream = generate_stream(cfg, hot, seed);
     let mut run = |fuse: bool, cache: bool, tag: &str| {
-        server.set_policy(fuse, cache);
+        server.set_serving_policy(ServePolicy::new().with_fuse(fuse).with_cache(cache));
         let label = format!("fusion:{tag}@{:.4}/tick", cfg.offered_per_tick());
         let (report, busy) = run_point(server, &mut OpenLoopSource::new(&stream), snap);
         let mismatches = cross_check(reference, &report, &|id| stream[id as usize], &label);
@@ -316,7 +316,7 @@ fn fusion_compare<B: Substrate>(
     };
     let off = run(false, false, "off");
     let on = run(true, true, "on");
-    server.set_policy(false, false);
+    server.set_serving_policy(ServePolicy::default());
     FusionCompare { off, on }
 }
 

@@ -9,6 +9,7 @@ pub mod graphs;
 pub mod kv;
 pub mod loadcurve;
 pub mod mutate;
+pub mod placement;
 pub mod profile;
 pub mod serve;
 pub mod trace;

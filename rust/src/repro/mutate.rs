@@ -3,7 +3,7 @@
 //!
 //! Replays a deterministic interleaving of Zipf-hotness edge delta
 //! batches and {BFS, SSSP, PR, CC, BC} queries on ONE long-lived engine
-//! ([`crate::serve::Server::run_source_mutating`]), then cross-checks
+//! ([`crate::serve::Server::serve`] with a mutation feed), then cross-checks
 //! every served query against reference engines built **at that query's
 //! epoch**, walking the results in reverse order like `repro serve` so
 //! state leaking across queries or deltas meets a different predecessor
@@ -34,7 +34,7 @@ use crate::graph::ingest::{ingestions, DistGraph};
 use crate::graph::spmd::{ingest_once, GraphMeta, Placement, SpmdEngine};
 use crate::graph::{Graph, Vid};
 use crate::mutate::{generate_mutations, EdgeOp, MutationConfig, MutationFeed};
-use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::serve::{QueryShard, RunOpts, ServeConfig, ServePolicy, ServeReport, Server};
 use crate::workload::{
     generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
 };
@@ -132,7 +132,8 @@ pub fn run_mutate(
     let batches = generate_mutations(mcfg, &g, &hot, seed.wrapping_add(1));
     let scheduled = batches.len() as u64;
 
-    let serve_cfg = ServeConfig { batch: 4, fuse, cache, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
+    let serve_policy = ServePolicy::new().with_fuse(fuse).with_cache(cache);
     // The references below MUST keep both knobs off: the reverse-order
     // walk re-executes served queries through `run_query`, and a cached
     // reference would "verify" a result against a stored copy of itself
@@ -152,12 +153,11 @@ pub fn run_mutate(
                 QueryShard::new,
             ),
             serve_cfg,
-        );
-        let report = server.run_source_mutating(
-            &mut OpenLoopSource::new(&stream),
-            &mut MutationFeed::new(batches.clone()),
-            |_r, _e| {},
-        );
+        )
+        .with_serving_policy(serve_policy);
+        let mut feed = MutationFeed::new(batches.clone());
+        let report =
+            server.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut feed));
         let engine = server.into_engine();
         (report, engine.meta(), engine.graph_epoch())
     } else {
@@ -171,12 +171,11 @@ pub fn run_mutate(
                 QueryShard::new,
             ),
             serve_cfg,
-        );
-        let report = server.run_source_mutating(
-            &mut OpenLoopSource::new(&stream),
-            &mut MutationFeed::new(batches.clone()),
-            |_r, _e| {},
-        );
+        )
+        .with_serving_policy(serve_policy);
+        let mut feed = MutationFeed::new(batches.clone());
+        let report =
+            server.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut feed));
         let engine = server.into_engine();
         (report, engine.meta(), engine.graph_epoch())
     };

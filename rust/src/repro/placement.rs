@@ -1,0 +1,611 @@
+//! `repro placement` — hotspot-adaptive shard migration + hot-vertex
+//! replication, verified bit-for-bit and shown to win.
+//!
+//! Two legs on the SAME drifting workload (one shared ingestion, both
+//! engines built from clones of it): a {BFS, SSSP, PR, CC, BC} Zipf
+//! stream weighted toward PageRank — whose per-machine work is exactly
+//! the resident arc count, the signal placement repairs — plus an
+//! insert-heavy, sharply-Zipf mutation feed that accretes arcs onto the
+//! hottest sources' owners (the PR-6 first-resident-block rule), so the
+//! edge-balanced static placement *drifts* into a hotspot mid-run.
+//!
+//! * **static** — the drift lands and stays; every post-drift wave pays
+//!   the straggler under work-sensitive pricing
+//!   ([`crate::serve::ServeConfig::work_per_tick`]).
+//! * **adaptive** — a [`PlacementController`] watches the flight
+//!   recorder's per-machine work totals and, at epoch boundaries only,
+//!   splits the drifted hot block (replication of a read-hot source) and
+//!   migrates whole blocks hot→cold, each application absorbed in place
+//!   inside one superstep ([`SpmdEngine::apply_placement`]) and priced
+//!   on the same logical clock queries pay.
+//!
+//! Validity gates (exit 1 on any failure):
+//! 1. every served query on BOTH legs matches a reference engine built
+//!    at exactly its epoch — the epoch chain (mutation batches and
+//!    placement deltas, merged in `epoch_after` order) replayed onto a
+//!    clone of the shared ingestion, walked in reverse like
+//!    `repro mutate`;
+//! 2. the adaptive engine's final block catalog and leaf sets equal a
+//!    from-scratch engine over the final replayed assignment;
+//! 3. `ingest::ingestions()` stays at one — migration never re-ingests;
+//! 4. epoch accounting: +1 per mutation batch, +1 per placement op;
+//! 5. the win is real: adaptive serves at strictly higher goodput/tick
+//!    AND strictly lower steady-state step imbalance than static;
+//! 6. on the threaded backend, an extra sim leg must reproduce the
+//!    adaptive leg's decision log, deltas, schedule, and bits exactly.
+
+use std::sync::Arc;
+
+use crate::exec::{Substrate, ThreadedCluster};
+use crate::graph::flags::Flags;
+use crate::graph::gen;
+use crate::graph::ingest::{ingestions, DistGraph};
+use crate::graph::spmd::{ingest_once, GraphMeta, Placement, SpmdEngine};
+use crate::graph::Vid;
+use crate::metrics::Metrics;
+use crate::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
+use crate::obs::{EventKind, FlightRecorder};
+use crate::place::{apply_to_distgraph, PlacementController, PlacementDelta, PlacementPolicy};
+use crate::serve::{QueryShard, RunOpts, ServeConfig, ServeReport, Server};
+use crate::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryMix, StreamConfig,
+};
+use crate::{Cluster, CostModel};
+
+use super::TablePrinter;
+
+const FULL_N: usize = 8_000;
+const QUICK_N: usize = 2_000;
+const GRAPH_K: usize = 6;
+const FULL_QUERIES: usize = 64;
+const QUICK_QUERIES: usize = 24;
+/// Open-loop arrival rate (queries per logical tick).
+const ARRIVALS_PER_TICK: usize = 2;
+const ZIPF_S: f64 = 1.5;
+
+/// PR-weighted serving mix: PageRank's dense supersteps make per-machine
+/// work track resident arcs, so the drift (and the repair) show directly
+/// in the recorder signal the controller consumes.
+fn serving_mix() -> QueryMix {
+    QueryMix { bfs: 1, sssp: 1, pr: 4, cc: 1, bc: 1 }
+}
+
+/// Insert-heavy and sharply Zipf (s = 2.5): most inserts are incident to
+/// the very hottest sources, so their owners' resident arc counts drift
+/// far above the mean while total load grows only modestly.
+fn mutation_cfg(quick: bool) -> MutationConfig {
+    MutationConfig {
+        batches: if quick { 4 } else { 6 },
+        ops_per_batch: if quick { 240 } else { 480 },
+        insert_pct: 95,
+        zipf_s: 2.5,
+        start_tick: 2,
+        every_ticks: 3,
+    }
+}
+
+/// Low trigger + one move per round: each round splits the drifted hot
+/// block (shipping roughly half the excess) and migrates one more whole
+/// block, so repair converges geometrically instead of overshooting and
+/// oscillating.
+fn placement_policy() -> PlacementPolicy {
+    PlacementPolicy::default().with_trigger(1.03).with_max_moves(1).with_max_rounds(16)
+}
+
+/// Result of one `repro placement` invocation (consumed by main/tests).
+pub struct PlacementSummary {
+    pub served_static: usize,
+    pub served_adaptive: usize,
+    pub ticks_static: u64,
+    pub ticks_adaptive: u64,
+    pub goodput_static: f64,
+    pub goodput_adaptive: f64,
+    pub imbalance_static: f64,
+    pub imbalance_adaptive: f64,
+    /// Placement rounds the controller applied on the adaptive leg.
+    pub rounds: usize,
+    pub moves: usize,
+    pub splits: usize,
+    /// Bit divergences against the per-epoch replay references (both legs).
+    pub mismatches: usize,
+    /// Ingestion passes over the whole run (must be exactly 1).
+    pub ingestions_serving: u64,
+    /// Sim and threaded adaptive legs agreed on every decision and bit
+    /// (trivially true on the sim backend).
+    pub decisions_match: bool,
+    pub all_valid: bool,
+}
+
+/// Everything the comparison needs from one serving leg.
+struct Leg {
+    rep: ServeReport,
+    catalog: Vec<Vec<(Vid, u32)>>,
+    meta: Arc<GraphMeta>,
+    epoch: u64,
+    /// Per-superstep per-machine work vectors, in ledger order.
+    works: Vec<Vec<u64>>,
+    log: Vec<String>,
+    deltas: Vec<PlacementDelta>,
+}
+
+fn run_leg<B: Substrate>(
+    sub: B,
+    dg: DistGraph,
+    label: &'static str,
+    cfg: ServeConfig,
+    stream: &[Query],
+    batches: &[MutationBatch],
+    policy: Option<PlacementPolicy>,
+) -> Leg {
+    let cost = CostModel::paper_cluster();
+    let rec = FlightRecorder::shared(1 << 18);
+    let mut server = Server::new(
+        SpmdEngine::from_ingested(sub, dg, cost, Flags::tdo_gp(), label, QueryShard::new),
+        cfg,
+    );
+    server.set_recorder(Some(rec.clone()));
+    let mut feed = MutationFeed::new(batches.to_vec());
+    let mut src = OpenLoopSource::new(stream);
+    let (rep, log, deltas) = match policy {
+        Some(pol) => {
+            let mut ctl = PlacementController::new(pol);
+            let rep = server.serve(&mut src, RunOpts::new().feed(&mut feed).placement(&mut ctl));
+            (rep, ctl.decision_log().to_vec(), ctl.applied().to_vec())
+        }
+        None => {
+            let rep = server.serve(&mut src, RunOpts::new().feed(&mut feed));
+            (rep, Vec::new(), Vec::new())
+        }
+    };
+    let catalog = server.engine().block_catalog();
+    let meta = server.engine().meta();
+    let epoch = server.engine().graph_epoch();
+    let guard = rec.lock().unwrap();
+    let works: Vec<Vec<u64>> = guard
+        .events()
+        .filter_map(|e| match &e.kind {
+            EventKind::Superstep { work, .. } => Some(work.clone()),
+            _ => None,
+        })
+        .collect();
+    drop(guard);
+    Leg { rep, catalog, meta, epoch, works, log, deltas }
+}
+
+/// Steady-state step imbalance of a leg: max `step_imbalance` over the
+/// *heavy* supersteps of the run's final quarter.  The whole-run maximum
+/// would tie the legs — both share the identical pre-repair drifted
+/// steps — so the metric looks only at where each leg settled; the
+/// heaviness filter (at least half the tail's largest per-step maximum)
+/// keeps near-idle frontier and delta-apply steps from dominating a
+/// max/mean ratio that only matters where the work is.
+fn steady_state_imbalance(works: &[Vec<u64>]) -> f64 {
+    if works.is_empty() {
+        return 1.0;
+    }
+    let tail = &works[works.len() - (works.len() / 4).max(1)..];
+    let global_max =
+        tail.iter().map(|w| w.iter().copied().max().unwrap_or(0)).max().unwrap_or(0);
+    if global_max == 0 {
+        return 1.0;
+    }
+    tail.iter()
+        .filter(|w| w.iter().copied().max().unwrap_or(0) * 2 >= global_max)
+        .map(|w| Metrics::step_imbalance(w))
+        .fold(1.0, f64::max)
+}
+
+/// Replay the leg's epoch chain — mutation batches and placement deltas
+/// merged in `epoch_after` order (the engine's single counter makes
+/// those values globally unique, so the sort reconstructs the exact
+/// live interleaving) — onto a clone of the shared ingestion, keeping a
+/// snapshot per epoch for the per-query cross-check.
+fn epoch_snapshots(
+    dg0: &DistGraph,
+    rep: &ServeReport,
+    batches: &[MutationBatch],
+) -> Vec<(u64, DistGraph)> {
+    enum Ev<'a> {
+        Delta(&'a MutationBatch),
+        Place(PlacementDelta),
+    }
+    let mut events: Vec<(u64, Ev)> = rep
+        .mutations
+        .iter()
+        .map(|m| (m.epoch_after, Ev::Delta(&batches[m.batch_id as usize])))
+        .collect();
+    events.extend(rep.placements.iter().map(|pr| {
+        (pr.epoch_after, Ev::Place(PlacementDelta { round: pr.round, ops: pr.ops.clone() }))
+    }));
+    events.sort_by_key(|(e, _)| *e);
+    let mut cur = dg0.clone();
+    let mut snaps = vec![(0u64, cur.clone())];
+    for (e, ev) in events {
+        match ev {
+            Ev::Delta(b) => {
+                cur.apply_batch(b);
+            }
+            Ev::Place(d) => apply_to_distgraph(&mut cur, &d),
+        }
+        snaps.push((e, cur.clone()));
+    }
+    snaps
+}
+
+/// Reverse walk over a leg's served results, re-executing every query on
+/// a sim reference engine built at exactly its epoch's replayed
+/// assignment.  All five kinds compare bit-for-bit: the replay
+/// reproduces block structures exactly, so even the rounding-merge kinds
+/// (PR/BC, whose f64 fold grouping is part of the bits) must agree.
+fn cross_check(
+    p: usize,
+    cfg: ServeConfig,
+    rep: &ServeReport,
+    snaps: &[(u64, DistGraph)],
+    label: &str,
+) -> usize {
+    let cost = CostModel::paper_cluster();
+    let mut mismatches = 0usize;
+    let mut current: Option<(u64, Server<Cluster>)> = None;
+    for r in rep.results.iter().rev() {
+        if !current.as_ref().is_some_and(|(e, _)| *e == r.graph_epoch) {
+            let Some((_, snap)) = snaps.iter().find(|(e, _)| *e == r.graph_epoch) else {
+                eprintln!(
+                    "  {label}: query {} at epoch {} has no replay snapshot",
+                    r.id, r.graph_epoch
+                );
+                mismatches += 1;
+                continue;
+            };
+            current = Some((
+                r.graph_epoch,
+                Server::new(
+                    SpmdEngine::from_ingested(
+                        Cluster::new(p, cost),
+                        snap.clone(),
+                        cost,
+                        Flags::tdo_gp(),
+                        "placement-epoch-ref",
+                        QueryShard::new,
+                    ),
+                    cfg,
+                ),
+            ));
+        }
+        let (_, srv) = current.as_mut().unwrap();
+        let q = Query { id: r.id, kind: r.kind, source: r.source, arrival: 0 };
+        if srv.run_query(&q) != r.bits {
+            eprintln!(
+                "  {label}: query {} ({:?} from {}) diverges from its epoch-{} reference",
+                r.id, r.kind, r.source, r.graph_epoch
+            );
+            mismatches += 1;
+        }
+    }
+    mismatches
+}
+
+pub fn run_placement(
+    p: usize,
+    seed: u64,
+    backend: &str,
+    quick: bool,
+    out: &str,
+) -> PlacementSummary {
+    assert!(p >= 2, "adaptive placement needs at least two machines");
+    let ing0 = ingestions();
+    let cost = CostModel::paper_cluster();
+    let n = if quick { QUICK_N } else { FULL_N };
+    let queries = if quick { QUICK_QUERIES } else { FULL_QUERIES };
+    let g = gen::barabasi_albert(n, GRAPH_K, seed);
+    let mcfg = mutation_cfg(quick);
+    // The loaded-pricing grain: roughly a quarter of one machine's
+    // resident arcs per tick, so per-wave makespan differences of a few
+    // percent survive the ceiling division.
+    let work_per_tick = (g.m() as u64 / (p as u64 * 4)).max(64);
+    println!(
+        "\n## repro placement — hotspot-adaptive migration + replication under a drifting \
+         Zipf stream: BA graph n={} m={}, P={p}, {queries} queries (PR-weighted mix), \
+         {} delta batches × {} edge ops (insert {}%, zipf {}), work_per_tick {work_per_tick}, \
+         seed {seed}, backend {backend}\n",
+        g.n,
+        g.m(),
+        mcfg.batches,
+        mcfg.ops_per_batch,
+        mcfg.insert_pct,
+        mcfg.zipf_s,
+    );
+
+    // ONE ingestion, shared by both legs, the sim replica, and every
+    // reference below (all built from clones).
+    let dg = ingest_once(&g, p, cost, Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    let stream = generate_stream(
+        StreamConfig {
+            queries,
+            per_tick: ARRIVALS_PER_TICK,
+            every_ticks: 1,
+            zipf_s: ZIPF_S,
+            mix: serving_mix(),
+        },
+        &hot,
+        seed.wrapping_add(1),
+    );
+    let batches = generate_mutations(mcfg, &g, &hot, seed.wrapping_add(2));
+    // queue_cap = offered load: neither leg sheds, so the goodput
+    // comparison is purely about how fast the logical clock had to run.
+    let cfg = ServeConfig {
+        batch: 4,
+        queue_cap: queries,
+        work_per_tick: Some(work_per_tick),
+        ..ServeConfig::default()
+    };
+    let policy = placement_policy();
+
+    let (stat, adap, replica) = match backend {
+        "threaded" => {
+            let s = run_leg(
+                ThreadedCluster::new(p),
+                dg.clone(),
+                "placement-static",
+                cfg,
+                &stream,
+                &batches,
+                None,
+            );
+            let a = run_leg(
+                ThreadedCluster::new(p),
+                dg.clone(),
+                "placement-adaptive",
+                cfg,
+                &stream,
+                &batches,
+                Some(policy),
+            );
+            let r = run_leg(
+                Cluster::new(p, cost),
+                dg.clone(),
+                "placement-adaptive-sim",
+                cfg,
+                &stream,
+                &batches,
+                Some(policy),
+            );
+            (s, a, Some(r))
+        }
+        _ => {
+            let s = run_leg(
+                Cluster::new(p, cost),
+                dg.clone(),
+                "placement-static",
+                cfg,
+                &stream,
+                &batches,
+                None,
+            );
+            let a = run_leg(
+                Cluster::new(p, cost),
+                dg.clone(),
+                "placement-adaptive",
+                cfg,
+                &stream,
+                &batches,
+                Some(policy),
+            );
+            (s, a, None)
+        }
+    };
+
+    // The migration witness, read BEFORE any reference is built.
+    let ingestions_serving = ingestions() - ing0;
+
+    // Sim <-> threaded determinism: the adaptive leg's whole trajectory
+    // — decisions, deltas, schedule, bits — is a pure function of the
+    // deterministic event stream, never of the backend.
+    let decisions_match = match &replica {
+        None => true,
+        Some(r) => {
+            let mut ok = r.log == adap.log
+                && r.deltas == adap.deltas
+                && r.rep.ticks == adap.rep.ticks
+                && r.rep.served() == adap.rep.served();
+            for (a, b) in adap.rep.results.iter().zip(&r.rep.results) {
+                ok &= a.id == b.id && a.bits == b.bits && a.graph_epoch == b.graph_epoch;
+            }
+            if !ok {
+                eprintln!("  adaptive decisions/bits diverged between threaded and sim");
+            }
+            ok
+        }
+    };
+
+    // Per-epoch bit cross-check, both legs (the static chain is
+    // mutations only; the adaptive chain interleaves placements).
+    let snaps_static = epoch_snapshots(&dg, &stat.rep, &batches);
+    let snaps_adaptive = epoch_snapshots(&dg, &adap.rep, &batches);
+    let mismatches = cross_check(p, cfg, &stat.rep, &snaps_static, "static")
+        + cross_check(p, cfg, &adap.rep, &snaps_adaptive, "adaptive");
+
+    // Structural gate: the in-place patched engine equals a from-scratch
+    // engine over the final replayed assignment — catalog, leaf sets,
+    // degrees, arc count.
+    let (_, final_dg) = snaps_adaptive.last().unwrap();
+    let final_ref = SpmdEngine::from_ingested(
+        Cluster::new(p, cost),
+        final_dg.clone(),
+        cost,
+        Flags::tdo_gp(),
+        "placement-final-ref",
+        QueryShard::new,
+    );
+    let ref_meta = final_ref.meta();
+    let structure_ok = adap.catalog == final_ref.block_catalog()
+        && adap.meta.src_leaves == ref_meta.src_leaves
+        && adap.meta.dst_leaves == ref_meta.dst_leaves
+        && adap.meta.out_deg == ref_meta.out_deg
+        && adap.meta.m == ref_meta.m;
+    if !structure_ok {
+        eprintln!("  adaptive engine structure diverges from the replayed assignment");
+    }
+
+    // Epoch accounting: +1 per mutation batch, +1 per placement op.
+    let total_ops: usize = adap.deltas.iter().map(|d| d.ops.len()).sum();
+    let epochs_ok = stat.epoch == batches.len() as u64
+        && adap.epoch == (batches.len() + total_ops) as u64;
+    if !epochs_ok {
+        eprintln!(
+            "  epoch accounting broken: static {} (want {}), adaptive {} (want {})",
+            stat.epoch,
+            batches.len(),
+            adap.epoch,
+            batches.len() + total_ops,
+        );
+    }
+
+    let rounds = adap.rep.placements.len();
+    let moves: usize = adap.rep.placements.iter().map(|pr| pr.moves).sum();
+    let splits: usize = adap.rep.placements.iter().map(|pr| pr.splits).sum();
+
+    if rounds > 0 {
+        let t = TablePrinter::new(
+            &["round", "applied@tick", "moves", "splits", "epoch after", "service ticks"],
+            &[5, 12, 5, 6, 11, 13],
+        );
+        for pr in &adap.rep.placements {
+            t.row(&[
+                pr.round.to_string(),
+                pr.applied_tick.to_string(),
+                pr.moves.to_string(),
+                pr.splits.to_string(),
+                pr.epoch_after.to_string(),
+                pr.service_ticks.to_string(),
+            ]);
+        }
+        println!();
+        for line in &adap.log {
+            println!("    {line}");
+        }
+    }
+
+    let goodput_static = stat.rep.goodput_per_tick();
+    let goodput_adaptive = adap.rep.goodput_per_tick();
+    let imbalance_static = steady_state_imbalance(&stat.works);
+    let imbalance_adaptive = steady_state_imbalance(&adap.works);
+    let served_ok = stat.rep.served() == queries
+        && adap.rep.served() == queries
+        && stat.rep.rejected == 0
+        && adap.rep.rejected == 0;
+
+    println!(
+        "\n  static:   served {} in {} ticks — goodput {:.5}/tick, steady-state imbalance {:.4}",
+        stat.rep.served(),
+        stat.rep.ticks,
+        goodput_static,
+        imbalance_static,
+    );
+    println!(
+        "  adaptive: served {} in {} ticks — goodput {:.5}/tick, steady-state imbalance {:.4} \
+         ({rounds} rounds: {moves} moves, {splits} splits, {total_ops} ops)",
+        adap.rep.served(),
+        adap.rep.ticks,
+        goodput_adaptive,
+        imbalance_adaptive,
+    );
+    println!(
+        "  cross-check: {mismatches} mismatches over {} results; ingestions {ingestions_serving}; \
+         decisions sim==threaded: {decisions_match}; structure vs replay: {structure_ok}",
+        stat.rep.results.len() + adap.rep.results.len(),
+    );
+
+    let all_valid = served_ok
+        && mismatches == 0
+        && ingestions_serving == 1
+        && rounds >= 1
+        && moves + splits >= 1
+        && goodput_adaptive > goodput_static
+        && imbalance_adaptive < imbalance_static
+        && decisions_match
+        && structure_ok
+        && epochs_ok;
+    println!("  PLACEMENT {}", if all_valid { "VALID" } else { "INVALID" });
+
+    let json = format!(
+        "{{\"schema\":\"tdorch.placement.v1\",\"p\":{p},\"backend\":\"{backend}\",\
+         \"quick\":{quick},\"seed\":{seed},\"graph\":{{\"n\":{},\"m\":{}}},\
+         \"work_per_tick\":{work_per_tick},\
+         \"static\":{{\"served\":{},\"ticks\":{},\"goodput_per_tick\":{goodput_static:.6},\
+         \"steady_imbalance\":{imbalance_static:.6}}},\
+         \"adaptive\":{{\"served\":{},\"ticks\":{},\"goodput_per_tick\":{goodput_adaptive:.6},\
+         \"steady_imbalance\":{imbalance_adaptive:.6},\"rounds\":{rounds},\"moves\":{moves},\
+         \"splits\":{splits}}},\
+         \"mismatches\":{mismatches},\"ingestions\":{ingestions_serving},\
+         \"decisions_match\":{decisions_match},\"all_valid\":{all_valid}}}",
+        g.n,
+        g.m(),
+        stat.rep.served(),
+        stat.rep.ticks,
+        adap.rep.served(),
+        adap.rep.ticks,
+    );
+    match write_report(out, &json) {
+        Ok(()) => println!("  report: {out}"),
+        Err(e) => eprintln!("  report write failed ({out}): {e}"),
+    }
+
+    PlacementSummary {
+        served_static: stat.rep.served(),
+        served_adaptive: adap.rep.served(),
+        ticks_static: stat.rep.ticks,
+        ticks_adaptive: adap.rep.ticks,
+        goodput_static,
+        goodput_adaptive,
+        imbalance_static,
+        imbalance_adaptive,
+        rounds,
+        moves,
+        splits,
+        mismatches,
+        ingestions_serving,
+        decisions_match,
+        all_valid,
+    }
+}
+
+fn write_report(path: &str, json: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sim_placement_is_valid() {
+        let out = "target/placement/test_quick_sim.json";
+        let s = run_placement(4, 7, "sim", true, out);
+        assert!(s.rounds >= 1, "the drift must trigger at least one placement round");
+        assert!(s.moves + s.splits >= 1, "repair must move or split something");
+        assert_eq!(s.mismatches, 0, "every served bit must match its epoch reference");
+        assert_eq!(s.ingestions_serving, 1, "migration must never re-ingest");
+        assert!(
+            s.goodput_adaptive > s.goodput_static,
+            "adaptive goodput {} must beat static {}",
+            s.goodput_adaptive,
+            s.goodput_static,
+        );
+        assert!(
+            s.imbalance_adaptive < s.imbalance_static,
+            "adaptive steady-state imbalance {} must beat static {}",
+            s.imbalance_adaptive,
+            s.imbalance_static,
+        );
+        assert!(s.all_valid, "quick sim placement repro must pass every gate");
+        let json = std::fs::read_to_string(out).expect("artifact written");
+        assert!(json.starts_with("{\"schema\":\"tdorch.placement.v1\""));
+    }
+}

@@ -32,7 +32,7 @@ use crate::graph::ingest::{ingestions, DistGraph};
 use crate::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use crate::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
 use crate::obs::{chrome_trace_json, first_divergence, heatmap_table, EventKind, FlightRecorder, ObserverHandle};
-use crate::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use crate::serve::{QueryShard, RunOpts, ServeConfig, ServePolicy, ServeReport, Server};
 use crate::workload::{
     generate_stream, hot_source_order, OpenLoopSource, Query, QueryMix, StreamConfig,
 };
@@ -126,6 +126,9 @@ fn stats_of(rec: &FlightRecorder) -> StreamStats {
                 s.last_epoch_after = *epoch_after;
             }
             EventKind::QueryComplete { .. } => s.completes += 1,
+            // No placement controller in this workload — counted nowhere,
+            // and `consistency_failures` never expects one.
+            EventKind::PlacementApply { .. } => {}
             EventKind::BatchClose { .. } => {}
         }
     }
@@ -186,13 +189,11 @@ fn run_leg<B: Substrate>(
     let mut server = Server::new(
         SpmdEngine::from_ingested(sub, dg, cost, Flags::tdo_gp(), label, QueryShard::new),
         serve_cfg,
-    );
+    )
+    .with_serving_policy(ServePolicy::new().with_fuse(true).with_cache(true));
     server.set_recorder(Some(rec.clone()));
-    let report = server.run_source_mutating(
-        &mut OpenLoopSource::new(stream),
-        &mut MutationFeed::new(batches.to_vec()),
-        |_r, _e| {},
-    );
+    let mut feed = MutationFeed::new(batches.to_vec());
+    let report = server.serve(&mut OpenLoopSource::new(stream), RunOpts::new().feed(&mut feed));
     (report, rec)
 }
 
@@ -230,8 +231,7 @@ pub fn run_trace(p: usize, seed: u64, backend: &str, quick: bool, out_dir: &str)
         mcfg.ops_per_batch,
     );
 
-    let serve_cfg =
-        ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
     let mut stream: Vec<Query> = Vec::new();
     let mut batches: Vec<MutationBatch> = Vec::new();
 
@@ -420,8 +420,7 @@ pub fn trace_det_json() -> String {
         start_tick: 2,
         every_ticks: 6,
     };
-    let serve_cfg =
-        ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() };
+    let serve_cfg = ServeConfig { batch: 4, ..ServeConfig::default() };
     let mut points = Vec::new();
     for p in [2usize, 8] {
         let dg = ingest_once(&g, p, cost, Placement::Spread);

@@ -52,14 +52,27 @@
 //! host — which is why the `repro loadcurve` sweeps plot *logical*
 //! goodput and latency and treat wall-clock as annotation.
 //!
+//! ## One entry point, one option bundle, one policy
+//!
+//! The server exposes exactly ONE run method:
+//! [`Server::serve`]`(&mut dyn ArrivalSource, RunOpts)`.  Everything a
+//! run can carry beyond the arrival source — a per-query observer, a
+//! live [`crate::mutate::MutationFeed`], an external
+//! [`crate::place::PlacementController`] — rides in the [`RunOpts`]
+//! bundle, and an all-default bundle is the plain mutation-free run.
+//! What the server *does* with admitted queries (fusion, memoization,
+//! adaptive placement) is a [`ServePolicy`] value installed with
+//! [`Server::set_serving_policy`] / [`Server::with_serving_policy`],
+//! kept separate from the [`ServeConfig`] clock/admission knobs.
+//!
 //! ## Fused waves and the result cache
 //!
-//! With [`ServeConfig::fuse`] on, a closed batch's same-kind **exact**
+//! With [`ServePolicy::fuse`] on, a closed batch's same-kind **exact**
 //! queries (BFS/SSSP/CC — order-insensitive merges) dispatch as ONE
 //! multi-source `edge_map_lanes` wave ([`run_fused_wave`]): query `l`
 //! becomes lane `l`, the wave is priced once on the ledger clock, and
 //! each member's bits equal its solo single-shot run.  With
-//! [`ServeConfig::cache`] on, results memoize in a [`ResultCache`]
+//! [`ServePolicy::cache`] on, results memoize in a [`ResultCache`]
 //! keyed by `(kind, canonical source, flags, pr_iters, graph_epoch)`;
 //! the cache is consulted at **dispatch only** — never inside
 //! [`Server::run_query`], which stays the pure single-shot path every
@@ -72,7 +85,7 @@
 //!
 //! ## Live mutation
 //!
-//! [`Server::run_source_mutating`] interleaves a
+//! [`Server::serve`] with a [`RunOpts::feed`] interleaves a
 //! [`crate::mutate::MutationFeed`] of edge delta batches with the query
 //! stream on the same logical clock: a due batch is absorbed in place by
 //! `SpmdEngine::apply_delta` (no re-ingestion — the one-ingestion
@@ -85,6 +98,20 @@
 //! contract above extends verbatim: for a fixed (source, feed, config,
 //! graph, P) the full interleaving — epochs, waits, rejections, bits —
 //! is identical across runs and across substrates.
+//!
+//! ## Adaptive placement
+//!
+//! With [`ServePolicy::placement`] set (or an external controller via
+//! [`RunOpts::placement`]), a [`crate::place::PlacementController`]
+//! watches the attached flight recorder's per-machine work totals and,
+//! at the same epoch boundaries mutations use, migrates/splits hot edge
+//! blocks in place ([`crate::graph::spmd::SpmdEngine::apply_placement`]
+//! — no re-ingestion, the one-ingestion witness holds).  Each applied
+//! round bumps the epoch, leaves a [`PlacementRecord`] in the report,
+//! and pays its own service cost on the logical clock.  Pair it with
+//! [`ServeConfig::work_per_tick`] so the clock actually *feels* the
+//! imbalance placement repairs; see [`crate::place`] for the decision
+//! rules and the determinism contract.
 //!
 //! ## Observability
 //!
@@ -105,7 +132,8 @@ mod server;
 pub use cache::{canonical_source, CacheKey, ResultCache};
 pub use fused::{fusable, run_fused_wave};
 pub use server::{
-    MutationRecord, QueryResult, ServeConfig, ServeReport, Server, WaveRecord, DEFAULT_PR_ITERS,
+    MutationRecord, PlacementRecord, QueryResult, RunOpts, ServeConfig, ServePolicy, ServeReport,
+    Server, WaveRecord, DEFAULT_PR_ITERS,
 };
 
 use crate::bsp::MachineId;

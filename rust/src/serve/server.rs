@@ -12,8 +12,9 @@ use crate::graph::spmd::SpmdEngine;
 use crate::graph::Vid;
 use crate::metrics::p50_p95_p99;
 use crate::mutate::MutationFeed;
-use crate::obs::{CloseReason, EventKind, ObserverHandle};
-use crate::workload::{ArrivalSource, OpenLoopSource, Query, QueryKind};
+use crate::obs::{CloseReason, EventKind, FlightRecorder, ObserverHandle};
+use crate::place::{PlaceOp, PlacementController, PlacementPolicy};
+use crate::workload::{ArrivalSource, Query, QueryKind};
 
 use super::cache::{canonical_source, CacheKey, ResultCache};
 use super::fused::{fusable, run_fused_wave};
@@ -48,15 +49,18 @@ pub struct ServeConfig {
     /// deterministically, because ledger supersteps are a pure function
     /// of (graph, flags, P), never of the backend or the host.
     pub supersteps_per_tick: u64,
-    /// Fuse a closed batch's same-kind exact queries (BFS/SSSP/CC) into
-    /// one multi-source engine wave ([`super::run_fused_wave`]).  Off
-    /// (the default) dispatches every query singly — the exact pre-fusion
-    /// loop, schedule-bit-identical.
-    pub fuse: bool,
-    /// Memoize results in a [`ResultCache`] keyed by `(kind, canonical
-    /// source, flags, pr_iters, graph_epoch)` and serve repeats at zero
-    /// service ticks.  Off by default.
-    pub cache: bool,
+    /// Optional **work-sensitive** service pricing: when set, an engine
+    /// pass that accumulated a work-makespan delta of `K` work units
+    /// ([`Substrate::ledger_makespan`]) costs
+    /// `max(ceil(steps / supersteps_per_tick), ceil(K / work_per_tick))`
+    /// logical ticks instead of the step-count term alone.  Superstep
+    /// *counts* barely move when one machine is overloaded — the
+    /// straggler stretches every superstep instead, which only the
+    /// per-step work maxima see — so this is the knob that makes the
+    /// logical clock feel imbalance, and what adaptive placement
+    /// ([`ServePolicy::placement`]) improves.  `None` (the default)
+    /// reproduces the pure step-count clock bit for bit.
+    pub work_per_tick: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -67,9 +71,59 @@ impl Default for ServeConfig {
             queue_cap: 64,
             pr_iters: DEFAULT_PR_ITERS,
             supersteps_per_tick: 8,
-            fuse: false,
-            cache: false,
+            work_per_tick: None,
         }
+    }
+}
+
+/// What the server *does* with admitted queries, as one typed value:
+/// batch fusion, result memoization, and hotspot-adaptive placement.
+/// Replaces the old loose `(fuse, cache)` boolean pair and the flags
+/// that used to ride on [`ServeConfig`] — policy (what to run) and
+/// config (the logical clock and admission shape) are now separate
+/// types.  Build with the `with_*` combinators and install via
+/// [`Server::set_serving_policy`] (between runs on one long-lived
+/// server) or [`Server::with_serving_policy`] (at construction); the
+/// default policy reproduces the plain per-query dispatch loop
+/// bit for bit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServePolicy {
+    /// Fuse a closed batch's same-kind exact queries (BFS/SSSP/CC) into
+    /// one multi-source engine wave ([`super::run_fused_wave`]).  Off
+    /// (the default) dispatches every query singly — the exact pre-fusion
+    /// loop, schedule-bit-identical.
+    pub fuse: bool,
+    /// Memoize results in a [`ResultCache`] keyed by `(kind, canonical
+    /// source, flags, pr_iters, graph_epoch)` and serve repeats at zero
+    /// service ticks.  Off by default.
+    pub cache: bool,
+    /// Hotspot-adaptive placement: run a [`PlacementController`] over
+    /// the attached flight recorder's per-machine work signal and apply
+    /// its block migrations/splits at epoch boundaries — between
+    /// dispatches, never inside one.  `None` (the default) never moves
+    /// a block.  An external controller passed via [`RunOpts::placement`]
+    /// takes precedence for that run.
+    pub placement: Option<PlacementPolicy>,
+}
+
+impl ServePolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
+    pub fn with_cache(mut self, cache: bool) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    pub fn with_placement(mut self, policy: PlacementPolicy) -> Self {
+        self.placement = Some(policy);
+        self
     }
 }
 
@@ -99,7 +153,7 @@ pub struct QueryResult {
     /// fully identifies the snapshot this result was computed on).
     pub graph_epoch: u64,
     /// Served from the result cache (zero service ticks, no engine
-    /// pass).  Always false with [`ServeConfig::cache`] off.
+    /// pass).  Always false with [`ServePolicy::cache`] off.
     pub cached: bool,
 }
 
@@ -123,6 +177,32 @@ pub struct MutationRecord {
     pub epoch_after: u64,
     /// Directed edge ops applied.
     pub ops: usize,
+    /// Logical ticks the application occupied the server for.
+    pub service_ticks: u64,
+}
+
+/// One applied placement round in a serving run's timeline: the
+/// controller saw enough skew in its recorder window, and the engine
+/// absorbed the resulting delta in place
+/// ([`SpmdEngine::apply_placement`]) at an epoch boundary — between
+/// dispatches, under the same barrier mutation batches use.
+#[derive(Clone, Debug)]
+pub struct PlacementRecord {
+    /// Controller round number (1-based; bounded by
+    /// [`PlacementPolicy::max_rounds`]).
+    pub round: u64,
+    /// Logical tick the delta applied at.
+    pub applied_tick: u64,
+    /// Whole-block migrations in the delta.
+    pub moves: usize,
+    /// Hot-block splits (each replicates the block's source vertex onto
+    /// the destination machine) in the delta.
+    pub splits: usize,
+    /// The exact ops, for offline replay
+    /// ([`crate::place::apply_to_distgraph`]).
+    pub ops: Vec<PlaceOp>,
+    /// Engine epoch after absorption (each op bumps it once).
+    pub epoch_after: u64,
     /// Logical ticks the application occupied the server for.
     pub service_ticks: u64,
 }
@@ -168,6 +248,10 @@ pub struct ServeReport {
     pub graph_epoch: u64,
     /// Timeline of absorbed mutation batches (empty without a feed).
     pub mutations: Vec<MutationRecord>,
+    /// Timeline of applied placement rounds (empty unless a placement
+    /// controller was active — [`ServePolicy::placement`] or
+    /// [`RunOpts::placement`]).
+    pub placements: Vec<PlacementRecord>,
     /// Queries served from the result cache (0 with the cache off).
     pub cache_hits: u64,
     /// Queries served by engine execution.  Invariant:
@@ -321,16 +405,87 @@ impl Admission {
     }
 }
 
+/// Everything one [`Server::serve`] call can carry beyond the arrival
+/// source, as one typed bundle — the single entry point's option block,
+/// replacing the old quartet of specialized run methods.  Build with
+/// the combinators:
+///
+/// ```ignore
+/// server.serve(&mut src, RunOpts::default());                    // plain run
+/// server.serve(&mut src, RunOpts::new().observe(|r, e| { .. })); // hook
+/// server.serve(&mut src, RunOpts::new().feed(&mut feed));        // mutating
+/// server.serve(&mut src, RunOpts::new().placement(&mut ctl));    // adaptive
+/// ```
+///
+/// Every option defaults to absent, and an all-default bundle
+/// reproduces the plain mutation-free run bit for bit.
+pub struct RunOpts<'a, B: Substrate> {
+    observe: Option<Box<dyn FnMut(&QueryResult, &SpmdEngine<B, QueryShard>) + 'a>>,
+    feed: Option<&'a mut MutationFeed>,
+    placement: Option<&'a mut PlacementController>,
+}
+
+impl<'a, B: Substrate> RunOpts<'a, B> {
+    pub fn new() -> Self {
+        RunOpts {
+            observe: None,
+            feed: None,
+            placement: None,
+        }
+    }
+
+    /// Per-query hook, called right after each result lands with the
+    /// fresh result and the serving engine — e.g. to snapshot pool
+    /// counters per query (`repro serve`) or drive closed-loop clients.
+    pub fn observe(
+        mut self,
+        f: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>) + 'a,
+    ) -> Self {
+        self.observe = Some(Box::new(f));
+        self
+    }
+
+    /// Live mutation feed: its delta batches interleave with queries on
+    /// the logical service clock, under the epoch barrier.
+    pub fn feed(mut self, feed: &'a mut MutationFeed) -> Self {
+        self.feed = Some(feed);
+        self
+    }
+
+    /// External placement controller for this run.  Takes precedence
+    /// over the policy-owned controller ([`ServePolicy::placement`]),
+    /// and the caller keeps it afterwards — decision log, applied
+    /// deltas and the recorder cursor included — which is what the
+    /// equivalence suites diff across backends.
+    pub fn placement(mut self, ctl: &'a mut PlacementController) -> Self {
+        self.placement = Some(ctl);
+        self
+    }
+}
+
+impl<B: Substrate> Default for RunOpts<'_, B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// The online server: admits a stream, forms batches, dispatches each
 /// batch back-to-back on one long-lived engine.
 pub struct Server<B: Substrate> {
     engine: SpmdEngine<B, QueryShard>,
     cfg: ServeConfig,
+    policy: ServePolicy,
     cache: ResultCache,
     /// Attached flight recorder, if any — shared with the engine's
     /// substrate (see [`Server::set_recorder`]).  `None` skips all
     /// event work; the serving schedule is identical either way.
     recorder: Option<ObserverHandle>,
+    /// The policy-owned placement controller (`None` unless
+    /// [`ServePolicy::placement`] is set).  Lives on the server so its
+    /// round budget and recorder cursor span successive
+    /// [`Server::serve`] calls; a [`RunOpts::placement`] controller
+    /// shadows it for a run.
+    placement_ctl: Option<PlacementController>,
 }
 
 impl<B: Substrate> Server<B> {
@@ -339,11 +494,14 @@ impl<B: Substrate> Server<B> {
         assert!(cfg.queue_cap >= 1, "queue capacity must be >= 1");
         assert!(cfg.pr_iters >= 1, "PR needs at least one iteration");
         assert!(cfg.supersteps_per_tick >= 1, "the service clock needs a positive rate");
+        assert!(cfg.work_per_tick != Some(0), "work_per_tick must be >= 1 when set");
         Server {
             engine,
             cfg,
+            policy: ServePolicy::default(),
             cache: ResultCache::new(),
             recorder: None,
+            placement_ctl: None,
         }
     }
 
@@ -381,13 +539,25 @@ impl<B: Substrate> Server<B> {
         self.cache.len()
     }
 
-    /// Flip the fusion/memoization knobs between runs on one long-lived
-    /// server.  Clears the cache, so an ON run after an OFF run starts
-    /// cold and A/B comparisons on the same server are fair.
-    pub fn set_policy(&mut self, fuse: bool, cache: bool) {
-        self.cfg.fuse = fuse;
-        self.cfg.cache = cache;
+    /// Install a new serving policy between runs on one long-lived
+    /// server.  Clears the result cache — so an ON run after an OFF run
+    /// starts cold and A/B comparisons on the same server are fair —
+    /// and (re)builds the policy-owned placement controller from
+    /// [`ServePolicy::placement`].
+    pub fn set_serving_policy(&mut self, policy: ServePolicy) {
+        self.policy = policy;
         self.cache.clear();
+        self.placement_ctl = policy.placement.map(PlacementController::new);
+    }
+
+    /// Builder form of [`Server::set_serving_policy`].
+    pub fn with_serving_policy(mut self, policy: ServePolicy) -> Self {
+        self.set_serving_policy(policy);
+        self
+    }
+
+    pub fn serving_policy(&self) -> ServePolicy {
+        self.policy
     }
 
     /// Result identity of a query on THIS server at `epoch`: the key
@@ -415,9 +585,9 @@ impl<B: Substrate> Server<B> {
     /// result canonically.  This is also the "single-shot" path the
     /// cross-checks use — a reset engine is bit-equivalent to a fresh
     /// one.  It NEVER consults the result cache (memoization lives at
-    /// dispatch, in [`Server::run_source_mutating`]), so a reference
-    /// re-execution through this path can never be satisfied by a cached
-    /// copy of the very result it is meant to verify.
+    /// dispatch, inside [`Server::serve`]), so a reference re-execution
+    /// through this path can never be satisfied by a cached copy of the
+    /// very result it is meant to verify.
     pub fn run_query(&mut self, q: &Query) -> Vec<u64> {
         let kind = q.kind;
         self.engine
@@ -446,39 +616,20 @@ impl<B: Substrate> Server<B> {
         }
     }
 
-    /// Drive the full admission → batch → dispatch loop over `stream`
-    /// (which must be in nondecreasing arrival order, as
-    /// `generate_stream` emits it).
-    pub fn run(&mut self, stream: &[Query]) -> ServeReport {
-        self.run_with(stream, |_r, _e| {})
-    }
-
-    /// Like [`Server::run`], with a per-query observer called right
-    /// after each dispatch with the fresh result and the engine — the
-    /// hook `repro serve` uses to snapshot pool counters per query.
-    pub fn run_with(
-        &mut self,
-        stream: &[Query],
-        observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
-    ) -> ServeReport {
-        self.run_source(&mut OpenLoopSource::new(stream), observe)
-    }
-
-    /// The full **pipelined** admission → batch → dispatch loop over any
-    /// [`ArrivalSource`] (open-loop slice or closed-loop clients) — the
-    /// mutation-free entry point: [`Server::run_source_mutating`] with
-    /// an empty feed.
-    pub fn run_source(
-        &mut self,
-        source: &mut dyn ArrivalSource,
-        observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
-    ) -> ServeReport {
-        self.run_source_mutating(source, &mut MutationFeed::empty(), observe)
+    /// Deterministic service price of an engine pass, in logical ticks:
+    /// the ledger-superstep term, raised to the work-makespan term when
+    /// [`ServeConfig::work_per_tick`] is set, and never below 1.  Both
+    /// inputs are pure functions of (graph, flags, P) — identical across
+    /// backends — so the priced clock stays bit-reproducible.
+    fn price_ticks(&self, steps: u64, makespan: u64) -> u64 {
+        let base = steps.div_ceil(self.cfg.supersteps_per_tick);
+        let loaded = self.cfg.work_per_tick.map_or(0, |w| makespan.div_ceil(w));
+        base.max(loaded).max(1)
     }
 
     /// Absorb every mutation batch due at the current tick, advancing the
     /// logical clock by each batch's deterministic service cost — the
-    /// same ledger-superstep pricing queries pay.
+    /// same ledger pricing queries pay.
     fn apply_due_mutations(
         &mut self,
         feed: &mut MutationFeed,
@@ -487,9 +638,11 @@ impl<B: Substrate> Server<B> {
     ) {
         while let Some(batch) = feed.pop_due(*tick) {
             let s0 = self.engine.sub().ledger_supersteps();
+            let k0 = self.engine.sub().ledger_makespan();
             let applied = self.engine.apply_delta(&batch);
             let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
-            let service_ticks = steps.div_ceil(self.cfg.supersteps_per_tick).max(1);
+            let work = self.engine.sub().ledger_makespan().saturating_sub(k0);
+            let service_ticks = self.price_ticks(steps, work);
             let applied_tick = *tick;
             *tick += service_ticks;
             let epoch_after = self.engine.graph_epoch();
@@ -511,41 +664,134 @@ impl<B: Substrate> Server<B> {
         }
     }
 
-    /// [`Server::run_source`] with live graph mutation: delta batches
-    /// from `feed` interleave with queries **on the same logical service
-    /// clock**, under an epoch barrier — a due batch applies only
-    /// *between* dispatches (never inside one), so every query executes
-    /// against exactly one consistent snapshot, identified by the
-    /// `graph_epoch` stamped on its result.  Queries that queue behind a
-    /// delta absorb its service time as wait, exactly as they would
-    /// behind another query.
+    /// One controller pass at an epoch boundary: feed the recorder's
+    /// fresh superstep events to `ctl`, and if it decides on a delta,
+    /// absorb it in place ([`SpmdEngine::apply_placement`]) and advance
+    /// the logical clock by the application's deterministic service
+    /// cost — placement pays for its own data movement on the same
+    /// clock queries and mutations do.
+    fn apply_due_placement(
+        &mut self,
+        ctl: &mut PlacementController,
+        tick: &mut u64,
+        records: &mut Vec<PlacementRecord>,
+    ) {
+        let Some(rec) = self.recorder.clone() else {
+            // No signal, no decisions — serve() attaches a recorder
+            // whenever a controller is active, so this is a dead arm in
+            // practice, kept as a guard for direct callers.
+            return;
+        };
+        ctl.observe_recorder(&rec.lock().unwrap());
+        let catalog = self.engine.block_catalog();
+        let meta = self.engine.meta();
+        let Some(delta) = ctl.decide(&catalog, &meta.out_deg) else {
+            return;
+        };
+        let moves = delta
+            .ops
+            .iter()
+            .filter(|o| matches!(o, PlaceOp::Move { .. }))
+            .count();
+        let splits = delta.ops.len() - moves;
+        let s0 = self.engine.sub().ledger_supersteps();
+        let k0 = self.engine.sub().ledger_makespan();
+        self.engine.apply_placement(&delta);
+        let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
+        let work = self.engine.sub().ledger_makespan().saturating_sub(k0);
+        let service_ticks = self.price_ticks(steps, work);
+        let applied_tick = *tick;
+        *tick += service_ticks;
+        let epoch_after = self.engine.graph_epoch();
+        records.push(PlacementRecord {
+            round: delta.round,
+            applied_tick,
+            moves,
+            splits,
+            ops: delta.ops.clone(),
+            epoch_after,
+            service_ticks,
+        });
+        self.record_event(EventKind::PlacementApply {
+            tick: applied_tick,
+            round: delta.round,
+            moves,
+            splits,
+            epoch_after,
+            service_ticks,
+        });
+    }
+
+    /// Drive the full **pipelined** admission → batch → dispatch loop
+    /// over any [`ArrivalSource`] (an [`crate::workload::OpenLoopSource`]
+    /// over a pre-generated stream, or closed-loop clients) — **the**
+    /// serving entry point.  Everything else a run can carry rides in
+    /// [`RunOpts`]: a per-query observer, a live [`MutationFeed`], an
+    /// external [`PlacementController`].  An all-default bundle is the
+    /// plain mutation-free run.
+    ///
+    /// With a feed, delta batches interleave with queries **on the same
+    /// logical service clock**, under an epoch barrier — a due batch
+    /// applies only *between* dispatches (never inside one), so every
+    /// query executes against exactly one consistent snapshot,
+    /// identified by the `graph_epoch` stamped on its result.  Queries
+    /// that queue behind a delta absorb its service time as wait,
+    /// exactly as they would behind another query.  With a placement
+    /// controller active (via [`ServePolicy::placement`] or
+    /// [`RunOpts::placement`]), the controller runs at the same epoch
+    /// boundaries: it reads the flight recorder's fresh per-machine
+    /// work totals and, when the window shows enough skew, migrates or
+    /// splits hot edge blocks in place — each applied delta bumps the
+    /// epoch and pays its own deterministic service cost on the clock.
     ///
     /// Service occupies logical time: after each query the clock jumps
     /// forward by that query's deterministic service cost
-    /// ([`ServeConfig::supersteps_per_tick`]) and admission runs *again*
-    /// before the next query of the same batch — so arrivals landing
-    /// while a batch executes are queued (or shed at the cap) exactly
-    /// where they land, not at the end of the batch.  A batch's
-    /// *composition* is still fixed at close: mid-batch arrivals are
-    /// eligible for the next batch only.  Because service costs are
-    /// ledger-superstep deltas (pure functions of (graph, flags, P)),
-    /// the whole admission/wait/rejection/mutation schedule is
+    /// ([`ServeConfig::supersteps_per_tick`], optionally raised by the
+    /// work-makespan term of [`ServeConfig::work_per_tick`]) and
+    /// admission runs *again* before the next query of the same batch —
+    /// so arrivals landing while a batch executes are queued (or shed at
+    /// the cap) exactly where they land, not at the end of the batch.  A
+    /// batch's *composition* is still fixed at close: mid-batch arrivals
+    /// are eligible for the next batch only.  Because service costs are
+    /// ledger deltas (pure functions of (graph, flags, P)), the whole
+    /// admission/wait/rejection/mutation/placement schedule is
     /// bit-reproducible across runs and across backends.
     ///
     /// When the query stream ends before the feed, the remaining batches
     /// are drained at their scheduled ticks, so the final epoch — and
     /// the graph the engine holds afterwards — is a function of the feed
     /// alone, never of where the stream happened to stop.
-    pub fn run_source_mutating(
-        &mut self,
-        source: &mut dyn ArrivalSource,
-        feed: &mut MutationFeed,
-        mut observe: impl FnMut(&QueryResult, &SpmdEngine<B, QueryShard>),
-    ) -> ServeReport {
+    pub fn serve(&mut self, source: &mut dyn ArrivalSource, opts: RunOpts<'_, B>) -> ServeReport {
+        let RunOpts {
+            observe,
+            feed,
+            placement,
+        } = opts;
+        let mut observe = observe
+            .unwrap_or_else(|| Box::new(|_: &QueryResult, _: &SpmdEngine<B, QueryShard>| {}));
+        let mut empty_feed = MutationFeed::empty();
+        let feed = feed.unwrap_or(&mut empty_feed);
+        // The run's controller: the caller's wins; otherwise the
+        // policy-owned one, taken out for the run (and restored at the
+        // end) so `self` stays free for the dispatch methods.
+        let mut internal = if placement.is_none() {
+            self.placement_ctl.take()
+        } else {
+            None
+        };
+        let mut ctl = placement.or(internal.as_mut());
+        // Placement decisions are driven by the recorder's superstep
+        // signal; attach one if the caller hasn't.  Recording never
+        // perturbs the schedule (`tests/obs_trace.rs`).
+        if ctl.is_some() && self.recorder.is_none() {
+            self.set_recorder(Some(FlightRecorder::shared(FlightRecorder::DEFAULT_CAPACITY)));
+        }
         let cfg = self.cfg;
+        let policy = self.policy;
         let mut adm = Admission::new();
         let mut results: Vec<QueryResult> = Vec::new();
         let mut mutations: Vec<MutationRecord> = Vec::new();
+        let mut placements: Vec<PlacementRecord> = Vec::new();
         let mut waves: Vec<WaveRecord> = Vec::new();
         let mut batches = 0u64;
         let mut cache_hits = 0u64;
@@ -553,9 +799,13 @@ impl<B: Substrate> Server<B> {
         let mut tick = 0u64;
         let t0 = Instant::now();
         loop {
-            // ---- deltas due at the current logical time apply first,
-            //      then admission sees the post-mutation clock ----
+            // ---- deltas due at the current logical time apply first
+            //      (then any placement round they or the last waves
+            //      triggered), so admission sees the post-epoch clock ----
             self.apply_due_mutations(feed, &mut tick, &mut mutations);
+            if let Some(c) = ctl.as_deref_mut() {
+                self.apply_due_placement(c, &mut tick, &mut placements);
+            }
             adm.admit(source, tick, cfg.queue_cap, self.recorder.as_ref());
             let full = adm.pending.len() >= cfg.batch;
             let overdue = adm
@@ -589,10 +839,16 @@ impl<B: Substrate> Server<B> {
                 while !members.is_empty() {
                     // Epoch barrier: deltas that fell due during the
                     // previous wave's service window apply here,
-                    // BETWEEN dispatches — never inside one.
+                    // BETWEEN dispatches — never inside one.  Placement
+                    // rounds use the same barrier: the controller sees
+                    // the recorder as of the last wave and may migrate
+                    // blocks before the next one dispatches.
                     self.apply_due_mutations(feed, &mut tick, &mut mutations);
+                    if let Some(c) = ctl.as_deref_mut() {
+                        self.apply_due_placement(c, &mut tick, &mut placements);
+                    }
                     let epoch = self.engine.graph_epoch();
-                    if cfg.cache {
+                    if policy.cache {
                         // Mutations never un-apply, so entries from any
                         // earlier epoch can never hit again — evict.
                         self.cache.retain_epoch(epoch);
@@ -646,7 +902,7 @@ impl<B: Substrate> Server<B> {
                     //      or (fusion on, exact kind) every same-kind
                     //      member of the batch as lanes ----
                     let kind = members.front().expect("checked nonempty").kind;
-                    let wave: Vec<Query> = if cfg.fuse && fusable(kind) {
+                    let wave: Vec<Query> = if policy.fuse && fusable(kind) {
                         let mut wave = Vec::new();
                         let mut rest = VecDeque::new();
                         for q in members.drain(..) {
@@ -678,6 +934,7 @@ impl<B: Substrate> Server<B> {
                         }
                     }
                     let s0 = self.engine.sub().ledger_supersteps();
+                    let k0 = self.engine.sub().ledger_makespan();
                     let ts = Instant::now();
                     let bits_per: Vec<Vec<u64>> = if wave.len() >= 2 {
                         let sources: Vec<Vid> = wave.iter().map(|q| q.source).collect();
@@ -687,11 +944,12 @@ impl<B: Substrate> Server<B> {
                     };
                     let service_ms = ts.elapsed().as_secs_f64() * 1e3;
                     let steps = self.engine.sub().ledger_supersteps().saturating_sub(s0);
+                    let work = self.engine.sub().ledger_makespan().saturating_sub(k0);
                     // The whole wave is priced ONCE — this is the
                     // amortization: lanes share every superstep, so a
                     // fused batch costs its max-shaped wave, not the sum
                     // of B solo runs.
-                    let wave_ticks = steps.div_ceil(cfg.supersteps_per_tick).max(1);
+                    let wave_ticks = self.price_ticks(steps, work);
                     tick += wave_ticks;
                     waves.push(WaveRecord {
                         batch: batch_seq,
@@ -714,7 +972,7 @@ impl<B: Substrate> Server<B> {
                     });
                     for (q, bits) in wave.into_iter().zip(bits_per) {
                         cache_misses += 1;
-                        if cfg.cache {
+                        if policy.cache {
                             let key = self.cache_key(q.kind, q.source, epoch);
                             self.cache.insert(key, bits.clone());
                         }
@@ -790,6 +1048,16 @@ impl<B: Substrate> Server<B> {
             tick = tick.max(arrival);
             self.apply_due_mutations(feed, &mut tick, &mut mutations);
         }
+        // One last controller pass, so supersteps observed during the
+        // final waves are considered before the run's state freezes —
+        // the engine a follow-up `serve` call inherits is a function of
+        // everything this run observed, not of where the stream stopped.
+        if let Some(c) = ctl.as_deref_mut() {
+            self.apply_due_placement(c, &mut tick, &mut placements);
+        }
+        if internal.is_some() {
+            self.placement_ctl = internal;
+        }
         ServeReport {
             results,
             rejected: adm.rejected,
@@ -800,6 +1068,7 @@ impl<B: Substrate> Server<B> {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             graph_epoch: self.engine.graph_epoch(),
             mutations,
+            placements,
             cache_hits,
             cache_misses,
             waves,

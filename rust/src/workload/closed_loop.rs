@@ -26,7 +26,7 @@
 //! [`ArrivalSource`](super::queries::ArrivalSource) feedback hooks; the
 //! server's admission loop polls it between queries of an executing
 //! batch, which is what makes think-time expire *during* service —
-//! see `serve::Server::run_source`.
+//! see `serve::Server::serve`.
 
 use crate::graph::Vid;
 use crate::rng::{splitmix64, Rng};

@@ -29,7 +29,7 @@ use tdorch::graph::{Graph, Vid};
 use tdorch::mutate::{
     generate_mutations, recompute_leaves, EdgeOp, MutationConfig, MutationFeed, MutationStream,
 };
-use tdorch::serve::{QueryShard, ServeConfig, Server};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, Server};
 use tdorch::workload::{
     generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
 };
@@ -237,11 +237,9 @@ fn mutating_serve_is_bit_identical_across_backends() {
         ),
         cfg(),
     );
-    let rep_sim = sim.run_source_mutating(
-        &mut OpenLoopSource::new(&stream),
-        &mut MutationFeed::new(batches.clone()),
-        |_, _| {},
-    );
+    let mut sim_feed = MutationFeed::new(batches.clone());
+    let rep_sim =
+        sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut sim_feed));
     let mut thr = Server::new(
         SpmdEngine::from_ingested(
             ThreadedCluster::new(p),
@@ -253,11 +251,9 @@ fn mutating_serve_is_bit_identical_across_backends() {
         ),
         cfg(),
     );
-    let rep_thr = thr.run_source_mutating(
-        &mut OpenLoopSource::new(&stream),
-        &mut MutationFeed::new(batches.clone()),
-        |_, _| {},
-    );
+    let mut thr_feed = MutationFeed::new(batches.clone());
+    let rep_thr =
+        thr.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut thr_feed));
     assert_eq!(
         ingestions() - before,
         1,

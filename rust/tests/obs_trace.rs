@@ -24,7 +24,7 @@ use tdorch::graph::ingest::DistGraph;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use tdorch::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
 use tdorch::obs::{EventKind, FlightRecorder, ObserverHandle};
-use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, ServePolicy, ServeReport, Server};
 use tdorch::workload::{
     generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
 };
@@ -34,9 +34,13 @@ fn cost() -> CostModel {
     CostModel::paper_cluster()
 }
 
-/// Fusion and the cache both ON so every event kind is exercised.
 fn serve_cfg() -> ServeConfig {
-    ServeConfig { batch: 4, fuse: true, cache: true, ..ServeConfig::default() }
+    ServeConfig { batch: 4, ..ServeConfig::default() }
+}
+
+/// Fusion and the cache both ON so every event kind is exercised.
+fn serve_policy() -> ServePolicy {
+    ServePolicy::new().with_fuse(true).with_cache(true)
 }
 
 fn stream_for(dg: &DistGraph, queries: usize, per_tick: usize, seed: u64) -> Vec<Query> {
@@ -72,13 +76,12 @@ fn run_recorded<B: Substrate>(
     let mut server = Server::new(
         SpmdEngine::from_ingested(sub, dg, cost(), Flags::tdo_gp(), "obs-test", QueryShard::new),
         cfg,
-    );
+    )
+    .with_serving_policy(serve_policy());
     server.set_recorder(Some(rec.clone()));
-    let report = server.run_source_mutating(
-        &mut OpenLoopSource::new(stream),
-        &mut MutationFeed::new(batches),
-        |_r, _e| {},
-    );
+    let mut feed = MutationFeed::new(batches);
+    let report =
+        server.serve(&mut OpenLoopSource::new(stream), RunOpts::new().feed(&mut feed));
     (report, rec)
 }
 
@@ -162,12 +165,11 @@ fn recorder_off_and_on_serve_identical_reports() {
             QueryShard::new,
         ),
         serve_cfg(),
-    );
-    let off = plain.run_source_mutating(
-        &mut OpenLoopSource::new(&stream),
-        &mut MutationFeed::new(batches.clone()),
-        |_r, _e| {},
-    );
+    )
+    .with_serving_policy(serve_policy());
+    let mut off_feed = MutationFeed::new(batches.clone());
+    let off =
+        plain.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut off_feed));
     let (on, _rec) = run_recorded(Cluster::new(2, cost()), dg, serve_cfg(), &stream, batches);
 
     // Every deterministic report field must be untouched by recording.

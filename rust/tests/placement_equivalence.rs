@@ -1,0 +1,303 @@
+//! Hotspot-adaptive placement: the determinism and in-place-equality
+//! contracts (PR 10 tentpole).
+//!
+//! 1. The adaptive serving loop is backend-invariant at P ∈ {1, 2, 8}:
+//!    sim and threaded legs over the same drifting workload produce the
+//!    identical decision log, the identical placement deltas, and
+//!    bit-identical post-migration query results on the identical
+//!    logical schedule.  (P = 1 degenerates to "no cold machine exists",
+//!    so both backends must agree on *zero* decisions.)
+//! 2. `SpmdEngine::apply_placement` patches the live engine into exactly
+//!    the state a from-scratch engine reaches over the same assignment
+//!    (`apply_to_distgraph` + `from_ingested`): block catalog, leaf
+//!    sets, degrees, and all five query kinds' bits.
+//! 3. No skew, no moves: on a balanced workload the controller (default
+//!    policy) never fires, and riding a controller along changes nothing
+//!    — schedule and bits equal the controller-free run.
+
+use tdorch::exec::{Substrate, ThreadedCluster};
+use tdorch::graph::flags::Flags;
+use tdorch::graph::gen;
+use tdorch::graph::ingest::DistGraph;
+use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
+use tdorch::mutate::{generate_mutations, MutationBatch, MutationConfig, MutationFeed};
+use tdorch::place::{
+    apply_to_distgraph, PlaceOp, PlacementController, PlacementDelta, PlacementPolicy,
+};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, ServeReport, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
+};
+use tdorch::{Cluster, CostModel};
+
+const SEED: u64 = 11;
+
+fn cost() -> CostModel {
+    CostModel::paper_cluster()
+}
+
+/// PR-weighted mix: dense supersteps make the recorder's work signal
+/// track resident arcs, which is what the drift skews.
+fn drift_mix() -> QueryMix {
+    QueryMix { bfs: 1, sssp: 1, pr: 4, cc: 1, bc: 1 }
+}
+
+fn drift_policy() -> PlacementPolicy {
+    PlacementPolicy::default().with_trigger(1.02).with_max_moves(1).with_max_rounds(16)
+}
+
+/// Build the shared drifting workload: a small BA graph, a Zipf-hot
+/// query stream, and an insert-heavy sharply-Zipf mutation feed that
+/// piles arcs onto the hottest sources' owners.
+fn drift_workload(p: usize) -> (DistGraph, Vec<Query>, Vec<MutationBatch>, ServeConfig) {
+    let g = gen::barabasi_albert(600, 5, SEED);
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    let stream = generate_stream(
+        StreamConfig { queries: 16, per_tick: 2, every_ticks: 1, zipf_s: 1.5, mix: drift_mix() },
+        &hot,
+        SEED.wrapping_add(1),
+    );
+    let batches = generate_mutations(
+        MutationConfig {
+            batches: 2,
+            ops_per_batch: 400,
+            insert_pct: 95,
+            zipf_s: 2.5,
+            start_tick: 2,
+            every_ticks: 3,
+        },
+        &g,
+        &hot,
+        SEED.wrapping_add(2),
+    );
+    let cfg = ServeConfig {
+        batch: 4,
+        queue_cap: 16,
+        work_per_tick: Some((g.m() as u64 / (p as u64 * 4)).max(64)),
+        ..ServeConfig::default()
+    };
+    (dg, stream, batches, cfg)
+}
+
+/// One adaptive serving leg on the given substrate; returns the report
+/// plus the controller's full decision trail.
+fn adaptive_leg<B: Substrate>(
+    sub: B,
+    dg: DistGraph,
+    stream: &[Query],
+    batches: &[MutationBatch],
+    cfg: ServeConfig,
+    policy: PlacementPolicy,
+) -> (ServeReport, Vec<String>, Vec<PlacementDelta>) {
+    let mut server = Server::new(
+        SpmdEngine::from_ingested(sub, dg, cost(), Flags::tdo_gp(), "placement-eq", QueryShard::new),
+        cfg,
+    );
+    let mut feed = MutationFeed::new(batches.to_vec());
+    let mut ctl = PlacementController::new(policy);
+    let rep = server.serve(
+        &mut OpenLoopSource::new(stream),
+        RunOpts::new().feed(&mut feed).placement(&mut ctl),
+    );
+    (rep, ctl.decision_log().to_vec(), ctl.applied().to_vec())
+}
+
+#[test]
+fn adaptive_serving_is_backend_invariant_at_p_1_2_8() {
+    for p in [1usize, 2, 8] {
+        let (dg, stream, batches, cfg) = drift_workload(p);
+        let (sim_rep, sim_log, sim_deltas) = adaptive_leg(
+            Cluster::new(p, cost()),
+            dg.clone(),
+            &stream,
+            &batches,
+            cfg,
+            drift_policy(),
+        );
+        let (thr_rep, thr_log, thr_deltas) =
+            adaptive_leg(ThreadedCluster::new(p), dg, &stream, &batches, cfg, drift_policy());
+
+        assert_eq!(sim_log, thr_log, "P={p}: decision logs diverged across backends");
+        assert_eq!(sim_deltas, thr_deltas, "P={p}: placement deltas diverged across backends");
+        assert_eq!(sim_rep.ticks, thr_rep.ticks, "P={p}: logical span diverged");
+        assert_eq!(sim_rep.served(), thr_rep.served(), "P={p}: served count diverged");
+        assert_eq!(
+            sim_rep.placements.len(),
+            thr_rep.placements.len(),
+            "P={p}: applied-round count diverged"
+        );
+        for (a, b) in sim_rep.placements.iter().zip(&thr_rep.placements) {
+            assert_eq!(a.round, b.round, "P={p}: round ids diverged");
+            assert_eq!(a.applied_tick, b.applied_tick, "P={p}: application ticks diverged");
+            assert_eq!(a.ops, b.ops, "P={p}: applied ops diverged");
+            assert_eq!(a.epoch_after, b.epoch_after, "P={p}: epochs diverged");
+            assert_eq!(a.service_ticks, b.service_ticks, "P={p}: placement pricing diverged");
+        }
+        for (a, b) in sim_rep.results.iter().zip(&thr_rep.results) {
+            assert_eq!(a.id, b.id, "P={p}: dispatch order diverged");
+            assert_eq!(a.graph_epoch, b.graph_epoch, "P={p}: query {} epoch diverged", a.id);
+            assert_eq!(a.bits, b.bits, "P={p}: query {} bits diverged", a.id);
+        }
+        match p {
+            1 => {
+                // One machine: there is never a colder peer to move to,
+                // and both backends must agree on exactly that.
+                assert!(sim_deltas.is_empty(), "P=1 must never migrate");
+                assert_eq!(sim_rep.graph_epoch, batches.len() as u64);
+            }
+            _ => {
+                assert!(
+                    !sim_deltas.is_empty(),
+                    "P={p}: the drift must trigger at least one migration round"
+                );
+                let post = sim_rep
+                    .results
+                    .iter()
+                    .filter(|r| r.graph_epoch > batches.len() as u64)
+                    .count();
+                assert!(post > 0, "P={p}: some queries must run post-migration");
+            }
+        }
+    }
+}
+
+#[test]
+fn apply_placement_equals_from_scratch_engine_over_same_assignment() {
+    let p = 2;
+    let g = gen::barabasi_albert(400, 5, SEED);
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let mut live = SpmdEngine::from_ingested(
+        Cluster::new(p, cost()),
+        dg.clone(),
+        cost(),
+        Flags::tdo_gp(),
+        "placement-live",
+        QueryShard::new,
+    );
+
+    // Hand-build one delta from the live catalog: split machine 0's
+    // biggest block (replication of its read-hot source) and move the
+    // biggest other-source block, both to machine 1.
+    let catalog = live.block_catalog();
+    let (split_slot, &(split_src, split_len)) = catalog[0]
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, (_, len))| *len)
+        .expect("machine 0 holds blocks");
+    assert!(split_len >= 2, "need a splittable block");
+    let (move_slot, _) = catalog[0]
+        .iter()
+        .enumerate()
+        .filter(|&(slot, &(src, len))| slot != split_slot && src != split_src && len > 0)
+        .max_by_key(|&(_, &(_, len))| len)
+        .expect("machine 0 holds a second source");
+    let delta = PlacementDelta {
+        round: 0,
+        ops: vec![
+            PlaceOp::Split {
+                from: 0,
+                block: split_slot as u32,
+                at: (split_len / 2) as usize,
+                to: 1,
+            },
+            PlaceOp::Move { from: 0, block: move_slot as u32, to: 1 },
+        ],
+    };
+
+    live.apply_placement(&delta);
+    assert_eq!(live.graph_epoch(), delta.ops.len() as u64, "one epoch bump per op");
+
+    let mut replayed = dg.clone();
+    apply_to_distgraph(&mut replayed, &delta);
+    let fresh = SpmdEngine::from_ingested(
+        Cluster::new(p, cost()),
+        replayed,
+        cost(),
+        Flags::tdo_gp(),
+        "placement-fresh",
+        QueryShard::new,
+    );
+
+    assert_eq!(live.block_catalog(), fresh.block_catalog(), "catalogs diverged");
+    let (lm, fm) = (live.meta(), fresh.meta());
+    assert_eq!(lm.m, fm.m, "arc count diverged");
+    assert_eq!(lm.out_deg, fm.out_deg, "degrees diverged");
+    assert_eq!(lm.src_leaves, fm.src_leaves, "source leaf sets diverged");
+    assert_eq!(lm.dst_leaves, fm.dst_leaves, "destination leaf sets diverged");
+
+    // And the patched engine answers every kind bit-identically to the
+    // from-scratch one — including through the moved and split blocks.
+    let mut live_srv = Server::new(live, ServeConfig::default());
+    let mut fresh_srv = Server::new(fresh, ServeConfig::default());
+    for (id, kind) in
+        [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Pr, QueryKind::Cc, QueryKind::Bc]
+            .into_iter()
+            .enumerate()
+    {
+        for source in [split_src, 0, 17] {
+            let q = Query { id: id as u64, kind, source, arrival: 0 };
+            assert_eq!(
+                live_srv.run_query(&q),
+                fresh_srv.run_query(&q),
+                "{kind:?} from {source}: bits diverged after in-place placement"
+            );
+        }
+    }
+}
+
+#[test]
+fn no_skew_means_zero_moves_and_an_untouched_schedule() {
+    let p = 4;
+    let g = gen::barabasi_albert(500, 5, SEED);
+    let dg = ingest_once(&g, p, cost(), Placement::Spread);
+    let hot = hot_source_order(&dg.out_deg);
+    // Dense, balanced kinds only (PR/CC): with the spread ingestion and
+    // no mutation drift, per-machine work stays within a few percent —
+    // far under the default 1.25 trigger.
+    let stream = generate_stream(
+        StreamConfig {
+            queries: 12,
+            per_tick: 2,
+            every_ticks: 1,
+            zipf_s: 1.1,
+            mix: QueryMix { bfs: 0, sssp: 0, pr: 2, cc: 1, bc: 0 },
+        },
+        &hot,
+        SEED.wrapping_add(3),
+    );
+    let cfg = ServeConfig { batch: 4, queue_cap: 16, ..ServeConfig::default() };
+
+    let (rep, log, deltas) = adaptive_leg(
+        Cluster::new(p, cost()),
+        dg.clone(),
+        &stream,
+        &[],
+        cfg,
+        PlacementPolicy::default(),
+    );
+    assert!(deltas.is_empty(), "balanced load must trigger zero moves (log: {log:?})");
+    assert!(rep.placements.is_empty());
+    assert_eq!(rep.graph_epoch, 0, "no placement, no epoch bump");
+
+    // A controller that never fires is invisible: same schedule, same
+    // bits as serving without one.
+    let mut plain = Server::new(
+        SpmdEngine::from_ingested(
+            Cluster::new(p, cost()),
+            dg,
+            cost(),
+            Flags::tdo_gp(),
+            "placement-eq-plain",
+            QueryShard::new,
+        ),
+        cfg,
+    );
+    let plain_rep = plain.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
+    assert_eq!(rep.ticks, plain_rep.ticks, "an idle controller perturbed the clock");
+    assert_eq!(rep.served(), plain_rep.served());
+    for (a, b) in rep.results.iter().zip(&plain_rep.results) {
+        assert_eq!(a.id, b.id, "an idle controller reordered dispatch");
+        assert_eq!(a.bits, b.bits, "query {}: an idle controller changed bits", a.id);
+    }
+}

@@ -5,7 +5,7 @@
 //!    canonical key each), hits carry `cached` and zero service ticks.
 //! 2. Cache-on and cache-off runs of the same stream serve bit-identical
 //!    results.
-//! 3. Under a mutating feed ([`Server::run_source_mutating`]), an epoch
+//! 3. Under a mutating feed (`Server::serve` with `RunOpts::feed`), an epoch
 //!    bump invalidates exactly the stale entries: every hit is backed by
 //!    a same-epoch miss with identical bits (a pre-mutation result can
 //!    never be served post-epoch), every result — hit or miss — matches
@@ -21,7 +21,7 @@ use tdorch::graph::ingest::DistGraph;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use tdorch::graph::{Graph, Vid};
 use tdorch::mutate::{generate_mutations, MutationConfig, MutationFeed};
-use tdorch::serve::{canonical_source, QueryShard, ServeConfig, Server};
+use tdorch::serve::{canonical_source, QueryShard, RunOpts, ServeConfig, ServePolicy, Server};
 use tdorch::workload::{hot_source_order, OpenLoopSource, Query, QueryKind};
 use tdorch::{Cluster, CostModel};
 
@@ -36,8 +36,9 @@ fn query(id: u64, kind: QueryKind, source: Vid, arrival: u64) -> Query {
 fn server(g: &Graph, cache: bool) -> Server<Cluster> {
     Server::new(
         SpmdEngine::tdo_gp(Cluster::new(2, cost()), g, cost(), QueryShard::new),
-        ServeConfig { batch: 4, cache, ..ServeConfig::default() },
+        ServeConfig { batch: 4, ..ServeConfig::default() },
     )
+    .with_serving_policy(ServePolicy::new().with_cache(cache))
 }
 
 /// A burst stream with known repeats: 5 distinct cache keys in 10
@@ -62,7 +63,7 @@ fn repeat_stream() -> Vec<Query> {
 fn repeated_queries_hit_exactly_repeat_count_times() {
     let g = gen::barabasi_albert(400, 5, 11);
     let mut srv = server(&g, true);
-    let rep = srv.run(&repeat_stream());
+    let rep = srv.serve(&mut OpenLoopSource::new(&repeat_stream()), RunOpts::default());
     assert_eq!(rep.served(), 10, "queue cap 64 sheds nothing here");
     // 10 queries, 5 distinct keys {BFS@3, CC, SSSP@7, PR, BC@5}: ids
     // 1, 4, 5, 7, 8 are repeats and must ALL hit — 4 and 8 via source
@@ -83,8 +84,10 @@ fn repeated_queries_hit_exactly_repeat_count_times() {
 #[test]
 fn cache_on_and_off_serve_identical_bits() {
     let g = gen::barabasi_albert(400, 5, 13);
-    let rep_on = server(&g, true).run(&repeat_stream());
-    let rep_off = server(&g, false).run(&repeat_stream());
+    let rep_on =
+        server(&g, true).serve(&mut OpenLoopSource::new(&repeat_stream()), RunOpts::default());
+    let rep_off =
+        server(&g, false).serve(&mut OpenLoopSource::new(&repeat_stream()), RunOpts::default());
     assert_eq!(rep_off.cache_hits, 0);
     assert_eq!(rep_on.served(), rep_off.served());
     for (a, b) in rep_on.results.iter().zip(&rep_off.results) {
@@ -137,13 +140,11 @@ fn epoch_bump_invalidates_stale_entries_and_never_serves_old_bits() {
             "cache-mutating",
             QueryShard::new,
         ),
-        ServeConfig { batch: 4, cache: true, ..ServeConfig::default() },
-    );
-    let rep = srv.run_source_mutating(
-        &mut OpenLoopSource::new(&stream),
-        &mut MutationFeed::new(batches.clone()),
-        |_r, _e| {},
-    );
+        ServeConfig { batch: 4, ..ServeConfig::default() },
+    )
+    .with_serving_policy(ServePolicy::new().with_cache(true));
+    let mut feed = MutationFeed::new(batches.clone());
+    let rep = srv.serve(&mut OpenLoopSource::new(&stream), RunOpts::new().feed(&mut feed));
     assert_eq!(rep.graph_epoch, 2, "both delta batches must absorb");
     assert_eq!(rep.served() as u64, rep.cache_hits + rep.cache_misses);
 

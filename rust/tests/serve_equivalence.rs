@@ -19,8 +19,10 @@ use tdorch::graph::ingest::ingestions;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use tdorch::graph::Graph;
 use tdorch::repro::graphs::run_graph_backend;
-use tdorch::serve::{QueryShard, ServeConfig, Server};
-use tdorch::workload::{generate_stream, hot_source_order, Query, QueryKind, QueryMix, StreamConfig};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, Server};
+use tdorch::workload::{
+    generate_stream, hot_source_order, OpenLoopSource, Query, QueryKind, QueryMix, StreamConfig,
+};
 use tdorch::{Cluster, CostModel};
 
 fn cost() -> CostModel {
@@ -130,7 +132,7 @@ fn threaded_server_stream_matches_fresh_sim_single_shots() {
         &hot,
         3,
     );
-    let report = server.run(&stream);
+    let report = server.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
     assert_eq!(report.served() as u64 + report.rejected, 16);
     assert!(report.served() > 0, "nothing served");
     assert!(report.batches > 0);
@@ -190,8 +192,8 @@ fn serving_deployment_ingests_exactly_once() {
         &hot,
         9,
     );
-    let rep_sim = sim.run(&stream);
-    let rep_thr = thr.run(&stream);
+    let rep_sim = sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
+    let rep_thr = thr.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
     assert_eq!(
         ingestions() - before,
         1,

@@ -15,8 +15,8 @@ use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use tdorch::graph::{Graph, Vid};
-use tdorch::serve::{fusable, QueryShard, ServeConfig, Server};
-use tdorch::workload::{Query, QueryKind};
+use tdorch::serve::{fusable, QueryShard, RunOpts, ServeConfig, ServePolicy, Server};
+use tdorch::workload::{OpenLoopSource, Query, QueryKind};
 use tdorch::{Cluster, CostModel};
 
 fn cost() -> CostModel {
@@ -109,8 +109,9 @@ fn mixed_kind_batch_splits_into_single_kind_waves() {
     let g = gen::barabasi_albert(400, 5, 17);
     let mut server = Server::new(
         SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
-        ServeConfig { batch: 8, queue_cap: 16, fuse: true, ..ServeConfig::default() },
-    );
+        ServeConfig { batch: 8, queue_cap: 16, ..ServeConfig::default() },
+    )
+    .with_serving_policy(ServePolicy::new().with_fuse(true));
     let mut reference = sim_server(&g, 2);
     // One burst batch mixing all five kinds, with repeats of the
     // fusable ones scattered between other kinds.
@@ -124,7 +125,7 @@ fn mixed_kind_batch_splits_into_single_kind_waves() {
         query(6, QueryKind::Sssp, 99),
         query(7, QueryKind::Bfs, 120),
     ];
-    let rep = server.run(&stream);
+    let rep = server.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
     assert_eq!(rep.served(), 8);
     assert_eq!(rep.batches, 1, "one burst, one batch");
     // Head-of-line grouping: BFS gathers its three members, then the

@@ -22,9 +22,10 @@ use tdorch::graph::flags::Flags;
 use tdorch::graph::gen;
 use tdorch::graph::spmd::{ingest_once, Placement, SpmdEngine};
 use tdorch::graph::Graph;
-use tdorch::serve::{QueryShard, ServeConfig, ServeReport, Server};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, ServePolicy, ServeReport, Server};
 use tdorch::workload::{
-    generate_stream, hot_source_order, ClosedLoop, ClosedLoopConfig, QueryMix, StreamConfig,
+    generate_stream, hot_source_order, ClosedLoop, ClosedLoopConfig, OpenLoopSource, QueryMix,
+    StreamConfig,
 };
 use tdorch::{Cluster, CostModel};
 
@@ -91,8 +92,8 @@ fn pipelined_schedule_identical_sim_vs_threaded_at_p1_and_p8() {
         // Overloaded (2 q/tick vs a sub-1/tick service rate) so waits,
         // service windows AND rejections are all exercised.
         let stream = generate_stream(stream_cfg(40, 2, 1), &hot, 13);
-        let rep_sim = sim.run(&stream);
-        let rep_thr = thr.run(&stream);
+        let rep_sim = sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
+        let rep_thr = thr.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
         assert!(rep_sim.rejected > 0, "P={p}: the overload stream must shed some load");
         assert_eq!(
             schedule(&rep_sim),
@@ -104,7 +105,7 @@ fn pipelined_schedule_identical_sim_vs_threaded_at_p1_and_p8() {
         }
         // Same backend, same inputs, run again on a REUSED engine: the
         // schedule is a pure function, not a warm-up artifact.
-        let rep_sim2 = sim.run(&stream);
+        let rep_sim2 = sim.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
         assert_eq!(
             schedule(&rep_sim),
             schedule(&rep_sim2),
@@ -129,7 +130,7 @@ fn overload_rejections_grow_with_offered_load_and_results_stay_exact() {
     let mut rejected = Vec::new();
     for (per_tick, every_ticks) in rates {
         let stream = generate_stream(stream_cfg(32, per_tick, every_ticks), &hot, 5);
-        let rep = server.run(&stream);
+        let rep = server.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
         assert_eq!(
             rep.served() as u64 + rep.rejected,
             32,
@@ -241,8 +242,8 @@ fn closed_loop_schedule_identical_sim_vs_threaded() {
     };
     let mut src_sim = ClosedLoop::new(ccfg, &hot, 23);
     let mut src_thr = ClosedLoop::new(ccfg, &hot, 23);
-    let rep_sim = sim.run_source(&mut src_sim, |_r, _e| {});
-    let rep_thr = thr.run_source(&mut src_thr, |_r, _e| {});
+    let rep_sim = sim.serve(&mut src_sim, RunOpts::default());
+    let rep_thr = thr.serve(&mut src_thr, RunOpts::default());
     assert_eq!(rep_sim.offered(), 24, "6 clients x 4 queries");
     assert_eq!(
         rep_sim.rejected, 0,
@@ -280,7 +281,7 @@ fn service_clock_is_ledger_supersteps_over_rate() {
             SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
             ServeConfig { supersteps_per_tick: rate, ..cfg() },
         );
-        s.run(&stream)
+        s.serve(&mut OpenLoopSource::new(&stream), RunOpts::default())
     };
     let slow = run_with_rate(1);
     let fast = run_with_rate(64);
@@ -305,8 +306,9 @@ fn served_is_exactly_hits_plus_misses_and_waves_cover_every_miss() {
     let g = gen::barabasi_albert(500, 5, 7);
     let mut server = Server::new(
         SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
-        ServeConfig { fuse: true, cache: true, ..cfg() },
-    );
+        cfg(),
+    )
+    .with_serving_policy(ServePolicy::new().with_fuse(true).with_cache(true));
     let hot = hot_source_order(&server.engine().meta().out_deg);
     // A hot Zipf stream so the cache actually engages.
     let stream = generate_stream(stream_cfg(32, 2, 1), &hot, 5);
@@ -337,7 +339,7 @@ fn served_is_exactly_hits_plus_misses_and_waves_cover_every_miss() {
     // And with both knobs off, the same stream is all misses, no waves
     // wider than one lane.
     let mut plain = sim_server(&g, 2);
-    let rep0 = plain.run(&stream);
+    let rep0 = plain.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
     assert_eq!(rep0.cache_hits, 0);
     assert_eq!(rep0.cache_misses, rep0.served() as u64);
     assert!(rep0.waves.iter().all(|w| w.lanes == 1));
@@ -351,13 +353,14 @@ fn rejection_monotonicity_survives_fusion() {
     let g = gen::barabasi_albert(500, 5, 7);
     let mut server = Server::new(
         SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
-        ServeConfig { fuse: true, ..cfg() },
-    );
+        cfg(),
+    )
+    .with_serving_policy(ServePolicy::new().with_fuse(true));
     let hot = hot_source_order(&server.engine().meta().out_deg);
     let mut rejected = Vec::new();
     for (per_tick, every_ticks) in [(1usize, 16u64), (1, 1), (4, 1)] {
         let stream = generate_stream(stream_cfg(32, per_tick, every_ticks), &hot, 5);
-        let rep = server.run(&stream);
+        let rep = server.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
         assert_eq!(rep.served() as u64 + rep.rejected, 32);
         rejected.push(rep.rejected);
     }
@@ -378,11 +381,12 @@ fn fused_wave_ticks_never_exceed_sum_of_single_shot_ticks() {
     // ledger-delta formula.
     let g = gen::barabasi_albert(500, 5, 23);
     let p = 2;
-    let scfg = ServeConfig { fuse: true, ..cfg() };
+    let scfg = cfg();
     let mut server = Server::new(
         SpmdEngine::tdo_gp(Cluster::new(p, cost()), &g, cost(), QueryShard::new),
         scfg,
-    );
+    )
+    .with_serving_policy(ServePolicy::new().with_fuse(true));
     let mut reference = sim_server(&g, p);
     let hot = hot_source_order(&server.engine().meta().out_deg);
     // Single-kind streams guarantee max-width waves for every fusable
@@ -397,7 +401,7 @@ fn fused_wave_ticks_never_exceed_sum_of_single_shot_ticks() {
             &hot,
             31,
         );
-        let rep = server.run(&stream);
+        let rep = server.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
         let fused: Vec<_> = rep.waves.iter().filter(|w| w.lanes >= 2).collect();
         assert!(!fused.is_empty(), "{label}: a single-kind burst must form a fused wave");
         for w in &fused {

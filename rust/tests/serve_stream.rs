@@ -5,9 +5,9 @@
 use tdorch::graph::gen;
 use tdorch::graph::spmd::SpmdEngine;
 use tdorch::graph::Vid;
-use tdorch::serve::{QueryShard, ServeConfig, Server};
+use tdorch::serve::{QueryShard, RunOpts, ServeConfig, Server};
 use tdorch::workload::{
-    generate_stream, hot_source_order, QueryMix, StreamConfig, Zipf,
+    generate_stream, hot_source_order, OpenLoopSource, QueryMix, StreamConfig, Zipf,
 };
 use tdorch::{Cluster, CostModel};
 
@@ -109,7 +109,7 @@ fn bounded_queue_rejects_overflow_deterministically() {
             SpmdEngine::tdo_gp(Cluster::new(2, cost()), &g, cost(), QueryShard::new),
             serve_cfg,
         );
-        s.run(&stream)
+        s.serve(&mut OpenLoopSource::new(&stream), RunOpts::default())
     };
     let a = run();
     assert!(a.rejected > 0, "a 32-query burst must overflow a 4-deep queue");
@@ -166,7 +166,7 @@ fn deadline_dispatches_partial_batches() {
             ..ServeConfig::default()
         },
     );
-    let rep = s.run(&stream);
+    let rep = s.serve(&mut OpenLoopSource::new(&stream), RunOpts::default());
     assert_eq!(rep.served(), 6);
     assert_eq!(rep.rejected, 0);
     assert_eq!(rep.batches, 6, "a drained server forms one partial batch per arrival");
